@@ -1,0 +1,57 @@
+//! Quickstart: load the PARS predictor, score a handful of prompts, and
+//! show the SJF order the scheduler would use.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use pars_serve::coordinator::{PjrtScorer, Scorer};
+use pars_serve::engine::tokenizer as tok;
+use pars_serve::runtime::{ArtifactManifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("PARS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let manifest = ArtifactManifest::load(&dir)?;
+
+    // The PARS predictor for r1-sim traffic on Alpaca-style prompts.
+    let mut scorer =
+        PjrtScorer::load(&rt, &manifest, "pairwise", "bert", "synthalpaca", "r1", true)?;
+    println!("loaded predictor: {}\n", scorer.name());
+
+    // A mixed bag of prompts, from trivial chit-chat to a hard proof.
+    let prompts = [
+        ("hi there!", tok::build_prompt(0, 0, 3, &[100, 101])),
+        ("classify this review", tok::build_prompt(2, 1, 9, &[110, 111, 112])),
+        ("extract the dates", tok::build_prompt(3, 2, 20, &[120, 125])),
+        ("summarize this article", tok::build_prompt(4, 4, 30, &[130, 131, 132, 133])),
+        ("write a parser in rust", tok::build_prompt(6, 5, 41, &[140, 141, 142])),
+        ("prove the theorem", tok::build_prompt(7, 6, 55, &[150, 151, 152, 153, 154])),
+    ];
+
+    let seq = manifest.seq_len;
+    let mut flat = Vec::with_capacity(prompts.len() * seq);
+    for (_, p) in &prompts {
+        flat.extend_from_slice(p);
+    }
+    let scores = scorer.score_batch(&flat, prompts.len(), seq)?;
+
+    let mut order: Vec<usize> = (0..prompts.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+
+    println!("predicted-shortest-first schedule (PARS ≈ SJF):");
+    for (rank, &i) in order.iter().enumerate() {
+        println!(
+            "  {}. [score {:>7.2}] {:<24} {}",
+            rank + 1,
+            scores[i],
+            prompts[i].0,
+            tok::render_prompt(&prompts[i].1)
+        );
+    }
+    println!("\nhigher score = longer expected response; the queue runs lowest-first.");
+    Ok(())
+}

@@ -1,0 +1,323 @@
+"""AOT build: train every predictor variant, lower all HLO artifacts,
+export test sets + manifest.  `make artifacts` runs this once; the Rust
+binary is self-contained afterwards.
+
+Interchange is HLO *text* — the image's xla_extension 0.5.1 rejects
+jax≥0.5's 64-bit-instruction-id protos; the text parser reassigns ids
+(see /opt/xla-example/README.md and gen_hlo.py there).
+
+Outputs (artifacts/):
+  scorer_{bert,opt,t5}.hlo.txt     one scoring HLO per backbone
+                                   entry: (params_flat, tokens[B,S]) -> scores
+  w_<variant>.bin                  trained weights (f32 LE), one per variant
+  picolm_prefill.hlo.txt           (tokens[1,S], len[1]) -> (logits, kv_slice)
+  picolm_decode.hlo.txt            (tok[B], kv, pos[B]) -> (logits, kv')
+  testset_{dataset}_{model}.json   prompts + label/oracle/live lengths + mu
+  table1.json                      the two probe prompts' lengths per model
+  picolm_train_log.json            picoLM pretraining loss curve
+  manifest.json                    index of everything above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+from . import train as T
+from .kernels import attention  # noqa: F401  (kernels must be importable)
+
+from jax._src.lib import xla_client as xc
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_scorer_hlo(backbone: str, batch: int) -> str:
+    fn, _template = M.scorer_entry(backbone, batch=batch, use_pallas=True)
+    template = M.init_scorer(jax.random.PRNGKey(0), backbone)
+    n = M.n_params(template)
+    spec_p = jax.ShapeDtypeStruct((n,), jnp.float32)
+    spec_t = jax.ShapeDtypeStruct((batch, D.SEQ_LEN), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec_p, spec_t))
+
+
+def lower_picolm(params) -> tuple[str, str]:
+    dims = M.PICO_DIMS
+    smax = M.PICO_MAX_SEQ
+    b = M.SERVE_BATCH
+
+    def prefill1(tokens, length):
+        logits, kv, _pos = M.pico_prefill(params, tokens, length, use_pallas=True)
+        return (logits, kv)
+
+    def decode(token, kv, pos):
+        logits, kv2, _pos2 = M.pico_decode(params, token, kv, pos, use_pallas=True)
+        return (logits, kv2)
+
+    pre = to_hlo_text(
+        jax.jit(prefill1).lower(
+            jax.ShapeDtypeStruct((1, D.SEQ_LEN), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        )
+    )
+    kv_shape = (dims.layers, 2, b, smax, dims.heads, dims.head_dim)
+    dec = to_hlo_text(
+        jax.jit(decode).lower(
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        )
+    )
+    return pre, dec
+
+
+# ---------------------------------------------------------------------------
+# picoLM pretraining (the served model is a real trained LM, not noise)
+# ---------------------------------------------------------------------------
+
+def pretrain_picolm(steps: int, seed: int = 0) -> tuple[dict, list]:
+    prompts = D.make_corpus("synthalpaca", 4096, seed=31337)
+    toks = jnp.asarray(D.tokens_matrix(prompts))
+    params = M.init_picolm(jax.random.PRNGKey(seed))
+    opt = T.adam_init(params)
+    acfg = T.AdamConfig(lr=2e-3)
+
+    @jax.jit
+    def step(params, opt, batch):
+        l, g = jax.value_and_grad(M.pico_lm_loss)(params, batch)
+        params, opt = T.adam_update(params, g, opt, acfg)
+        return params, opt, l
+
+    rng = np.random.default_rng(seed)
+    log = []
+    bsz = 64
+    for i in range(steps):
+        sel = rng.integers(0, toks.shape[0], size=bsz)
+        params, opt, l = step(params, opt, toks[sel])
+        if i % 10 == 0 or i == steps - 1:
+            log.append({"step": i, "loss": float(l)})
+    return params, log
+
+
+# ---------------------------------------------------------------------------
+# Test-set export
+# ---------------------------------------------------------------------------
+
+def export_testset(dataset: str, model: str, n: int, out_dir: str) -> None:
+    o = D.ORACLES[model]
+    prompts = D.make_corpus(dataset, n, seed=9077)
+    hidden = D.assign_hidden(prompts, o, seed=9177, dataset=dataset)
+    mu_eff = np.array([D.expected_len(p, o) for p in prompts]) * hidden
+    label = D.sample_lengths(prompts, o, hidden, seed=9277)
+    oracle = D.sample_lengths(prompts, o, hidden, seed=9377)
+    live = D.sample_lengths(prompts, o, hidden, seed=9477)
+    doc = {
+        "dataset": dataset,
+        "model": model,
+        "seq_len": D.SEQ_LEN,
+        "prompts": D.tokens_matrix(prompts).tolist(),
+        "label_len": label.tolist(),
+        "oracle_len": oracle.tolist(),
+        "live_len": live.tolist(),
+        "mu_eff": [float(x) for x in mu_eff],
+        "sigma_run": o.sigma_run,
+        "max_len": o.max_len,
+    }
+    path = os.path.join(out_dir, f"testset_{dataset}_{model}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"  wrote {path} ({n} prompts)", flush=True)
+
+
+def export_table1(out_dir: str) -> None:
+    """The paper's Table I probes: a trivial factual question vs a heavy
+    math/reasoning question, run 10× through each simulated model."""
+    q1 = D.Prompt(
+        tokens=np.zeros(D.SEQ_LEN, np.int32), task=1, level=0, topic=7,
+        task_visible=True, hidden=1.0,
+    )
+    q2 = D.Prompt(
+        tokens=np.zeros(D.SEQ_LEN, np.int32), task=7, level=5, topic=7,
+        task_visible=True, hidden=1.0,
+    )
+    rows = {}
+    for m in D.MODELS:
+        o = D.ORACLES[m]
+        hidden = D.assign_hidden([q1, q2], o, seed=4242, dataset="synthalpaca")
+        runs = np.stack([
+            D.sample_lengths([q1, q2], o, hidden, seed=5000 + r) for r in range(10)
+        ])
+        rows[m] = {
+            "reasoning": o.reasoning,
+            "q1_median": int(np.median(runs[:, 0])),
+            "q2_median": int(np.median(runs[:, 1])),
+        }
+    with open(os.path.join(out_dir, "table1.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("  wrote table1.json", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# The full build
+# ---------------------------------------------------------------------------
+
+def scorer_variants(quick: bool):
+    """(name, objective, backbone, dataset, model, filtered, epochs)."""
+    out = []
+    ep_pair = 2 if quick else 15
+    ep_point = 2 if quick else 15
+    ep_list = 1 if quick else 5
+    ep_bb = 2 if quick else 10
+    combos = [(ds, m) for ds in D.DATASETS for m in D.MODELS]
+    if quick:
+        combos = combos[:1]
+    for ds, m in combos:
+        out.append((f"pairwise_bert_{ds}_{m}", "pairwise", "bert", ds, m, True, ep_pair))
+        out.append((f"pointwise_bert_{ds}_{m}", "pointwise", "bert", ds, m, True, ep_point))
+        out.append((f"listwise_bert_{ds}_{m}", "listwise", "bert", ds, m, True, ep_list))
+        out.append((f"pairwise_t5_{ds}_{m}", "pairwise", "t5", ds, m, True, ep_bb))
+        out.append((f"pairwise_opt_{ds}_{m}", "pairwise", "opt", ds, m, True, ep_bb))
+        out.append(
+            (f"pairwise_bert_{ds}_{m}_nofilter", "pairwise", "bert", ds, m, False, ep_pair)
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny budget: 1 combo, few epochs (CI/pytest)")
+    ap.add_argument("--n-test", type=int, default=2200)
+    ap.add_argument(
+        "--only-lower",
+        action="store_true",
+        help="re-lower HLO artifacts against the existing manifest without "
+        "retraining predictors (kernel/perf iterations; picoLM pretraining "
+        "is deterministic so its weights reproduce exactly)",
+    )
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t_start = time.time()
+
+    if args.only_lower:
+        with open(os.path.join(out, "manifest.json")) as f:
+            manifest = json.load(f)
+        print("[only-lower] re-lowering scorer HLOs", flush=True)
+        for bb in ("bert", "opt", "t5"):
+            text = lower_scorer_hlo(bb, M.SCORE_BATCH)
+            with open(os.path.join(out, manifest["scorer_hlo"][bb]), "w") as f:
+                f.write(text)
+            print(f"  scorer_{bb}: {len(text) / 1e6:.2f} MB", flush=True)
+        print("[only-lower] re-lowering picoLM", flush=True)
+        pico_params, _log = pretrain_picolm(steps=30 if args.quick else 400)
+        pre, dec = lower_picolm(pico_params)
+        with open(os.path.join(out, manifest["picolm_prefill"]), "w") as f:
+            f.write(pre)
+        with open(os.path.join(out, manifest["picolm_decode"]), "w") as f:
+            f.write(dec)
+        print(f"[only-lower] done in {time.time() - t_start:.0f}s", flush=True)
+        return
+
+    manifest = {
+        "score_batch": M.SCORE_BATCH,
+        "serve_batch": M.SERVE_BATCH,
+        "seq_len": D.SEQ_LEN,
+        "pico_max_seq": M.PICO_MAX_SEQ,
+        "vocab": D.VOCAB_SIZE,
+        "scorers": [],
+        "scorer_hlo": {},
+    }
+
+    # 1. scoring HLOs (weights as input → one per backbone)
+    print("[1/5] lowering scorer HLOs", flush=True)
+    for bb in ("bert", "opt", "t5"):
+        text = lower_scorer_hlo(bb, M.SCORE_BATCH)
+        fname = f"scorer_{bb}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        manifest["scorer_hlo"][bb] = fname
+        print(f"  {fname}: {len(text) / 1e6:.2f} MB", flush=True)
+
+    # 2. train all predictor variants
+    variants = scorer_variants(args.quick)
+    print(f"[2/5] training {len(variants)} predictor variants", flush=True)
+    n_test_eval = 300 if args.quick else 600
+    for name, obj, bb, ds, m, filt, epochs in variants:
+        cfg = T.TrainConfig(
+            objective=obj,
+            backbone=bb,
+            epochs=epochs,
+            lr=2e-3,
+            filter_delta=None if filt else 0.0,
+        )
+        r = T.train_scorer(ds, m, cfg)
+        tau = T.eval_tau(r.params, bb, ds, m, n_test=n_test_eval)
+        flat = M.flatten_params(r.params)
+        wname = f"w_{name}.bin"
+        flat.astype(np.float32).tofile(os.path.join(out, wname))
+        manifest["scorers"].append({
+            "name": name, "objective": obj, "backbone": bb, "dataset": ds,
+            "model": m, "filtered": filt, "weights": wname,
+            "n_params": int(flat.shape[0]), "train_tau": float(tau),
+        })
+        print(
+            f"  {name}: tau={tau:.3f} ({r.train_seconds:.0f}s, {r.n_steps} steps)",
+            flush=True,
+        )
+
+    # 3. picoLM pretrain + lowering
+    print("[3/5] pretraining picoLM + lowering prefill/decode", flush=True)
+    pico_params, pico_log = pretrain_picolm(steps=30 if args.quick else 400)
+    with open(os.path.join(out, "picolm_train_log.json"), "w") as f:
+        json.dump(pico_log, f)
+    pre, dec = lower_picolm(pico_params)
+    with open(os.path.join(out, "picolm_prefill.hlo.txt"), "w") as f:
+        f.write(pre)
+    with open(os.path.join(out, "picolm_decode.hlo.txt"), "w") as f:
+        f.write(dec)
+    manifest["picolm_prefill"] = "picolm_prefill.hlo.txt"
+    manifest["picolm_decode"] = "picolm_decode.hlo.txt"
+    print(
+        f"  prefill {len(pre) / 1e6:.2f} MB, decode {len(dec) / 1e6:.2f} MB "
+        f"(final lm loss {pico_log[-1]['loss']:.3f})",
+        flush=True,
+    )
+
+    # 4. test sets
+    print("[4/5] exporting test sets", flush=True)
+    n_test = 300 if args.quick else args.n_test
+    combos = [(ds, m) for ds in D.DATASETS for m in D.MODELS]
+    if args.quick:
+        combos = combos[:1]
+    for ds, m in combos:
+        export_testset(ds, m, n_test, out)
+    export_table1(out)
+
+    # 5. manifest
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[5/5] manifest.json written — total {time.time() - t_start:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from . import attention, ffn, layernorm, ref  # noqa: F401

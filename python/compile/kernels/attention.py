@@ -1,0 +1,117 @@
+"""Pallas fused attention kernel (flash-style online softmax).
+
+TPU-shaped: the grid iterates over (batch*heads, q-tiles); each program
+instance holds one q tile plus the full K/V stripe for its (b, h) in VMEM
+and streams over k tiles with an online-softmax accumulator — the Pallas
+BlockSpec index maps express the HBM→VMEM schedule that a CUDA flash
+implementation expresses with threadblocks + shared memory (DESIGN.md
+§Hardware-Adaptation).
+
+VMEM footprint per program instance (f32):
+    q tile        bq × D
+    k, v stripes  2 × Sk × D
+    bias tile     bq × Sk
+    accumulators  bq × (D + 2)
+With the serving shapes (Sk ≤ 160, D ≤ 32, bq ≤ 32) this is « 16 MiB.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops and runs on any
+backend.  Real-TPU performance is estimated analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch, q-tile) program instance, all heads folded in.
+
+    q_ref: [H, bq, D]; k_ref/v_ref: [H, Sk, D]; bias_ref: [bq, Sk];
+    o_ref: [H, bq, D].  Folding the head axis into the program (instead of
+    the grid) cuts program count H×, which matters both for interpret-mode
+    overhead on CPU and for per-core grid dispatch on TPU (§Perf log).
+    """
+    q = q_ref[...] * scale
+    h, bq, d = q.shape
+    sk = k_ref.shape[1]
+    n_kb = sk // block_k
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[:, pl.ds(i * block_k, block_k), :]
+        v = v_ref[:, pl.ds(i * block_k, block_k), :]
+        b = bias_ref[:, pl.ds(i * block_k, block_k)]
+        s = jnp.einsum("hqd,hkd->hqk", q, k) + b[None, :, :]  # [H, bq, bk]
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("hqk,hkd->hqd", p, v)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((h, bq, d), dtype=jnp.float32)
+    m0 = jnp.full((h, bq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((h, bq), dtype=jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
+    o_ref[...] = acc / l[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(q, k, v, bias, *, block_q: int = 32, block_k: int = 32):
+    """Fused attention via Pallas.
+
+    q: [B, H, Sq, D]; k, v: [B, H, Sk, D]; bias: [B, 1, Sq, Sk] additive
+    (NEG_INF for masked).  Returns [B, H, Sq, D] (f32).
+
+    Sq must be divisible by block_q and Sk by block_k (callers pad; the
+    bias masks padding so results are exact).
+    """
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0, (sq, block_q)
+    assert sk % block_k == 0, (sk, block_k)
+    biasf = bias.reshape(b, sq, sk)
+
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, scale=1.0 / (d**0.5)
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, h, block_q, d), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((None, h, sk, d), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((None, h, sk, d), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((None, block_q, sk), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, h, block_q, d), lambda i, j: (i, 0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, biasf)
+    return out
+
+
+def padding_bias(mask_q, mask_k):
+    """Additive bias [B, 1, Sq, Sk] hiding padded key positions.
+
+    mask_q: [B, Sq] (unused except for shape; kept for symmetry), mask_k:
+    [B, Sk] with 1.0 = real token, 0.0 = PAD.
+    """
+    b, sk = mask_k.shape
+    sq = mask_q.shape[1]
+    bias = jnp.where(mask_k[:, None, None, :] > 0, 0.0, NEG_INF)
+    return jnp.broadcast_to(bias, (b, 1, sq, sk)).astype(jnp.float32)
+
+
+def causal_bias(sq: int, sk: int, offset: int = 0):
+    """Additive causal bias [1, 1, Sq, Sk]: position i attends to j ≤ i+offset."""
+    i = jnp.arange(sq)[:, None]
+    j = jnp.arange(sk)[None, :]
+    return jnp.where(j <= i + offset, 0.0, NEG_INF)[None, None].astype(jnp.float32)

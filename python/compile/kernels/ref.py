@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth (pytest asserts kernel ≈ ref) AND the
+training-path implementations: pallas_call has no autodiff rule, so the
+scorers/picoLM train through these functions and the AOT inference artifacts
+lower through the Pallas kernels, with equivalence asserted on the trained
+weights (python/tests/test_parity.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, bias):
+    """Scaled-dot-product attention.
+
+    q: [B, H, Sq, D], k/v: [B, H, Sk, D], bias: additive [B, 1, Sq, Sk]
+    (use -1e9 entries for masked positions).  Returns [B, H, Sq, D].
+    """
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale + bias
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis.  x: [..., D]."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU (matches the kernel's polynomial)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Fused FFN: gelu(x @ w1 + b1) @ w2 + b2.  x: [N, D]."""
+    return gelu_ref(x @ w1 + b1) @ w2 + b2

@@ -1,0 +1,380 @@
+"""L2: JAX models — scorer backbones (BERT-S / OPT-S / T5-S) and picoLM.
+
+Every forward pass exists in two equivalent formulations:
+
+  * ``use_pallas=False`` — pure-jnp (kernels/ref.py math).  Differentiable;
+    this is the TRAINING path (pallas_call has no autodiff rule).
+  * ``use_pallas=True``  — L1 Pallas kernels (attention / layernorm / ffn).
+    This is the path lowered into the AOT inference artifacts.
+
+python/tests/test_parity.py asserts the two paths agree on trained weights,
+which is what licenses training on one and serving on the other.
+
+Scorer artifacts take ``(params_flat[P], tokens[B, S])`` so a single HLO per
+backbone serves every trained variant (36 weight files, 3 architectures).
+picoLM bakes weights as constants (one model) and exposes two entry points,
+``prefill`` and ``decode``, with the KV cache threaded through as explicit
+I/O — the Rust engine owns cache slots and batching (DESIGN.md §decisions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as ak
+from .kernels import ffn as fk
+from .kernels import layernorm as lk
+from .kernels import ref as rk
+from . import data as D
+
+
+# ---------------------------------------------------------------------------
+# Dimensions
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Dims:
+    vocab: int = D.VOCAB_SIZE
+    seq: int = D.SEQ_LEN
+    d: int = 64
+    heads: int = 4
+    ff: int = 256
+    layers: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+
+SCORER_DIMS = Dims()
+# picoLM: the served model.  max_seq bounds prompt + generated tokens.
+PICO_MAX_SEQ = 160
+PICO_DIMS = Dims(d=64, heads=4, ff=256, layers=2)
+SERVE_BATCH = 8    # picoLM artifact batch (engine slot count)
+SCORE_BATCH = 64   # scorer artifact batch
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def init_block(key, dims: Dims) -> dict:
+    ks = jax.random.split(key, 6)
+    d, ff = dims.d, dims.ff
+    return {
+        "wqkv": _dense_init(ks[0], (d, 3 * d)),
+        "wo": _dense_init(ks[1], (d, d)),
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "w1": _dense_init(ks[2], (d, ff)), "b1": jnp.zeros((ff,)),
+        "w2": _dense_init(ks[3], (ff, d)), "b2": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+    }
+
+
+def init_cross_block(key, dims: Dims) -> dict:
+    """Decoder cross-attention block for the T5-S backbone."""
+    ks = jax.random.split(key, 5)
+    d, ff = dims.d, dims.ff
+    return {
+        "wq": _dense_init(ks[0], (d, d)),
+        "wkv": _dense_init(ks[1], (d, 2 * d)),
+        "wo": _dense_init(ks[2], (d, d)),
+        "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "w1": _dense_init(ks[3], (d, ff)), "b1": jnp.zeros((ff,)),
+        "w2": _dense_init(ks[4], (ff, d)), "b2": jnp.zeros((d,)),
+        "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+    }
+
+
+def init_scorer(key, backbone: str, dims: Dims = SCORER_DIMS) -> dict:
+    """Initialise scorer params for backbone in {bert, opt, t5}."""
+    ks = jax.random.split(key, 8)
+    p = {
+        "emb": _dense_init(ks[0], (dims.vocab, dims.d), scale=0.02),
+        "pos": _dense_init(ks[1], (dims.seq, dims.d), scale=0.02),
+        "lnf_g": jnp.ones((dims.d,)), "lnf_b": jnp.zeros((dims.d,)),
+        "w_out": _dense_init(ks[2], (dims.d, 1)),
+        "b_out": jnp.zeros((1,)),
+        "blocks": [init_block(k, dims) for k in jax.random.split(ks[3], dims.layers)],
+    }
+    if backbone == "bert":
+        p["pooler_w"] = _dense_init(ks[4], (dims.d, dims.d))
+        p["pooler_b"] = jnp.zeros((dims.d,))
+    elif backbone == "t5":
+        p["dec_query"] = _dense_init(ks[5], (dims.d,), scale=0.5)
+        p["cross"] = init_cross_block(ks[6], dims)
+    elif backbone != "opt":
+        raise ValueError(f"unknown backbone {backbone!r}")
+    return p
+
+
+def init_picolm(key, dims: Dims = PICO_DIMS) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "emb": _dense_init(ks[0], (dims.vocab, dims.d), scale=0.02),
+        "pos": _dense_init(ks[1], (PICO_MAX_SEQ, dims.d), scale=0.02),
+        "lnf_g": jnp.ones((dims.d,)), "lnf_b": jnp.zeros((dims.d,)),
+        "blocks": [init_block(k, dims) for k in jax.random.split(ks[2], dims.layers)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Flatten / unflatten (the scorer-artifact param vector)
+# ---------------------------------------------------------------------------
+
+def flatten_params(p) -> np.ndarray:
+    leaves = jax.tree_util.tree_leaves(p)
+    return np.concatenate([np.asarray(l, np.float32).reshape(-1) for l in leaves])
+
+
+def unflatten_params(template, flat):
+    """Rebuild a params pytree from a flat vector (jnp or np)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(flat[off : off + n].reshape(l.shape).astype(jnp.float32))
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def n_params(p) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(p))
+
+
+# ---------------------------------------------------------------------------
+# Shared compute
+# ---------------------------------------------------------------------------
+
+def _ln(x2d, g, b, use_pallas):
+    if use_pallas:
+        return lk.layernorm(x2d, g, b)
+    return rk.layernorm_ref(x2d, g, b)
+
+
+def _ffn(x2d, blk, use_pallas):
+    if use_pallas:
+        return fk.ffn(x2d, blk["w1"], blk["b1"], blk["w2"], blk["b2"])
+    return rk.ffn_ref(x2d, blk["w1"], blk["b1"], blk["w2"], blk["b2"])
+
+
+def _attn(q, k, v, bias, use_pallas, block_k=32):
+    if use_pallas:
+        return ak.attention(q, k, v, bias, block_q=min(32, q.shape[2]), block_k=block_k)
+    return rk.attention_ref(q, k, v, bias)
+
+
+def _split_heads(x, heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, heads, d // heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def block_apply(blk, x, bias, dims: Dims, use_pallas: bool):
+    """Pre-LN transformer block.  x: [B, S, D], bias: [B, 1, S, S]."""
+    b, s, d = x.shape
+    h = _ln(x.reshape(b * s, d), blk["ln1_g"], blk["ln1_b"], use_pallas).reshape(b, s, d)
+    qkv = h @ blk["wqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    attn = _attn(
+        _split_heads(q, dims.heads), _split_heads(k, dims.heads),
+        _split_heads(v, dims.heads), bias, use_pallas,
+    )
+    x = x + _merge_heads(attn) @ blk["wo"]
+    h2 = _ln(x.reshape(b * s, d), blk["ln2_g"], blk["ln2_b"], use_pallas)
+    x = x + _ffn(h2, blk, use_pallas).reshape(b, s, d)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Scorer forwards
+# ---------------------------------------------------------------------------
+
+def scorer_forward(params, tokens, backbone: str, dims: Dims = SCORER_DIMS,
+                   use_pallas: bool = False):
+    """Score prompts.  tokens: int32 [B, S] (PAD=0).  Returns [B] f32.
+
+    Higher score ⇒ longer expected response (paper §III-A).
+    """
+    b, s = tokens.shape
+    mask = (tokens != D.PAD_ID).astype(jnp.float32)  # [B, S]
+    x = params["emb"][tokens] + params["pos"][None, :s, :]
+    pad_bias = ak.padding_bias(mask, mask)  # [B,1,S,S]
+
+    if backbone == "bert":
+        bias = pad_bias
+    elif backbone == "opt":
+        bias = pad_bias + ak.causal_bias(s, s)
+    elif backbone == "t5":
+        bias = pad_bias
+    else:
+        raise ValueError(backbone)
+
+    for blk in params["blocks"]:
+        x = block_apply(blk, x, bias, dims, use_pallas)
+    x2 = _ln(x.reshape(b * s, dims.d), params["lnf_g"], params["lnf_b"], use_pallas)
+    x = x2.reshape(b, s, dims.d)
+
+    if backbone == "bert":
+        # [CLS] pooler (position 0), tanh dense — BERT's pooler_output
+        cls = x[:, 0, :]
+        pooled = jnp.tanh(cls @ params["pooler_w"] + params["pooler_b"])
+        return (pooled @ params["w_out"] + params["b_out"])[:, 0]
+    if backbone == "opt":
+        # last real-token hidden state (causal summary)
+        last = jnp.maximum(mask.sum(axis=1).astype(jnp.int32) - 1, 0)
+        hid = x[jnp.arange(b), last]
+        return (hid @ params["w_out"] + params["b_out"])[:, 0]
+    # t5: one-step decoder with a learned query over encoder output
+    cb = params["cross"]
+    qv = jnp.broadcast_to(params["dec_query"][None, None, :], (b, 1, dims.d))
+    hq = _ln(qv.reshape(b, dims.d), cb["ln1_g"], cb["ln1_b"], use_pallas).reshape(b, 1, dims.d)
+    q = hq @ cb["wq"]
+    kv = x @ cb["wkv"]
+    k, v = jnp.split(kv, 2, axis=-1)
+    cross_bias = ak.padding_bias(jnp.ones((b, 1)), mask)  # [B,1,1,S]
+    attn = _attn(
+        _split_heads(q, dims.heads), _split_heads(k, dims.heads),
+        _split_heads(v, dims.heads), cross_bias, use_pallas,
+    )
+    y = qv + _merge_heads(attn) @ cb["wo"]
+    h2 = _ln(y.reshape(b, dims.d), cb["ln2_g"], cb["ln2_b"], use_pallas)
+    y = (y + _ffn(h2, cb, use_pallas).reshape(b, 1, dims.d))[:, 0, :]
+    return (y @ params["w_out"] + params["b_out"])[:, 0]
+
+
+def scorer_entry(backbone: str, batch: int = SCORE_BATCH, use_pallas: bool = True):
+    """AOT entry point: (params_flat, tokens[batch, S]) -> scores[batch]."""
+    template = init_scorer(jax.random.PRNGKey(0), backbone)
+
+    def fn(params_flat, tokens):
+        params = unflatten_params(template, params_flat)
+        return (scorer_forward(params, tokens, backbone, use_pallas=use_pallas),)
+
+    return fn, template
+
+
+# ---------------------------------------------------------------------------
+# picoLM: prefill + decode with explicit KV cache
+# ---------------------------------------------------------------------------
+# Cache layout: [L, 2, B, Smax, H, Dh]  (k=index 0, v=index 1).  Positions
+# beyond a sequence's current length hold garbage and are masked by `pos`.
+
+def _pico_kv(blk, h):
+    """Project hidden states to per-head K, V.  h: [B, S, D]."""
+    qkv = h @ blk["wqkv"]
+    _, k, v = jnp.split(qkv, 3, axis=-1)
+    return k, v
+
+
+def pico_prefill(params, tokens, lengths, dims: Dims = PICO_DIMS,
+                 use_pallas: bool = True, max_seq: int = PICO_MAX_SEQ):
+    """Prefill entry: (tokens[B, S], lengths[B]) -> (logits[B, V], kv, pos[B]).
+
+    Runs the full prompt in one forward pass (the paper's prefill stage),
+    caches K/V for every layer, and returns next-token logits at each
+    sequence's last real position.
+    """
+    b, s = tokens.shape
+    mask = (jnp.arange(s)[None, :] < lengths[:, None]).astype(jnp.float32)
+    x = params["emb"][tokens] + params["pos"][None, :s, :]
+    bias = ak.padding_bias(mask, mask) + ak.causal_bias(s, s)
+    caches = []
+    for blk in params["blocks"]:
+        bsz, _, d = x.shape
+        h = _ln(x.reshape(bsz * s, d), blk["ln1_g"], blk["ln1_b"], use_pallas).reshape(bsz, s, d)
+        qkv = h @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        attn = _attn(
+            _split_heads(q, dims.heads), _split_heads(k, dims.heads),
+            _split_heads(v, dims.heads), bias, use_pallas,
+        )
+        x = x + _merge_heads(attn) @ blk["wo"]
+        h2 = _ln(x.reshape(bsz * s, d), blk["ln2_g"], blk["ln2_b"], use_pallas)
+        x = x + _ffn(h2, blk, use_pallas).reshape(bsz, s, d)
+        # cache prompt K/V (padded to max_seq)
+        kc = jnp.zeros((b, max_seq, dims.heads, dims.head_dim))
+        vc = jnp.zeros((b, max_seq, dims.heads, dims.head_dim))
+        kc = kc.at[:, :s].set(k.reshape(b, s, dims.heads, dims.head_dim))
+        vc = vc.at[:, :s].set(v.reshape(b, s, dims.heads, dims.head_dim))
+        caches.append(jnp.stack([kc, vc]))
+    kv = jnp.stack(caches)  # [L, 2, B, Smax, H, Dh]
+    x2 = _ln(x.reshape(b * s, dims.d), params["lnf_g"], params["lnf_b"], use_pallas)
+    x = x2.reshape(b, s, dims.d)
+    last = jnp.maximum(lengths - 1, 0)
+    hid = x[jnp.arange(b), last]  # [B, D]
+    logits = hid @ params["emb"].T  # tied embeddings
+    return logits, kv, lengths
+
+
+def pico_decode(params, token, kv, pos, dims: Dims = PICO_DIMS,
+                use_pallas: bool = True, max_seq: int = PICO_MAX_SEQ):
+    """Decode entry: (token[B], kv, pos[B]) -> (logits[B, V], kv', pos+1).
+
+    One autoregressive step for the whole batch: writes K/V at `pos`,
+    attends to positions ≤ pos, returns logits for the next token.
+    Slots whose pos is stale simply produce unused logits (the Rust engine
+    masks slot activity), so one fixed-shape executable serves any batch
+    occupancy — the continuous-batching contract.
+    """
+    b = token.shape[0]
+    x = params["emb"][token] + params["pos"][pos]  # [B, D]
+    x = x[:, None, :]  # [B, 1, D]
+    j = jnp.arange(max_seq)
+    # attend to j <= pos (the new token occupies index pos)
+    dec_bias = jnp.where(j[None, :] <= pos[:, None], 0.0, ak.NEG_INF)
+    dec_bias = dec_bias[:, None, None, :].astype(jnp.float32)  # [B,1,1,Smax]
+    new_kv = kv
+    for li, blk in enumerate(params["blocks"]):
+        h = _ln(x.reshape(b, dims.d), blk["ln1_g"], blk["ln1_b"], use_pallas).reshape(b, 1, dims.d)
+        qkv = h @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        kh = k.reshape(b, dims.heads, dims.head_dim)
+        vh = v.reshape(b, dims.heads, dims.head_dim)
+        kc = new_kv[li, 0].at[jnp.arange(b), pos].set(kh)  # [B,Smax,H,Dh]
+        vc = new_kv[li, 1].at[jnp.arange(b), pos].set(vh)
+        new_kv = new_kv.at[li].set(jnp.stack([kc, vc]))
+        attn = _attn(
+            _split_heads(q, dims.heads),
+            kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3),
+            dec_bias, use_pallas,
+        )
+        x = x + _merge_heads(attn) @ blk["wo"]
+        h2 = _ln(x.reshape(b, dims.d), blk["ln2_g"], blk["ln2_b"], use_pallas)
+        x = x + _ffn(h2, blk, use_pallas).reshape(b, 1, dims.d)
+    xf = _ln(x.reshape(b, dims.d), params["lnf_g"], params["lnf_b"], use_pallas)
+    logits = xf @ params["emb"].T
+    return logits, new_kv, pos + 1
+
+
+def pico_lm_loss(params, tokens, dims: Dims = PICO_DIMS):
+    """Next-token cross-entropy over the prompt corpus (training path: ref)."""
+    b, s = tokens.shape
+    mask = (tokens != D.PAD_ID).astype(jnp.float32)
+    x = params["emb"][tokens] + params["pos"][None, :s, :]
+    bias = ak.padding_bias(mask, mask) + ak.causal_bias(s, s)
+    for blk in params["blocks"]:
+        x = block_apply(blk, x, bias, dims, use_pallas=False)
+    x2 = rk.layernorm_ref(x.reshape(b * s, dims.d), params["lnf_g"], params["lnf_b"])
+    logits = x2.reshape(b, s, dims.d) @ params["emb"].T  # [B,S,V]
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    w = mask[:, 1:]
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)

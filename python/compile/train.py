@@ -1,0 +1,259 @@
+"""L2 training: the three learning-to-rank objectives + hand-rolled Adam.
+
+Objectives (paper §II, §IV-A):
+  * pairwise  — PARS: margin ranking loss L = max(0, -y·(s_A - s_B) + m)
+                over prompt pairs filtered by min_length_difference ≥ δ.
+  * pointwise — baseline [Qiu et al.]: L1 regression on response length.
+  * listwise  — baseline [Fu et al.]: ListMLE over lists sorted by length.
+
+All training runs through the differentiable ref path
+(model.scorer_forward(use_pallas=False)); the AOT artifacts use the Pallas
+path, with parity asserted in tests.  optax is not available in this image,
+so Adam is implemented directly on the param pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Adam (hand-rolled; matches the paper's optimizer: lr 2e-5 ... ours is tuned
+# for the small-from-scratch scorers, see TrainConfig)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, cfg: AdamConfig):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state["v"], grads)
+    bc1 = 1 - cfg.b1 ** t.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** t.astype(jnp.float32)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - cfg.lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps),
+        params, m, v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+MARGIN = 1.0  # paper §III-A: margin fixed at 1.0
+
+
+def pairwise_loss(params, tok_a, tok_b, y, backbone):
+    """Margin ranking loss over explicit prompt pairs."""
+    s_a = M.scorer_forward(params, tok_a, backbone, use_pallas=False)
+    s_b = M.scorer_forward(params, tok_b, backbone, use_pallas=False)
+    return jnp.maximum(0.0, -y * (s_a - s_b) + MARGIN).mean()
+
+
+def pairwise_loss_inbatch(params, tokens, lengths, delta, backbone):
+    """Margin ranking loss over all δ-filtered pairs within a batch.
+
+    Scores each unique prompt once and forms every valid pair (i, j) from
+    the batch — identical objective to `pairwise_loss`, but with O(B²)
+    comparisons per O(B) forwards.  Pairs whose relative length difference
+    is below δ (the paper's min_length_difference, Eq. 1) are masked out:
+    that *is* the filtering mechanism, applied at batch construction.
+    """
+    s = M.scorer_forward(params, tokens, backbone, use_pallas=False)  # [B]
+    la = lengths[:, None]
+    lb = lengths[None, :]
+    rel = jnp.abs(la - lb) / jnp.maximum(jnp.maximum(la, lb), 1.0)
+    valid = (rel >= delta).astype(jnp.float32)
+    y = jnp.sign(la - lb)  # +1 if i longer than j
+    diff = s[:, None] - s[None, :]
+    hinge = jnp.maximum(0.0, -y * diff + MARGIN) * valid
+    # exclude self-pairs (y=0 there, but hinge = margin — must mask)
+    return hinge.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def pointwise_loss(params, tokens, lengths, backbone, scale=10.0):
+    """L1 regression on raw response length (paper's pointwise baseline,
+    Qiu et al.).  Predicting raw token counts makes the head chase the
+    heavy tail of reasoning outputs — the failure mode Table II shows
+    (tau 0.09 on LMSYS-R1)."""
+    s = M.scorer_forward(params, tokens, backbone, use_pallas=False)
+    return jnp.abs(s - lengths / scale).mean()
+
+
+def listwise_loss(params, tokens_lists, backbone):
+    """ListMLE: -log P(observed descending-length order | scores).
+
+    tokens_lists: [R, K, S] already sorted by descending true length."""
+    r, k, s = tokens_lists.shape
+    flat = tokens_lists.reshape(r * k, s)
+    scores = M.scorer_forward(params, flat, backbone, use_pallas=False).reshape(r, k)
+    # Plackett-Luce: sum_i [ log sum_{j>=i} exp(s_j) - s_i ]
+    rev_lse = jax.lax.cumlogsumexp(scores[:, ::-1], axis=1)[:, ::-1]
+    return (rev_lse - scores).sum(axis=1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Training driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    objective: str = "pairwise"      # pairwise | pointwise | listwise
+    backbone: str = "bert"           # bert | opt | t5
+    epochs: int = 3
+    batch: int = 128                 # paper: batch 128
+    n_train_prompts: int = 6000
+    n_pairs: int = 24000
+    n_lists: int = 1500
+    list_size: int = 16
+    filter_delta: float | None = None  # None -> paper's per-model δ
+    seed: int = 0
+    lr: float = 1e-3
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict
+    losses: list
+    train_seconds: float
+    n_steps: int
+
+
+def _epoch_perm(rng, n):
+    return rng.permutation(n)
+
+
+def train_scorer(dataset: str, target_model: str, cfg: TrainConfig) -> TrainResult:
+    """Train one scorer on (dataset, target_model) response lengths."""
+    o = D.ORACLES[target_model]
+    prompts = D.make_corpus(dataset, cfg.n_train_prompts, seed=1000 + cfg.seed)
+    hidden = D.assign_hidden(prompts, o, seed=2000 + cfg.seed, dataset=dataset)
+    # labels come from one generation run (what a deployment would log)
+    lengths = D.sample_lengths(prompts, o, hidden, seed=3000 + cfg.seed)
+    toks = jnp.asarray(D.tokens_matrix(prompts))
+    lens = jnp.asarray(lengths.astype(np.float32))
+
+    params = M.init_scorer(jax.random.PRNGKey(cfg.seed), cfg.backbone)
+    opt = adam_init(params)
+    acfg = AdamConfig(lr=cfg.lr)
+    rng = np.random.default_rng(4000 + cfg.seed)
+    losses = []
+    t0 = time.time()
+    n_steps = 0
+
+    if cfg.objective == "pairwise":
+        delta = cfg.filter_delta if cfg.filter_delta is not None else D.delta_for(target_model)
+        # delta=0 (Table IV "without filtering") still excludes exact ties
+        # and self-pairs, which carry no ordering information at all
+        delta_eff = max(delta, 1e-9)
+        loss_fn = functools.partial(
+            pairwise_loss_inbatch, delta=delta_eff, backbone=cfg.backbone
+        )
+
+        @jax.jit
+        def step(params, opt, t, l):
+            lo, g = jax.value_and_grad(loss_fn)(params, t, l)
+            params, opt = adam_update(params, g, opt, acfg)
+            return params, opt, lo
+
+        n = len(prompts)
+        for _ in range(cfg.epochs):
+            perm = _epoch_perm(rng, n)
+            for s0 in range(0, n - cfg.batch + 1, cfg.batch):
+                sel = perm[s0 : s0 + cfg.batch]
+                params, opt, l = step(params, opt, toks[sel], lens[sel])
+                losses.append(float(l)); n_steps += 1
+
+    elif cfg.objective == "pointwise":
+        loss_fn = functools.partial(pointwise_loss, backbone=cfg.backbone)
+
+        @jax.jit
+        def step(params, opt, t, l):
+            lo, g = jax.value_and_grad(loss_fn)(params, t, l)
+            params, opt = adam_update(params, g, opt, acfg)
+            return params, opt, lo
+
+        n = len(prompts)
+        for _ in range(cfg.epochs):
+            perm = _epoch_perm(rng, n)
+            for s0 in range(0, n - cfg.batch + 1, cfg.batch):
+                sel = perm[s0 : s0 + cfg.batch]
+                params, opt, l = step(params, opt, toks[sel], lens[sel])
+                losses.append(float(l)); n_steps += 1
+
+    elif cfg.objective == "listwise":
+        lists = D.build_lists(lengths, cfg.n_lists, cfg.list_size, seed=6000 + cfg.seed)
+        loss_fn = functools.partial(listwise_loss, backbone=cfg.backbone)
+        lists_per_batch = max(1, cfg.batch // cfg.list_size)
+
+        @jax.jit
+        def step(params, opt, tl):
+            lo, g = jax.value_and_grad(loss_fn)(params, tl)
+            params, opt = adam_update(params, g, opt, acfg)
+            return params, opt, lo
+
+        for _ in range(cfg.epochs):
+            perm = _epoch_perm(rng, len(lists))
+            for s0 in range(0, len(lists) - lists_per_batch + 1, lists_per_batch):
+                sel = perm[s0 : s0 + lists_per_batch]
+                tl = toks[jnp.asarray(lists[sel])]  # [R,K,S]
+                params, opt, l = step(params, opt, tl)
+                losses.append(float(l)); n_steps += 1
+    else:
+        raise ValueError(cfg.objective)
+
+    return TrainResult(params=params, losses=losses,
+                       train_seconds=time.time() - t0, n_steps=n_steps)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: Kendall tau_b (reference implementation; Rust re-implements)
+# ---------------------------------------------------------------------------
+
+def kendall_tau_b(x: np.ndarray, y: np.ndarray) -> float:
+    """O(n^2) tie-aware tau_b (reference; fine for n ≤ a few thousand)."""
+    x = np.asarray(x, np.float64); y = np.asarray(y, np.float64)
+    n = len(x)
+    dx = np.sign(x[:, None] - x[None, :])
+    dy = np.sign(y[:, None] - y[None, :])
+    iu = np.triu_indices(n, 1)
+    s = dx[iu] * dy[iu]
+    nc = int((s > 0).sum()); nd = int((s < 0).sum())
+    n0 = n * (n - 1) // 2
+    t1 = int((dx[iu] == 0).sum()); t2 = int((dy[iu] == 0).sum())
+    denom = np.sqrt((n0 - t1) * (n0 - t2))
+    return float((nc - nd) / denom) if denom > 0 else 0.0
+
+
+def eval_tau(params, backbone: str, dataset: str, target_model: str,
+             n_test: int = 1000, seed: int = 77, use_pallas: bool = False) -> float:
+    """Tau between predicted scores and an independent generation run."""
+    o = D.ORACLES[target_model]
+    prompts = D.make_corpus(dataset, n_test, seed=9000 + seed)
+    hidden = D.assign_hidden(prompts, o, seed=9100 + seed, dataset=dataset)
+    lengths = D.sample_lengths(prompts, o, hidden, seed=9200 + seed)
+    toks = jnp.asarray(D.tokens_matrix(prompts))
+    fwd = jax.jit(functools.partial(M.scorer_forward, backbone=backbone, use_pallas=use_pallas))
+    scores = np.asarray(fwd(params, toks))
+    return kendall_tau_b(scores, lengths.astype(np.float64))

@@ -1,0 +1,97 @@
+"""AOT pipeline tests: HLO text lowering round-trips through the XLA text
+parser, and the artifact directory layout matches what Rust expects.
+
+Runs against a tiny --quick build in a temp dir (session-scoped; ~2 min),
+plus fast unit checks of the lowering helpers.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot as AOT
+from compile import data as D
+from compile import model as M
+
+
+def test_hlo_text_lowering_smoke():
+    """Lowered HLO text must contain an entry computation and parameters."""
+
+    def fn(x):
+        return (x @ x.T,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = AOT.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "parameter(0)" in text.replace(" ", "").lower() or "parameter" in text
+
+
+def test_scorer_hlo_contains_expected_shapes():
+    text = AOT.lower_scorer_hlo("bert", batch=8)
+    # token input [8, SEQ_LEN] appears in the signature
+    assert f"s32[8,{D.SEQ_LEN}]" in text
+    # scalar-per-prompt output
+    assert "f32[8]" in text
+
+
+@pytest.fixture(scope="session")
+def quick_build(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_quick")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--quick"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+        timeout=900,
+    )
+    return out
+
+
+def test_quick_build_layout(quick_build):
+    manifest = json.loads((quick_build / "manifest.json").read_text())
+    assert manifest["seq_len"] == D.SEQ_LEN
+    assert manifest["serve_batch"] == M.SERVE_BATCH
+    assert set(manifest["scorer_hlo"]) == {"bert", "opt", "t5"}
+    for s in manifest["scorers"]:
+        w = quick_build / s["weights"]
+        assert w.exists()
+        data = np.fromfile(w, dtype=np.float32)
+        assert data.shape[0] == s["n_params"]
+        assert np.isfinite(data).all()
+        assert -1.0 <= s["train_tau"] <= 1.0
+    for key in ("picolm_prefill", "picolm_decode"):
+        assert (quick_build / manifest[key]).exists()
+
+
+def test_quick_build_testset_consistency(quick_build):
+    ts = json.loads((quick_build / "testset_synthalpaca_gpt4.json").read_text())
+    n = len(ts["prompts"])
+    assert n == len(ts["label_len"]) == len(ts["oracle_len"]) == len(ts["live_len"])
+    assert all(len(row) == ts["seq_len"] for row in ts["prompts"])
+    assert all(1 <= l <= ts["max_len"] for l in ts["live_len"])
+    # label/oracle/live are three independent runs of the same oracle:
+    # they must correlate strongly but not be identical
+    a = np.array(ts["label_len"], float)
+    b = np.array(ts["live_len"], float)
+    assert not np.array_equal(a, b)
+    assert np.corrcoef(np.log(a), np.log(b))[0, 1] > 0.5
+
+
+def test_quick_build_table1(quick_build):
+    t1 = json.loads((quick_build / "table1.json").read_text())
+    assert t1["r1"]["reasoning"] is True
+    assert t1["r1"]["q2_median"] > 5 * t1["gpt4"]["q2_median"]
+
+
+def test_weights_flat_order_is_deterministic():
+    """Rust depends on tree_leaves order being stable across processes."""
+    p1 = M.init_scorer(jax.random.PRNGKey(0), "bert")
+    p2 = M.init_scorer(jax.random.PRNGKey(0), "bert")
+    np.testing.assert_array_equal(M.flatten_params(p1), M.flatten_params(p2))

@@ -1,0 +1,132 @@
+"""Synthetic-corpus + length-oracle invariants (the Fig. 2 / Table I
+statistical properties the reproduction depends on)."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return D.make_corpus("synthalpaca", 500, seed=1)
+
+
+def test_corpus_deterministic():
+    a = D.make_corpus("synthlmsys", 50, seed=3)
+    b = D.make_corpus("synthlmsys", 50, seed=3)
+    assert all((x.tokens == y.tokens).all() for x, y in zip(a, b))
+
+
+def test_prompt_structure(corpus):
+    for p in corpus:
+        t = p.tokens
+        assert t[0] == D.CLS_ID
+        assert t[1] in range(D.TASK_BASE, D.TASK_BASE + D.N_TASKS) or t[1] == D.GENERIC_TASK_ID
+        n = int((t != D.PAD_ID).sum())
+        assert t[n - 1] == D.EOS_ID
+        assert (t[n:] == D.PAD_ID).all()
+
+
+def test_alpaca_always_shows_task_marker(corpus):
+    assert all(p.task_visible for p in corpus)
+
+
+def test_lmsys_sometimes_hides_task_marker():
+    ps = D.make_corpus("synthlmsys", 500, seed=2)
+    hidden_frac = sum(not p.task_visible for p in ps) / len(ps)
+    assert 0.1 < hidden_frac < 0.4
+
+
+def test_lengths_positive_and_capped(corpus):
+    for m in D.MODELS:
+        o = D.ORACLES[m]
+        h = D.assign_hidden(corpus, o, seed=2, dataset="synthalpaca")
+        lens = D.sample_lengths(corpus, o, h, seed=3)
+        assert lens.min() >= 1
+        assert lens.max() <= o.max_len
+
+
+def test_reasoning_lengths_dominate(corpus):
+    """Table I: r1-sim outputs are orders of magnitude longer."""
+    hs = {m: D.assign_hidden(corpus, D.ORACLES[m], seed=2, dataset="synthalpaca") for m in D.MODELS}
+    means = {
+        m: D.sample_lengths(corpus, D.ORACLES[m], hs[m], seed=3).mean() for m in D.MODELS
+    }
+    assert means["r1"] > 5 * means["gpt4"]
+    assert means["r1"] > 5 * means["llama"]
+
+
+def test_fig2_variance_bands(corpus):
+    """Run-to-run relative variance: ~20% llama, ~25% r1 (paper Fig. 2)."""
+    sub = corpus[:30]
+    for m, lo, hi in [("llama", 5.0, 35.0), ("r1", 8.0, 42.0), ("gpt4", 4.0, 30.0)]:
+        o = D.ORACLES[m]
+        h = D.assign_hidden(sub, o, seed=2, dataset="synthalpaca")
+        rv = D.relative_variance_runs(sub, o, h, n_runs=10, seed=99)
+        assert lo < rv.mean() < hi, (m, rv.mean())
+
+
+def test_hidden_factors_fixed_across_runs(corpus):
+    o = D.ORACLES["r1"]
+    h1 = D.assign_hidden(corpus, o, seed=5, dataset="synthlmsys")
+    h2 = D.assign_hidden(corpus, o, seed=5, dataset="synthlmsys")
+    np.testing.assert_array_equal(h1, h2)
+
+
+def test_min_length_difference_formula():
+    la = np.array([100, 50, 10])
+    lb = np.array([80, 50, 100])
+    d = D.min_length_difference(la, lb)
+    np.testing.assert_allclose(d, [0.2, 0.0, 0.9])
+
+
+def test_build_pairs_filtering():
+    lens = np.array([10, 12, 100, 1000, 11, 13] * 50)
+    ii, jj, yy = D.build_pairs(lens, 500, seed=1, delta=0.2)
+    assert len(ii) == 500
+    rel = D.min_length_difference(lens[ii], lens[jj])
+    assert (rel >= 0.2).all()
+    np.testing.assert_array_equal(yy, np.where(lens[ii] > lens[jj], 1.0, -1.0))
+
+
+def test_build_pairs_nofilter_excludes_exact_ties():
+    lens = np.array([10, 10, 10, 20, 30] * 20)
+    ii, jj, _ = D.build_pairs(lens, 300, seed=2, delta=0.0)
+    assert (lens[ii] != lens[jj]).all()
+
+
+def test_build_lists_sorted():
+    rng = np.random.default_rng(0)
+    lens = rng.integers(1, 1000, size=200)
+    lists = D.build_lists(lens, 20, 16, seed=3)
+    for row in lists:
+        l = lens[row]
+        assert (np.diff(l) <= 0).all()
+        assert len(set(row.tolist())) == 16  # no replacement
+
+
+def test_quantization_creates_ties():
+    rng = np.random.default_rng(1)
+    raw = rng.uniform(20, 500, size=2000).astype(np.int64)
+    q = D.quantize_lengths(raw)
+    assert len(np.unique(q)) < len(np.unique(raw)) / 3
+    # quantization error bounded by the bucket half-width (+ int rounding)
+    np.testing.assert_allclose(q / raw, 1.0, atol=0.05)
+
+
+def test_quantization_exact_below_threshold():
+    raw = np.arange(1, D.QUANT_EXACT_BELOW)
+    np.testing.assert_array_equal(D.quantize_lengths(raw), raw)
+
+
+def test_delta_for_matches_paper():
+    assert D.delta_for("llama") == 0.20
+    assert D.delta_for("gpt4") == 0.20
+    assert D.delta_for("r1") == 0.25
+
+
+def test_sigma_hidden_ordering():
+    """LMSYS noisier than Alpaca for every model (Table II ordering)."""
+    for m in D.MODELS:
+        assert D.SIGMA_HIDDEN[("synthlmsys", m)] > D.SIGMA_HIDDEN[("synthalpaca", m)]

@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes-of-interest; assert_allclose against
+ref.py is THE correctness signal licensing the AOT artifacts.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import attention as A
+from compile.kernels import ffn as F
+from compile.kernels import layernorm as LN
+from compile.kernels import ref as R
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=12, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+ATOL = 2e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@given(
+    b=st.sampled_from([1, 2, 3]),
+    h=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([1, 32, 64]),
+    sk=st.sampled_from([32, 64, 160]),
+    d=st.sampled_from([8, 16]),
+)
+def test_attention_matches_ref(b, h, sq, sk, d):
+    rng = np.random.default_rng(b * 1000 + h * 100 + sq + sk + d)
+    q, k, v = rand(rng, b, h, sq, d), rand(rng, b, h, sk, d), rand(rng, b, h, sk, d)
+    bias = jnp.zeros((b, 1, sq, sk), jnp.float32)
+    bq = min(32, sq)
+    out = A.attention(q, k, v, bias, block_q=bq, block_k=32)
+    ref = R.attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(out, ref, atol=ATOL, rtol=1e-5)
+
+
+def test_attention_respects_padding_mask():
+    rng = np.random.default_rng(0)
+    b, h, s, d = 2, 2, 32, 8
+    q, k, v = rand(rng, b, h, s, d), rand(rng, b, h, s, d), rand(rng, b, h, s, d)
+    mask = jnp.asarray(np.tile((np.arange(s) < 20), (b, 1)), jnp.float32)
+    bias = A.padding_bias(mask, mask)
+    out = A.attention(q, k, v, bias)
+    # changing masked-out K/V must not change the output
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    out2 = A.attention(q, k2, v2, bias)
+    np.testing.assert_allclose(out, out2, atol=ATOL)
+
+
+def test_attention_causal_mask():
+    rng = np.random.default_rng(1)
+    b, h, s, d = 1, 2, 32, 8
+    q, k, v = rand(rng, b, h, s, d), rand(rng, b, h, s, d), rand(rng, b, h, s, d)
+    bias = A.causal_bias(s, s)
+    bias = jnp.broadcast_to(bias, (b, 1, s, s))
+    out = A.attention(q, k, v, bias)
+    # position 0 attends only to itself → equals softmax over single item = v[0]
+    np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], atol=ATOL)
+
+
+def test_attention_softmax_stability_large_logits():
+    rng = np.random.default_rng(2)
+    b, h, s, d = 1, 1, 32, 8
+    q = rand(rng, b, h, s, d) * 100.0
+    k = rand(rng, b, h, s, d) * 100.0
+    v = rand(rng, b, h, s, d)
+    bias = jnp.zeros((b, 1, s, s), jnp.float32)
+    out = A.attention(q, k, v, bias)
+    assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([1, 7, 32, 64, 100]),
+    d=st.sampled_from([8, 48, 64]),
+)
+def test_layernorm_matches_ref(n, d):
+    rng = np.random.default_rng(n * 10 + d)
+    x, g, bb = rand(rng, n, d), rand(rng, d), rand(rng, d)
+    np.testing.assert_allclose(
+        LN.layernorm(x, g, bb), R.layernorm_ref(x, g, bb), atol=ATOL, rtol=1e-5
+    )
+
+
+def test_layernorm_output_standardized():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 32, 64) * 13.0 + 5.0
+    out = LN.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(out).mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out).std(axis=-1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([1, 31, 32, 65]),
+    d=st.sampled_from([16, 64]),
+    ff=st.sampled_from([32, 256]),
+)
+def test_ffn_matches_ref(n, d, ff):
+    rng = np.random.default_rng(n + d + ff)
+    x = rand(rng, n, d)
+    w1, b1 = rand(rng, d, ff) * 0.1, rand(rng, ff) * 0.1
+    w2, b2 = rand(rng, ff, d) * 0.1, rand(rng, d) * 0.1
+    np.testing.assert_allclose(
+        F.ffn(x, w1, b1, w2, b2), R.ffn_ref(x, w1, b1, w2, b2), atol=ATOL, rtol=1e-5
+    )
+
+
+def test_gelu_matches_jax():
+    x = jnp.linspace(-5, 5, 101)
+    np.testing.assert_allclose(
+        R.gelu_ref(x), jax.nn.gelu(x, approximate=True), atol=1e-6
+    )
+
+
+def test_kernels_are_jittable():
+    rng = np.random.default_rng(4)
+    x = rand(rng, 32, 64)
+    g, bb = jnp.ones(64), jnp.zeros(64)
+    out = jax.jit(lambda x: LN.layernorm(x, g, bb))(x)
+    assert out.shape == (32, 64)

@@ -1,0 +1,127 @@
+"""L2 model tests: scorer shapes/invariances, picoLM prefill/decode
+consistency, flatten/unflatten round trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def toks():
+    prompts = D.make_corpus("synthalpaca", 8, seed=1)
+    return jnp.asarray(D.tokens_matrix(prompts))
+
+
+@pytest.mark.parametrize("backbone", ["bert", "opt", "t5"])
+def test_scorer_shapes(backbone, toks):
+    p = M.init_scorer(jax.random.PRNGKey(0), backbone)
+    s = M.scorer_forward(p, toks, backbone)
+    assert s.shape == (8,)
+    assert bool(jnp.isfinite(s).all())
+
+
+@pytest.mark.parametrize("backbone", ["bert", "opt", "t5"])
+def test_scorer_pallas_parity(backbone, toks):
+    """Training path (ref) and serving path (Pallas) must agree."""
+    p = M.init_scorer(jax.random.PRNGKey(1), backbone)
+    s_ref = M.scorer_forward(p, toks, backbone, use_pallas=False)
+    s_pal = M.scorer_forward(p, toks, backbone, use_pallas=True)
+    np.testing.assert_allclose(s_ref, s_pal, atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("backbone", ["bert", "opt", "t5"])
+def test_flatten_roundtrip(backbone, toks):
+    p = M.init_scorer(jax.random.PRNGKey(2), backbone)
+    flat = M.flatten_params(p)
+    assert flat.shape[0] == M.n_params(p)
+    p2 = M.unflatten_params(p, jnp.asarray(flat))
+    s1 = M.scorer_forward(p, toks, backbone)
+    s2 = M.scorer_forward(p2, toks, backbone)
+    np.testing.assert_allclose(s1, s2, atol=1e-6)
+
+
+def test_scorer_entry_matches_forward(toks):
+    fn, _ = M.scorer_entry("bert", batch=8, use_pallas=False)
+    p = M.init_scorer(jax.random.PRNGKey(0), "bert")
+    flat = jnp.asarray(M.flatten_params(p))
+    (s_entry,) = fn(flat, toks)
+    s_fwd = M.scorer_forward(p, toks, "bert")
+    np.testing.assert_allclose(s_entry, s_fwd, atol=1e-6)
+
+
+def test_scorer_ignores_padding(toks):
+    """Extending PAD region must not change scores (mask correctness)."""
+    p = M.init_scorer(jax.random.PRNGKey(3), "bert")
+    s1 = M.scorer_forward(p, toks, "bert")
+    # PAD embeddings can't be changed, but PAD *positions* are masked:
+    # replacing PAD with PAD is identity; instead check a shorter prompt
+    # padded further gives the same score as originally padded
+    row = np.asarray(toks[0]).copy()
+    n = int((row != 0).sum())
+    assert (row[n:] == 0).all()
+    s_single = M.scorer_forward(p, jnp.asarray(row)[None], "bert")
+    np.testing.assert_allclose(s_single[0], s1[0], atol=1e-6)
+
+
+def test_pico_prefill_decode_consistency(toks):
+    """A decode step must produce the same logits as prefilling the
+    extended sequence — KV-cache correctness."""
+    pp = M.init_picolm(jax.random.PRNGKey(4))
+    lengths = jnp.asarray([(t != 0).sum() for t in np.asarray(toks)], jnp.int32)
+    logits, kv, pos = M.pico_prefill(pp, toks, lengths, use_pallas=True)
+    assert logits.shape == (8, D.VOCAB_SIZE)
+    assert kv.shape == (2, 2, 8, M.PICO_MAX_SEQ, 4, 16)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    l_dec, kv2, pos2 = M.pico_decode(pp, nxt, kv, pos, use_pallas=True)
+    assert bool((pos2 == pos + 1).all())
+
+    ext = np.asarray(toks).copy()
+    for i in range(ext.shape[0]):
+        ext[i, int(lengths[i])] = int(nxt[i])
+    l_ref, _, _ = M.pico_prefill(pp, jnp.asarray(ext), lengths + 1, use_pallas=False)
+    np.testing.assert_allclose(l_dec, l_ref, atol=3e-5, rtol=1e-4)
+
+
+def test_pico_decode_two_steps(toks):
+    """Two chained decode steps equal prefill of the doubly-extended seq."""
+    pp = M.init_picolm(jax.random.PRNGKey(5))
+    toks2 = toks[:4]
+    lengths = jnp.asarray([(t != 0).sum() for t in np.asarray(toks2)], jnp.int32)
+    logits, kv, pos = M.pico_prefill(pp, toks2, lengths, use_pallas=False)
+    t1 = jnp.argmax(logits, -1).astype(jnp.int32)
+    l1, kv, pos = M.pico_decode(pp, t1, kv, pos, use_pallas=False)
+    t2 = jnp.argmax(l1, -1).astype(jnp.int32)
+    l2, kv, pos = M.pico_decode(pp, t2, kv, pos, use_pallas=False)
+
+    ext = np.asarray(toks2).copy()
+    for i in range(ext.shape[0]):
+        ext[i, int(lengths[i])] = int(t1[i])
+        ext[i, int(lengths[i]) + 1] = int(t2[i])
+    l_ref, _, _ = M.pico_prefill(pp, jnp.asarray(ext), lengths + 2, use_pallas=False)
+    np.testing.assert_allclose(l2, l_ref, atol=3e-5, rtol=1e-4)
+
+
+def test_pico_lm_loss_decreases_with_training():
+    pp = M.init_picolm(jax.random.PRNGKey(6))
+    prompts = D.make_corpus("synthalpaca", 128, seed=7)
+    batch = jnp.asarray(D.tokens_matrix(prompts))
+    from compile import train as T
+
+    opt = T.adam_init(pp)
+    acfg = T.AdamConfig(lr=2e-3)
+
+    @jax.jit
+    def step(params, opt):
+        l, g = jax.value_and_grad(M.pico_lm_loss)(params, batch)
+        params, opt = T.adam_update(params, g, opt, acfg)
+        return params, opt, l
+
+    losses = []
+    for _ in range(30):
+        pp, opt, l = step(pp, opt)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]

@@ -1,0 +1,72 @@
+//! Shared bench plumbing: artifact discovery + skip-if-unbuilt guard.
+#![allow(dead_code)] // each bench target uses a subset of these helpers
+
+use std::path::PathBuf;
+
+/// Locate the artifacts directory; exit cleanly if `make artifacts` has
+/// not been run (so `cargo bench` works on a fresh checkout).
+pub fn artifacts_or_skip(bench: &str) -> PathBuf {
+    let dir = std::env::var("PARS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let dir = PathBuf::from(dir);
+    if !dir.join("manifest.json").exists() {
+        println!("[{bench}] SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        std::process::exit(0);
+    }
+    dir
+}
+
+/// The four (dataset, model) serving combos the paper's §IV-D uses.
+pub const SERVE_COMBOS: [(&str, &str); 4] = [
+    ("synthalpaca", "llama"),
+    ("synthalpaca", "r1"),
+    ("synthlmsys", "llama"),
+    ("synthlmsys", "r1"),
+];
+
+/// All six (dataset, model) predictor-evaluation combos (Tables II–IV).
+pub const EVAL_COMBOS: [(&str, &str); 6] = [
+    ("synthalpaca", "gpt4"),
+    ("synthalpaca", "llama"),
+    ("synthalpaca", "r1"),
+    ("synthlmsys", "gpt4"),
+    ("synthlmsys", "llama"),
+    ("synthlmsys", "r1"),
+];
+
+/// Score a test set with a scorer variant and return tau_b against the
+/// live-run lengths (the Tables II–IV measurement).
+#[allow(dead_code)]
+pub fn measure_tau(
+    rt: &pars_serve::runtime::Runtime,
+    manifest: &pars_serve::runtime::ArtifactManifest,
+    ts: &pars_serve::workload::TestSet,
+    objective: &str,
+    backbone: &str,
+    filtered: bool,
+) -> f64 {
+    use pars_serve::coordinator::{PjrtScorer, Scorer};
+    let mut scorer = PjrtScorer::load(
+        rt, manifest, objective, backbone, &ts.dataset, &ts.model, filtered,
+    )
+    .expect("scorer load");
+    let scores = scorer.score_batch(&ts.tokens, ts.n_prompts, ts.seq_len).expect("scoring");
+    let x: Vec<f64> = scores.iter().map(|&s| s as f64).collect();
+    let y: Vec<f64> = ts.live_len.iter().map(|&l| l as f64).collect();
+    pars_serve::eval::kendall_tau_b(&x, &y)
+}
+
+/// Pretty label matching the paper's row names.
+pub fn combo_label(dataset: &str, model: &str) -> String {
+    let ds = match dataset {
+        "synthalpaca" => "Alpaca*",
+        "synthlmsys" => "LMSYS*",
+        other => other,
+    };
+    let m = match model {
+        "gpt4" => "GPT-4*",
+        "llama" => "Llama*",
+        "r1" => "R1*",
+        other => other,
+    };
+    format!("{ds} ({m})")
+}

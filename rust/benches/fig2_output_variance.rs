@@ -1,0 +1,45 @@
+//! Fig. 2: relative output-length variance across ten repeated generations
+//! of 30 prompts — the evidence behind the min_length_difference filter.
+//! Paper: variance typically stays within 20% (Llama 3.1) / 25% (R1).
+
+mod common;
+
+use pars_serve::util::bench::Table;
+use pars_serve::util::rng::Rng;
+use pars_serve::util::stats::Summary;
+use pars_serve::workload::{LengthOracle, TestSet};
+
+fn main() {
+    let dir = common::artifacts_or_skip("fig2");
+    let mut t = Table::new(
+        "Fig. 2 — relative variance (max/min − 1)·100% over 10 runs × 30 prompts",
+        &["Model", "mean %", "p50 %", "p90 %", "max %", "paper band"],
+    );
+    for (model, band) in [("llama", "≤ ~20% typical"), ("r1", "≤ ~25% typical")] {
+        let ts = TestSet::load(&dir, "synthalpaca", model).expect("testset");
+        // 30-prompt slice, like the paper's experiment
+        let slice = TestSet {
+            mu_eff: ts.mu_eff[..30].to_vec(),
+            ..ts.clone()
+        };
+        let oracle = LengthOracle::from_testset(&slice);
+        let mut rng = Rng::new(2026);
+        let rv = oracle.relative_variance(10, &mut rng);
+        let s = Summary::of(&rv);
+        t.row(&[
+            common::combo_label("synthalpaca", model),
+            format!("{:.1}", s.mean),
+            format!("{:.1}", s.p50),
+            format!("{:.1}", s.p90),
+            format!("{:.1}", s.max),
+            band.to_string(),
+        ]);
+        // per-prompt series (the paper's bar chart, as text)
+        print!("{model:>6}: ");
+        for v in rv.iter() {
+            print!("{v:>3.0} ");
+        }
+        println!();
+    }
+    t.print();
+}

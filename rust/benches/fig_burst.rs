@@ -1,0 +1,66 @@
+//! §IV-D burst experiment: 2000 simultaneous requests.
+//!
+//! Paper shape: PARS beats FCFS and both approximate-SJF baselines and
+//! tracks Oracle SJF closely — >2x average-latency speedup vs FCFS on the
+//! reasoning model, up to 7.7x on Llama (8x at p90).
+
+mod common;
+
+use pars_serve::config::{PolicyKind, SchedulerConfig};
+use pars_serve::harness;
+use pars_serve::runtime::{ArtifactManifest, Runtime};
+use pars_serve::util::bench::Table;
+use pars_serve::workload::TestSet;
+
+const BURST_N: usize = 2000;
+
+fn main() {
+    let dir = common::artifacts_or_skip("fig_burst");
+    let rt = Runtime::cpu().expect("pjrt");
+    let manifest = ArtifactManifest::load(&dir).expect("manifest");
+    let cost = harness::load_cost_model(&dir);
+    let sched = SchedulerConfig::default();
+
+    for (ds, m) in common::SERVE_COMBOS {
+        let ts = TestSet::load(&dir, ds, m).expect("testset");
+        let suite = harness::policy_suite(m);
+        let book = harness::ScoreBook::build(&rt, &manifest, &ts, &suite).expect("scores");
+        let arrivals = harness::burst(&ts, BURST_N, 11);
+
+        let mut fcfs_avg = 0.0;
+        let mut fcfs_p90 = 0.0;
+        let mut rows = Vec::new();
+        for &kind in &suite {
+            let out =
+                harness::run_sim(&ts, &arrivals, kind, &book, &cost, &sched).expect("serve");
+            if kind == PolicyKind::Fcfs {
+                fcfs_avg = out.report.avg_per_token_ms;
+                fcfs_p90 = out.report.p90_per_token_ms;
+            }
+            rows.push((kind, out));
+        }
+
+        let mut t = Table::new(
+            &format!("burst {BURST_N} — {}", common::combo_label(ds, m)),
+            &["policy", "avg ms/tok", "x vs FCFS", "p90 ms/tok", "x vs FCFS", "makespan s", "boosts"],
+        );
+        for (kind, out) in &rows {
+            t.row(&[
+                kind.name().to_string(),
+                format!("{:.1}", out.report.avg_per_token_ms),
+                format!("{:.2}x", fcfs_avg / out.report.avg_per_token_ms),
+                format!("{:.1}", out.report.p90_per_token_ms),
+                format!("{:.2}x", fcfs_p90 / out.report.p90_per_token_ms),
+                format!("{:.0}", out.makespan_ms / 1e3),
+                out.boosts.to_string(),
+            ]);
+        }
+        t.print();
+
+        let pars = rows.iter().find(|(k, _)| *k == PolicyKind::Pars).unwrap();
+        let speedup = fcfs_avg / pars.1.report.avg_per_token_ms;
+        println!(
+            "PARS avg speedup vs FCFS: {speedup:.2}x (paper: >2x on reasoning, up to 7.7x on Llama)"
+        );
+    }
+}

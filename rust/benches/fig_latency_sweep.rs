@@ -1,0 +1,62 @@
+//! §IV-D figure: average and p90 per-token latency vs arrival rate, for
+//! the four (dataset, model) serving combos under all six policies.
+//!
+//! Paper shape: PARS is the best practical policy at every rate (second
+//! only to Oracle SJF), staying within ~200 ms/token of Oracle; FCFS
+//! degrades worst as load rises.  Rates are expressed as load factors of
+//! the engine's saturation throughput so each combo is swept through the
+//! same under→over-load range.
+
+mod common;
+
+use pars_serve::config::SchedulerConfig;
+use pars_serve::harness;
+use pars_serve::runtime::{ArtifactManifest, Runtime};
+use pars_serve::util::bench::Table;
+use pars_serve::workload::TestSet;
+
+const N_REQUESTS: usize = 400;
+
+fn main() {
+    let dir = common::artifacts_or_skip("fig_latency_sweep");
+    let rt = Runtime::cpu().expect("pjrt");
+    let manifest = ArtifactManifest::load(&dir).expect("manifest");
+    let cost = harness::load_cost_model(&dir);
+    let sched = SchedulerConfig::default();
+
+    for (ds, m) in common::SERVE_COMBOS {
+        let ts = TestSet::load(&dir, ds, m).expect("testset");
+        let suite = harness::policy_suite(m);
+        let book = harness::ScoreBook::build(&rt, &manifest, &ts, &suite).expect("scores");
+        let rates = harness::sweep_rates(&ts, &cost, &sched);
+
+        let mut avg_t = Table::new(
+            &format!(
+                "avg per-token latency (ms/token) — {} [scoring {:.2} ms/prompt]",
+                common::combo_label(ds, m),
+                book.scoring_ms_per_prompt
+            ),
+            &["policy", "0.3x", "0.5x", "0.7x", "0.9x", "1.1x"],
+        );
+        let mut p90_t = Table::new(
+            &format!("p90 per-token latency (ms/token) — {}", common::combo_label(ds, m)),
+            &["policy", "0.3x", "0.5x", "0.7x", "0.9x", "1.1x"],
+        );
+        for &kind in &suite {
+            let mut avg_row = vec![kind.name().to_string()];
+            let mut p90_row = vec![kind.name().to_string()];
+            for (ri, &rate) in rates.iter().enumerate() {
+                let arrivals = harness::poisson(&ts, rate, N_REQUESTS, 7 + ri as u64);
+                let out = harness::run_sim(&ts, &arrivals, kind, &book, &cost, &sched)
+                    .expect("serve");
+                avg_row.push(format!("{:.1}", out.report.avg_per_token_ms));
+                p90_row.push(format!("{:.1}", out.report.p90_per_token_ms));
+            }
+            avg_t.row(&avg_row);
+            p90_t.row(&p90_row);
+        }
+        avg_t.print();
+        p90_t.print();
+    }
+    println!("\n(paper shape: PARS ≈ best practical policy; Oracle SJF lower bound; FCFS worst at high load)");
+}

@@ -1,0 +1,111 @@
+//! §Perf micro-benchmarks over the request-path hot spots:
+//! admission scoring (the paper's "minimal overhead" claim), waiting-queue
+//! operations, the decode-loop bookkeeping, and the eval kernels.
+
+mod common;
+
+use pars_serve::config::{CostModel, PolicyKind, SchedulerConfig};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::{PjrtScorer, Request, Scorer, WaitingQueue};
+use pars_serve::engine::SimEngine;
+use pars_serve::eval::kendall_tau_b;
+use pars_serve::metrics::Histogram;
+use pars_serve::runtime::{ArtifactManifest, Runtime};
+use pars_serve::util::bench::{black_box, Harness};
+use pars_serve::util::rng::Rng;
+use pars_serve::workload::TestSet;
+
+fn main() {
+    let mut h = Harness::with_budget("micro", 200, 800);
+    let mut rng = Rng::new(1);
+
+    // eval kernel: tau over 2000 items (the Tables II-IV inner loop)
+    let x: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+    let y: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+    h.bench("kendall_tau_b/2000", || kendall_tau_b(&x, &y));
+
+    // waiting queue: push+pop 1000 under SJF keys
+    let policy = make_policy(PolicyKind::Pars);
+    let reqs: Vec<Request> = (0..1000)
+        .map(|i| Request {
+            id: i,
+            tokens: vec![1; 32],
+            prompt_len: 8,
+            arrival_ms: i as f64,
+            target_len: 10,
+            oracle_len: 10,
+            score: rng.f64() as f32,
+        })
+        .collect();
+    h.bench("waiting_queue/push_pop_1000", || {
+        let mut w = WaitingQueue::new(1e12);
+        for r in &reqs {
+            w.push(r.clone(), policy.as_ref());
+        }
+        let mut n = 0;
+        while w.pop().is_some() {
+            n += 1;
+        }
+        black_box(n)
+    });
+
+    // histogram record (per-token-latency tracking)
+    h.bench("histogram/record_10k", || {
+        let mut hist = Histogram::new();
+        for i in 0..10_000 {
+            hist.record((i % 977) as f64 * 0.37 + 0.5);
+        }
+        black_box(hist.percentile(90.0))
+    });
+
+    // SimEngine full serve of a 500-request burst (the sweep inner loop)
+    let sched = SchedulerConfig::default();
+    h.bench("sim_serve/burst500", || {
+        let mut e = SimEngine::new(CostModel::default(), &sched, 4096);
+        let mut c = pars_serve::coordinator::Coordinator::new(
+            &mut e,
+            make_policy(PolicyKind::OracleSjf),
+            sched.clone(),
+        );
+        let reqs: Vec<Request> = (0..500)
+            .map(|i| Request {
+                id: i,
+                tokens: vec![1, 10, 21, 40, 2],
+                prompt_len: 5,
+                arrival_ms: 0.0,
+                target_len: 20 + (i % 100) as u32 * 7,
+                oracle_len: 20 + (i % 100) as u32 * 7,
+                score: 0.0,
+            })
+            .collect();
+        black_box(c.serve(reqs).unwrap().report.avg_per_token_ms)
+    });
+
+    // admission-path scoring on the real PJRT predictor (needs artifacts)
+    let dir = std::path::PathBuf::from(
+        std::env::var("PARS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if dir.join("manifest.json").exists() {
+        let rt = Runtime::cpu().expect("pjrt");
+        let manifest = ArtifactManifest::load(&dir).expect("manifest");
+        if let Ok(ts) = TestSet::load(&dir, "synthalpaca", "llama") {
+            let mut scorer = PjrtScorer::load(
+                &rt, &manifest, "pairwise", "bert", "synthalpaca", "llama", true,
+            )
+            .expect("scorer");
+            let batch = manifest.score_batch;
+            let toks = &ts.tokens[..batch * ts.seq_len];
+            let r = h.bench("pjrt_score/batch64", || {
+                scorer.score_batch(toks, batch, ts.seq_len).unwrap()
+            });
+            println!(
+                "→ admission overhead: {:.3} ms/prompt (paper: \"minimal overhead\")",
+                r.summary.mean / batch as f64
+            );
+        }
+    } else {
+        println!("[micro] pjrt scoring skipped (no artifacts)");
+    }
+
+    h.report();
+}

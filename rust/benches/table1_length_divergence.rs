@@ -1,0 +1,47 @@
+//! Table I: output-length divergence between non-reasoning and reasoning
+//! models on two probe prompts (a trivial factual question vs a heavy
+//! math/proof task).  Paper: GPT-4 answers in ~14 tokens where reasoning
+//! models burn thousands of trace tokens.
+//!
+//! Regenerates from `artifacts/table1.json` (10 oracle runs per cell).
+
+mod common;
+
+use pars_serve::util::bench::Table;
+use pars_serve::util::json;
+
+fn main() {
+    let dir = common::artifacts_or_skip("table1");
+    let doc = json::parse_file(&dir.join("table1.json")).expect("table1.json");
+
+    let mut t = Table::new(
+        "Table I — median output tokens on probe prompts (10 runs)",
+        &["Model", "Reasoning", "Q1 (trivial factual)", "Q2 (math proof)"],
+    );
+    let mut divergence: Vec<(String, f64)> = Vec::new();
+    for (name, label) in [("gpt4", "GPT-4*"), ("llama", "Llama*"), ("r1", "R1*")] {
+        let row = doc.get(name).unwrap();
+        let reasoning = row.get("reasoning").unwrap().as_bool().unwrap();
+        let q1 = row.get("q1_median").unwrap().as_i64().unwrap();
+        let q2 = row.get("q2_median").unwrap().as_i64().unwrap();
+        t.row(&[
+            label.to_string(),
+            if reasoning { "yes" } else { "no" }.to_string(),
+            q1.to_string(),
+            q2.to_string(),
+        ]);
+        divergence.push((label.to_string(), q2 as f64));
+    }
+    t.print();
+
+    // the paper's claim: reasoning vs non-reasoning differs by orders of
+    // magnitude on the same prompt
+    let non_reasoning_max =
+        divergence.iter().filter(|(l, _)| !l.contains("R1")).map(|(_, v)| *v).fold(0.0, f64::max);
+    let reasoning = divergence.iter().find(|(l, _)| l.contains("R1")).unwrap().1;
+    println!(
+        "\nreasoning/non-reasoning Q2 ratio: {:.0}x (paper: orders of magnitude)",
+        reasoning / non_reasoning_max
+    );
+    assert!(reasoning / non_reasoning_max > 5.0, "divergence shape lost");
+}

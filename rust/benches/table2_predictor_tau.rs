@@ -1,0 +1,52 @@
+//! Table II: Kendall's tau_b of the three ranking objectives across the
+//! six (dataset, target-model) combinations.
+//!
+//! Paper headline: PARS (pairwise + margin loss + δ-filter) wins every
+//! row; baselines degrade hardest on the reasoning model (pointwise down
+//! to 0.09 on LMSYS-R1, PARS 0.50).  Scores are computed through the full
+//! request-path stack: scorer HLO on PJRT + trained weight blobs.
+
+mod common;
+
+use pars_serve::runtime::{ArtifactManifest, Runtime};
+use pars_serve::util::bench::Table;
+use pars_serve::workload::TestSet;
+
+/// Paper Table II values for side-by-side comparison.
+const PAPER: [(&str, &str, [f64; 3]); 6] = [
+    ("synthalpaca", "gpt4", [0.69, 0.70, 0.96]),
+    ("synthalpaca", "llama", [0.67, 0.64, 0.75]),
+    ("synthalpaca", "r1", [0.50, 0.30, 0.61]),
+    ("synthlmsys", "gpt4", [0.63, 0.33, 0.72]),
+    ("synthlmsys", "llama", [0.54, 0.37, 0.65]),
+    ("synthlmsys", "r1", [0.35, 0.09, 0.50]),
+];
+
+fn main() {
+    let dir = common::artifacts_or_skip("table2");
+    let rt = Runtime::cpu().expect("pjrt");
+    let manifest = ArtifactManifest::load(&dir).expect("manifest");
+
+    let mut t = Table::new(
+        "Table II — Kendall tau_b by ranking objective (measured | paper)",
+        &["Dataset", "Listwise", "Pointwise", "PARS (Pairwise)", "PARS wins?"],
+    );
+    let mut wins = 0;
+    for (ds, m, paper) in PAPER {
+        let ts = TestSet::load(&dir, ds, m).expect("testset");
+        let lw = common::measure_tau(&rt, &manifest, &ts, "listwise", "bert", true);
+        let pw = common::measure_tau(&rt, &manifest, &ts, "pointwise", "bert", true);
+        let pars = common::measure_tau(&rt, &manifest, &ts, "pairwise", "bert", true);
+        let win = pars >= lw && pars >= pw;
+        wins += win as u32;
+        t.row(&[
+            common::combo_label(ds, m),
+            format!("{lw:.2} | {:.2}", paper[0]),
+            format!("{pw:.2} | {:.2}", paper[1]),
+            format!("{pars:.2} | {:.2}", paper[2]),
+            if win { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nPARS best-in-row: {wins}/6 (paper: 6/6)");
+}

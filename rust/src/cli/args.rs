@@ -1,0 +1,108 @@
+//! Tiny argument parser: one positional subcommand, then `--key value`
+//! flags (booleans take no value).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            if cmd.starts_with("--") {
+                bail!("expected a subcommand before flags");
+            }
+            a.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    a.flags.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => a.bools.push(key.to_string()),
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not a number: {v}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not an integer: {v}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not an integer: {v}")),
+        }
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse(&["serve", "--policy", "pars", "--rate", "4.5", "--verbose"]);
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.str_or("policy", "fcfs"), "pars");
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 4.5);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_flag_first() {
+        let argv: Vec<String> = vec!["--oops".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--rate", "abc"]);
+        assert!(a.f64_or("rate", 0.0).is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! Subcommand implementations for the `pars-serve` binary.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cli::Args;
+use crate::config::{Config, PolicyKind};
+use crate::coordinator::policy::make_policy;
+use crate::coordinator::{Coordinator, PjrtScorer, Scorer};
+use crate::engine::{Engine, PjrtEngine};
+use crate::eval::kendall_tau_b;
+use crate::harness;
+use crate::runtime::{ArtifactManifest, Runtime};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::util::stats::linear_fit;
+use crate::workload::TestSet;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "serve" => serve(args),
+        "sweep" => sweep(args),
+        "predict" => predict(args),
+        "calibrate" => calibrate(args),
+        "gen-workload" => gen_workload(args),
+        "info" => info(args),
+        "help" | "" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `pars-serve help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        r#"pars-serve — PARS: low-latency LLM serving via pairwise learning-to-rank
+
+USAGE: pars-serve <COMMAND> [--flags]
+
+COMMANDS:
+  serve         run a workload through the serving stack
+                --dataset synthalpaca|synthlmsys  --model gpt4|llama|r1
+                --policy fcfs|pointwise|listwise|oracle|pars|crossmodel
+                --engine sim|pjrt   --rate <req/s> | --burst <n>
+                --n <requests>      --max-batch <n>   --seed <u64>
+  sweep         arrival-rate x policy sweep, CSV to stdout or --csv <file>
+                --dataset ... --model ... --n <requests> --replicas <k>
+  predict       score a test set with a predictor, report Kendall tau
+                --dataset ... --model ... --objective pairwise|pointwise|listwise
+                --backbone bert|opt|t5   --nofilter
+  calibrate     fit the SimEngine cost model against the PJRT engine
+                (writes artifacts/costmodel.json)
+  gen-workload  summarise an arrival trace (--rate / --burst / --n)
+  info          print artifact manifest summary
+  help          this message
+
+COMMON FLAGS:
+  --artifacts <dir>   artifact directory (default: artifacts)
+  --config <file>     TOML config (see configs/)
+"#
+    );
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.str_opt("config") {
+        Some(p) => Config::from_file(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    if let Some(dir) = args.str_opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(p) = args.str_opt("policy") {
+        cfg.policy = PolicyKind::parse(p)?;
+    }
+    cfg.scheduler.max_batch = args.usize_or("max-batch", cfg.scheduler.max_batch)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dataset = args.str_or("dataset", "synthalpaca");
+    let model = args.str_or("model", "llama");
+    let engine_kind = args.str_or("engine", "sim");
+    let n = args.usize_or("n", 500)?;
+
+    let rt = Runtime::cpu()?;
+    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
+    let cost = harness::load_cost_model(&cfg.artifacts_dir);
+
+    let arrivals = if args.has("burst") {
+        harness::burst(&ts, args.usize_or("burst", 2000)?, cfg.seed)
+    } else {
+        let default_rate = harness::sweep_rates(&ts, &cost, &cfg.scheduler)[2];
+        harness::poisson(&ts, args.f64_or("rate", default_rate)?, n, cfg.seed)
+    };
+
+    let book =
+        harness::ScoreBook::build(&rt, &manifest, &ts, &[cfg.policy]).context("scoring")?;
+
+    println!(
+        "workload: {dataset}/{model}  n={}  policy={}  engine={engine_kind}",
+        arrivals.len(),
+        cfg.policy.name()
+    );
+    if book.scoring_ms_per_prompt > 0.0 {
+        println!("admission scoring: {:.3} ms/prompt", book.scoring_ms_per_prompt);
+    }
+
+    match engine_kind.as_str() {
+        "sim" => {
+            let out = harness::run_sim(&ts, &arrivals, cfg.policy, &book, &cost, &cfg.scheduler)?;
+            println!("{}", out.report.one_line(cfg.policy.name()));
+            println!(
+                "makespan={:.1}s  peak_waiting={}  boosts={}  rejected={}",
+                out.makespan_ms / 1e3,
+                out.peak_waiting,
+                out.boosts,
+                out.rejected
+            );
+        }
+        "pjrt" => {
+            let scores = book.scores.get(cfg.policy.name()).map(|v| v.as_slice());
+            let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+            let reqs = harness::build_requests(
+                &ts,
+                &arrivals,
+                scores,
+                harness::LiveLengths::Fresh(&mut rng),
+            );
+            let mut engine =
+                PjrtEngine::load(&rt, &manifest, cfg.scheduler.max_kv_tokens, cfg.seed)?;
+            let mut coord =
+                Coordinator::new(&mut engine, make_policy(cfg.policy), cfg.scheduler.clone());
+            let out = coord.serve(reqs)?;
+            println!("{}", out.report.one_line(cfg.policy.name()));
+            println!(
+                "decode_steps={}  tokens={}  mean_decode={:.2} ms  mean_prefill={:.2} ms",
+                engine.decode_steps,
+                engine.tokens_generated,
+                engine.mean_decode_ms(),
+                engine.mean_prefill_ms()
+            );
+        }
+        other => bail!("unknown engine {other:?} (sim|pjrt)"),
+    }
+    Ok(())
+}
+
+/// Rate × policy sweep with replicated runs; emits CSV for plotting.
+fn sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dataset = args.str_or("dataset", "synthalpaca");
+    let model = args.str_or("model", "llama");
+    let n = args.usize_or("n", 400)?;
+    let replicas = args.usize_or("replicas", 1)?;
+
+    let rt = Runtime::cpu()?;
+    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
+    let cost = harness::load_cost_model(&cfg.artifacts_dir);
+    let suite = harness::policy_suite(&model);
+    let book = harness::ScoreBook::build(&rt, &manifest, &ts, &suite)?;
+    let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
+
+    let mut csv = String::from(
+        "dataset,model,policy,rate_req_s,replica,avg_ms_tok,p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts\n",
+    );
+    for &kind in &suite {
+        for &rate in &rates {
+            for rep in 0..replicas {
+                let arrivals = harness::poisson(&ts, rate, n, cfg.seed + 1000 * rep as u64);
+                let out =
+                    harness::run_sim(&ts, &arrivals, kind, &book, &cost, &cfg.scheduler)?;
+                csv.push_str(&format!(
+                    "{dataset},{model},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{}\n",
+                    kind.name().replace(' ', "_"),
+                    out.report.avg_per_token_ms,
+                    out.report.p90_per_token_ms,
+                    out.report.per_token.p99,
+                    out.report.ttft.p50,
+                    out.report.throughput_tok_s,
+                    out.boosts
+                ));
+            }
+        }
+    }
+    match args.str_opt("csv") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {path} ({} rows)", csv.lines().count() - 1);
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn predict(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dataset = args.str_or("dataset", "synthalpaca");
+    let model = args.str_or("model", "gpt4");
+    let objective = args.str_or("objective", "pairwise");
+    let backbone = args.str_or("backbone", "bert");
+    let filtered = !args.has("nofilter");
+
+    let rt = Runtime::cpu()?;
+    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
+    let mut scorer =
+        PjrtScorer::load(&rt, &manifest, &objective, &backbone, &dataset, &model, filtered)?;
+    let t0 = std::time::Instant::now();
+    let scores = scorer.score_batch(&ts.tokens, ts.n_prompts, ts.seq_len)?;
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let x: Vec<f64> = scores.iter().map(|&s| s as f64).collect();
+    let y: Vec<f64> = ts.live_len.iter().map(|&l| l as f64).collect();
+    let tau = kendall_tau_b(&x, &y);
+    println!(
+        "{objective}/{backbone} on {dataset}/{model} (filtered={filtered}): tau_b={tau:.3} \
+         over {} prompts ({:.3} ms/prompt)",
+        ts.n_prompts,
+        ms / ts.n_prompts as f64
+    );
+    Ok(())
+}
+
+/// Measure PJRT decode cost at each occupancy 1..=B and prefill cost, then
+/// fit the SimEngine's affine cost model (EXPERIMENTS.md §Calibration).
+fn calibrate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let reps = args.usize_or("reps", 20)?;
+    let rt = Runtime::cpu()?;
+    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+    let mut engine = PjrtEngine::load(&rt, &manifest, 1 << 20, cfg.seed)?;
+    let b = engine.caps().max_slots;
+    let prompt: Vec<i32> = vec![1, 12, 22, 40, 100, 101, 102, 2];
+
+    // prefill cost (amortised)
+    let t0 = std::time::Instant::now();
+    let mut slots = Vec::new();
+    slots.push(engine.prefill(&prompt, 150)?);
+    let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for occ in 1..=b {
+        while engine.active_slots() < occ {
+            slots.push(engine.prefill(&prompt, 150)?);
+        }
+        // warmup
+        for _ in 0..3 {
+            engine.decode_step()?;
+        }
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            engine.decode_step()?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        println!("occupancy {occ}: {ms:.3} ms/step");
+        xs.push(occ as f64);
+        ys.push(ms);
+    }
+    let (base, per_seq, r2) = linear_fit(&xs, &ys);
+    let cm = crate::config::CostModel {
+        decode_base_ms: base.max(0.0),
+        decode_per_seq_ms: per_seq.max(0.0),
+        prefill_base_ms: prefill_ms * 0.7,
+        prefill_per_token_ms: prefill_ms * 0.3 / prompt.len() as f64,
+    };
+    println!(
+        "fit: decode = {:.3} + {:.3}·B ms (r²={r2:.3}); prefill ≈ {prefill_ms:.2} ms",
+        cm.decode_base_ms, cm.decode_per_seq_ms
+    );
+    harness::save_cost_model(&cfg.artifacts_dir, &cm)?;
+    println!("wrote {}/costmodel.json", cfg.artifacts_dir.display());
+    Ok(())
+}
+
+fn gen_workload(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dataset = args.str_or("dataset", "synthalpaca");
+    let model = args.str_or("model", "llama");
+    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
+    let cost = harness::load_cost_model(&cfg.artifacts_dir);
+    let arrivals = if args.has("burst") {
+        harness::burst(&ts, args.usize_or("burst", 2000)?, cfg.seed)
+    } else {
+        let rate = args.f64_or("rate", harness::sweep_rates(&ts, &cost, &cfg.scheduler)[2])?;
+        harness::poisson(&ts, rate, args.usize_or("n", 500)?, cfg.seed)
+    };
+    let mut rng = Rng::new(cfg.seed);
+    let reqs =
+        harness::build_requests(&ts, &arrivals, None, harness::LiveLengths::Fresh(&mut rng));
+    let lens: Vec<f64> = reqs.iter().map(|r| r.target_len as f64).collect();
+    let s = crate::util::stats::Summary::of(&lens);
+    let mut t = Table::new(
+        &format!("workload {dataset}/{model} ({} requests)", reqs.len()),
+        &["metric", "value"],
+    );
+    t.row(&["span (s)".into(), format!("{:.1}", arrivals.last().unwrap().at_ms / 1e3)]);
+    t.row(&["mean output len".into(), format!("{:.1}", s.mean)]);
+    t.row(&["p50 / p90 / p99 len".into(), format!("{:.0} / {:.0} / {:.0}", s.p50, s.p90, s.p99)]);
+    t.row(&["max len".into(), format!("{:.0}", s.max)]);
+    t.print();
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+    println!(
+        "artifacts: {} | scorers: {} | score_batch={} serve_batch={} seq_len={} max_seq={}",
+        cfg.artifacts_dir.display(),
+        manifest.scorers.len(),
+        manifest.score_batch,
+        manifest.serve_batch,
+        manifest.seq_len,
+        manifest.pico_max_seq
+    );
+    let mut t = Table::new("trained predictors", &["name", "objective", "backbone", "dataset", "model", "filtered", "train tau"]);
+    for s in &manifest.scorers {
+        t.row(&[
+            s.name.clone(),
+            s.objective.clone(),
+            s.backbone.clone(),
+            s.dataset.clone(),
+            s.model.clone(),
+            s.filtered.to_string(),
+            format!("{:.3}", s.train_tau),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Command-line interface (hand-rolled; clap is not in the vendor set).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;

@@ -1,0 +1,263 @@
+//! Typed configuration + a hand-rolled TOML-subset parser.
+//!
+//! Covers what a serving deployment actually sets: artifact paths, batch
+//! limits, KV budget, policy choice, starvation threshold, cost-model
+//! constants.  The parser accepts the TOML subset `key = value` with
+//! `[section]` headers, strings, numbers, booleans — enough for
+//! `configs/*.toml` without pulling a dependency.
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use self::toml::TomlDoc;
+
+/// Which scheduling policy the coordinator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// First come, first served (vLLM default; the paper's baseline).
+    Fcfs,
+    /// SJF via pointwise L1-regression predictor [Qiu et al.].
+    PointwiseSjf,
+    /// SJF via listwise ListMLE predictor [Fu et al.].
+    ListwiseSjf,
+    /// SJF with ground-truth lengths from a prior run (upper bound).
+    OracleSjf,
+    /// PARS: pairwise margin-ranking predictor (the paper's method).
+    Pars,
+    /// PARS predictor trained on GPT-4 data applied to another model.
+    CrossModelPars,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fcfs" => PolicyKind::Fcfs,
+            "pointwise" | "pointwise-sjf" => PolicyKind::PointwiseSjf,
+            "listwise" | "listwise-sjf" => PolicyKind::ListwiseSjf,
+            "oracle" | "oracle-sjf" => PolicyKind::OracleSjf,
+            "pars" => PolicyKind::Pars,
+            "cross-model-pars" | "crossmodel" => PolicyKind::CrossModelPars,
+            other => bail!("unknown policy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Fcfs => "FCFS",
+            PolicyKind::PointwiseSjf => "Pointwise SJF",
+            PolicyKind::ListwiseSjf => "Listwise SJF",
+            PolicyKind::OracleSjf => "Oracle SJF",
+            PolicyKind::Pars => "PARS",
+            PolicyKind::CrossModelPars => "Cross-Model PARS",
+        }
+    }
+
+    pub fn all() -> [PolicyKind; 6] {
+        [
+            PolicyKind::Fcfs,
+            PolicyKind::PointwiseSjf,
+            PolicyKind::ListwiseSjf,
+            PolicyKind::OracleSjf,
+            PolicyKind::Pars,
+            PolicyKind::CrossModelPars,
+        ]
+    }
+}
+
+/// Scheduler/batcher knobs (paper §III-B + vLLM-style limits).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Max sequences decoding concurrently (running queue capacity).
+    pub max_batch: usize,
+    /// Max total KV tokens in flight (cache budget; admission control).
+    pub max_kv_tokens: usize,
+    /// Starvation guard: boost priority after this wait (paper: 2 min).
+    pub starvation_ms: f64,
+    /// Batching mode: continuous (iteration-level) or static.
+    pub continuous: bool,
+    /// Static mode only: max wait to fill a batch before launching.
+    pub static_max_wait_ms: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 32,
+            max_kv_tokens: 65_536,
+            starvation_ms: 120_000.0,
+            continuous: true,
+            static_max_wait_ms: 50.0,
+        }
+    }
+}
+
+/// SimEngine cost model (ms).  Defaults are calibrated against the PJRT
+/// picoLM engine by `pars-serve calibrate` (EXPERIMENTS.md §Calibration).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Fixed cost per decode iteration.
+    pub decode_base_ms: f64,
+    /// Incremental cost per active sequence per decode iteration.
+    pub decode_per_seq_ms: f64,
+    /// Fixed cost per prefill.
+    pub prefill_base_ms: f64,
+    /// Incremental cost per prompt token.
+    pub prefill_per_token_ms: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Placeholder values in the same regime as the PJRT measurements;
+        // run `pars-serve calibrate` to refit (see EXPERIMENTS.md).
+        CostModel {
+            decode_base_ms: 2.0,
+            decode_per_seq_ms: 0.25,
+            prefill_base_ms: 3.0,
+            prefill_per_token_ms: 0.05,
+        }
+    }
+}
+
+/// Top-level config.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub scheduler: SchedulerConfig,
+    pub cost: CostModel,
+    pub policy: PolicyKind,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            scheduler: SchedulerConfig::default(),
+            cost: CostModel::default(),
+            policy: PolicyKind::Pars,
+            seed: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file, starting from defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&src)
+    }
+
+    pub fn from_toml(src: &str) -> Result<Config> {
+        let doc = TomlDoc::parse(src)?;
+        let mut c = Config::default();
+        if let Some(v) = doc.get_str("", "artifacts_dir") {
+            c.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = doc.get_str("", "policy") {
+            c.policy = PolicyKind::parse(v)?;
+        }
+        if let Some(v) = doc.get_num("", "seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = doc.get_num("scheduler", "max_batch") {
+            c.scheduler.max_batch = v as usize;
+        }
+        if let Some(v) = doc.get_num("scheduler", "max_kv_tokens") {
+            c.scheduler.max_kv_tokens = v as usize;
+        }
+        if let Some(v) = doc.get_num("scheduler", "starvation_ms") {
+            c.scheduler.starvation_ms = v;
+        }
+        if let Some(v) = doc.get_bool("scheduler", "continuous") {
+            c.scheduler.continuous = v;
+        }
+        if let Some(v) = doc.get_num("scheduler", "static_max_wait_ms") {
+            c.scheduler.static_max_wait_ms = v;
+        }
+        if let Some(v) = doc.get_num("cost", "decode_base_ms") {
+            c.cost.decode_base_ms = v;
+        }
+        if let Some(v) = doc.get_num("cost", "decode_per_seq_ms") {
+            c.cost.decode_per_seq_ms = v;
+        }
+        if let Some(v) = doc.get_num("cost", "prefill_base_ms") {
+            c.cost.prefill_base_ms = v;
+        }
+        if let Some(v) = doc.get_num("cost", "prefill_per_token_ms") {
+            c.cost.prefill_per_token_ms = v;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.scheduler.max_batch == 0 {
+            bail!("scheduler.max_batch must be > 0");
+        }
+        if self.scheduler.max_kv_tokens < 256 {
+            bail!("scheduler.max_kv_tokens too small (< 256)");
+        }
+        if self.scheduler.starvation_ms <= 0.0 {
+            bail!("scheduler.starvation_ms must be positive");
+        }
+        if self.cost.decode_base_ms < 0.0
+            || self.cost.decode_per_seq_ms < 0.0
+            || self.cost.prefill_base_ms < 0.0
+            || self.cost.prefill_per_token_ms < 0.0
+        {
+            bail!("cost model constants must be non-negative");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let c = Config::from_toml(
+            r#"
+            policy = "oracle"
+            seed = 7
+            [scheduler]
+            max_batch = 16
+            starvation_ms = 60000.0
+            [cost]
+            decode_base_ms = 1.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.policy, PolicyKind::OracleSjf);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.scheduler.max_batch, 16);
+        assert_eq!(c.scheduler.starvation_ms, 60_000.0);
+        assert_eq!(c.cost.decode_base_ms, 1.5);
+        // untouched default survives
+        assert!(c.scheduler.continuous);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(Config::from_toml("[scheduler]\nmax_batch = 0").is_err());
+        assert!(Config::from_toml("policy = \"quantum\"").is_err());
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in PolicyKind::all() {
+            assert!(!p.name().is_empty());
+        }
+        assert_eq!(PolicyKind::parse("PARS").unwrap(), PolicyKind::Pars);
+    }
+}

@@ -1,0 +1,147 @@
+//! TOML-subset parser: `[section]` headers and `key = value` pairs with
+//! string / number / boolean values, `#` comments.  No arrays, dates or
+//! nested tables — deliberately small; config/mod.rs defines the schema.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+/// Parsed document: (section, key) → value.  Root section is "".
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(val)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.entries.insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_num(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Num(x)) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &(String, String)> {
+        self.entries.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let Some(inner) = inner.strip_suffix('"') else {
+            bail!("unterminated string: {s}");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    match s.replace('_', "").parse::<f64>() {
+        Ok(x) => Ok(TomlValue::Num(x)),
+        Err(_) => bail!("cannot parse value: {s}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_types() {
+        let doc = TomlDoc::parse(
+            "# top\nname = \"x\"\nok = true\n[a]\nn = 3\nf = 2.5 # trailing\n[b]\nn = 65_536\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("x"));
+        assert_eq!(doc.get_bool("", "ok"), Some(true));
+        assert_eq!(doc.get_num("a", "n"), Some(3.0));
+        assert_eq!(doc.get_num("a", "f"), Some(2.5));
+        assert_eq!(doc.get_num("b", "n"), Some(65_536.0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[oops").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("x = nope").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = TomlDoc::parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "x"), Some("a#b"));
+    }
+}

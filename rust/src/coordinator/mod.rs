@@ -1,0 +1,47 @@
+//! The PARS coordinator — the paper's system contribution.
+//!
+//! Request lifecycle (paper Fig. 1):
+//!
+//! ```text
+//!   arrival ──► score (predictor, once, at admission) ──► waiting queue W
+//!                                                             │ policy order
+//!                                                             ▼
+//!   running queue R ◄── continuous batcher (slot + KV admission checks)
+//!        │ decode iterations (Engine)                         │
+//!        ▼                                                    │
+//!   completion → metrics                 starvation guard boosts W entries
+//! ```
+//!
+//! * [`policy`]    — the scheduling-policy zoo (FCFS / pointwise / listwise
+//!   / oracle / PARS / cross-model PARS) behind one trait.
+//! * [`predictor`] — the admission-path scorer (PJRT HLO executable).
+//! * [`queue`]     — waiting-queue bookkeeping + starvation guard.
+//! * [`server`]    — the serving loop driving an [`crate::engine::Engine`].
+
+pub mod policy;
+pub mod predictor;
+pub mod queue;
+pub mod server;
+
+pub use policy::Policy;
+pub use predictor::{PjrtScorer, Scorer};
+pub use queue::{QueuedRequest, WaitingQueue};
+pub use server::{Coordinator, ServeOutcome};
+
+/// A request as submitted to the coordinator.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (PAD-padded to the scorer seq len).
+    pub tokens: Vec<i32>,
+    pub prompt_len: u32,
+    /// Arrival time on the engine clock (ms).
+    pub arrival_ms: f64,
+    /// Forced output length for this serving run (live oracle draw).
+    pub target_len: u32,
+    /// Prior-run length (what Oracle SJF is allowed to know).
+    pub oracle_len: u32,
+    /// Predictor score, computed once at admission (PARS-family policies).
+    /// Higher ⇒ longer expected response.
+    pub score: f32,
+}

@@ -1,0 +1,122 @@
+//! The scheduling-policy zoo (paper §IV "Scheduling Policies for
+//! Comparison").  A policy assigns each waiting request a priority key;
+//! the waiting queue is kept ordered by (boosted, key, arrival, id).
+//!
+//! * FCFS            — key = arrival time (vLLM default; baseline).
+//! * Pointwise SJF   — key = pointwise-predictor score.
+//! * Listwise SJF    — key = listwise-predictor score.
+//! * Oracle SJF      — key = prior-run ground-truth length (upper bound).
+//! * PARS            — key = pairwise margin-ranking predictor score.
+//! * Cross-Model PARS — PARS score from a GPT-4-trained predictor.
+//!
+//! All SJF variants schedule *ascending* key (shortest predicted first).
+
+use crate::config::PolicyKind;
+use crate::coordinator::Request;
+
+/// Priority assignment for waiting requests.
+pub trait Policy {
+    fn kind(&self) -> PolicyKind;
+
+    /// The ordering key (lower = run earlier).
+    fn key(&self, req: &Request) -> f64;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+}
+
+/// First come, first served.
+pub struct Fcfs;
+
+impl Policy for Fcfs {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Fcfs
+    }
+
+    fn key(&self, req: &Request) -> f64 {
+        req.arrival_ms
+    }
+}
+
+/// SJF on the request's precomputed predictor score.  Which predictor the
+/// score came from is decided at admission (harness/server wiring); the
+/// `kind` label keeps reports honest.
+pub struct ScoreSjf {
+    pub label: PolicyKind,
+}
+
+impl Policy for ScoreSjf {
+    fn kind(&self) -> PolicyKind {
+        self.label
+    }
+
+    fn key(&self, req: &Request) -> f64 {
+        req.score as f64
+    }
+}
+
+/// SJF on ground-truth prior-run length.
+pub struct OracleSjf;
+
+impl Policy for OracleSjf {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::OracleSjf
+    }
+
+    fn key(&self, req: &Request) -> f64 {
+        req.oracle_len as f64
+    }
+}
+
+/// Instantiate the policy for a kind (scores must already be on requests).
+pub fn make_policy(kind: PolicyKind) -> Box<dyn Policy + Send> {
+    match kind {
+        PolicyKind::Fcfs => Box::new(Fcfs),
+        PolicyKind::OracleSjf => Box::new(OracleSjf),
+        k => Box::new(ScoreSjf { label: k }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(arrival: f64, score: f32, oracle: u32) -> Request {
+        Request {
+            id: 1,
+            tokens: vec![1, 2],
+            prompt_len: 2,
+            arrival_ms: arrival,
+            target_len: 10,
+            oracle_len: oracle,
+            score,
+        }
+    }
+
+    #[test]
+    fn fcfs_orders_by_arrival() {
+        let p = Fcfs;
+        assert!(p.key(&req(1.0, 9.0, 9)) < p.key(&req(2.0, 0.0, 0)));
+    }
+
+    #[test]
+    fn sjf_orders_by_score() {
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        assert!(p.key(&req(5.0, 1.0, 9)) < p.key(&req(1.0, 2.0, 0)));
+        assert_eq!(p.kind(), PolicyKind::Pars);
+    }
+
+    #[test]
+    fn oracle_orders_by_prior_length() {
+        let p = OracleSjf;
+        assert!(p.key(&req(5.0, 9.0, 3)) < p.key(&req(1.0, 0.0, 30)));
+    }
+
+    #[test]
+    fn factory_covers_all_kinds() {
+        for k in PolicyKind::all() {
+            assert_eq!(make_policy(k).kind(), k);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Admission-path scoring.
+//!
+//! [`PjrtScorer`] runs a scorer HLO (one per backbone; trained weights are
+//! a runtime input, so all 36 variants share three executables).  Scores
+//! are computed **once per request at admission** (DESIGN.md §decisions)
+//! and cached on the queue entry, keeping the scheduling hot loop free of
+//! model calls.
+
+use anyhow::Context as _;
+
+use crate::runtime::{ArtifactManifest, Executable, HostArg, Runtime};
+use crate::Result;
+
+/// Anything that can map prompt tokens → expected-length score.
+/// Higher score ⇒ longer expected response.
+pub trait Scorer {
+    fn name(&self) -> String;
+
+    /// Score a batch of prompts (rows of `seq_len` tokens).
+    fn score_batch(&mut self, tokens: &[i32], n: usize, seq_len: usize) -> Result<Vec<f32>>;
+}
+
+/// The real predictor: scorer HLO + trained weight vector on PJRT.
+pub struct PjrtScorer {
+    rt: Runtime,
+    exe: Executable,
+    weights: Vec<f32>,
+    batch: usize,
+    seq_len: usize,
+    variant: String,
+    /// Perf counters for the overhead experiment.
+    pub calls: u64,
+    pub total_ms: f64,
+}
+
+impl PjrtScorer {
+    /// Load by manifest metadata.
+    pub fn load(
+        rt: &Runtime,
+        manifest: &ArtifactManifest,
+        objective: &str,
+        backbone: &str,
+        dataset: &str,
+        model: &str,
+        filtered: bool,
+    ) -> Result<PjrtScorer> {
+        let meta = manifest.find_scorer(objective, backbone, dataset, model, filtered)?;
+        let exe = rt
+            .load_hlo_text(manifest.scorer_hlo_for(backbone)?)
+            .with_context(|| format!("loading scorer HLO for {backbone}"))?;
+        let weights = crate::runtime::read_f32_bin(&meta.weights)?;
+        anyhow::ensure!(
+            weights.len() == meta.n_params,
+            "weight blob {} has {} params, manifest says {}",
+            meta.name,
+            weights.len(),
+            meta.n_params
+        );
+        Ok(PjrtScorer {
+            rt: rt.clone(),
+            exe,
+            weights,
+            batch: manifest.score_batch,
+            seq_len: manifest.seq_len,
+            variant: meta.name.clone(),
+            calls: 0,
+            total_ms: 0.0,
+        })
+    }
+
+    pub fn mean_ms_per_batch(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_ms / self.calls as f64
+        }
+    }
+}
+
+impl Scorer for PjrtScorer {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.variant)
+    }
+
+    fn score_batch(&mut self, tokens: &[i32], n: usize, seq_len: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(seq_len == self.seq_len, "seq_len mismatch");
+        anyhow::ensure!(tokens.len() == n * seq_len, "token buffer shape");
+        let mut out = Vec::with_capacity(n);
+        let n_w = self.weights.len();
+        // chunk into artifact-batch calls, padding the tail with PAD rows
+        for chunk in tokens.chunks(self.batch * seq_len) {
+            let rows = chunk.len() / seq_len;
+            let mut padded = vec![0i32; self.batch * seq_len];
+            padded[..chunk.len()].copy_from_slice(chunk);
+            let t0 = std::time::Instant::now();
+            let outs = self.exe.run_hosted(
+                &self.rt,
+                &[
+                    HostArg::F32(&self.weights, &[n_w]),
+                    HostArg::I32(&padded, &[self.batch, seq_len]),
+                ],
+            )?;
+            self.total_ms += t0.elapsed().as_secs_f64() * 1e3;
+            self.calls += 1;
+            let scores: Vec<f32> = outs[0].to_vec()?;
+            out.extend_from_slice(&scores[..rows]);
+        }
+        Ok(out)
+    }
+}
+
+/// Score a whole test set with a scorer (benches + admission precompute).
+pub fn score_testset(
+    scorer: &mut dyn Scorer,
+    tokens: &[i32],
+    n_prompts: usize,
+    seq_len: usize,
+) -> Result<Vec<f32>> {
+    scorer.score_batch(tokens, n_prompts, seq_len)
+}

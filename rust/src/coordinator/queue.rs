@@ -1,0 +1,196 @@
+//! Waiting-queue bookkeeping + the starvation guard (paper §III-B).
+//!
+//! A binary heap keyed by (boosted, policy key, arrival, id): boosted
+//! requests always outrank un-boosted ones, ties fall back to FCFS order,
+//! and the final id tiebreak makes ordering total and deterministic.
+//! The guard promotes any request whose wait exceeds the threshold
+//! (default 2 minutes), bounding worst-case queueing delay under SJF.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::{Policy, Request};
+
+/// A request in the waiting queue with its frozen priority key.
+#[derive(Clone, Debug)]
+pub struct QueuedRequest {
+    pub req: Request,
+    pub key: f64,
+    pub boosted: bool,
+}
+
+impl PartialEq for QueuedRequest {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp_key() == other.cmp_key()
+    }
+}
+impl Eq for QueuedRequest {}
+
+impl QueuedRequest {
+    /// Min-ordering tuple: boosted first, then key, arrival, id.
+    fn cmp_key(&self) -> (bool, f64, f64, u64) {
+        (!self.boosted, self.key, self.req.arrival_ms, self.req.id)
+    }
+}
+
+impl PartialOrd for QueuedRequest {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedRequest {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for min-ordering
+        let a = self.cmp_key();
+        let b = other.cmp_key();
+        b.partial_cmp(&a).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// The waiting queue W.
+pub struct WaitingQueue {
+    heap: BinaryHeap<QueuedRequest>,
+    starvation_ms: f64,
+    /// Count of requests ever boosted (reported in serving outcomes).
+    pub boosts: usize,
+}
+
+impl WaitingQueue {
+    pub fn new(starvation_ms: f64) -> WaitingQueue {
+        WaitingQueue { heap: BinaryHeap::new(), starvation_ms, boosts: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Enqueue with the policy's key.
+    pub fn push(&mut self, req: Request, policy: &dyn Policy) {
+        let key = policy.key(&req);
+        self.heap.push(QueuedRequest { req, key, boosted: false });
+    }
+
+    /// Pop the highest-priority request.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.heap.pop()
+    }
+
+    /// Put back a request that could not be admitted (keeps its boost).
+    pub fn unpop(&mut self, q: QueuedRequest) {
+        self.heap.push(q);
+    }
+
+    /// Starvation guard: promote requests waiting longer than the
+    /// threshold.  O(n) re-heap, but runs only when something actually
+    /// crosses the threshold (checked O(1) against the oldest arrival).
+    pub fn apply_starvation_guard(&mut self, now_ms: f64) {
+        if self.heap.is_empty() {
+            return;
+        }
+        let needs = self
+            .heap
+            .iter()
+            .any(|q| !q.boosted && now_ms - q.req.arrival_ms > self.starvation_ms);
+        if !needs {
+            return;
+        }
+        let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
+        for q in &mut all {
+            if !q.boosted && now_ms - q.req.arrival_ms > self.starvation_ms {
+                q.boosted = true;
+                self.boosts += 1;
+            }
+        }
+        self.heap = all.into();
+    }
+
+    /// Oldest un-boosted arrival (None if empty) — guard scheduling aid.
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.heap.iter().map(|q| q.req.arrival_ms).fold(None, |acc, x| {
+            Some(match acc {
+                None => x,
+                Some(a) => a.min(x),
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyKind;
+    use crate::coordinator::policy::{Fcfs, ScoreSjf};
+
+    fn req(id: u64, arrival: f64, score: f32) -> Request {
+        Request {
+            id,
+            tokens: vec![1],
+            prompt_len: 1,
+            arrival_ms: arrival,
+            target_len: 5,
+            oracle_len: 5,
+            score,
+        }
+    }
+
+    #[test]
+    fn fcfs_order() {
+        let mut w = WaitingQueue::new(1e9);
+        let p = Fcfs;
+        w.push(req(1, 10.0, 0.0), &p);
+        w.push(req(2, 5.0, 9.0), &p);
+        w.push(req(3, 7.0, 1.0), &p);
+        let ids: Vec<u64> = std::iter::from_fn(|| w.pop()).map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn sjf_order_with_deterministic_ties() {
+        let mut w = WaitingQueue::new(1e9);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(2, 1.0, 3.0), &p);
+        w.push(req(1, 2.0, 3.0), &p); // tie on score → earlier arrival wins
+        w.push(req(3, 0.0, 1.0), &p);
+        let ids: Vec<u64> = std::iter::from_fn(|| w.pop()).map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn starvation_boost_jumps_queue() {
+        let mut w = WaitingQueue::new(100.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 100.0), &p); // long job, arrived early
+        w.push(req(2, 90.0, 1.0), &p); // short job, recent
+        w.apply_starvation_guard(150.0); // req 1 waited 150 > 100
+        assert_eq!(w.boosts, 1);
+        let first = w.pop().unwrap();
+        assert_eq!(first.req.id, 1);
+        assert!(first.boosted);
+    }
+
+    #[test]
+    fn guard_noop_under_threshold() {
+        let mut w = WaitingQueue::new(1000.0);
+        let p = Fcfs;
+        w.push(req(1, 0.0, 0.0), &p);
+        w.apply_starvation_guard(500.0);
+        assert_eq!(w.boosts, 0);
+    }
+
+    #[test]
+    fn unpop_preserves_boost() {
+        let mut w = WaitingQueue::new(10.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 50.0), &p);
+        w.apply_starvation_guard(100.0);
+        let q = w.pop().unwrap();
+        assert!(q.boosted);
+        w.unpop(q);
+        assert!(w.pop().unwrap().boosted);
+    }
+}

@@ -1,0 +1,219 @@
+//! Paged KV-cache block manager (vLLM-style accounting).
+//!
+//! Physical KV storage is dense per slot inside the HLO artifacts; this
+//! manager owns the *logical* block economy: a fixed pool of fixed-size
+//! token blocks, per-sequence block lists that grow as decoding appends
+//! tokens, and the admission question "does a (prompt + target) sequence
+//! fit right now?".  The coordinator consults it before moving a request
+//! from the waiting to the running queue, which is exactly how cache
+//! pressure feeds back into scheduling in vLLM.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub const BLOCK_TOKENS: usize = 16;
+
+/// Handle for a sequence's reservation.
+pub type SeqHandle = u64;
+
+#[derive(Debug)]
+struct SeqAlloc {
+    blocks: Vec<usize>,
+    tokens: usize,
+}
+
+/// Fixed-pool block allocator.
+pub struct KvBlockManager {
+    n_blocks: usize,
+    free: Vec<usize>,
+    seqs: BTreeMap<SeqHandle, SeqAlloc>,
+    next_handle: SeqHandle,
+    /// High-water mark (for reports).
+    pub peak_blocks_used: usize,
+}
+
+impl KvBlockManager {
+    /// Build a manager covering `max_tokens` of KV budget.
+    pub fn new(max_tokens: usize) -> KvBlockManager {
+        let n_blocks = max_tokens / BLOCK_TOKENS;
+        KvBlockManager {
+            n_blocks,
+            free: (0..n_blocks).rev().collect(),
+            seqs: BTreeMap::new(),
+            next_handle: 1,
+            peak_blocks_used: 0,
+        }
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_used(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+
+    fn blocks_for(tokens: usize) -> usize {
+        tokens.div_ceil(BLOCK_TOKENS)
+    }
+
+    /// Can a sequence totalling `tokens` be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        Self::blocks_for(tokens.max(1)) <= self.free.len()
+    }
+
+    /// Reserve blocks for a new sequence's prompt (`tokens` > 0), claiming
+    /// further blocks lazily as decode appends tokens.
+    pub fn admit(&mut self, tokens: usize) -> Result<SeqHandle> {
+        self.admit_reserved(tokens, tokens)
+    }
+
+    /// Admit a sequence currently holding `used` tokens with blocks
+    /// reserved for `reserved` tokens upfront.  With forced-length
+    /// generation the total is known at admission, so reserving
+    /// prompt+target makes admission sound: a running batch can never
+    /// exhaust the pool mid-decode (vLLM needs preemption for this).
+    pub fn admit_reserved(&mut self, used: usize, reserved: usize) -> Result<SeqHandle> {
+        let reserved = reserved.max(used).max(1);
+        let need = Self::blocks_for(reserved);
+        if need > self.free.len() {
+            bail!("KV cache exhausted: need {need} blocks, {} free", self.free.len());
+        }
+        let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let h = self.next_handle;
+        self.next_handle += 1;
+        self.seqs.insert(h, SeqAlloc { blocks, tokens: used.max(1) });
+        self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
+        Ok(h)
+    }
+
+    /// Append one decoded token; may claim a new block.
+    pub fn append_token(&mut self, h: SeqHandle) -> Result<()> {
+        let Some(seq) = self.seqs.get_mut(&h) else {
+            bail!("unknown sequence handle {h}");
+        };
+        seq.tokens += 1;
+        let need = Self::blocks_for(seq.tokens);
+        if need > seq.blocks.len() {
+            let Some(b) = self.free.pop() else {
+                bail!("KV cache exhausted while decoding seq {h}");
+            };
+            seq.blocks.push(b);
+            self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
+        }
+        Ok(())
+    }
+
+    /// Release a sequence's blocks.
+    pub fn release(&mut self, h: SeqHandle) {
+        if let Some(seq) = self.seqs.remove(&h) {
+            self.free.extend(seq.blocks);
+        }
+    }
+
+    pub fn seq_tokens(&self, h: SeqHandle) -> Option<usize> {
+        self.seqs.get(&h).map(|s| s.tokens)
+    }
+
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_with;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn admit_release_roundtrip() {
+        let mut m = KvBlockManager::new(1024); // 64 blocks
+        assert_eq!(m.blocks_total(), 64);
+        let h = m.admit(100).unwrap(); // 7 blocks
+        assert_eq!(m.blocks_used(), 7);
+        m.release(h);
+        assert_eq!(m.blocks_used(), 0);
+    }
+
+    #[test]
+    fn append_claims_blocks_at_boundaries() {
+        let mut m = KvBlockManager::new(1024);
+        let h = m.admit(16).unwrap(); // exactly 1 block
+        assert_eq!(m.blocks_used(), 1);
+        m.append_token(h).unwrap(); // token 17 → second block
+        assert_eq!(m.blocks_used(), 2);
+        for _ in 0..15 {
+            m.append_token(h).unwrap();
+        }
+        assert_eq!(m.blocks_used(), 2); // 32 tokens exactly
+        m.append_token(h).unwrap();
+        assert_eq!(m.blocks_used(), 3);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let mut m = KvBlockManager::new(64); // 4 blocks
+        let _h1 = m.admit(64).unwrap();
+        assert!(!m.can_admit(1));
+        assert!(m.admit(1).is_err());
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut m = KvBlockManager::new(64);
+        m.release(999);
+        assert_eq!(m.blocks_used(), 0);
+    }
+
+    #[test]
+    fn property_no_leaks_no_double_alloc() {
+        // Random admit/append/release interleavings: block conservation holds
+        check_with(
+            42,
+            200,
+            |r: &mut Rng| {
+                let ops: Vec<u64> = (0..60).map(|_| r.next_u64()).collect();
+                ops
+            },
+            |ops| {
+                let mut m = KvBlockManager::new(512); // 32 blocks
+                let mut live: Vec<SeqHandle> = Vec::new();
+                for &op in ops {
+                    match op % 3 {
+                        0 => {
+                            let toks = (op % 80 + 1) as usize;
+                            if m.can_admit(toks) {
+                                live.push(m.admit(toks).unwrap());
+                            }
+                        }
+                        1 => {
+                            if let Some(&h) = live.first() {
+                                let _ = m.append_token(h);
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let h = live.remove((op % live.len() as u64) as usize);
+                                m.release(h);
+                            }
+                        }
+                    }
+                    // invariant: used + free == total
+                    if m.blocks_used() + m.blocks_free() != m.blocks_total() {
+                        return false;
+                    }
+                }
+                for h in live {
+                    m.release(h);
+                }
+                m.blocks_used() == 0
+            },
+        );
+    }
+}

@@ -1,0 +1,82 @@
+//! Inference engines.
+//!
+//! The coordinator drives everything through the [`Engine`] trait so the
+//! same scheduling code runs over:
+//!
+//! * [`PjrtEngine`] — the real thing: picoLM prefill/decode HLO artifacts
+//!   executed on the PJRT CPU client, KV cache device-resident between
+//!   steps, tokens sampled on the host (top-p / temperature).
+//! * [`SimEngine`]  — a discrete-event engine with a calibrated cost model
+//!   and a virtual clock, for the paper's 2000-request sweeps, which would
+//!   take hours of wall-clock at interpret-mode CPU speeds.  Calibration
+//!   against `PjrtEngine` is a CLI command (`pars-serve calibrate`).
+//!
+//! Generation is *forced-length*: a sequence finishes after exactly its
+//! trace-specified number of output tokens (standard serving-bench
+//! methodology — the lengths come from the workload's length oracle, the
+//! compute per token is real in `PjrtEngine`).
+
+pub mod kv_cache;
+pub mod pjrt;
+pub mod sampler;
+pub mod sim;
+pub mod tokenizer;
+
+pub use kv_cache::KvBlockManager;
+pub use pjrt::PjrtEngine;
+pub use sim::SimEngine;
+
+use crate::Result;
+
+/// Opaque slot identifier (index into the engine's fixed batch).
+pub type SlotId = usize;
+
+/// What happened to one active slot during a decode iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotEvent {
+    pub slot: SlotId,
+    /// Total output tokens generated so far for this sequence.
+    pub generated: u32,
+    /// True when the sequence just produced its final token.
+    pub finished: bool,
+}
+
+/// Static capabilities of an engine instance.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineCaps {
+    /// Number of batch slots (max concurrent sequences).
+    pub max_slots: usize,
+    /// Max prompt + output tokens per sequence.
+    pub max_seq: usize,
+}
+
+/// The contract between coordinator and execution backend.
+pub trait Engine {
+    fn caps(&self) -> EngineCaps;
+
+    /// Current time on the engine clock (ms).  Virtual for `SimEngine`,
+    /// wall-clock for `PjrtEngine`.
+    fn now_ms(&self) -> f64;
+
+    /// Admit a sequence: allocate a slot + KV, run prefill, charge its cost.
+    /// `target_len` is the forced output length from the workload trace.
+    fn prefill(&mut self, tokens: &[i32], target_len: u32) -> Result<SlotId>;
+
+    /// Run one decode iteration over all active slots.
+    fn decode_step(&mut self) -> Result<Vec<SlotEvent>>;
+
+    /// Release a finished sequence's slot and KV.
+    fn release(&mut self, slot: SlotId);
+
+    fn active_slots(&self) -> usize;
+
+    fn free_slots(&self) -> usize {
+        self.caps().max_slots - self.active_slots()
+    }
+
+    /// Whether the KV budget admits a sequence of `prompt + target` tokens.
+    fn kv_headroom_for(&self, total_tokens: u32) -> bool;
+
+    /// Idle until `t_ms` (no runnable work; next arrival is in the future).
+    fn advance_to(&mut self, t_ms: f64);
+}

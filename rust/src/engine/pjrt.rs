@@ -1,0 +1,259 @@
+//! PjrtEngine: the real serving backend — picoLM prefill/decode HLO
+//! artifacts executed on the PJRT CPU client.
+//!
+//! Design (DESIGN.md §decisions):
+//! * fixed batch of `serve_batch` slots; one decode executable serves any
+//!   occupancy (inactive slots compute garbage into their own cache rows,
+//!   which the engine masks) — the continuous-batching contract;
+//! * the KV cache `[L, 2, B, Smax, H, Dh]` is threaded through the decode
+//!   artifact as explicit I/O.  The xla crate's `execute` returns tuple
+//!   roots as a single tuple buffer (`untuple_result=false` downstream),
+//!   so the cache round-trips through the host each step; at picoLM scale
+//!   that is ~1.3 MiB/step, « the interpret-mode compute cost (measured in
+//!   EXPERIMENTS.md §Perf, revisited there);
+//! * prefill runs per-request (`B=1` artifact); Rust splices the returned
+//!   KV slice into the batch cache, so admission never recomputes running
+//!   sequences;
+//! * sampling (temperature/top-p) happens on the host, matching the
+//!   paper's decoding setup (0.7 / 0.9).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use super::sampler::{sample, SamplerConfig};
+use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId};
+use crate::engine::kv_cache::SeqHandle;
+use crate::runtime::{ArtifactManifest, Executable, HostArg, Runtime};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// picoLM dims fixed by python/compile/model.py::PICO_DIMS.
+pub const PICO_LAYERS: usize = 2;
+pub const PICO_HEADS: usize = 4;
+pub const PICO_HEAD_DIM: usize = 16;
+
+struct PjrtSlot {
+    target_len: u32,
+    generated: u32,
+    cur_token: i32,
+    pos: i32,
+    kv: SeqHandle,
+}
+
+/// Real PJRT-backed engine.
+pub struct PjrtEngine {
+    rt: Runtime,
+    prefill_exe: Executable,
+    decode_exe: Executable,
+    slots: Vec<Option<PjrtSlot>>,
+    kv_mgr: KvBlockManager,
+    /// Host-resident KV cache [L, 2, B, Smax, H, Dh], row-major.
+    kv: Vec<f32>,
+    sampler: SamplerConfig,
+    rng: Rng,
+    vocab: usize,
+    seq_len: usize,
+    max_seq: usize,
+    batch: usize,
+    start: Instant,
+    /// Perf counters.
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+    pub prefills: u64,
+    pub decode_ms_total: f64,
+    pub prefill_ms_total: f64,
+}
+
+impl PjrtEngine {
+    pub fn load(
+        rt: &Runtime,
+        manifest: &ArtifactManifest,
+        max_kv_tokens: usize,
+        seed: u64,
+    ) -> Result<PjrtEngine> {
+        let prefill_exe = rt
+            .load_hlo_text(&manifest.picolm_prefill)
+            .context("loading picoLM prefill artifact")?;
+        let decode_exe = rt
+            .load_hlo_text(&manifest.picolm_decode)
+            .context("loading picoLM decode artifact")?;
+        let b = manifest.serve_batch;
+        let max_seq = manifest.pico_max_seq;
+        let kv_len = PICO_LAYERS * 2 * b * max_seq * PICO_HEADS * PICO_HEAD_DIM;
+        Ok(PjrtEngine {
+            rt: rt.clone(),
+            prefill_exe,
+            decode_exe,
+            slots: (0..b).map(|_| None).collect(),
+            kv_mgr: KvBlockManager::new(max_kv_tokens.min(b * max_seq)),
+            kv: vec![0.0; kv_len],
+            sampler: SamplerConfig::default(),
+            rng: Rng::new(seed),
+            vocab: manifest.vocab,
+            seq_len: manifest.seq_len,
+            max_seq,
+            batch: b,
+            start: Instant::now(),
+            decode_steps: 0,
+            tokens_generated: 0,
+            prefills: 0,
+            decode_ms_total: 0.0,
+            prefill_ms_total: 0.0,
+        })
+    }
+
+    pub fn set_sampler(&mut self, cfg: SamplerConfig) {
+        self.sampler = cfg;
+    }
+
+    pub fn mean_decode_ms(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_ms_total / self.decode_steps as f64
+        }
+    }
+
+    pub fn mean_prefill_ms(&self) -> f64 {
+        if self.prefills == 0 {
+            0.0
+        } else {
+            self.prefill_ms_total / self.prefills as f64
+        }
+    }
+
+    /// Splice a B=1 prefill KV slice into batch slot `slot`.
+    fn splice_kv(&mut self, slot: usize, slice: &[f32]) {
+        let row = self.max_seq * PICO_HEADS * PICO_HEAD_DIM; // per (l,k,b)
+        debug_assert_eq!(slice.len(), PICO_LAYERS * 2 * row);
+        for l in 0..PICO_LAYERS {
+            for k in 0..2 {
+                let src = (l * 2 + k) * row;
+                let dst = ((l * 2 + k) * self.batch + slot) * row;
+                self.kv[dst..dst + row].copy_from_slice(&slice[src..src + row]);
+            }
+        }
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn caps(&self) -> EngineCaps {
+        EngineCaps { max_slots: self.batch, max_seq: self.max_seq }
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    fn prefill(&mut self, tokens: &[i32], target_len: u32) -> Result<SlotId> {
+        let t0 = Instant::now();
+        let Some(slot) = self.slots.iter().position(Option::is_none) else {
+            bail!("no free slot");
+        };
+        let mut padded = vec![0i32; self.seq_len];
+        let n = tokens.len().min(self.seq_len);
+        padded[..n].copy_from_slice(&tokens[..n]);
+        let prompt_len = padded.iter().take_while(|&&t| t != 0).count().max(1);
+        if prompt_len + target_len as usize > self.max_seq {
+            bail!("sequence too long: {prompt_len} + {target_len} > {}", self.max_seq);
+        }
+        // full reservation (prompt + forced output) — see SimEngine::prefill
+        let kv = self
+            .kv_mgr
+            .admit_reserved(prompt_len, prompt_len + target_len.max(1) as usize)?;
+
+        // B=1 prefill → (logits[1,V], kv_slice[L,2,1,Smax,H,Dh])
+        let outs = self.prefill_exe.run_hosted(
+            &self.rt,
+            &[
+                HostArg::I32(&padded, &[1, self.seq_len]),
+                HostArg::I32(&[prompt_len as i32], &[1]),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "prefill returned {} outputs", outs.len());
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        let slice: Vec<f32> = outs[1].to_vec()?;
+        self.splice_kv(slot, &slice);
+
+        let first_token = sample(&logits[..self.vocab], self.sampler, &mut self.rng) as i32;
+        self.slots[slot] = Some(PjrtSlot {
+            target_len: target_len.max(1),
+            generated: 0,
+            cur_token: first_token,
+            pos: prompt_len as i32,
+            kv,
+        });
+        self.prefills += 1;
+        self.prefill_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(slot)
+    }
+
+    fn decode_step(&mut self) -> Result<Vec<SlotEvent>> {
+        if self.slots.iter().all(Option::is_none) {
+            bail!("decode_step with no active slots");
+        }
+        let t0 = Instant::now();
+        let b = self.batch;
+        let mut tokens = vec![0i32; b];
+        let mut pos = vec![0i32; b];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(s) = s {
+                tokens[i] = s.cur_token;
+                pos[i] = s.pos;
+            }
+        }
+        let kv_dims = [PICO_LAYERS, 2, b, self.max_seq, PICO_HEADS, PICO_HEAD_DIM];
+        let outs = self.decode_exe.run_hosted(
+            &self.rt,
+            &[
+                HostArg::I32(&tokens, &[b]),
+                HostArg::F32(&self.kv, &kv_dims),
+                HostArg::I32(&pos, &[b]),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() >= 2, "decode returned {} outputs", outs.len());
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        self.kv = outs[1].to_vec()?;
+        self.decode_steps += 1;
+
+        let mut events = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            let Some(s) = s else { continue };
+            s.generated += 1;
+            s.pos += 1;
+            self.tokens_generated += 1;
+            self.kv_mgr.append_token(s.kv)?;
+            let row = &logits[i * self.vocab..(i + 1) * self.vocab];
+            s.cur_token = sample(row, self.sampler, &mut self.rng) as i32;
+            events.push(SlotEvent {
+                slot: i,
+                generated: s.generated,
+                finished: s.generated >= s.target_len || s.pos as usize >= self.max_seq,
+            });
+        }
+        self.decode_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(events)
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        if let Some(s) = self.slots[slot].take() {
+            self.kv_mgr.release(s.kv);
+        }
+    }
+
+    fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn kv_headroom_for(&self, total_tokens: u32) -> bool {
+        self.kv_mgr.can_admit(total_tokens as usize)
+    }
+
+    fn advance_to(&mut self, t_ms: f64) {
+        let now = self.now_ms();
+        if t_ms > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64((t_ms - now) / 1e3));
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Host-side token sampling: temperature + top-p (nucleus), matching the
+//! paper's decoding setup (temperature 0.7, top-p 0.9, §III-A).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SamplerConfig {
+    pub temperature: f32,
+    pub top_p: f32,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        // the paper's "commonly used decoding setup"
+        SamplerConfig { temperature: 0.7, top_p: 0.9 }
+    }
+}
+
+/// Sample a token id from raw logits.
+pub fn sample(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize {
+    debug_assert!(!logits.is_empty());
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // softmax with temperature (stable)
+    let inv_t = 1.0 / cfg.temperature;
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut probs: Vec<(usize, f32)> = logits
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| (i, ((l - m) * inv_t).exp()))
+        .collect();
+    let z: f32 = probs.iter().map(|(_, p)| p).sum();
+    for p in &mut probs {
+        p.1 /= z;
+    }
+    // nucleus: keep the smallest prefix of descending probs with mass ≥ top_p
+    probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut mass = 0.0f32;
+    let mut cut = probs.len();
+    for (k, (_, p)) in probs.iter().enumerate() {
+        mass += p;
+        if mass >= cfg.top_p {
+            cut = k + 1;
+            break;
+        }
+    }
+    let kept = &probs[..cut];
+    let kept_mass: f32 = kept.iter().map(|(_, p)| p).sum();
+    let mut u = rng.f64() as f32 * kept_mass;
+    for &(i, p) in kept {
+        u -= p;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    kept.last().unwrap().0
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &l) in logits.iter().enumerate() {
+        if l > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_when_temp_zero() {
+        let logits = [0.1, 5.0, -2.0];
+        let mut rng = Rng::new(1);
+        let cfg = SamplerConfig { temperature: 0.0, top_p: 1.0 };
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_p_excludes_tail() {
+        // one dominant token (p≈0.97) — top_p 0.9 keeps only it
+        let logits = [10.0, 0.0, 0.0, 0.0];
+        let mut rng = Rng::new(2);
+        let cfg = SamplerConfig { temperature: 1.0, top_p: 0.9 };
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, cfg, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn distribution_roughly_matches_softmax() {
+        let logits = [1.0, 1.0, 0.0];
+        let mut rng = Rng::new(3);
+        let cfg = SamplerConfig { temperature: 1.0, top_p: 1.0 };
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            counts[sample(&logits, cfg, &mut rng)] += 1;
+        }
+        let p0 = counts[0] as f64 / n as f64;
+        let p2 = counts[2] as f64 / n as f64;
+        // softmax([1,1,0]) ≈ [0.4223, 0.4223, 0.1554]
+        assert!((p0 - 0.4223).abs() < 0.02, "{p0}");
+        assert!((p2 - 0.1554).abs() < 0.02, "{p2}");
+    }
+
+    #[test]
+    fn all_indices_reachable_with_flat_logits() {
+        let logits = [0.0; 8];
+        let mut rng = Rng::new(4);
+        let cfg = SamplerConfig { temperature: 1.0, top_p: 1.0 };
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            seen[sample(&logits, cfg, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,198 @@
+//! SimEngine: discrete-event execution with a calibrated cost model.
+//!
+//! Used for the paper's §IV-D/§IV-E sweeps (up to thousands of requests ×
+//! six policies × several arrival rates), which are queueing-dynamics
+//! experiments: what matters is *when* sequences start/finish relative to
+//! each other, which is fully determined by the per-iteration cost model
+//!
+//! ```text
+//!   t_decode(B)  = decode_base_ms  + decode_per_seq_ms  · B
+//!   t_prefill(L) = prefill_base_ms + prefill_per_token_ms · L
+//! ```
+//!
+//! with constants fitted against the real PJRT picoLM engine by
+//! `pars-serve calibrate` (EXPERIMENTS.md §Calibration).  The virtual
+//! clock makes runs deterministic and thousands of times faster than
+//! wall-clock.
+
+use anyhow::bail;
+
+use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId};
+use crate::config::{CostModel, SchedulerConfig};
+use crate::engine::kv_cache::SeqHandle;
+use crate::Result;
+
+struct SimSlot {
+    target_len: u32,
+    generated: u32,
+    kv: SeqHandle,
+}
+
+/// Discrete-event engine with a virtual clock.
+pub struct SimEngine {
+    cost: CostModel,
+    slots: Vec<Option<SimSlot>>,
+    kv: KvBlockManager,
+    now_ms: f64,
+    max_seq: usize,
+    /// Counters for reports.
+    pub decode_steps: u64,
+    pub tokens_generated: u64,
+}
+
+impl SimEngine {
+    pub fn new(cost: CostModel, sched: &SchedulerConfig, max_seq: usize) -> SimEngine {
+        SimEngine {
+            cost,
+            slots: (0..sched.max_batch).map(|_| None).collect(),
+            kv: KvBlockManager::new(sched.max_kv_tokens),
+            now_ms: 0.0,
+            max_seq,
+            decode_steps: 0,
+            tokens_generated: 0,
+        }
+    }
+
+    pub fn kv(&self) -> &KvBlockManager {
+        &self.kv
+    }
+}
+
+impl Engine for SimEngine {
+    fn caps(&self) -> EngineCaps {
+        EngineCaps { max_slots: self.slots.len(), max_seq: self.max_seq }
+    }
+
+    fn now_ms(&self) -> f64 {
+        self.now_ms
+    }
+
+    fn prefill(&mut self, tokens: &[i32], target_len: u32) -> Result<SlotId> {
+        let prompt_len = tokens.iter().take_while(|&&t| t != 0).count();
+        let Some(slot) = self.slots.iter().position(Option::is_none) else {
+            bail!("no free slot");
+        };
+        // Reserve the FULL sequence (prompt + forced output) upfront:
+        // admission is then sound — a running batch can never exhaust the
+        // pool mid-decode (vLLM avoids this with preemption; with known
+        // target lengths conservative reservation is exact).
+        let kv = self
+            .kv
+            .admit_reserved(prompt_len, prompt_len + target_len.max(1) as usize)?;
+        self.now_ms +=
+            self.cost.prefill_base_ms + self.cost.prefill_per_token_ms * prompt_len as f64;
+        self.slots[slot] = Some(SimSlot { target_len: target_len.max(1), generated: 0, kv });
+        Ok(slot)
+    }
+
+    fn decode_step(&mut self) -> Result<Vec<SlotEvent>> {
+        let active: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        if active.is_empty() {
+            bail!("decode_step with no active slots");
+        }
+        self.now_ms +=
+            self.cost.decode_base_ms + self.cost.decode_per_seq_ms * active.len() as f64;
+        self.decode_steps += 1;
+        let mut events = Vec::with_capacity(active.len());
+        for slot in active {
+            let s = self.slots[slot].as_mut().unwrap();
+            s.generated += 1;
+            self.tokens_generated += 1;
+            self.kv.append_token(s.kv)?;
+            events.push(SlotEvent {
+                slot,
+                generated: s.generated,
+                finished: s.generated >= s.target_len,
+            });
+        }
+        Ok(events)
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        if let Some(s) = self.slots[slot].take() {
+            self.kv.release(s.kv);
+        }
+    }
+
+    fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn kv_headroom_for(&self, total_tokens: u32) -> bool {
+        self.kv.can_admit(total_tokens as usize)
+    }
+
+    fn advance_to(&mut self, t_ms: f64) {
+        if t_ms > self.now_ms {
+            self.now_ms = t_ms;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> SimEngine {
+        let sched = SchedulerConfig { max_batch: 4, max_kv_tokens: 4096, ..Default::default() };
+        SimEngine::new(CostModel::default(), &sched, 160)
+    }
+
+    #[test]
+    fn prefill_charges_time() {
+        let mut e = engine();
+        let t0 = e.now_ms();
+        let toks = [1, 10, 20, 32, 2, 0, 0, 0];
+        e.prefill(&toks, 5).unwrap();
+        // 5 real tokens → 3.0 + 0.05*5 = 3.25 ms
+        assert!((e.now_ms() - t0 - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_until_finished() {
+        let mut e = engine();
+        let slot = e.prefill(&[1, 10, 2], 3).unwrap();
+        let mut finished = false;
+        for step in 1..=3 {
+            let ev = e.decode_step().unwrap();
+            assert_eq!(ev.len(), 1);
+            assert_eq!(ev[0].generated, step);
+            finished = ev[0].finished;
+        }
+        assert!(finished);
+        e.release(slot);
+        assert_eq!(e.active_slots(), 0);
+        assert_eq!(e.kv().blocks_used(), 0);
+    }
+
+    #[test]
+    fn batched_decode_costs_scale() {
+        let mut e = engine();
+        e.prefill(&[1, 2], 100).unwrap();
+        e.prefill(&[1, 2], 100).unwrap();
+        let t0 = e.now_ms();
+        e.decode_step().unwrap();
+        let dt = e.now_ms() - t0;
+        assert!((dt - (2.0 + 0.25 * 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slot_exhaustion() {
+        let mut e = engine();
+        for _ in 0..4 {
+            e.prefill(&[1, 2], 10).unwrap();
+        }
+        assert!(e.prefill(&[1, 2], 10).is_err());
+        assert_eq!(e.free_slots(), 0);
+    }
+
+    #[test]
+    fn advance_only_forward() {
+        let mut e = engine();
+        e.advance_to(100.0);
+        assert_eq!(e.now_ms(), 100.0);
+        e.advance_to(50.0);
+        assert_eq!(e.now_ms(), 100.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Synthetic-grammar tokenizer: mirrors `python/compile/data.py`'s vocab
+//! layout so Rust can construct prompts (examples, quickstart) and render
+//! token streams human-readably (logs, demos).
+
+pub const VOCAB_SIZE: usize = 256;
+pub const SEQ_LEN: usize = 32;
+
+pub const PAD_ID: i32 = 0;
+pub const CLS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const GENERIC_TASK_ID: i32 = 3;
+
+pub const TASK_BASE: i32 = 10;
+pub const N_TASKS: usize = 8;
+pub const MOD_BASE: i32 = 20;
+pub const N_MODS: usize = 8;
+pub const TOPIC_BASE: i32 = 32;
+pub const N_TOPICS: usize = 64;
+pub const CONTENT_BASE: i32 = 96;
+
+pub const TASK_NAMES: [&str; N_TASKS] = [
+    "chitchat",
+    "factual_qa",
+    "classify",
+    "extract",
+    "summarize",
+    "translate",
+    "code",
+    "math_proof",
+];
+
+/// Build a padded prompt: `[CLS, task, mod, topic, content..., EOS, PAD...]`.
+pub fn build_prompt(task: usize, level: usize, topic: usize, content: &[i32]) -> Vec<i32> {
+    assert!(task < N_TASKS && level < N_MODS && topic < N_TOPICS);
+    let mut toks = Vec::with_capacity(SEQ_LEN);
+    toks.push(CLS_ID);
+    toks.push(TASK_BASE + task as i32);
+    toks.push(MOD_BASE + level as i32);
+    toks.push(TOPIC_BASE + topic as i32);
+    for &c in content.iter().take(SEQ_LEN - 5) {
+        debug_assert!((CONTENT_BASE..VOCAB_SIZE as i32).contains(&c));
+        toks.push(c);
+    }
+    toks.push(EOS_ID);
+    toks.resize(SEQ_LEN, PAD_ID);
+    toks
+}
+
+/// Count real (non-PAD) tokens.
+pub fn prompt_len(tokens: &[i32]) -> usize {
+    tokens.iter().take_while(|&&t| t != PAD_ID).count()
+}
+
+/// Render a token id symbolically.
+pub fn render_token(t: i32) -> String {
+    match t {
+        PAD_ID => "<pad>".to_string(),
+        CLS_ID => "<cls>".to_string(),
+        EOS_ID => "<eos>".to_string(),
+        GENERIC_TASK_ID => "<task:?>".to_string(),
+        t if (TASK_BASE..TASK_BASE + N_TASKS as i32).contains(&t) => {
+            format!("<task:{}>", TASK_NAMES[(t - TASK_BASE) as usize])
+        }
+        t if (MOD_BASE..MOD_BASE + N_MODS as i32).contains(&t) => {
+            format!("<lvl:{}>", t - MOD_BASE)
+        }
+        t if (TOPIC_BASE..TOPIC_BASE + N_TOPICS as i32).contains(&t) => {
+            format!("<topic:{}>", t - TOPIC_BASE)
+        }
+        t if (CONTENT_BASE..VOCAB_SIZE as i32).contains(&t) => format!("w{}", t - CONTENT_BASE),
+        t => format!("<unk:{t}>"),
+    }
+}
+
+/// Render a whole prompt (stops at PAD).
+pub fn render_prompt(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .take_while(|&&t| t != PAD_ID)
+        .map(|&t| render_token(t))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_render() {
+        let p = build_prompt(7, 3, 12, &[100, 101]);
+        assert_eq!(p.len(), SEQ_LEN);
+        assert_eq!(p[0], CLS_ID);
+        assert_eq!(prompt_len(&p), 7);
+        let s = render_prompt(&p);
+        assert!(s.contains("<task:math_proof>"));
+        assert!(s.contains("<lvl:3>"));
+        assert!(s.contains("<topic:12>"));
+        assert!(s.contains("w4"));
+        assert!(s.ends_with("<eos>"));
+    }
+
+    #[test]
+    fn content_truncation() {
+        let content: Vec<i32> = (0..64).map(|i| CONTENT_BASE + (i % 64)).collect();
+        let p = build_prompt(0, 0, 0, &content);
+        assert_eq!(p.len(), SEQ_LEN);
+        assert_eq!(p[SEQ_LEN - 1], EOS_ID); // EOS still fits
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_task() {
+        build_prompt(99, 0, 0, &[]);
+    }
+}

@@ -1,0 +1,241 @@
+//! Kendall's tau-b — the paper's predictor-accuracy metric (§IV, Eq. for
+//! tau_b): `tau_b = (n_c - n_d) / sqrt((n0 - n1)(n0 - n2))` with tie
+//! corrections n1/n2 for each variable.
+//!
+//! Two implementations:
+//! * `kendall_tau_b`        — O(n log n) (sort + merge-sort inversion count
+//!   + tie grouping), used by the benches on 1000+ item test sets;
+//! * `kendall_tau_b_naive`  — O(n^2) transcription of the formula, used as
+//!   the property-test oracle.
+
+/// O(n^2) reference implementation (test oracle).
+pub fn kendall_tau_b_naive(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let (mut nc, mut nd, mut tx, mut ty) = (0i64, 0i64, 0i64, 0i64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = (x[i] - x[j]).partial_cmp(&0.0).unwrap();
+            let dy = (y[i] - y[j]).partial_cmp(&0.0).unwrap();
+            use std::cmp::Ordering::*;
+            match (dx, dy) {
+                (Equal, Equal) => {
+                    tx += 1;
+                    ty += 1;
+                }
+                (Equal, _) => tx += 1,
+                (_, Equal) => ty += 1,
+                (a, b) if a == b => nc += 1,
+                _ => nd += 1,
+            }
+        }
+    }
+    let n0 = (n * (n - 1) / 2) as i64;
+    let denom = (((n0 - tx) as f64) * ((n0 - ty) as f64)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (nc - nd) as f64 / denom
+    }
+}
+
+/// O(n log n) tau-b: sort by x (ties broken by y), count discordant pairs as
+/// inversions of the y sequence via merge sort, correct for ties.
+pub fn kendall_tau_b(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| {
+        x[a].partial_cmp(&x[b]).unwrap().then(y[a].partial_cmp(&y[b]).unwrap())
+    });
+
+    // tie counts: pairs tied in x (t_x), tied in y (t_y), tied in both (t_xy)
+    let t_x = tie_pairs_by(&idx, |&i| x[i]);
+    let t_xy = tie_pairs_by2(&idx, |&i| (x[i], y[i]));
+    let mut y_sorted: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+    let t_y = {
+        let mut yy: Vec<f64> = y.to_vec();
+        yy.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tie_pairs_sorted(&yy)
+    };
+
+    // discordant pairs = inversions in y (ignoring any-tied pairs), counted
+    // by merge sort.  Pairs tied in x contribute neither; pairs tied in y
+    // only likewise.  Standard Knight (1966) construction.
+    let swaps = merge_count(&mut y_sorted);
+
+    let n0 = (n as i64) * (n as i64 - 1) / 2;
+    // concordant - discordant = n0 - t_x - t_y + t_xy - 2*swaps
+    let num = (n0 - t_x - t_y + t_xy - 2 * swaps) as f64;
+    let denom = (((n0 - t_x) as f64) * ((n0 - t_y) as f64)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        num / denom
+    }
+}
+
+fn tie_pairs_by<K: PartialOrd>(idx: &[usize], key: impl Fn(&usize) -> K) -> i64 {
+    let mut total = 0i64;
+    let mut run = 1i64;
+    for w in idx.windows(2) {
+        if key(&w[0]) == key(&w[1]) {
+            run += 1;
+        } else {
+            total += run * (run - 1) / 2;
+            run = 1;
+        }
+    }
+    total + run * (run - 1) / 2
+}
+
+fn tie_pairs_by2(idx: &[usize], key: impl Fn(&usize) -> (f64, f64)) -> i64 {
+    let mut total = 0i64;
+    let mut run = 1i64;
+    for w in idx.windows(2) {
+        if key(&w[0]) == key(&w[1]) {
+            run += 1;
+        } else {
+            total += run * (run - 1) / 2;
+            run = 1;
+        }
+    }
+    total + run * (run - 1) / 2
+}
+
+fn tie_pairs_sorted(ys: &[f64]) -> i64 {
+    let mut total = 0i64;
+    let mut run = 1i64;
+    for w in ys.windows(2) {
+        if w[0] == w[1] {
+            run += 1;
+        } else {
+            total += run * (run - 1) / 2;
+            run = 1;
+        }
+    }
+    total + run * (run - 1) / 2
+}
+
+/// Count inversions (strict descents) while merge-sorting `v` in place.
+fn merge_count(v: &mut [f64]) -> i64 {
+    let n = v.len();
+    if n < 2 {
+        return 0;
+    }
+    let mut buf = v.to_vec();
+    sort_count(v, &mut buf)
+}
+
+fn sort_count(v: &mut [f64], buf: &mut [f64]) -> i64 {
+    let n = v.len();
+    if n < 2 {
+        return 0;
+    }
+    let mid = n / 2;
+    let (left, right) = v.split_at_mut(mid);
+    let (bl, br) = buf.split_at_mut(mid);
+    let mut inv = sort_count(left, bl) + sort_count(right, br);
+    // merge; count strict inversions (left[i] > right[j])
+    let (mut i, mut j, mut k) = (0, 0, 0);
+    while i < left.len() && j < right.len() {
+        if left[i] <= right[j] {
+            buf[k] = left[i];
+            i += 1;
+        } else {
+            inv += (left.len() - i) as i64;
+            buf[k] = right[j];
+            j += 1;
+        }
+        k += 1;
+    }
+    while i < left.len() {
+        buf[k] = left[i];
+        i += 1;
+        k += 1;
+    }
+    while j < right.len() {
+        buf[k] = right[j];
+        j += 1;
+        k += 1;
+    }
+    v.copy_from_slice(&buf[..n]);
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check_with;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_agreement() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert!((kendall_tau_b(&x, &x) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_disagreement() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [4.0, 3.0, 2.0, 1.0];
+        assert!((kendall_tau_b(&x, &y) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn with_ties_matches_naive() {
+        let x = [1.0, 1.0, 2.0, 3.0, 3.0, 3.0];
+        let y = [2.0, 1.0, 1.0, 5.0, 5.0, 4.0];
+        let fast = kendall_tau_b(&x, &y);
+        let slow = kendall_tau_b_naive(&x, &y);
+        assert!((fast - slow).abs() < 1e-12, "{fast} vs {slow}");
+    }
+
+    #[test]
+    fn all_tied_is_zero() {
+        let x = [1.0; 5];
+        let y = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(kendall_tau_b(&x, &y), 0.0);
+    }
+
+    #[test]
+    fn property_fast_equals_naive() {
+        check_with(
+            0xC0FFEE,
+            300,
+            |r: &mut Rng| {
+                let n = 2 + r.below(40);
+                // heavy ties: draw from a small integer support
+                let x: Vec<f64> = (0..n).map(|_| r.below(6) as f64).collect();
+                let y: Vec<f64> = (0..n).map(|_| r.below(6) as f64).collect();
+                (x, y)
+            },
+            |(x, y)| (kendall_tau_b(x, y) - kendall_tau_b_naive(x, y)).abs() < 1e-9,
+        );
+    }
+
+    #[test]
+    fn property_symmetry_and_range() {
+        check_with(
+            0xBEEF,
+            200,
+            |r: &mut Rng| {
+                let n = 2 + r.below(30);
+                let x: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                let y: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+                (x, y)
+            },
+            |(x, y)| {
+                let t = kendall_tau_b(x, y);
+                let ts = kendall_tau_b(y, x);
+                (t - ts).abs() < 1e-9 && (-1.0..=1.0).contains(&t)
+            },
+        );
+    }
+}

@@ -1,0 +1,5 @@
+//! Ranking evaluation: tie-aware Kendall rank correlation (tau-b).
+
+pub mod kendall;
+
+pub use kendall::{kendall_tau_b, kendall_tau_b_naive};

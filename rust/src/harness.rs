@@ -1,0 +1,225 @@
+//! Experiment harness shared by the CLI, the benches and the examples:
+//! build request workloads from test sets, attach predictor scores per
+//! policy, run the policy suite over the SimEngine, load calibration.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::{CostModel, PolicyKind, SchedulerConfig};
+use crate::coordinator::policy::make_policy;
+use crate::coordinator::{Coordinator, PjrtScorer, Request, Scorer, ServeOutcome};
+use crate::engine::SimEngine;
+use crate::runtime::{ArtifactManifest, Runtime};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::workload::{Arrival, ArrivalProcess, LengthOracle, TestSet};
+
+/// Which predictor variant each policy consults (paper §IV).
+pub fn scorer_variant_for(kind: PolicyKind) -> Option<(&'static str, bool)> {
+    match kind {
+        PolicyKind::Pars => Some(("pairwise", true)),
+        PolicyKind::PointwiseSjf => Some(("pointwise", true)),
+        PolicyKind::ListwiseSjf => Some(("listwise", true)),
+        PolicyKind::CrossModelPars => Some(("pairwise", true)), // gpt4-trained
+        PolicyKind::Fcfs | PolicyKind::OracleSjf => None,
+    }
+}
+
+/// Predictor scores for every prompt of a test set, one vector per policy
+/// that needs them.  Also reports mean scoring latency (admission-path
+/// overhead, paper: "minimal overhead").
+pub struct ScoreBook {
+    pub scores: BTreeMap<&'static str, Vec<f32>>,
+    pub scoring_ms_per_prompt: f64,
+}
+
+impl ScoreBook {
+    pub fn build(
+        rt: &Runtime,
+        manifest: &ArtifactManifest,
+        ts: &TestSet,
+        kinds: &[PolicyKind],
+    ) -> Result<ScoreBook> {
+        let mut scores = BTreeMap::new();
+        let mut total_ms = 0.0;
+        let mut total_prompts = 0usize;
+        for &kind in kinds {
+            let Some((objective, filtered)) = scorer_variant_for(kind) else {
+                continue;
+            };
+            // Cross-model PARS: predictor trained on the SAME dataset but
+            // GPT-4 response lengths (paper §IV-E).
+            let model = if kind == PolicyKind::CrossModelPars { "gpt4" } else { &ts.model };
+            if kind == PolicyKind::CrossModelPars && ts.model == "gpt4" {
+                continue; // cross-model onto itself is plain PARS
+            }
+            let mut scorer = PjrtScorer::load(
+                rt, manifest, objective, "bert", &ts.dataset, model, filtered,
+            )?;
+            let t0 = std::time::Instant::now();
+            let s = scorer.score_batch(&ts.tokens, ts.n_prompts, ts.seq_len)?;
+            total_ms += t0.elapsed().as_secs_f64() * 1e3;
+            total_prompts += ts.n_prompts;
+            scores.insert(kind.name(), s);
+        }
+        Ok(ScoreBook {
+            scores,
+            scoring_ms_per_prompt: if total_prompts == 0 {
+                0.0
+            } else {
+                total_ms / total_prompts as f64
+            },
+        })
+    }
+}
+
+/// Build the request list for one serving run.
+///
+/// `live_mode` chooses the serving-day lengths: the precomputed `live_len`
+/// run (reproducible headline numbers) or a fresh oracle draw (replicates).
+pub enum LiveLengths<'a> {
+    Precomputed,
+    Fresh(&'a mut Rng),
+}
+
+pub fn build_requests(
+    ts: &TestSet,
+    arrivals: &[Arrival],
+    scores: Option<&[f32]>,
+    live: LiveLengths<'_>,
+) -> Vec<Request> {
+    let live_len: Vec<u32> = match live {
+        LiveLengths::Precomputed => ts.live_len.clone(),
+        LiveLengths::Fresh(rng) => LengthOracle::from_testset(ts).sample_run(rng),
+    };
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(id, a)| {
+            let i = a.prompt_idx;
+            Request {
+                id: id as u64,
+                tokens: ts.prompt(i).to_vec(),
+                prompt_len: ts.prompt_lens[i],
+                arrival_ms: a.at_ms,
+                target_len: live_len[i],
+                oracle_len: ts.oracle_len[i],
+                score: scores.map(|s| s[i]).unwrap_or(0.0),
+            }
+        })
+        .collect()
+}
+
+/// Run one (policy, workload) pair on a fresh SimEngine.
+pub fn run_sim(
+    ts: &TestSet,
+    arrivals: &[Arrival],
+    kind: PolicyKind,
+    book: &ScoreBook,
+    cost: &CostModel,
+    sched: &SchedulerConfig,
+) -> Result<ServeOutcome> {
+    let scores = book.scores.get(kind.name()).map(|v| v.as_slice());
+    let mut rng = Rng::new(0xA11CE);
+    let reqs = build_requests(ts, arrivals, scores, LiveLengths::Fresh(&mut rng));
+    let max_seq = reqs
+        .iter()
+        .map(|r| (r.prompt_len + r.target_len) as usize)
+        .max()
+        .unwrap_or(0)
+        .max(64);
+    let mut engine = SimEngine::new(cost.clone(), sched, max_seq);
+    let mut coord = Coordinator::new(&mut engine, make_policy(kind), sched.clone());
+    coord.serve(reqs)
+}
+
+/// The policy suite used in the paper's figures for a given target model.
+pub fn policy_suite(target_model: &str) -> Vec<PolicyKind> {
+    let mut v = vec![
+        PolicyKind::Fcfs,
+        PolicyKind::PointwiseSjf,
+        PolicyKind::ListwiseSjf,
+        PolicyKind::OracleSjf,
+        PolicyKind::Pars,
+    ];
+    if target_model != "gpt4" {
+        v.push(PolicyKind::CrossModelPars);
+    }
+    v
+}
+
+/// Load the calibrated SimEngine cost model if `pars-serve calibrate` has
+/// been run; fall back to defaults otherwise.
+pub fn load_cost_model(artifacts_dir: &Path) -> CostModel {
+    let path = artifacts_dir.join("costmodel.json");
+    let Ok(doc) = json::parse_file(&path) else {
+        return CostModel::default();
+    };
+    let get = |k: &str, d: f64| doc.opt(k).and_then(|v| v.as_f64().ok()).unwrap_or(d);
+    let d = CostModel::default();
+    CostModel {
+        decode_base_ms: get("decode_base_ms", d.decode_base_ms),
+        decode_per_seq_ms: get("decode_per_seq_ms", d.decode_per_seq_ms),
+        prefill_base_ms: get("prefill_base_ms", d.prefill_base_ms),
+        prefill_per_token_ms: get("prefill_per_token_ms", d.prefill_per_token_ms),
+    }
+}
+
+/// Persist a calibrated cost model.
+pub fn save_cost_model(artifacts_dir: &Path, cm: &CostModel) -> Result<()> {
+    let doc = Json::obj(vec![
+        ("decode_base_ms", Json::Num(cm.decode_base_ms)),
+        ("decode_per_seq_ms", Json::Num(cm.decode_per_seq_ms)),
+        ("prefill_base_ms", Json::Num(cm.prefill_base_ms)),
+        ("prefill_per_token_ms", Json::Num(cm.prefill_per_token_ms)),
+    ]);
+    std::fs::write(artifacts_dir.join("costmodel.json"), doc.to_string())
+        .context("writing costmodel.json")?;
+    Ok(())
+}
+
+/// Arrival-rate sweep points: fractions of the engine's saturation
+/// throughput for this workload (so sweeps span under- to over-load for
+/// every (dataset, model) combination, like the paper's per-model rates).
+pub fn sweep_rates(ts: &TestSet, cost: &CostModel, sched: &SchedulerConfig) -> Vec<f64> {
+    let b = sched.max_batch as f64;
+    let step_ms = cost.decode_base_ms + cost.decode_per_seq_ms * b;
+    let tokens_per_s = b / step_ms * 1e3;
+    let req_per_s = tokens_per_s / ts.mean_live_len();
+    [0.3, 0.5, 0.7, 0.9, 1.1].iter().map(|f| f * req_per_s).collect()
+}
+
+/// Shorthand: Poisson arrivals for a testset at `rate`.
+pub fn poisson(ts: &TestSet, rate_per_s: f64, n: usize, seed: u64) -> Vec<Arrival> {
+    ArrivalProcess::Poisson { rate_per_s, n }.generate(ts.n_prompts, &mut Rng::new(seed))
+}
+
+/// Shorthand: the paper's 2000-request burst.
+pub fn burst(ts: &TestSet, n: usize, seed: u64) -> Vec<Arrival> {
+    ArrivalProcess::Burst { n }.generate(ts.n_prompts, &mut Rng::new(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_excludes_crossmodel_on_gpt4() {
+        assert_eq!(policy_suite("gpt4").len(), 5);
+        assert_eq!(policy_suite("llama").len(), 6);
+    }
+
+    #[test]
+    fn scorer_variant_map() {
+        assert_eq!(scorer_variant_for(PolicyKind::Pars), Some(("pairwise", true)));
+        assert_eq!(scorer_variant_for(PolicyKind::Fcfs), None);
+    }
+
+    #[test]
+    fn cost_model_fallback() {
+        let cm = load_cost_model(Path::new("/nonexistent"));
+        assert_eq!(cm.decode_base_ms, CostModel::default().decode_base_ms);
+    }
+}

@@ -1,0 +1,37 @@
+//! # pars-serve
+//!
+//! Production-shaped reproduction of **PARS: Low-Latency LLM Serving via
+//! Pairwise Learning-to-Rank** (Tao et al., 2025).
+//!
+//! PARS approximates Shortest-Job-First scheduling for LLM inference by
+//! scoring each prompt with a lightweight pairwise-trained ranking
+//! predictor and ordering the waiting queue by predicted response length.
+//! This crate is the L3 (request-path) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (attention / layernorm / ffn), build-time
+//!   Python, lowered with `interpret=True`.
+//! * **L2** — JAX scorer backbones + the served `picoLM`, AOT-lowered to
+//!   HLO text by `python/compile/aot.py` (`make artifacts`).
+//! * **L3** — this crate: PJRT runtime, serving engine (continuous
+//!   batching, paged KV cache), and the PARS coordinator with its
+//!   scheduling-policy zoo (FCFS / pointwise / listwise / oracle / PARS).
+//!
+//! Python never runs on the request path: the binary is self-contained
+//! once `artifacts/` is built.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

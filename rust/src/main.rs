@@ -1,0 +1,17 @@
+//! `pars-serve` binary entrypoint.
+
+use pars_serve::cli::{commands, Args};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = commands::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

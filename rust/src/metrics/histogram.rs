@@ -1,0 +1,156 @@
+//! Log-bucketed streaming histogram (HdrHistogram-flavoured, fixed memory).
+//!
+//! Used for online percentile tracking in the server loop where storing
+//! every sample would allocate on the hot path.  Buckets are geometric with
+//! ~2% relative width, covering 1 µs .. ~3 h of latency.
+
+const GROWTH: f64 = 1.02;
+const MIN_MS: f64 = 1e-3;
+const N_BUCKETS: usize = 1200;
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; N_BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(ms: f64) -> usize {
+        if ms <= MIN_MS {
+            return 0;
+        }
+        let b = ((ms / MIN_MS).ln() / GROWTH.ln()).floor() as isize;
+        (b.max(0) as usize).min(N_BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        // geometric midpoint of the bucket
+        MIN_MS * GROWTH.powi(i as i32) * (1.0 + GROWTH) / 2.0
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        debug_assert!(ms.is_finite() && ms >= 0.0, "bad latency {ms}");
+        self.counts[Self::bucket(ms)] += 1;
+        self.total += 1;
+        self.sum += ms;
+        self.min = self.min.min(ms);
+        self.max = self.max.max(ms);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate percentile (within bucket resolution, ~2%).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(90.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_close_to_exact() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.lognormal(1.0) * 50.0).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        let s = Summary::of(&xs);
+        for (p, exact) in [(50.0, s.p50), (90.0, s.p90), (99.0, s.p99)] {
+            let approx = h.percentile(p);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.04, "p{p}: approx {approx} exact {exact}");
+        }
+        assert!((h.mean() - s.mean).abs() / s.mean < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut rng = Rng::new(2);
+        for i in 0..10_000 {
+            let x = rng.f64() * 1000.0;
+            c.record(x);
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert!((a.percentile(90.0) - c.percentile(90.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extremes_clamped() {
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(1e9);
+        assert!(h.percentile(0.0) >= 0.0);
+        assert!(h.percentile(100.0) <= 1e9);
+    }
+}

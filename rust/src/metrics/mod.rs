@@ -1,0 +1,9 @@
+//! Serving metrics: per-request latency records and the paper's two
+//! headline numbers — **average** and **p90 per-token latency**
+//! (end-to-end request latency divided by output length, §IV).
+
+pub mod histogram;
+pub mod recorder;
+
+pub use histogram::Histogram;
+pub use recorder::{LatencyReport, Recorder, RequestRecord};

@@ -1,0 +1,164 @@
+//! Per-request latency recording and report generation.
+
+use crate::util::stats::{percentile, Summary};
+
+/// Lifecycle timestamps for one served request (all ms, engine clock).
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub arrival_ms: f64,
+    pub admitted_ms: f64,
+    pub first_token_ms: f64,
+    pub completed_ms: f64,
+    pub prompt_len: u32,
+    pub output_len: u32,
+    /// Was the starvation guard triggered for this request?
+    pub boosted: bool,
+}
+
+impl RequestRecord {
+    /// End-to-end latency (arrival → completion).
+    pub fn e2e_ms(&self) -> f64 {
+        self.completed_ms - self.arrival_ms
+    }
+
+    /// The paper's metric: e2e latency normalised by output length.
+    pub fn per_token_ms(&self) -> f64 {
+        self.e2e_ms() / self.output_len.max(1) as f64
+    }
+
+    /// Queueing delay (arrival → admission into the running batch).
+    pub fn queue_ms(&self) -> f64 {
+        self.admitted_ms - self.arrival_ms
+    }
+
+    /// Time to first token.
+    pub fn ttft_ms(&self) -> f64 {
+        self.first_token_ms - self.arrival_ms
+    }
+}
+
+/// Collects finished requests; produces the paper-style report.
+#[derive(Default)]
+pub struct Recorder {
+    pub records: Vec<RequestRecord>,
+}
+
+impl Recorder {
+    pub fn push(&mut self, r: RequestRecord) {
+        debug_assert!(r.completed_ms >= r.admitted_ms && r.admitted_ms >= r.arrival_ms);
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn report(&self, wall_ms: f64) -> LatencyReport {
+        let per_token: Vec<f64> = self.records.iter().map(|r| r.per_token_ms()).collect();
+        let e2e: Vec<f64> = self.records.iter().map(|r| r.e2e_ms()).collect();
+        let queue: Vec<f64> = self.records.iter().map(|r| r.queue_ms()).collect();
+        let ttft: Vec<f64> = self.records.iter().map(|r| r.ttft_ms()).collect();
+        let mut pt_sorted = per_token.clone();
+        pt_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let tokens: u64 = self.records.iter().map(|r| r.output_len as u64).sum();
+        LatencyReport {
+            n_requests: self.records.len(),
+            total_tokens: tokens,
+            wall_ms,
+            avg_per_token_ms: Summary::of(&per_token).mean,
+            p90_per_token_ms: if pt_sorted.is_empty() { 0.0 } else { percentile(&pt_sorted, 90.0) },
+            per_token: Summary::of(&per_token),
+            e2e: Summary::of(&e2e),
+            queue: Summary::of(&queue),
+            ttft: Summary::of(&ttft),
+            throughput_tok_s: if wall_ms > 0.0 { tokens as f64 / (wall_ms / 1e3) } else { 0.0 },
+            throughput_req_s: if wall_ms > 0.0 {
+                self.records.len() as f64 / (wall_ms / 1e3)
+            } else {
+                0.0
+            },
+            boosted: self.records.iter().filter(|r| r.boosted).count(),
+        }
+    }
+}
+
+/// The numbers the paper reports (plus operational extras).
+#[derive(Clone, Debug)]
+pub struct LatencyReport {
+    pub n_requests: usize,
+    pub total_tokens: u64,
+    pub wall_ms: f64,
+    /// Paper: "average latency" = mean per-token latency (ms/token).
+    pub avg_per_token_ms: f64,
+    /// Paper: "p90 latency" = 90th-percentile per-token latency (ms/token).
+    pub p90_per_token_ms: f64,
+    pub per_token: Summary,
+    pub e2e: Summary,
+    pub queue: Summary,
+    pub ttft: Summary,
+    pub throughput_tok_s: f64,
+    pub throughput_req_s: f64,
+    pub boosted: usize,
+}
+
+impl LatencyReport {
+    pub fn one_line(&self, label: &str) -> String {
+        format!(
+            "{label:<18} n={:<5} avg={:>9.2} ms/tok  p90={:>9.2} ms/tok  p99={:>9.2}  ttft_p50={:>8.1} ms  thru={:>8.1} tok/s  boosted={}",
+            self.n_requests,
+            self.avg_per_token_ms,
+            self.p90_per_token_ms,
+            self.per_token.p99,
+            self.ttft.p50,
+            self.throughput_tok_s,
+            self.boosted
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, arrival: f64, done: f64, out: u32) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival_ms: arrival,
+            admitted_ms: arrival,
+            first_token_ms: arrival + 1.0,
+            completed_ms: done,
+            prompt_len: 10,
+            output_len: out,
+            boosted: false,
+        }
+    }
+
+    #[test]
+    fn per_token_math() {
+        let r = rec(1, 100.0, 300.0, 50);
+        assert!((r.per_token_ms() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut rc = Recorder::default();
+        rc.push(rec(1, 0.0, 100.0, 10)); // 10 ms/tok
+        rc.push(rec(2, 0.0, 40.0, 20)); // 2 ms/tok
+        let rep = rc.report(1000.0);
+        assert_eq!(rep.n_requests, 2);
+        assert_eq!(rep.total_tokens, 30);
+        assert!((rep.avg_per_token_ms - 6.0).abs() < 1e-12);
+        assert!((rep.throughput_tok_s - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_output_guard() {
+        let r = rec(1, 0.0, 10.0, 0);
+        assert!(r.per_token_ms().is_finite());
+    }
+}

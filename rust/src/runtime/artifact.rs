@@ -1,0 +1,153 @@
+//! Artifact manifest: the index `make artifacts` writes so the Rust side
+//! can discover scorer HLOs, weight blobs and test sets by metadata
+//! (objective × backbone × dataset × target model × filtering).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{self, Json};
+
+/// Metadata for one trained scorer variant.
+#[derive(Clone, Debug)]
+pub struct ScorerMeta {
+    pub name: String,
+    pub objective: String, // pairwise | pointwise | listwise
+    pub backbone: String,  // bert | opt | t5
+    pub dataset: String,   // synthalpaca | synthlmsys
+    pub model: String,     // gpt4 | llama | r1
+    pub filtered: bool,    // min_length_difference filtering applied?
+    pub weights: PathBuf,  // f32-LE blob
+    pub n_params: usize,
+    /// Build-time eval tau (recorded for provenance; benches re-measure).
+    pub train_tau: f64,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub scorers: Vec<ScorerMeta>,
+    /// backbone → HLO path (one scoring HLO per architecture).
+    pub scorer_hlo: BTreeMap<String, PathBuf>,
+    pub picolm_prefill: PathBuf,
+    pub picolm_decode: PathBuf,
+    pub score_batch: usize,
+    pub serve_batch: usize,
+    pub seq_len: usize,
+    pub pico_max_seq: usize,
+    pub vocab: usize,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let doc = json::parse_file(&dir.join("manifest.json"))?;
+        Self::from_json(dir, &doc)
+    }
+
+    fn from_json(dir: &Path, doc: &Json) -> Result<ArtifactManifest> {
+        let mut scorers = Vec::new();
+        for s in doc.get("scorers")?.as_arr()? {
+            scorers.push(ScorerMeta {
+                name: s.get("name")?.as_str()?.to_string(),
+                objective: s.get("objective")?.as_str()?.to_string(),
+                backbone: s.get("backbone")?.as_str()?.to_string(),
+                dataset: s.get("dataset")?.as_str()?.to_string(),
+                model: s.get("model")?.as_str()?.to_string(),
+                filtered: s.get("filtered")?.as_bool()?,
+                weights: dir.join(s.get("weights")?.as_str()?),
+                n_params: s.get("n_params")?.as_usize()?,
+                train_tau: s.get("train_tau")?.as_f64()?,
+            });
+        }
+        let mut scorer_hlo = BTreeMap::new();
+        if let Json::Obj(m) = doc.get("scorer_hlo")? {
+            for (k, v) in m {
+                scorer_hlo.insert(k.clone(), dir.join(v.as_str()?));
+            }
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            scorers,
+            scorer_hlo,
+            picolm_prefill: dir.join(doc.get("picolm_prefill")?.as_str()?),
+            picolm_decode: dir.join(doc.get("picolm_decode")?.as_str()?),
+            score_batch: doc.get("score_batch")?.as_usize()?,
+            serve_batch: doc.get("serve_batch")?.as_usize()?,
+            seq_len: doc.get("seq_len")?.as_usize()?,
+            pico_max_seq: doc.get("pico_max_seq")?.as_usize()?,
+            vocab: doc.get("vocab")?.as_usize()?,
+        })
+    }
+
+    /// Find a scorer by exact metadata.
+    pub fn find_scorer(
+        &self,
+        objective: &str,
+        backbone: &str,
+        dataset: &str,
+        model: &str,
+        filtered: bool,
+    ) -> Result<&ScorerMeta> {
+        self.scorers
+            .iter()
+            .find(|s| {
+                s.objective == objective
+                    && s.backbone == backbone
+                    && s.dataset == dataset
+                    && s.model == model
+                    && s.filtered == filtered
+            })
+            .ok_or_else(|| {
+                anyhow!("no scorer for ({objective}, {backbone}, {dataset}, {model}, filtered={filtered})")
+            })
+    }
+
+    pub fn scorer_hlo_for(&self, backbone: &str) -> Result<&Path> {
+        self.scorer_hlo
+            .get(backbone)
+            .map(|p| p.as_path())
+            .ok_or_else(|| anyhow!("no scorer HLO for backbone {backbone}"))
+    }
+
+    pub fn testset_path(&self, dataset: &str, model: &str) -> PathBuf {
+        self.dir.join(format!("testset_{dataset}_{model}.json"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> Json {
+        json::parse(
+            r#"{
+              "scorers": [
+                {"name": "s1", "objective": "pairwise", "backbone": "bert",
+                 "dataset": "synthalpaca", "model": "gpt4", "filtered": true,
+                 "weights": "w_s1.bin", "n_params": 10, "train_tau": 0.9}
+              ],
+              "scorer_hlo": {"bert": "scorer_bert.hlo.txt"},
+              "picolm_prefill": "picolm_prefill.hlo.txt",
+              "picolm_decode": "picolm_decode.hlo.txt",
+              "score_batch": 64, "serve_batch": 8, "seq_len": 32,
+              "pico_max_seq": 160, "vocab": 256
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn manifest_decode_and_lookup() {
+        let m = ArtifactManifest::from_json(Path::new("/tmp/a"), &mini_manifest()).unwrap();
+        assert_eq!(m.scorers.len(), 1);
+        let s = m.find_scorer("pairwise", "bert", "synthalpaca", "gpt4", true).unwrap();
+        assert_eq!(s.name, "s1");
+        assert!(s.weights.ends_with("w_s1.bin"));
+        assert!(m.find_scorer("listwise", "bert", "synthalpaca", "gpt4", true).is_err());
+        assert!(m.scorer_hlo_for("bert").is_ok());
+        assert!(m.scorer_hlo_for("t5").is_err());
+        assert!(m.testset_path("synthalpaca", "gpt4").ends_with("testset_synthalpaca_gpt4.json"));
+    }
+}

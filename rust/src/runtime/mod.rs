@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client.  This is the only module that touches the `xla` crate directly.
+//!
+//! Interchange is HLO *text* (not serialized HloModuleProto): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+pub use artifact::{ArtifactManifest, ScorerMeta};
+
+/// Shared PJRT CPU client (one per process; clone is cheap).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Host → device transfer of an f32 tensor.
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host → device transfer of an i32 tensor.
+    pub fn buffer_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// A typed host-side argument for [`Executable::run_hosted`].
+pub enum HostArg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output literals.
+    ///
+    /// Artifacts are lowered with `return_tuple=True`, so PJRT hands back a
+    /// single tuple buffer which we decompose into its elements.
+    ///
+    /// WARNING: the xla crate's `execute()` C++ shim `release()`s the input
+    /// buffers it creates and never frees them — every call leaks its
+    /// arguments.  Fine for one-shot tools; the request path must use
+    /// [`Self::run_hosted`] (found the hard way: ~1.3 MiB of KV cache leaked
+    /// per decode step degraded throughput 3–10× over a serving run; see
+    /// EXPERIMENTS.md §Perf).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<xla::Literal>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Leak-free execute: uploads args as owned `PjRtBuffer`s (freed on
+    /// drop) and runs via `execute_b`, which borrows rather than leaks.
+    pub fn run_hosted(&self, rt: &Runtime, args: &[HostArg<'_>]) -> Result<Vec<xla::Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                HostArg::F32(d, dims) => rt.buffer_f32(d, dims),
+                HostArg::I32(d, dims) => rt.buffer_i32(d, dims),
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let out = self.exe.execute_b(&refs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (no host round trip for args).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute_b(args)?)
+    }
+}
+
+/// Build an f32 literal with a shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal with a shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Read a little-endian f32 weight blob (`artifacts/*.bin`).
+pub fn read_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading weights {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "weight file not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir().join("pars_serve_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_bin_rejects_ragged() {
+        let dir = std::env::temp_dir().join("pars_serve_test_bin2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 7]).unwrap();
+        assert!(read_f32_bin(&path).is_err());
+    }
+}

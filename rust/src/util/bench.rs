@@ -1,0 +1,163 @@
+//! In-repo micro/macro bench harness (criterion is not in the vendor set).
+//!
+//! Usage from a `harness = false` bench target:
+//! ```ignore
+//! let mut h = Harness::new("table2");
+//! h.bench("score_batch64", || scorer.score(&toks));
+//! h.report();
+//! ```
+//! Warmup + fixed-duration sampling, and a `black_box` to defeat DCE.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub per_iter: Duration,
+    pub summary: Summary,
+}
+
+pub struct Harness {
+    pub group: String,
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub results: Vec<BenchResult>,
+}
+
+impl Harness {
+    pub fn new(group: &str) -> Self {
+        Harness {
+            group: group.to_string(),
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(1),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(group: &str, warmup_ms: u64, measure_ms: u64) -> Self {
+        Harness {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            ..Harness::new(group)
+        }
+    }
+
+    /// Time `f` repeatedly; records per-iteration stats.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples = Vec::new();
+        let mut iters = 0u64;
+        let t1 = Instant::now();
+        while t1.elapsed() < self.measure {
+            let s = Instant::now();
+            black_box(f());
+            samples.push(s.elapsed().as_secs_f64() * 1e3); // ms
+            iters += 1;
+        }
+        let total: f64 = samples.iter().sum();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters,
+            per_iter: Duration::from_secs_f64(total / 1e3 / iters.max(1) as f64),
+            summary: Summary::of(&samples),
+        };
+        println!(
+            "{:<40} {:>10} iters   mean {:>9.4} ms   p50 {:>9.4}   p90 {:>9.4}   p99 {:>9.4}",
+            format!("{}/{}", self.group, name),
+            iters,
+            res.summary.mean,
+            res.summary.p50,
+            res.summary.p90,
+            res.summary.p99
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn report(&self) {
+        println!("-- {} : {} benchmarks --", self.group, self.results.len());
+    }
+}
+
+/// Pretty fixed-width table writer for paper-style bench output.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line: Vec<String> =
+            self.headers.iter().enumerate().map(|(i, h)| format!("{:<1$}", h, w[i])).collect();
+        println!("| {} |", line.join(" | "));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for r in &self.rows {
+            let cells: Vec<String> =
+                r.iter().enumerate().map(|(i, c)| format!("{:<1$}", c, w[i])).collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_measures() {
+        let mut h = Harness::with_budget("test", 5, 30);
+        let r = h.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(r.iters > 10);
+        assert!(r.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn table_shape() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

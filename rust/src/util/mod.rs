@@ -1,0 +1,13 @@
+//! In-repo substrates.
+//!
+//! The offline vendor set has no serde / rand / criterion / proptest, so
+//! the pieces a serving system leans on — JSON, seeded RNG, streaming
+//! statistics, a bench harness and a mini property-testing loop — are
+//! implemented here from scratch (DESIGN.md §System inventory).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,159 @@
+//! Mini property-based testing (proptest is not in the vendor set).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it performs greedy shrinking through the generator's `Shrink`
+//! hints and panics with the minimal counterexample found.
+
+use super::rng::Rng;
+
+/// A generated case plus shrink candidates.
+pub trait Arbitrary: Clone + std::fmt::Debug {
+    fn generate(rng: &mut Rng) -> Self;
+    /// Strictly "smaller" variants to try when this case fails.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Arbitrary for u64 {
+    fn generate(rng: &mut Rng) -> Self {
+        match rng.below(4) {
+            0 => rng.below(16) as u64,
+            1 => rng.below(1 << 20) as u64,
+            _ => rng.next_u64(),
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v
+    }
+}
+
+impl Arbitrary for f64 {
+    fn generate(rng: &mut Rng) -> Self {
+        match rng.below(5) {
+            0 => 0.0,
+            1 => rng.f64(),
+            2 => rng.normal() * 1e3,
+            3 => -rng.f64() * 100.0,
+            _ => rng.normal(),
+        }
+    }
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            Vec::new()
+        } else {
+            vec![0.0, self / 2.0, self.trunc()]
+        }
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn generate(rng: &mut Rng) -> Self {
+        let n = rng.below(32);
+        (0..n).map(|_| T::generate(rng)).collect()
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+            out.push(self[..self.len() - 1].to_vec());
+            // shrink one element
+            for (i, x) in self.iter().enumerate().take(4) {
+                for s in x.shrink() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn generate(rng: &mut Rng) -> Self {
+        (A::generate(rng), B::generate(rng))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink + panic on failure.
+pub fn check<T: Arbitrary>(seed: u64, cases: usize, prop: impl Fn(&T) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = T::generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!("property failed (case {case_idx}, seed {seed}); minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+/// Like `check` but with a custom generator closure (no Arbitrary needed).
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        assert!(
+            prop(&input),
+            "property failed (case {case_idx}, seed {seed}): {input:?}"
+        );
+    }
+}
+
+fn shrink_loop<T: Arbitrary>(mut failing: T, prop: &impl Fn(&T) -> bool) -> T {
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check::<Vec<u64>>(1, 200, |v| v.iter().copied().sum::<u64>() as u128 <= v.iter().map(|&x| x as u128).sum::<u128>());
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // property "all vecs shorter than 3" fails; shrinker should find len 3
+        let caught = std::panic::catch_unwind(|| {
+            check::<Vec<u64>>(2, 500, |v| v.len() < 3);
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn check_with_custom_gen() {
+        check_with(3, 100, |r| r.below(10), |&x| x < 10);
+    }
+}

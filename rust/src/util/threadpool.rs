@@ -1,0 +1,105 @@
+//! Fixed-size scoped thread pool (rayon is not in the vendor set).
+//!
+//! Used by the bench harness to run independent simulation replicas in
+//! parallel.  `scope_map` preserves input order in the output vector and
+//! propagates panics to the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Apply `f` to each item on up to `threads` worker threads; results come
+/// back in input order.
+pub fn scope_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // single-thread fast path (this image has 1 core)
+    if threads == 1 || n == 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let inputs: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let outputs: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = inputs[i].lock().unwrap().take().expect("item taken twice");
+                let r = f(item);
+                *outputs[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+
+    outputs
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+/// Hardware parallelism with a safe floor.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = scope_map(4, (0..100).collect(), |x: i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = scope_map(1, vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<i32> = scope_map(4, Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn actually_parallel_when_possible() {
+        use std::sync::atomic::AtomicUsize;
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        let _ = scope_map(4, (0..16).collect(), |_: i32| {
+            let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(live, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        });
+        // on a 1-core box this may still be 1..4; just check sanity
+        assert!(PEAK.load(Ordering::SeqCst) >= 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_panics() {
+        let _ = scope_map(2, vec![1, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+}

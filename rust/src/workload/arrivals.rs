@@ -1,0 +1,103 @@
+//! Arrival processes: Poisson open-loop traffic, the paper's 2000-request
+//! burst, and explicit replayable traces.
+
+use crate::util::rng::Rng;
+
+/// One request arrival: which prompt, and when.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// Index into the corpus/test set.
+    pub prompt_idx: usize,
+    /// Arrival timestamp (ms, engine clock).
+    pub at_ms: f64,
+}
+
+/// Generators for the paper's workload shapes.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson arrivals at `rate_per_s`, for `n` requests.
+    Poisson { rate_per_s: f64, n: usize },
+    /// All `n` requests arrive simultaneously at t=0 (paper §IV-D burst).
+    Burst { n: usize },
+    /// Deterministic uniform spacing (closed-form sanity baseline).
+    Uniform { gap_ms: f64, n: usize },
+}
+
+impl ArrivalProcess {
+    /// Materialise the arrival sequence, assigning prompts round-robin with
+    /// a shuffled order (so prompt difficulty is independent of time).
+    pub fn generate(&self, n_prompts: usize, rng: &mut Rng) -> Vec<Arrival> {
+        assert!(n_prompts > 0);
+        let n = match self {
+            ArrivalProcess::Poisson { n, .. }
+            | ArrivalProcess::Burst { n }
+            | ArrivalProcess::Uniform { n, .. } => *n,
+        };
+        // shuffled prompt assignment, cycling if n > n_prompts
+        let mut order: Vec<usize> = (0..n_prompts).collect();
+        rng.shuffle(&mut order);
+        let prompt_at = |i: usize| order[i % n_prompts];
+
+        match self {
+            ArrivalProcess::Poisson { rate_per_s, .. } => {
+                assert!(*rate_per_s > 0.0);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|i| {
+                        t += rng.exp(*rate_per_s) * 1e3;
+                        Arrival { prompt_idx: prompt_at(i), at_ms: t }
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Burst { .. } => (0..n)
+                .map(|i| Arrival { prompt_idx: prompt_at(i), at_ms: 0.0 })
+                .collect(),
+            ArrivalProcess::Uniform { gap_ms, .. } => (0..n)
+                .map(|i| Arrival { prompt_idx: prompt_at(i), at_ms: i as f64 * gap_ms })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let p = ArrivalProcess::Poisson { rate_per_s: 20.0, n: 20_000 };
+        let mut rng = Rng::new(1);
+        let a = p.generate(100, &mut rng);
+        assert_eq!(a.len(), 20_000);
+        let span_s = a.last().unwrap().at_ms / 1e3;
+        let rate = a.len() as f64 / span_s;
+        assert!((rate - 20.0).abs() < 0.5, "measured rate {rate}");
+        // arrivals are sorted by construction
+        assert!(a.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+    }
+
+    #[test]
+    fn burst_all_at_zero() {
+        let mut rng = Rng::new(2);
+        let a = ArrivalProcess::Burst { n: 2000 }.generate(500, &mut rng);
+        assert_eq!(a.len(), 2000);
+        assert!(a.iter().all(|x| x.at_ms == 0.0));
+        // each prompt used 4x (2000 / 500)
+        let mut counts = vec![0; 500];
+        for x in &a {
+            counts[x.prompt_idx] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn prompt_assignment_is_shuffled_but_deterministic() {
+        let p = ArrivalProcess::Uniform { gap_ms: 10.0, n: 50 };
+        let a1 = p.generate(100, &mut Rng::new(7));
+        let a2 = p.generate(100, &mut Rng::new(7));
+        assert_eq!(a1, a2);
+        let identity: Vec<usize> = (0..50).collect();
+        let got: Vec<usize> = a1.iter().map(|x| x.prompt_idx).collect();
+        assert_ne!(got, identity);
+    }
+}

@@ -1,0 +1,152 @@
+//! Test-set / corpus loading from `artifacts/testset_{dataset}_{model}.json`.
+//!
+//! The Python build exports, per (dataset, target-model) combination:
+//!   * prompt token matrices (the scorer inputs),
+//!   * `label_len`   — lengths from the run used to train predictors,
+//!   * `oracle_len`  — an independent prior run (what Oracle SJF consults),
+//!   * `live_len`    — another independent run (the "serving day" truth),
+//!   * `mu_eff` + `sigma_run` — per-prompt oracle parameters so Rust can
+//!     draw unlimited fresh runs (Fig. 2, replicated sweeps).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One (dataset, model) evaluation corpus.
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub dataset: String,
+    pub model: String,
+    pub seq_len: usize,
+    /// Prompt tokens, row-major `[n_prompts][seq_len]` (PAD = 0).
+    pub tokens: Vec<i32>,
+    pub n_prompts: usize,
+    /// Per-prompt real token count (non-PAD prefix length).
+    pub prompt_lens: Vec<u32>,
+    /// Length labels from the predictor-training run.
+    pub label_len: Vec<u32>,
+    /// Independent prior-run lengths (Oracle SJF's knowledge).
+    pub oracle_len: Vec<u32>,
+    /// Independent live-run lengths (serving ground truth).
+    pub live_len: Vec<u32>,
+    /// Deterministic oracle component (mu * hidden), per prompt.
+    pub mu_eff: Vec<f64>,
+    /// Run-to-run lognormal sigma of the target model.
+    pub sigma_run: f64,
+    /// Output length cap of the target model.
+    pub max_len: u32,
+}
+
+/// Alias while the corpus and test set are the same object.
+pub type Corpus = TestSet;
+
+impl TestSet {
+    pub fn load(artifacts_dir: &Path, dataset: &str, model: &str) -> Result<TestSet> {
+        let path = artifacts_dir.join(format!("testset_{dataset}_{model}.json"));
+        let doc = json::parse_file(&path)?;
+        Self::from_json(&doc).with_context(|| format!("decoding {}", path.display()))
+    }
+
+    pub fn from_json(doc: &Json) -> Result<TestSet> {
+        let dataset = doc.get("dataset")?.as_str()?.to_string();
+        let model = doc.get("model")?.as_str()?.to_string();
+        let seq_len = doc.get("seq_len")?.as_usize()?;
+        let rows = doc.get("prompts")?.as_arr()?;
+        let n_prompts = rows.len();
+        let mut tokens = Vec::with_capacity(n_prompts * seq_len);
+        let mut prompt_lens = Vec::with_capacity(n_prompts);
+        for row in rows {
+            let r = row.as_i64_vec()?;
+            if r.len() != seq_len {
+                bail!("prompt row has {} tokens, expected {seq_len}", r.len());
+            }
+            prompt_lens.push(r.iter().take_while(|&&t| t != 0).count() as u32);
+            tokens.extend(r.iter().map(|&t| t as i32));
+        }
+        let label_len = doc.get("label_len")?.as_u32_vec()?;
+        let oracle_len = doc.get("oracle_len")?.as_u32_vec()?;
+        let live_len = doc.get("live_len")?.as_u32_vec()?;
+        let mu_eff = doc.get("mu_eff")?.as_f64_vec()?;
+        let sigma_run = doc.get("sigma_run")?.as_f64()?;
+        let max_len = doc.get("max_len")?.as_i64()? as u32;
+        for (name, v) in [
+            ("label_len", label_len.len()),
+            ("oracle_len", oracle_len.len()),
+            ("live_len", live_len.len()),
+            ("mu_eff", mu_eff.len()),
+        ] {
+            if v != n_prompts {
+                bail!("{name} has {v} entries, expected {n_prompts}");
+            }
+        }
+        Ok(TestSet {
+            dataset,
+            model,
+            seq_len,
+            tokens,
+            n_prompts,
+            prompt_lens,
+            label_len,
+            oracle_len,
+            live_len,
+            mu_eff,
+            sigma_run,
+            max_len,
+        })
+    }
+
+    /// Token slice of one prompt.
+    pub fn prompt(&self, i: usize) -> &[i32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// Mean live output length (capacity planning for arrival sweeps).
+    pub fn mean_live_len(&self) -> f64 {
+        self.live_len.iter().map(|&x| x as f64).sum::<f64>() / self.n_prompts.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_json() -> String {
+        r#"{
+            "dataset": "synthalpaca", "model": "llama", "seq_len": 4,
+            "prompts": [[1, 10, 2, 0], [1, 11, 32, 2]],
+            "label_len": [5, 9],
+            "oracle_len": [6, 8],
+            "live_len": [5, 10],
+            "mu_eff": [5.5, 9.1],
+            "sigma_run": 0.06,
+            "max_len": 512
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let doc = json::parse(&mini_json()).unwrap();
+        let ts = TestSet::from_json(&doc).unwrap();
+        assert_eq!(ts.n_prompts, 2);
+        assert_eq!(ts.prompt(1), &[1, 11, 32, 2]);
+        assert_eq!(ts.prompt_lens, vec![3, 4]);
+        assert!((ts.mean_live_len() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        let bad = mini_json().replace("[1, 10, 2, 0]", "[1, 10]");
+        let doc = json::parse(&bad).unwrap();
+        assert!(TestSet::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let bad = mini_json().replace("\"label_len\": [5, 9]", "\"label_len\": [5]");
+        let doc = json::parse(&bad).unwrap();
+        assert!(TestSet::from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Workloads: synthetic corpora (exported by `make artifacts`), the
+//! response-length oracle (mirrors `python/compile/data.py`), and arrival
+//! processes (Poisson sweeps, bursts, fixed traces).
+
+pub mod arrivals;
+pub mod corpus;
+pub mod oracle;
+pub mod trace;
+
+pub use arrivals::{Arrival, ArrivalProcess};
+pub use corpus::{Corpus, TestSet};
+pub use oracle::LengthOracle;
+pub use trace::{Trace, TraceEntry};

@@ -1,0 +1,123 @@
+//! Response-length oracle: draws fresh generation runs for a corpus.
+//!
+//! Mirrors `python/compile/data.py::sample_lengths` — the per-prompt
+//! deterministic component (`mu_eff = mu_visible * hidden`) is exported in
+//! the test-set JSON; the per-run lognormal noise is drawn here, so Rust
+//! benches can replicate Fig. 2 and draw fresh "serving day" lengths
+//! without calling Python.
+
+use crate::util::rng::Rng;
+use crate::workload::corpus::TestSet;
+
+/// Sampler over a test set's oracle parameters.
+#[derive(Clone, Debug)]
+pub struct LengthOracle {
+    mu_eff: Vec<f64>,
+    sigma_run: f64,
+    max_len: u32,
+}
+
+impl LengthOracle {
+    pub fn from_testset(ts: &TestSet) -> LengthOracle {
+        LengthOracle {
+            mu_eff: ts.mu_eff.clone(),
+            sigma_run: ts.sigma_run,
+            max_len: ts.max_len,
+        }
+    }
+
+    pub fn n_prompts(&self) -> usize {
+        self.mu_eff.len()
+    }
+
+    /// One independent generation run: sampled output length per prompt.
+    pub fn sample_run(&self, rng: &mut Rng) -> Vec<u32> {
+        self.mu_eff
+            .iter()
+            .map(|&mu| {
+                let l = mu * rng.lognormal(self.sigma_run);
+                (l.round().max(1.0) as u32).min(self.max_len)
+            })
+            .collect()
+    }
+
+    /// Sampled length for a single prompt.
+    pub fn sample_one(&self, i: usize, rng: &mut Rng) -> u32 {
+        let l = self.mu_eff[i] * rng.lognormal(self.sigma_run);
+        (l.round().max(1.0) as u32).min(self.max_len)
+    }
+
+    /// Fig. 2 statistic: relative variance (max/min - 1)·100% over `n_runs`
+    /// independent runs, per prompt.
+    pub fn relative_variance(&self, n_runs: usize, rng: &mut Rng) -> Vec<f64> {
+        let runs: Vec<Vec<u32>> = (0..n_runs).map(|_| self.sample_run(rng)).collect();
+        (0..self.n_prompts())
+            .map(|i| {
+                let mut mn = u32::MAX;
+                let mut mx = 0u32;
+                for run in &runs {
+                    mn = mn.min(run[i]);
+                    mx = mx.max(run[i]);
+                }
+                (mx as f64 / mn.max(1) as f64 - 1.0) * 100.0
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oracle() -> LengthOracle {
+        LengthOracle {
+            mu_eff: vec![10.0, 100.0, 1000.0],
+            sigma_run: 0.06,
+            max_len: 512,
+        }
+    }
+
+    #[test]
+    fn lengths_bounded_and_positive() {
+        let o = oracle();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let run = o.sample_run(&mut rng);
+            assert_eq!(run.len(), 3);
+            assert!(run.iter().all(|&l| l >= 1 && l <= 512));
+        }
+    }
+
+    #[test]
+    fn mean_tracks_mu() {
+        let o = oracle();
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mean1: f64 =
+            (0..n).map(|_| o.sample_one(1, &mut rng) as f64).sum::<f64>() / n as f64;
+        // lognormal mean factor exp(sigma^2/2) ≈ 1.0018 — within 2%
+        assert!((mean1 - 100.0).abs() < 2.0, "mean {mean1}");
+    }
+
+    #[test]
+    fn cap_applies() {
+        let o = oracle();
+        let mut rng = Rng::new(3);
+        let l = o.sample_one(2, &mut rng); // mu 1000 > cap 512
+        assert_eq!(l, 512);
+    }
+
+    #[test]
+    fn relative_variance_in_expected_band() {
+        let o = LengthOracle {
+            mu_eff: vec![50.0; 200],
+            sigma_run: 0.06,
+            max_len: 100_000,
+        };
+        let mut rng = Rng::new(4);
+        let rv = o.relative_variance(10, &mut rng);
+        let mean = rv.iter().sum::<f64>() / rv.len() as f64;
+        // exp(3.08 * 0.06) - 1 ≈ 20% — Fig. 2's band for llama-sim
+        assert!(mean > 8.0 && mean < 35.0, "mean relvar {mean}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Request-trace record / replay.
+//!
+//! A trace pins down an *exact* serving run — arrival times, prompt
+//! indices, forced output lengths — so experiments are replayable across
+//! policies, machines and engine backends (the SimEngine-vs-PjrtEngine
+//! calibration check replays the same trace on both).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Request;
+use crate::util::json::{self, Json};
+use crate::workload::corpus::TestSet;
+
+/// One trace entry (everything needed to reconstruct a Request except the
+/// tokens themselves, which come from the corpus by index).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEntry {
+    pub prompt_idx: usize,
+    pub arrival_ms: f64,
+    pub target_len: u32,
+    pub oracle_len: u32,
+}
+
+/// A replayable workload trace bound to a (dataset, model) corpus.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub dataset: String,
+    pub model: String,
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Capture a trace from materialised requests + their prompt indices.
+    pub fn record(ts: &TestSet, reqs: &[Request], prompt_idx: &[usize]) -> Trace {
+        assert_eq!(reqs.len(), prompt_idx.len());
+        Trace {
+            dataset: ts.dataset.clone(),
+            model: ts.model.clone(),
+            entries: reqs
+                .iter()
+                .zip(prompt_idx)
+                .map(|(r, &p)| TraceEntry {
+                    prompt_idx: p,
+                    arrival_ms: r.arrival_ms,
+                    target_len: r.target_len,
+                    oracle_len: r.oracle_len,
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild requests against the corpus (scores filled by the caller).
+    pub fn replay(&self, ts: &TestSet, scores: Option<&[f32]>) -> Result<Vec<Request>> {
+        if ts.dataset != self.dataset || ts.model != self.model {
+            bail!(
+                "trace is for {}/{}, corpus is {}/{}",
+                self.dataset,
+                self.model,
+                ts.dataset,
+                ts.model
+            );
+        }
+        self.entries
+            .iter()
+            .enumerate()
+            .map(|(id, e)| {
+                if e.prompt_idx >= ts.n_prompts {
+                    bail!("trace prompt_idx {} out of range", e.prompt_idx);
+                }
+                Ok(Request {
+                    id: id as u64,
+                    tokens: ts.prompt(e.prompt_idx).to_vec(),
+                    prompt_len: ts.prompt_lens[e.prompt_idx],
+                    arrival_ms: e.arrival_ms,
+                    target_len: e.target_len,
+                    oracle_len: e.oracle_len,
+                    score: scores.map(|s| s[e.prompt_idx]).unwrap_or(0.0),
+                })
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("model", Json::Str(self.model.clone())),
+            (
+                "entries",
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::Arr(vec![
+                                Json::Num(e.prompt_idx as f64),
+                                Json::Num(e.arrival_ms),
+                                Json::Num(e.target_len as f64),
+                                Json::Num(e.oracle_len as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Trace> {
+        let entries = doc
+            .get("entries")?
+            .as_arr()?
+            .iter()
+            .map(|row| {
+                let v = row.as_f64_vec()?;
+                anyhow::ensure!(v.len() == 4, "trace row must have 4 fields");
+                Ok(TraceEntry {
+                    prompt_idx: v[0] as usize,
+                    arrival_ms: v[1],
+                    target_len: v[2] as u32,
+                    oracle_len: v[3] as u32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trace {
+            dataset: doc.get("dataset")?.as_str()?.to_string(),
+            model: doc.get("model")?.as_str()?.to_string(),
+            entries,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_testset() -> TestSet {
+        let doc = json::parse(
+            r#"{
+                "dataset": "synthalpaca", "model": "llama", "seq_len": 4,
+                "prompts": [[1, 10, 2, 0], [1, 11, 32, 2], [1, 12, 33, 2]],
+                "label_len": [5, 9, 7], "oracle_len": [6, 8, 7],
+                "live_len": [5, 10, 6], "mu_eff": [5.5, 9.1, 6.6],
+                "sigma_run": 0.06, "max_len": 512
+            }"#,
+        )
+        .unwrap();
+        TestSet::from_json(&doc).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let t = Trace {
+            dataset: "synthalpaca".into(),
+            model: "llama".into(),
+            entries: vec![
+                TraceEntry { prompt_idx: 2, arrival_ms: 1.5, target_len: 7, oracle_len: 6 },
+                TraceEntry { prompt_idx: 0, arrival_ms: 3.0, target_len: 5, oracle_len: 6 },
+            ],
+        };
+        let back = Trace::from_json(&json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn replay_rebuilds_requests() {
+        let ts = mini_testset();
+        let t = Trace {
+            dataset: ts.dataset.clone(),
+            model: ts.model.clone(),
+            entries: vec![TraceEntry {
+                prompt_idx: 1,
+                arrival_ms: 9.0,
+                target_len: 10,
+                oracle_len: 8,
+            }],
+        };
+        let reqs = t.replay(&ts, Some(&[1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].tokens, vec![1, 11, 32, 2]);
+        assert_eq!(reqs[0].score, 2.0);
+        assert_eq!(reqs[0].arrival_ms, 9.0);
+    }
+
+    #[test]
+    fn replay_rejects_wrong_corpus() {
+        let ts = mini_testset();
+        let t = Trace { dataset: "synthlmsys".into(), model: "llama".into(), entries: vec![] };
+        assert!(t.replay(&ts, None).is_err());
+    }
+
+    #[test]
+    fn replay_rejects_out_of_range() {
+        let ts = mini_testset();
+        let t = Trace {
+            dataset: ts.dataset.clone(),
+            model: ts.model.clone(),
+            entries: vec![TraceEntry {
+                prompt_idx: 99,
+                arrival_ms: 0.0,
+                target_len: 1,
+                oracle_len: 1,
+            }],
+        };
+        assert!(t.replay(&ts, None).is_err());
+    }
+
+    #[test]
+    fn record_then_replay_identity() {
+        let ts = mini_testset();
+        let t = Trace {
+            dataset: ts.dataset.clone(),
+            model: ts.model.clone(),
+            entries: vec![TraceEntry {
+                prompt_idx: 0,
+                arrival_ms: 2.0,
+                target_len: 4,
+                oracle_len: 6,
+            }],
+        };
+        let reqs = t.replay(&ts, None).unwrap();
+        let t2 = Trace::record(&ts, &reqs, &[0]);
+        assert_eq!(t2, t);
+    }
+}

@@ -1,0 +1,222 @@
+//! Integration tests over the real artifact bridge: HLO text → PJRT →
+//! scoring / serving.  Skipped unless artifacts exist (set PARS_ARTIFACTS
+//! or run `make artifacts`).
+
+use std::path::PathBuf;
+
+use pars_serve::config::{PolicyKind, SchedulerConfig};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::{Coordinator, PjrtScorer, Request, Scorer};
+use pars_serve::engine::{Engine, PjrtEngine};
+use pars_serve::eval::kendall_tau_b;
+use pars_serve::harness;
+use pars_serve::runtime::{ArtifactManifest, Runtime};
+use pars_serve::util::rng::Rng;
+use pars_serve::workload::TestSet;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(
+        std::env::var("PARS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn first_combo(manifest: &ArtifactManifest) -> (String, String) {
+    let s = &manifest.scorers[0];
+    (s.dataset.clone(), s.model.clone())
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let dir = require_artifacts!();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    assert!(!m.scorers.is_empty());
+    assert!(m.scorer_hlo.contains_key("bert"));
+    for s in &m.scorers {
+        assert!(s.weights.exists(), "missing weights {:?}", s.weights);
+        assert!((-1.0..=1.0).contains(&s.train_tau));
+    }
+}
+
+#[test]
+fn scorer_bridge_reproduces_training_tau() {
+    // The tau measured through the Rust+PJRT+Pallas path must be in the
+    // same ballpark as the tau recorded at (python) training time — this
+    // is the cross-language parity check for the whole artifact chain.
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let (ds, model) = first_combo(&m);
+    let meta = m.find_scorer("pairwise", "bert", &ds, &model, true).unwrap();
+    let ts = TestSet::load(&dir, &ds, &model).unwrap();
+    let mut scorer =
+        PjrtScorer::load(&rt, &m, "pairwise", "bert", &ds, &model, true).unwrap();
+    let scores = scorer.score_batch(&ts.tokens, ts.n_prompts, ts.seq_len).unwrap();
+    assert_eq!(scores.len(), ts.n_prompts);
+    assert!(scores.iter().all(|s| s.is_finite()));
+    let x: Vec<f64> = scores.iter().map(|&s| s as f64).collect();
+    let y: Vec<f64> = ts.live_len.iter().map(|&l| l as f64).collect();
+    let tau = kendall_tau_b(&x, &y);
+    // train_tau was measured on a different (python-side) eval split; the
+    // live-run split differs too — allow slack but catch sign/garbage bugs
+    assert!(
+        (tau - meta.train_tau).abs() < 0.2,
+        "bridge tau {tau:.3} vs train tau {:.3}",
+        meta.train_tau
+    );
+}
+
+#[test]
+fn scorer_batch_padding_is_neutral() {
+    // scoring n < batch prompts must equal the first n of a full batch
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let (ds, model) = first_combo(&m);
+    let ts = TestSet::load(&dir, &ds, &model).unwrap();
+    let mut scorer =
+        PjrtScorer::load(&rt, &m, "pairwise", "bert", &ds, &model, true).unwrap();
+    let n = 5;
+    let n_full = ts.n_prompts.min(64);
+    let full = scorer
+        .score_batch(&ts.tokens[..n_full * ts.seq_len], n_full, ts.seq_len)
+        .unwrap();
+    let part = scorer
+        .score_batch(&ts.tokens[..n * ts.seq_len], n, ts.seq_len)
+        .unwrap();
+    for i in 0..n {
+        assert!((full[i] - part[i]).abs() < 1e-4, "row {i}: {} vs {}", full[i], part[i]);
+    }
+}
+
+#[test]
+fn pjrt_engine_generates_forced_lengths() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let mut engine = PjrtEngine::load(&rt, &m, 1 << 20, 7).unwrap();
+    let prompt = [1i32, 12, 22, 40, 100, 101, 2];
+    let s1 = engine.prefill(&prompt, 5).unwrap();
+    let s2 = engine.prefill(&prompt, 9).unwrap();
+    let mut done = std::collections::HashMap::new();
+    for _ in 0..12 {
+        if engine.active_slots() == 0 {
+            break;
+        }
+        for ev in engine.decode_step().unwrap() {
+            if ev.finished {
+                done.insert(ev.slot, ev.generated);
+                engine.release(ev.slot);
+            }
+        }
+    }
+    assert_eq!(done.get(&s1), Some(&5));
+    assert_eq!(done.get(&s2), Some(&9));
+    assert_eq!(engine.active_slots(), 0);
+}
+
+#[test]
+fn pjrt_engine_slot_reuse_after_release() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let mut engine = PjrtEngine::load(&rt, &m, 1 << 20, 9).unwrap();
+    let prompt = [1i32, 13, 23, 41, 2];
+    // fill all slots, finish them, then admit again
+    let b = engine.caps().max_slots;
+    for _ in 0..b {
+        engine.prefill(&prompt, 2).unwrap();
+    }
+    assert_eq!(engine.free_slots(), 0);
+    for _ in 0..2 {
+        for ev in engine.decode_step().unwrap() {
+            if ev.finished {
+                engine.release(ev.slot);
+            }
+        }
+    }
+    assert_eq!(engine.free_slots(), b);
+    engine.prefill(&prompt, 1).unwrap();
+    assert_eq!(engine.active_slots(), 1);
+}
+
+#[test]
+fn end_to_end_pjrt_serving_with_pars_policy() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let (ds, model) = first_combo(&m);
+    let ts = TestSet::load(&dir, &ds, &model).unwrap();
+    let mut scorer =
+        PjrtScorer::load(&rt, &m, "pairwise", "bert", &ds, &model, true).unwrap();
+    let scores = scorer.score_batch(&ts.tokens, ts.n_prompts, ts.seq_len).unwrap();
+
+    let sched = SchedulerConfig {
+        max_batch: m.serve_batch,
+        max_kv_tokens: m.serve_batch * m.pico_max_seq,
+        ..Default::default()
+    };
+    let cap = (m.pico_max_seq - m.seq_len) as u32;
+    let mut rng = Rng::new(1);
+    let reqs: Vec<Request> = (0..12)
+        .map(|i| {
+            let p = rng.below(ts.n_prompts);
+            Request {
+                id: i,
+                tokens: ts.prompt(p).to_vec(),
+                prompt_len: ts.prompt_lens[p],
+                arrival_ms: i as f64 * 3.0,
+                target_len: ts.live_len[p].clamp(1, cap.min(24)),
+                oracle_len: ts.oracle_len[p].min(cap),
+                score: scores[p],
+            }
+        })
+        .collect();
+    let total_target: u64 = reqs.iter().map(|r| r.target_len as u64).sum();
+
+    let mut engine = PjrtEngine::load(&rt, &m, sched.max_kv_tokens, 3).unwrap();
+    let mut coord = Coordinator::new(&mut engine, make_policy(PolicyKind::Pars), sched);
+    let out = coord.serve(reqs).unwrap();
+    assert_eq!(out.report.n_requests, 12);
+    assert_eq!(out.report.total_tokens, total_target);
+    assert!(out.report.avg_per_token_ms > 0.0);
+}
+
+#[test]
+fn sim_and_harness_policy_ordering_on_real_testset() {
+    // On a burst, SJF-family policies must beat FCFS on per-token latency.
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let m = ArtifactManifest::load(&dir).unwrap();
+    let (ds, model) = first_combo(&m);
+    let ts = TestSet::load(&dir, &ds, &model).unwrap();
+    let sched = SchedulerConfig::default();
+    let cost = harness::load_cost_model(&dir);
+    let suite = [PolicyKind::Fcfs, PolicyKind::OracleSjf, PolicyKind::Pars];
+    let book = harness::ScoreBook::build(&rt, &m, &ts, &suite).unwrap();
+    let arrivals = harness::burst(&ts, 300, 1);
+    let run = |k| {
+        harness::run_sim(&ts, &arrivals, k, &book, &cost, &sched)
+            .unwrap()
+            .report
+            .avg_per_token_ms
+    };
+    let fcfs = run(PolicyKind::Fcfs);
+    let oracle = run(PolicyKind::OracleSjf);
+    let pars = run(PolicyKind::Pars);
+    assert!(oracle < fcfs, "oracle {oracle} !< fcfs {fcfs}");
+    assert!(pars < fcfs, "pars {pars} !< fcfs {fcfs}");
+    assert!(oracle <= pars * 1.05, "oracle {oracle} should lower-bound pars {pars}");
+}
