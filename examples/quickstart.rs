@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let scores = scorer.score_batch(&flat, prompts.len(), seq)?;
 
     let mut order: Vec<usize> = (0..prompts.len()).collect();
-    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
 
     println!("predicted-shortest-first schedule (PARS ≈ SJF):");
     for (rank, &i) in order.iter().enumerate() {

@@ -1,0 +1,60 @@
+//! Replica-scaling bench: the sharded coordinator under burst arrivals,
+//! sweeping N ∈ {1, 2, 4, 8} × dispatch policy.
+//!
+//! Expected shape: per-replica KV budgets are independent, so fleet
+//! makespan falls ~1/N; load-aware dispatch (least-loaded / ranked)
+//! matches round-robin on a uniform burst but wins on tail latency when
+//! long jobs skew the load.
+//!
+//! Runs on a fresh checkout — the workload is the synthetic corpus, no
+//! artifacts needed.  `PARS_BENCH_N` overrides the burst size (CI smoke
+//! uses a tiny value to catch bit-rot without burning minutes).
+
+use pars_serve::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig};
+use pars_serve::harness;
+use pars_serve::util::bench::Table;
+use pars_serve::workload::TestSet;
+
+fn main() {
+    let n: usize = std::env::var("PARS_BENCH_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1200);
+    let ts = TestSet::synthetic("synthlmsys", "r1", 512, 21);
+    let book = harness::ScoreBook::synthetic(&ts, &[PolicyKind::Pars], 21);
+    let cost = CostModel::default();
+    let arrivals = harness::burst(&ts, n, 13);
+    println!(
+        "fig_sharded: burst {n}, synthetic synthlmsys/r1 (mean output {:.0} tokens)",
+        ts.mean_live_len()
+    );
+
+    let mut t = Table::new(
+        "sharded serving — PARS policy, replica × dispatch sweep",
+        &["replicas", "dispatch", "avg ms/tok", "p90 ms/tok", "makespan s", "load max/min"],
+    );
+    for replicas in [1usize, 2, 4, 8] {
+        for dispatch in DispatchKind::all() {
+            if replicas == 1 && dispatch != DispatchKind::RoundRobin {
+                continue; // dispatch is moot with one replica
+            }
+            let sched = SchedulerConfig { replicas, dispatch, ..Default::default() };
+            let out =
+                harness::run_sharded(&ts, &arrivals, PolicyKind::Pars, &book, &cost, &sched)
+                    .expect("serve");
+            let loads: Vec<usize> = out.per_replica.iter().map(|r| r.dispatched).collect();
+            let mx = loads.iter().max().copied().unwrap_or(0);
+            let mn = loads.iter().min().copied().unwrap_or(0);
+            t.row(&[
+                replicas.to_string(),
+                dispatch.name().to_string(),
+                format!("{:.1}", out.merged.report.avg_per_token_ms),
+                format!("{:.1}", out.merged.report.p90_per_token_ms),
+                format!("{:.0}", out.merged.makespan_ms / 1e3),
+                format!("{mx}/{mn}"),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(expected: makespan ~1/N; policy-aware dispatch evens load where RR cannot)");
+}

@@ -1,11 +1,11 @@
-//! Subcommand implementations for the `pars-serve` binary.
+//! Subcommand implementations for the `pallas` / `pars-serve` binary.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
-use crate::config::{Config, PolicyKind};
+use crate::config::{Config, CostModel, DispatchKind, PolicyKind};
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{Coordinator, PjrtScorer, Scorer};
 use crate::engine::{Engine, PjrtEngine};
@@ -15,7 +15,7 @@ use crate::runtime::{ArtifactManifest, Runtime};
 use crate::util::bench::Table;
 use crate::util::rng::Rng;
 use crate::util::stats::linear_fit;
-use crate::workload::TestSet;
+use crate::workload::{Arrival, TestSet};
 
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
@@ -29,15 +29,15 @@ pub fn dispatch(args: &Args) -> Result<()> {
             print_help();
             Ok(())
         }
-        other => bail!("unknown command {other:?} (try `pars-serve help`)"),
+        other => bail!("unknown command {other:?} (try `pallas help`)"),
     }
 }
 
 fn print_help() {
     println!(
-        r#"pars-serve — PARS: low-latency LLM serving via pairwise learning-to-rank
+        r#"pallas — PARS: low-latency LLM serving via pairwise learning-to-rank
 
-USAGE: pars-serve <COMMAND> [--flags]
+USAGE: pallas <COMMAND> [--flags]
 
 COMMANDS:
   serve         run a workload through the serving stack
@@ -45,8 +45,12 @@ COMMANDS:
                 --policy fcfs|pointwise|listwise|oracle|pars|crossmodel
                 --engine sim|pjrt   --rate <req/s> | --burst <n>
                 --n <requests>      --max-batch <n>   --seed <u64>
+                --replicas <k>      --dispatch round-robin|least-loaded|ranked
+                (sim engine falls back to a synthetic corpus when no
+                 artifacts are present, so it runs on a fresh checkout)
   sweep         arrival-rate x policy sweep, CSV to stdout or --csv <file>
-                --dataset ... --model ... --n <requests> --replicas <k>
+                --dataset ... --model ... --n <requests> --reps <k>
+                --replicas <k> --dispatch ...
   predict       score a test set with a predictor, report Kendall tau
                 --dataset ... --model ... --objective pairwise|pointwise|listwise
                 --backbone bert|opt|t5   --nofilter
@@ -75,8 +79,64 @@ fn load_config(args: &Args) -> Result<Config> {
         cfg.policy = PolicyKind::parse(p)?;
     }
     cfg.scheduler.max_batch = args.usize_or("max-batch", cfg.scheduler.max_batch)?;
+    cfg.scheduler.replicas = args.usize_or("replicas", cfg.scheduler.replicas)?;
+    if let Some(d) = args.str_opt("dispatch") {
+        cfg.scheduler.dispatch = DispatchKind::parse(d)?;
+    }
     cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.validate()?;
     Ok(cfg)
+}
+
+/// Load (testset, scorebook) from artifacts when available; fall back to
+/// the synthetic corpus and/or simulated predictor scores so the
+/// sim-engine paths run on a fresh checkout (no artifacts, no PJRT).
+fn load_ts_book(
+    cfg: &Config,
+    dataset: &str,
+    model: &str,
+    kinds: &[PolicyKind],
+) -> Result<(TestSet, harness::ScoreBook)> {
+    match ArtifactManifest::load(&cfg.artifacts_dir) {
+        Ok(m) => {
+            let ts = TestSet::load(&cfg.artifacts_dir, dataset, model)?;
+            match Runtime::cpu() {
+                Ok(rt) => {
+                    let book = harness::ScoreBook::build(&rt, &m, &ts, kinds).context("scoring")?;
+                    Ok((ts, book))
+                }
+                Err(_) => {
+                    println!("note: PJRT runtime unavailable — simulated predictor scores");
+                    let book = harness::ScoreBook::synthetic(&ts, kinds, cfg.seed);
+                    Ok((ts, book))
+                }
+            }
+        }
+        Err(_) => {
+            println!(
+                "note: no artifacts at {} — synthetic corpus + simulated predictors",
+                cfg.artifacts_dir.display()
+            );
+            let ts = TestSet::synthetic(dataset, model, 512, cfg.seed);
+            let book = harness::ScoreBook::synthetic(&ts, kinds, cfg.seed);
+            Ok((ts, book))
+        }
+    }
+}
+
+fn make_arrivals(
+    args: &Args,
+    cfg: &Config,
+    ts: &TestSet,
+    cost: &CostModel,
+    n: usize,
+) -> Result<Vec<Arrival>> {
+    Ok(if args.has("burst") {
+        harness::burst(ts, args.usize_or("burst", 2000)?, cfg.seed)
+    } else {
+        let default_rate = harness::sweep_rates(ts, cost, &cfg.scheduler)[2];
+        harness::poisson(ts, args.f64_or("rate", default_rate)?, n, cfg.seed)
+    })
 }
 
 fn serve(args: &Args) -> Result<()> {
@@ -85,44 +145,55 @@ fn serve(args: &Args) -> Result<()> {
     let model = args.str_or("model", "llama");
     let engine_kind = args.str_or("engine", "sim");
     let n = args.usize_or("n", 500)?;
-
-    let rt = Runtime::cpu()?;
-    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
-    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
     let cost = harness::load_cost_model(&cfg.artifacts_dir);
-
-    let arrivals = if args.has("burst") {
-        harness::burst(&ts, args.usize_or("burst", 2000)?, cfg.seed)
-    } else {
-        let default_rate = harness::sweep_rates(&ts, &cost, &cfg.scheduler)[2];
-        harness::poisson(&ts, args.f64_or("rate", default_rate)?, n, cfg.seed)
-    };
-
-    let book =
-        harness::ScoreBook::build(&rt, &manifest, &ts, &[cfg.policy]).context("scoring")?;
-
-    println!(
-        "workload: {dataset}/{model}  n={}  policy={}  engine={engine_kind}",
-        arrivals.len(),
-        cfg.policy.name()
-    );
-    if book.scoring_ms_per_prompt > 0.0 {
-        println!("admission scoring: {:.3} ms/prompt", book.scoring_ms_per_prompt);
-    }
 
     match engine_kind.as_str() {
         "sim" => {
-            let out = harness::run_sim(&ts, &arrivals, cfg.policy, &book, &cost, &cfg.scheduler)?;
-            println!("{}", out.report.one_line(cfg.policy.name()));
+            let (ts, book) = load_ts_book(&cfg, &dataset, &model, &[cfg.policy])?;
+            let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
+            println!(
+                "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
+                 replicas={}  dispatch={}",
+                arrivals.len(),
+                cfg.policy.name(),
+                cfg.scheduler.replicas,
+                cfg.scheduler.dispatch.name()
+            );
+            if book.scoring_ms_per_prompt > 0.0 {
+                println!("admission scoring: {:.3} ms/prompt", book.scoring_ms_per_prompt);
+            }
+            let out =
+                harness::run_sharded(&ts, &arrivals, cfg.policy, &book, &cost, &cfg.scheduler)?;
+            println!("{}", out.merged.report.one_line(cfg.policy.name()));
             println!(
                 "makespan={:.1}s  peak_waiting={}  boosts={}  rejected={}",
-                out.makespan_ms / 1e3,
-                out.peak_waiting,
-                out.boosts,
-                out.rejected
+                out.merged.makespan_ms / 1e3,
+                out.merged.peak_waiting,
+                out.merged.boosts,
+                out.merged.rejected
             );
+            if cfg.scheduler.replicas > 1 {
+                for rep in &out.per_replica {
+                    println!(
+                        "{}  dispatched={}",
+                        rep.report.one_line(&format!("  replica {}", rep.replica)),
+                        rep.dispatched
+                    );
+                }
+            }
         }
         "pjrt" => {
+            let rt = Runtime::cpu().context("the pjrt engine needs the PJRT runtime")?;
+            let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+            let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
+            let book = harness::ScoreBook::build(&rt, &manifest, &ts, &[cfg.policy])
+                .context("scoring")?;
+            let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
+            println!(
+                "workload: {dataset}/{model}  n={}  policy={}  engine=pjrt",
+                arrivals.len(),
+                cfg.policy.name()
+            );
             let scores = book.scores.get(cfg.policy.name()).map(|v| v.as_slice());
             let mut rng = Rng::new(cfg.seed ^ 0x5EED);
             let reqs = harness::build_requests(
@@ -150,40 +221,40 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Rate × policy sweep with replicated runs; emits CSV for plotting.
+/// Rate × policy sweep with repeated runs; emits CSV for plotting.
 fn sweep(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let dataset = args.str_or("dataset", "synthalpaca");
     let model = args.str_or("model", "llama");
     let n = args.usize_or("n", 400)?;
-    let replicas = args.usize_or("replicas", 1)?;
+    let reps = args.usize_or("reps", 1)?;
 
-    let rt = Runtime::cpu()?;
-    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
-    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
-    let cost = harness::load_cost_model(&cfg.artifacts_dir);
     let suite = harness::policy_suite(&model);
-    let book = harness::ScoreBook::build(&rt, &manifest, &ts, &suite)?;
+    let (ts, book) = load_ts_book(&cfg, &dataset, &model, &suite)?;
+    let cost = harness::load_cost_model(&cfg.artifacts_dir);
     let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
 
     let mut csv = String::from(
-        "dataset,model,policy,rate_req_s,replica,avg_ms_tok,p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts\n",
+        "dataset,model,policy,replicas,dispatch,rate_req_s,rep,avg_ms_tok,p90_ms_tok,\
+         p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts\n",
     );
     for &kind in &suite {
         for &rate in &rates {
-            for rep in 0..replicas {
+            for rep in 0..reps {
                 let arrivals = harness::poisson(&ts, rate, n, cfg.seed + 1000 * rep as u64);
-                let out =
-                    harness::run_sim(&ts, &arrivals, kind, &book, &cost, &cfg.scheduler)?;
+                let sc = &cfg.scheduler;
+                let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{}\n",
+                    "{dataset},{model},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{}\n",
                     kind.name().replace(' ', "_"),
-                    out.report.avg_per_token_ms,
-                    out.report.p90_per_token_ms,
-                    out.report.per_token.p99,
-                    out.report.ttft.p50,
-                    out.report.throughput_tok_s,
-                    out.boosts
+                    cfg.scheduler.replicas,
+                    cfg.scheduler.dispatch.name(),
+                    out.merged.report.avg_per_token_ms,
+                    out.merged.report.p90_per_token_ms,
+                    out.merged.report.per_token.p99,
+                    out.merged.report.ttft.p50,
+                    out.merged.report.throughput_tok_s,
+                    out.merged.boosts
                 ));
             }
         }
@@ -282,14 +353,10 @@ fn gen_workload(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let dataset = args.str_or("dataset", "synthalpaca");
     let model = args.str_or("model", "llama");
-    let ts = TestSet::load(&cfg.artifacts_dir, &dataset, &model)?;
+    let (ts, _book) = load_ts_book(&cfg, &dataset, &model, &[])?;
     let cost = harness::load_cost_model(&cfg.artifacts_dir);
-    let arrivals = if args.has("burst") {
-        harness::burst(&ts, args.usize_or("burst", 2000)?, cfg.seed)
-    } else {
-        let rate = args.f64_or("rate", harness::sweep_rates(&ts, &cost, &cfg.scheduler)[2])?;
-        harness::poisson(&ts, rate, args.usize_or("n", 500)?, cfg.seed)
-    };
+    let n = args.usize_or("n", 500)?;
+    let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
     let mut rng = Rng::new(cfg.seed);
     let reqs =
         harness::build_requests(&ts, &arrivals, None, harness::LiveLengths::Fresh(&mut rng));
@@ -319,7 +386,10 @@ fn info(args: &Args) -> Result<()> {
         manifest.seq_len,
         manifest.pico_max_seq
     );
-    let mut t = Table::new("trained predictors", &["name", "objective", "backbone", "dataset", "model", "filtered", "train tau"]);
+    let mut t = Table::new(
+        "trained predictors",
+        &["name", "objective", "backbone", "dataset", "model", "filtered", "train tau"],
+    );
     for s in &manifest.scorers {
         t.row(&[
             s.name.clone(),

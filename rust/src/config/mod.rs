@@ -67,12 +67,49 @@ impl PolicyKind {
     }
 }
 
+/// How arriving requests are routed across engine replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchKind {
+    /// Cycle through replicas in order (baseline; load-oblivious).
+    RoundRobin,
+    /// Route to the replica with the lowest KV/slot occupancy: total
+    /// in-system token load first, in-system request count as tiebreak.
+    LeastLoaded,
+    /// Route to the replica with the emptiest waiting queue; within each
+    /// replica the scheduling policy then runs shortest-predicted-first.
+    Ranked,
+}
+
+impl DispatchKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => DispatchKind::RoundRobin,
+            "least-loaded" | "leastloaded" | "ll" => DispatchKind::LeastLoaded,
+            "ranked" => DispatchKind::Ranked,
+            other => bail!("unknown dispatch policy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchKind::RoundRobin => "round-robin",
+            DispatchKind::LeastLoaded => "least-loaded",
+            DispatchKind::Ranked => "ranked",
+        }
+    }
+
+    pub fn all() -> [DispatchKind; 3] {
+        [DispatchKind::RoundRobin, DispatchKind::LeastLoaded, DispatchKind::Ranked]
+    }
+}
+
 /// Scheduler/batcher knobs (paper §III-B + vLLM-style limits).
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Max sequences decoding concurrently (running queue capacity).
     pub max_batch: usize,
     /// Max total KV tokens in flight (cache budget; admission control).
+    /// With `replicas > 1` this is the budget of EACH replica.
     pub max_kv_tokens: usize,
     /// Starvation guard: boost priority after this wait (paper: 2 min).
     pub starvation_ms: f64,
@@ -80,6 +117,10 @@ pub struct SchedulerConfig {
     pub continuous: bool,
     /// Static mode only: max wait to fill a batch before launching.
     pub static_max_wait_ms: f64,
+    /// Number of engine replicas behind the dispatcher (1 = single-node).
+    pub replicas: usize,
+    /// Cross-replica dispatch policy (only meaningful for `replicas > 1`).
+    pub dispatch: DispatchKind,
 }
 
 impl Default for SchedulerConfig {
@@ -90,6 +131,8 @@ impl Default for SchedulerConfig {
             starvation_ms: 120_000.0,
             continuous: true,
             static_max_wait_ms: 50.0,
+            replicas: 1,
+            dispatch: DispatchKind::RoundRobin,
         }
     }
 }
@@ -178,6 +221,12 @@ impl Config {
         if let Some(v) = doc.get_num("scheduler", "static_max_wait_ms") {
             c.scheduler.static_max_wait_ms = v;
         }
+        if let Some(v) = doc.get_num("scheduler", "replicas") {
+            c.scheduler.replicas = v as usize;
+        }
+        if let Some(v) = doc.get_str("scheduler", "dispatch") {
+            c.scheduler.dispatch = DispatchKind::parse(v)?;
+        }
         if let Some(v) = doc.get_num("cost", "decode_base_ms") {
             c.cost.decode_base_ms = v;
         }
@@ -203,6 +252,9 @@ impl Config {
         }
         if self.scheduler.starvation_ms <= 0.0 {
             bail!("scheduler.starvation_ms must be positive");
+        }
+        if self.scheduler.replicas == 0 {
+            bail!("scheduler.replicas must be > 0");
         }
         if self.cost.decode_base_ms < 0.0
             || self.cost.decode_per_seq_ms < 0.0
@@ -251,6 +303,34 @@ mod tests {
     fn rejects_invalid() {
         assert!(Config::from_toml("[scheduler]\nmax_batch = 0").is_err());
         assert!(Config::from_toml("policy = \"quantum\"").is_err());
+        assert!(Config::from_toml("[scheduler]\nreplicas = 0").is_err());
+        assert!(Config::from_toml("[scheduler]\ndispatch = \"psychic\"").is_err());
+    }
+
+    #[test]
+    fn parse_sharding_knobs() {
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            replicas = 4
+            dispatch = "least-loaded"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.replicas, 4);
+        assert_eq!(c.scheduler.dispatch, DispatchKind::LeastLoaded);
+        // defaults: single replica, round-robin
+        let d = Config::default();
+        assert_eq!(d.scheduler.replicas, 1);
+        assert_eq!(d.scheduler.dispatch, DispatchKind::RoundRobin);
+    }
+
+    #[test]
+    fn dispatch_names_roundtrip() {
+        for d in DispatchKind::all() {
+            assert_eq!(DispatchKind::parse(d.name()).unwrap(), d);
+        }
+        assert_eq!(DispatchKind::parse("RR").unwrap(), DispatchKind::RoundRobin);
     }
 
     #[test]

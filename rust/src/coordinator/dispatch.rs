@@ -1,0 +1,538 @@
+//! Multi-replica serving: N engine replicas behind one policy-aware
+//! dispatcher (the fleet shape production routers put in front of vLLM).
+//!
+//! ```text
+//!   arrival stream ──► score once ──► dispatch policy ──► replica k
+//!                                                          │ inbox
+//!                        (round-robin / least-loaded /     ▼
+//!                         ranked)                      waiting queue W_k
+//!                                                          │ policy order
+//!   per-replica continuous batcher + starvation guard ◄────┘
+//! ```
+//!
+//! Each [`Replica`] owns its engine (KV budget, batch slots), waiting
+//! queue and latency recorder; the dispatcher consumes a *streamed*
+//! arrival iterator, scores each request exactly once at admission, and
+//! routes it under a [`DispatchKind`].  Replicas advance on their own
+//! virtual clocks; the serve loop always steps the lagging replica next,
+//! so cross-replica event order is deterministic and a single replica
+//! reproduces the legacy single-engine coordinator exactly (asserted by
+//! `tests/sharded.rs`).
+//!
+//! Load signals use the same quantity admission control reserves —
+//! prompt + target tokens.  In the simulator the target is the oracle
+//! draw; a production dispatcher would substitute the predictor output,
+//! which is exactly what the PARS score estimates.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::Context;
+
+use crate::config::{DispatchKind, SchedulerConfig};
+use crate::coordinator::queue::QueuedRequest;
+use crate::coordinator::server::ServeOutcome;
+use crate::coordinator::{Policy, Request, WaitingQueue};
+use crate::engine::Engine;
+use crate::metrics::{Recorder, RequestRecord};
+use crate::Result;
+
+struct InFlight {
+    req: Request,
+    admitted_ms: f64,
+    first_token_ms: Option<f64>,
+    boosted: bool,
+}
+
+/// One engine replica plus its scheduling state.
+struct Replica<E: Engine> {
+    engine: E,
+    /// Dispatched requests whose arrival time is still in this replica's
+    /// future (the stream is consumed in arrival order, so this stays
+    /// arrival-ordered).
+    inbox: VecDeque<QueuedRequest>,
+    waiting: WaitingQueue,
+    running: HashMap<usize, InFlight>,
+    recorder: Recorder,
+    /// Requests routed to this replica.
+    dispatched: usize,
+    /// prompt+target tokens sitting in inbox + waiting queue.
+    queued_tokens: u64,
+    /// prompt+target tokens reserved by the running batch.
+    running_tokens: u64,
+    peak_waiting: usize,
+    t0: f64,
+    makespan_ms: f64,
+}
+
+impl<E: Engine> Replica<E> {
+    fn new(engine: E, starvation_ms: f64) -> Replica<E> {
+        let t0 = engine.now_ms();
+        Replica {
+            engine,
+            inbox: VecDeque::new(),
+            waiting: WaitingQueue::new(starvation_ms),
+            running: HashMap::new(),
+            recorder: Recorder::default(),
+            dispatched: 0,
+            queued_tokens: 0,
+            running_tokens: 0,
+            peak_waiting: 0,
+            t0,
+            makespan_ms: t0,
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        !self.inbox.is_empty() || !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    fn queue_len(&self) -> usize {
+        self.inbox.len() + self.waiting.len()
+    }
+
+    fn in_system(&self) -> usize {
+        self.queue_len() + self.running.len()
+    }
+
+    fn in_system_tokens(&self) -> u64 {
+        self.queued_tokens + self.running_tokens
+    }
+
+    /// Dispatch load key — KV/slot occupancy: reserved + queued token
+    /// demand, then in-system request count, then physically allocated
+    /// KV blocks.
+    fn load_key(&self) -> (u64, usize, usize) {
+        (self.in_system_tokens(), self.in_system(), self.engine.kv_blocks_used())
+    }
+
+    /// One scheduling iteration: ingest due arrivals, re-apply the
+    /// starvation guard, top up the running batch in policy order, then
+    /// run one decode step (or hop the clock to the next arrival).
+    fn step(&mut self, sched: &SchedulerConfig) -> Result<()> {
+        let now = self.engine.now_ms();
+
+        // 1. ingest arrivals that are due on this replica's clock
+        while self.inbox.front().is_some_and(|q| q.req.arrival_ms <= now) {
+            let q = self.inbox.pop_front().unwrap();
+            self.waiting.push_scored(q);
+        }
+        self.peak_waiting = self.peak_waiting.max(self.waiting.len());
+
+        // 2. starvation guard
+        self.waiting.apply_starvation_guard(now);
+
+        // 3. admission (continuous: any free slot; static: empty batch)
+        let may_admit = sched.continuous || self.running.is_empty();
+        if may_admit {
+            while self.engine.free_slots() > 0 && !self.waiting.is_empty() {
+                let q = self.waiting.pop().unwrap();
+                let total = q.req.prompt_len + q.req.target_len;
+                if !self.engine.kv_headroom_for(total) {
+                    self.waiting.unpop(q);
+                    break;
+                }
+                let slot = self
+                    .engine
+                    .prefill(&q.req.tokens, q.req.target_len)
+                    .context("prefill during admission")?;
+                self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
+                self.running_tokens += total as u64;
+                self.running.insert(
+                    slot,
+                    InFlight {
+                        admitted_ms: self.engine.now_ms(),
+                        first_token_ms: None,
+                        boosted: q.boosted,
+                        req: q.req,
+                    },
+                );
+            }
+        }
+
+        // 4. one decode iteration / idle hop / deadlock detection
+        if self.engine.active_slots() > 0 {
+            let events = self.engine.decode_step()?;
+            let now = self.engine.now_ms();
+            for ev in events {
+                let inflight = self.running.get_mut(&ev.slot).expect("event for unknown slot");
+                if inflight.first_token_ms.is_none() {
+                    inflight.first_token_ms = Some(now);
+                }
+                if ev.finished {
+                    let f = self.running.remove(&ev.slot).unwrap();
+                    self.engine.release(ev.slot);
+                    self.makespan_ms = now;
+                    let total = (f.req.prompt_len + f.req.target_len) as u64;
+                    self.running_tokens = self.running_tokens.saturating_sub(total);
+                    self.recorder.push(RequestRecord {
+                        id: f.req.id,
+                        arrival_ms: f.req.arrival_ms,
+                        admitted_ms: f.admitted_ms,
+                        first_token_ms: f.first_token_ms.unwrap_or(now),
+                        completed_ms: now,
+                        prompt_len: f.req.prompt_len,
+                        output_len: ev.generated,
+                        boosted: f.boosted,
+                    });
+                }
+            }
+        } else if !self.waiting.is_empty() {
+            // nothing running and head-of-queue cannot be admitted —
+            // a request larger than the whole KV budget would spin here
+            let q = self.waiting.pop().unwrap();
+            let total = q.req.prompt_len + q.req.target_len;
+            anyhow::bail!(
+                "deadlock: request {} ({} tokens) exceeds idle-replica KV budget",
+                q.req.id,
+                total
+            );
+        } else if let Some(front) = self.inbox.front() {
+            self.engine.advance_to(front.req.arrival_ms);
+        }
+        Ok(())
+    }
+}
+
+/// Per-replica slice of a sharded run.
+#[derive(Clone, Debug)]
+pub struct ReplicaOutcome {
+    pub replica: usize,
+    pub report: crate::metrics::LatencyReport,
+    /// This replica's per-request records, in completion order.
+    pub records: Vec<crate::metrics::RequestRecord>,
+    pub dispatched: usize,
+    pub boosts: usize,
+    pub peak_waiting: usize,
+    pub makespan_ms: f64,
+}
+
+/// Outcome of a sharded run: fleet-level metrics plus the breakdown.
+#[derive(Clone, Debug)]
+pub struct ShardedOutcome {
+    /// Merged across replicas (all records in one [`crate::metrics::LatencyReport`];
+    /// wall/makespan are fleet-wide maxima, boosts are summed).
+    pub merged: ServeOutcome,
+    pub per_replica: Vec<ReplicaOutcome>,
+}
+
+/// Drives N engine replicas under one scheduling policy and a
+/// cross-replica dispatch policy.
+pub struct ShardedCoordinator<'p, E: Engine> {
+    replicas: Vec<Replica<E>>,
+    policy: &'p dyn Policy,
+    dispatch: DispatchKind,
+    sched: SchedulerConfig,
+    rr_cursor: usize,
+}
+
+impl<'p, E: Engine> ShardedCoordinator<'p, E> {
+    pub fn new(
+        engines: Vec<E>,
+        policy: &'p dyn Policy,
+        dispatch: DispatchKind,
+        sched: SchedulerConfig,
+    ) -> Self {
+        assert!(!engines.is_empty(), "sharded coordinator needs at least one replica");
+        let starvation_ms = sched.starvation_ms;
+        ShardedCoordinator {
+            replicas: engines.into_iter().map(|e| Replica::new(e, starvation_ms)).collect(),
+            policy,
+            dispatch,
+            sched,
+            rr_cursor: 0,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn argmin_by_key<K: Ord>(&self, load: impl Fn(&Replica<E>) -> K) -> usize {
+        // min_by_key keeps the FIRST minimum, so ties go to the lowest index
+        self.replicas
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, r)| load(r))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Choose the replica for the next arrival (ties go to the lowest
+    /// replica index, keeping dispatch deterministic).
+    fn pick_replica(&mut self) -> usize {
+        if self.replicas.len() == 1 {
+            return 0;
+        }
+        match self.dispatch {
+            DispatchKind::RoundRobin => {
+                let i = self.rr_cursor % self.replicas.len();
+                self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                i
+            }
+            DispatchKind::LeastLoaded => self.argmin_by_key(|r| r.load_key()),
+            // Emptiest waiting queue; the scheduling policy then runs
+            // shortest-predicted-first within the replica.
+            DispatchKind::Ranked => self.argmin_by_key(|r| (r.queue_len(), r.queued_tokens)),
+        }
+    }
+
+    /// Serve a pre-collected workload.  Arrival times are totally ordered
+    /// with `f64::total_cmp` and non-finite arrivals are clamped to t=0,
+    /// so NaN-bearing traces cannot panic or wedge the scheduler.
+    pub fn serve(&mut self, mut requests: Vec<Request>) -> Result<ShardedOutcome> {
+        for r in &mut requests {
+            if !r.arrival_ms.is_finite() {
+                r.arrival_ms = 0.0;
+            }
+        }
+        requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+        self.serve_stream(requests)
+    }
+
+    /// Serve a streamed, arrival-ordered request sequence to completion.
+    ///
+    /// The stream is consumed lazily: a request is scored and dispatched
+    /// only once the fleet's lagging clock reaches its arrival time, so
+    /// dispatch decisions always see the queue state of that moment.
+    pub fn serve_stream<I>(&mut self, arrivals: I) -> Result<ShardedOutcome>
+    where
+        I: IntoIterator<Item = Request>,
+    {
+        let caps = self.replicas[0].engine.caps();
+        let mut stream = arrivals.into_iter().peekable();
+        let mut rejected = 0usize;
+
+        loop {
+            // the replica that would step next (lagging clock; tie → index)
+            let next_step: Option<(f64, usize)> = self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.has_work())
+                .map(|(i, r)| (r.engine.now_ms(), i))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+            // dispatch the next arrival if it is due before that step
+            let due = match (stream.peek(), next_step) {
+                (Some(req), Some((t, _))) => !req.arrival_ms.is_finite() || req.arrival_ms <= t,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if due {
+                let mut req = stream.next().unwrap();
+                if !req.arrival_ms.is_finite() {
+                    req.arrival_ms = 0.0; // NaN-bearing traces arrive "now"
+                }
+                let total = req.prompt_len + req.target_len;
+                if total as usize > caps.max_seq {
+                    // can never fit any replica's sequence budget
+                    rejected += 1;
+                    continue;
+                }
+                let key = self.policy.key(&req);
+                let idx = self.pick_replica();
+                let r = &mut self.replicas[idx];
+                r.dispatched += 1;
+                r.queued_tokens += total as u64;
+                r.inbox.push_back(QueuedRequest { req, key, boosted: false });
+                continue;
+            }
+
+            match next_step {
+                Some((_, idx)) => self.replicas[idx].step(&self.sched)?,
+                None => break, // stream exhausted and every replica idle
+            }
+        }
+        Ok(self.collect(rejected))
+    }
+
+    /// Merge per-replica recorders into the fleet outcome + breakdowns.
+    /// Records move into the per-replica breakdowns; the fleet report is
+    /// computed over borrows, so nothing is copied.
+    fn collect(&mut self, rejected: usize) -> ShardedOutcome {
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        let mut boosts = 0usize;
+        let mut peak_waiting = 0usize;
+        let mut makespan = f64::NEG_INFINITY;
+        let mut wall = f64::NEG_INFINITY;
+        for (i, r) in self.replicas.iter_mut().enumerate() {
+            let rec = std::mem::take(&mut r.recorder);
+            let r_wall = r.engine.now_ms() - r.t0;
+            per_replica.push(ReplicaOutcome {
+                replica: i,
+                report: rec.report(r_wall),
+                records: rec.records,
+                dispatched: r.dispatched,
+                boosts: r.waiting.boosts,
+                peak_waiting: r.peak_waiting,
+                makespan_ms: r.makespan_ms,
+            });
+            boosts += r.waiting.boosts;
+            peak_waiting = peak_waiting.max(r.peak_waiting);
+            makespan = makespan.max(r.makespan_ms);
+            wall = wall.max(r_wall);
+        }
+        let fleet: Vec<_> = per_replica.iter().flat_map(|r| r.records.iter()).collect();
+        ShardedOutcome {
+            merged: ServeOutcome {
+                report: Recorder::report_over(&fleet, wall),
+                boosts,
+                rejected,
+                peak_waiting,
+                makespan_ms: makespan,
+            },
+            per_replica,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CostModel, PolicyKind};
+    use crate::coordinator::policy::make_policy;
+    use crate::engine::SimEngine;
+
+    fn mk_req(id: u64, arrival: f64, target: u32) -> Request {
+        Request {
+            id,
+            tokens: vec![1, 10, 20, 32, 2],
+            prompt_len: 5,
+            arrival_ms: arrival,
+            target_len: target,
+            oracle_len: target,
+            score: target as f32,
+        }
+    }
+
+    fn sched(replicas: usize, max_batch: usize, dispatch: DispatchKind) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch,
+            max_kv_tokens: 1 << 20,
+            replicas,
+            dispatch,
+            ..Default::default()
+        }
+    }
+
+    fn engines(s: &SchedulerConfig, max_seq: usize) -> Vec<SimEngine> {
+        (0..s.replicas).map(|_| SimEngine::new(CostModel::default(), s, max_seq)).collect()
+    }
+
+    fn run(
+        s: &SchedulerConfig,
+        kind: PolicyKind,
+        reqs: Vec<Request>,
+        max_seq: usize,
+    ) -> ShardedOutcome {
+        let policy = make_policy(kind);
+        let mut coord =
+            ShardedCoordinator::new(engines(s, max_seq), policy.as_ref(), s.dispatch, s.clone());
+        coord.serve(reqs).unwrap()
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let s = sched(4, 4, DispatchKind::RoundRobin);
+        let reqs: Vec<Request> = (0..40).map(|i| mk_req(i, 0.0, 10)).collect();
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 40);
+        for rep in &out.per_replica {
+            assert_eq!(rep.dispatched, 10, "replica {} not fair", rep.replica);
+            assert_eq!(rep.report.n_requests, 10);
+        }
+    }
+
+    #[test]
+    fn least_loaded_avoids_the_heavy_replica() {
+        // one huge job lands first; later short jobs must all route to
+        // the other (emptier) replica
+        let s = sched(2, 4, DispatchKind::LeastLoaded);
+        let mut reqs = vec![mk_req(0, 0.0, 1000)];
+        reqs.extend((1..4).map(|i| mk_req(i, 10.0, 5)));
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 4);
+        assert_eq!(out.per_replica[0].dispatched, 1, "heavy replica took extra work");
+        assert_eq!(out.per_replica[1].dispatched, 3);
+    }
+
+    #[test]
+    fn least_loaded_balances_a_uniform_burst() {
+        let s = sched(4, 2, DispatchKind::LeastLoaded);
+        let reqs: Vec<Request> = (0..32).map(|i| mk_req(i, 0.0, 10)).collect();
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        for rep in &out.per_replica {
+            assert_eq!(rep.dispatched, 8, "replica {} unbalanced", rep.replica);
+        }
+    }
+
+    #[test]
+    fn ranked_preserves_sjf_order_within_each_replica() {
+        // single-slot replicas: completion order within a replica is the
+        // admission order, which under an SJF policy must be ascending
+        // predicted length
+        let s = sched(2, 1, DispatchKind::Ranked);
+        let targets = [40u32, 7, 23, 90, 3, 61, 15, 33, 72, 11];
+        let reqs: Vec<Request> =
+            targets.iter().enumerate().map(|(i, &t)| mk_req(i as u64, 0.0, t)).collect();
+        let out = run(&s, PolicyKind::OracleSjf, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, targets.len());
+        for rep in &out.per_replica {
+            assert!(rep.dispatched >= 2, "dispatch badly skewed: {}", rep.dispatched);
+            let lens: Vec<u32> = rep.records.iter().map(|r| r.output_len).collect();
+            assert!(
+                lens.windows(2).all(|w| w[0] <= w[1]),
+                "replica {} violated SJF order: {lens:?}",
+                rep.replica
+            );
+        }
+    }
+
+    #[test]
+    fn streamed_arrivals_from_an_iterator() {
+        // no pre-collected Vec: requests come straight off a generator
+        let s = sched(2, 4, DispatchKind::RoundRobin);
+        let policy = make_policy(PolicyKind::Fcfs);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let stream = (0..30u64).map(|i| mk_req(i, i as f64 * 4.0, 8));
+        let out = coord.serve_stream(stream).unwrap();
+        assert_eq!(out.merged.report.n_requests, 30);
+        assert_eq!(out.merged.report.total_tokens, 240);
+        assert_eq!(out.per_replica.len(), 2);
+        assert_eq!(out.per_replica.iter().map(|r| r.dispatched).sum::<usize>(), 30);
+    }
+
+    #[test]
+    fn oversized_requests_rejected_across_the_fleet() {
+        let s = sched(2, 2, DispatchKind::LeastLoaded);
+        let reqs = vec![mk_req(0, 0.0, 500), mk_req(1, 0.0, 10)];
+        let out = run(&s, PolicyKind::Fcfs, reqs, 100);
+        assert_eq!(out.merged.rejected, 1);
+        assert_eq!(out.merged.report.n_requests, 1);
+    }
+
+    #[test]
+    fn nan_arrivals_cannot_wedge_the_scheduler() {
+        let s = sched(2, 2, DispatchKind::RoundRobin);
+        let mut reqs: Vec<Request> = (0..8).map(|i| mk_req(i, i as f64 * 2.0, 5)).collect();
+        reqs[3].arrival_ms = f64::NAN;
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 8);
+    }
+
+    #[test]
+    fn more_replicas_cut_burst_makespan() {
+        let make = || -> Vec<Request> { (0..64).map(|i| mk_req(i, 0.0, 50)).collect() };
+        let mk = |n: usize| {
+            let s = sched(n, 2, DispatchKind::LeastLoaded);
+            run(&s, PolicyKind::Fcfs, make(), 4096).merged.makespan_ms
+        };
+        let one = mk(1);
+        let four = mk(4);
+        assert!(
+            four * 2.0 < one,
+            "4 replicas should at least halve the makespan: 1×={one:.0} 4×={four:.0}"
+        );
+    }
+}

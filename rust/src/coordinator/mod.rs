@@ -16,13 +16,17 @@
 //!   / oracle / PARS / cross-model PARS) behind one trait.
 //! * [`predictor`] — the admission-path scorer (PJRT HLO executable).
 //! * [`queue`]     — waiting-queue bookkeeping + starvation guard.
-//! * [`server`]    — the serving loop driving an [`crate::engine::Engine`].
+//! * [`dispatch`]  — the multi-replica serving loop: N engines behind a
+//!   round-robin / least-loaded / ranked dispatcher.
+//! * [`server`]    — the single-replica facade (N=1 case of `dispatch`).
 
+pub mod dispatch;
 pub mod policy;
 pub mod predictor;
 pub mod queue;
 pub mod server;
 
+pub use dispatch::{ReplicaOutcome, ShardedCoordinator, ShardedOutcome};
 pub use policy::Policy;
 pub use predictor::{PjrtScorer, Scorer};
 pub use queue::{QueuedRequest, WaitingQueue};

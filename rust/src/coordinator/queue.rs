@@ -21,7 +21,7 @@ pub struct QueuedRequest {
 
 impl PartialEq for QueuedRequest {
     fn eq(&self, other: &Self) -> bool {
-        self.cmp_key() == other.cmp_key()
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl Eq for QueuedRequest {}
@@ -41,10 +41,15 @@ impl PartialOrd for QueuedRequest {
 
 impl Ord for QueuedRequest {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for min-ordering
+        // BinaryHeap is a max-heap; invert for min-ordering.  Float fields
+        // compare via total_cmp so NaN keys or arrival times yield a
+        // consistent total order instead of collapsing entries together.
         let a = self.cmp_key();
         let b = other.cmp_key();
-        b.partial_cmp(&a).unwrap_or(Ordering::Equal)
+        b.0.cmp(&a.0)
+            .then_with(|| b.1.total_cmp(&a.1))
+            .then_with(|| b.2.total_cmp(&a.2))
+            .then_with(|| b.3.cmp(&a.3))
     }
 }
 
@@ -73,6 +78,12 @@ impl WaitingQueue {
     pub fn push(&mut self, req: Request, policy: &dyn Policy) {
         let key = policy.key(&req);
         self.heap.push(QueuedRequest { req, key, boosted: false });
+    }
+
+    /// Enqueue an entry whose key was already computed (the sharded
+    /// dispatcher scores each request exactly once, at admission).
+    pub fn push_scored(&mut self, q: QueuedRequest) {
+        self.heap.push(q);
     }
 
     /// Pop the highest-priority request.

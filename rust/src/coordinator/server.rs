@@ -1,30 +1,21 @@
-//! The serving loop: continuous (iteration-level) batching over an
-//! [`Engine`], with policy-ordered admission and the starvation guard.
+//! The single-replica serving facade: continuous (iteration-level)
+//! batching over one [`Engine`], with policy-ordered admission and the
+//! starvation guard.
 //!
-//! This is the paper's scheduling cycle (§III-B): each iteration ingests
-//! arrivals, re-applies the starvation guard, tops up the running queue R
-//! from the waiting queue W in policy order (subject to slot + KV-budget
-//! admission), and runs one decode step.  Completed sequences leave R
-//! immediately and their slots are refilled next iteration — vLLM/Orca
-//! continuous batching.  With `continuous = false` the batcher degrades to
-//! static batching: admission only happens when R is empty.
+//! This is the paper's scheduling cycle (§III-B).  Since the sharded
+//! refactor the actual loop lives in [`crate::coordinator::dispatch`];
+//! [`Coordinator::serve`] is the N=1 case of that loop (one replica,
+//! trivial dispatch) and `tests/sharded.rs` asserts it reproduces the
+//! pre-refactor coordinator's metrics exactly.  With `continuous =
+//! false` the batcher degrades to static batching: admission only
+//! happens when the running queue is empty.
 
-use std::collections::HashMap;
-
-use anyhow::Context;
-
-use crate::config::SchedulerConfig;
-use crate::coordinator::{Policy, Request, WaitingQueue};
+use crate::config::{DispatchKind, SchedulerConfig};
+use crate::coordinator::dispatch::ShardedCoordinator;
+use crate::coordinator::{Policy, Request};
 use crate::engine::Engine;
-use crate::metrics::{LatencyReport, Recorder, RequestRecord};
+use crate::metrics::LatencyReport;
 use crate::Result;
-
-struct InFlight {
-    req: Request,
-    admitted_ms: f64,
-    first_token_ms: Option<f64>,
-    boosted: bool,
-}
 
 /// Serving statistics beyond latency (queue dynamics, guard activity).
 #[derive(Clone, Debug)]
@@ -53,120 +44,18 @@ impl<'a, E: Engine> Coordinator<'a, E> {
         Coordinator { engine, policy, sched }
     }
 
-    /// Serve a complete workload (requests sorted by arrival time) to
-    /// completion and report latency metrics.
-    pub fn serve(&mut self, mut requests: Vec<Request>) -> Result<ServeOutcome> {
-        requests.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
-        let caps = self.engine.caps();
-        let mut rejected = 0usize;
-        // reject what can never fit (prompt + target over sequence cap)
-        requests.retain(|r| {
-            let fits = (r.prompt_len + r.target_len) as usize <= caps.max_seq;
-            if !fits {
-                rejected += 1;
-            }
-            fits
-        });
-
-        let n = requests.len();
-        let mut next_arrival = 0usize;
-        let mut waiting = WaitingQueue::new(self.sched.starvation_ms);
-        let mut running: HashMap<usize, InFlight> = HashMap::new();
-        let mut recorder = Recorder::default();
-        let mut peak_waiting = 0usize;
-        let t0 = self.engine.now_ms();
-        let mut makespan = t0;
-
-        while recorder.len() + rejected < n + rejected || !waiting.is_empty() || !running.is_empty()
-        {
-            let now = self.engine.now_ms();
-
-            // 1. ingest arrivals
-            while next_arrival < n && requests[next_arrival].arrival_ms <= now {
-                waiting.push(requests[next_arrival].clone(), self.policy.as_ref());
-                next_arrival += 1;
-            }
-            peak_waiting = peak_waiting.max(waiting.len());
-
-            // 2. starvation guard
-            waiting.apply_starvation_guard(now);
-
-            // 3. admission (continuous: any free slot; static: empty batch)
-            let may_admit = self.sched.continuous || running.is_empty();
-            if may_admit {
-                while self.engine.free_slots() > 0 && !waiting.is_empty() {
-                    let q = waiting.pop().unwrap();
-                    let total = q.req.prompt_len + q.req.target_len;
-                    if !self.engine.kv_headroom_for(total) {
-                        waiting.unpop(q);
-                        break;
-                    }
-                    let slot = self
-                        .engine
-                        .prefill(&q.req.tokens, q.req.target_len)
-                        .context("prefill during admission")?;
-                    running.insert(
-                        slot,
-                        InFlight {
-                            admitted_ms: self.engine.now_ms(),
-                            first_token_ms: None,
-                            boosted: q.boosted,
-                            req: q.req,
-                        },
-                    );
-                }
-            }
-
-            // 4. one decode iteration (or idle until the next arrival)
-            if self.engine.active_slots() > 0 {
-                let events = self.engine.decode_step()?;
-                let now = self.engine.now_ms();
-                for ev in events {
-                    let inflight = running.get_mut(&ev.slot).expect("event for unknown slot");
-                    if inflight.first_token_ms.is_none() {
-                        inflight.first_token_ms = Some(now);
-                    }
-                    if ev.finished {
-                        let f = running.remove(&ev.slot).unwrap();
-                        self.engine.release(ev.slot);
-                        makespan = now;
-                        recorder.push(RequestRecord {
-                            id: f.req.id,
-                            arrival_ms: f.req.arrival_ms,
-                            admitted_ms: f.admitted_ms,
-                            first_token_ms: f.first_token_ms.unwrap_or(now),
-                            completed_ms: now,
-                            prompt_len: f.req.prompt_len,
-                            output_len: ev.generated,
-                            boosted: f.boosted,
-                        });
-                    }
-                }
-            } else if !waiting.is_empty() {
-                // nothing running and head-of-queue cannot be admitted —
-                // a request larger than the whole KV budget would spin here
-                let q = waiting.pop().unwrap();
-                let total = q.req.prompt_len + q.req.target_len;
-                anyhow::bail!(
-                    "deadlock: request {} ({} tokens) exceeds idle-engine KV budget",
-                    q.req.id,
-                    total
-                );
-            } else if next_arrival < n {
-                self.engine.advance_to(requests[next_arrival].arrival_ms);
-            } else {
-                break;
-            }
-        }
-
-        let wall = self.engine.now_ms() - t0;
-        Ok(ServeOutcome {
-            report: recorder.report(wall),
-            boosts: waiting.boosts,
-            rejected,
-            peak_waiting,
-            makespan_ms: makespan,
-        })
+    /// Serve a complete workload to completion and report latency
+    /// metrics.  Requests are sorted by arrival here (NaN-safe total
+    /// order); the single engine is lent to the sharded loop as its only
+    /// replica.
+    pub fn serve(&mut self, requests: Vec<Request>) -> Result<ServeOutcome> {
+        let mut sharded = ShardedCoordinator::new(
+            vec![&mut *self.engine],
+            self.policy.as_ref(),
+            DispatchKind::RoundRobin,
+            self.sched.clone(),
+        );
+        Ok(sharded.serve(requests)?.merged)
     }
 }
 
@@ -290,5 +179,16 @@ mod tests {
             c.serve(make()).unwrap().makespan_ms
         };
         assert!(run(true) < run(false), "continuous batching should win");
+    }
+
+    #[test]
+    fn nan_arrival_times_do_not_panic() {
+        let s = sched(2);
+        let mut e = SimEngine::new(CostModel::default(), &s, 4096);
+        let mut reqs: Vec<Request> = (0..6).map(|i| mk_req(i, i as f64, 5)).collect();
+        reqs[2].arrival_ms = f64::NAN;
+        let mut c = Coordinator::new(&mut e, make_policy(PolicyKind::Fcfs), s);
+        let out = c.serve(reqs).unwrap();
+        assert_eq!(out.report.n_requests, 6);
     }
 }

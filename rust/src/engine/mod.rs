@@ -77,6 +77,56 @@ pub trait Engine {
     /// Whether the KV budget admits a sequence of `prompt + target` tokens.
     fn kv_headroom_for(&self, total_tokens: u32) -> bool;
 
+    /// Logical KV blocks currently reserved (cross-replica load signal).
+    fn kv_blocks_used(&self) -> usize;
+
     /// Idle until `t_ms` (no runnable work; next arrival is in the future).
     fn advance_to(&mut self, t_ms: f64);
+}
+
+/// Delegation through mutable borrows, so the sharded dispatcher can own
+/// `Vec<E>` replicas while the single-replica [`Coordinator`] lends its
+/// borrowed engine as the N=1 case of the same loop.
+///
+/// [`Coordinator`]: crate::coordinator::Coordinator
+impl<E: Engine + ?Sized> Engine for &mut E {
+    fn caps(&self) -> EngineCaps {
+        (**self).caps()
+    }
+
+    fn now_ms(&self) -> f64 {
+        (**self).now_ms()
+    }
+
+    fn prefill(&mut self, tokens: &[i32], target_len: u32) -> Result<SlotId> {
+        (**self).prefill(tokens, target_len)
+    }
+
+    fn decode_step(&mut self) -> Result<Vec<SlotEvent>> {
+        (**self).decode_step()
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        (**self).release(slot)
+    }
+
+    fn active_slots(&self) -> usize {
+        (**self).active_slots()
+    }
+
+    fn free_slots(&self) -> usize {
+        (**self).free_slots()
+    }
+
+    fn kv_headroom_for(&self, total_tokens: u32) -> bool {
+        (**self).kv_headroom_for(total_tokens)
+    }
+
+    fn kv_blocks_used(&self) -> usize {
+        (**self).kv_blocks_used()
+    }
+
+    fn advance_to(&mut self, t_ms: f64) {
+        (**self).advance_to(t_ms)
+    }
 }

@@ -250,6 +250,10 @@ impl Engine for PjrtEngine {
         self.kv_mgr.can_admit(total_tokens as usize)
     }
 
+    fn kv_blocks_used(&self) -> usize {
+        self.kv_mgr.blocks_used()
+    }
+
     fn advance_to(&mut self, t_ms: f64) {
         let now = self.now_ms();
         if t_ms > now {

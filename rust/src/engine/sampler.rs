@@ -35,7 +35,7 @@ pub fn sample(logits: &[f32], cfg: SamplerConfig, rng: &mut Rng) -> usize {
         p.1 /= z;
     }
     // nucleus: keep the smallest prefix of descending probs with mass ≥ top_p
-    probs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    probs.sort_by(|a, b| b.1.total_cmp(&a.1));
     let mut mass = 0.0f32;
     let mut cut = probs.len();
     for (k, (_, p)) in probs.iter().enumerate() {

@@ -123,6 +123,10 @@ impl Engine for SimEngine {
         self.kv.can_admit(total_tokens as usize)
     }
 
+    fn kv_blocks_used(&self) -> usize {
+        self.kv.blocks_used()
+    }
+
     fn advance_to(&mut self, t_ms: f64) {
         if t_ms > self.now_ms {
             self.now_ms = t_ms;

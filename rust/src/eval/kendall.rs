@@ -18,8 +18,8 @@ pub fn kendall_tau_b_naive(x: &[f64], y: &[f64]) -> f64 {
     let (mut nc, mut nd, mut tx, mut ty) = (0i64, 0i64, 0i64, 0i64);
     for i in 0..n {
         for j in (i + 1)..n {
-            let dx = (x[i] - x[j]).partial_cmp(&0.0).unwrap();
-            let dy = (y[i] - y[j]).partial_cmp(&0.0).unwrap();
+            let dx = (x[i] - x[j]).total_cmp(&0.0);
+            let dy = (y[i] - y[j]).total_cmp(&0.0);
             use std::cmp::Ordering::*;
             match (dx, dy) {
                 (Equal, Equal) => {
@@ -51,9 +51,7 @@ pub fn kendall_tau_b(x: &[f64], y: &[f64]) -> f64 {
         return 0.0;
     }
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| {
-        x[a].partial_cmp(&x[b]).unwrap().then(y[a].partial_cmp(&y[b]).unwrap())
-    });
+    idx.sort_by(|&a, &b| x[a].total_cmp(&x[b]).then(y[a].total_cmp(&y[b])));
 
     // tie counts: pairs tied in x (t_x), tied in y (t_y), tied in both (t_xy)
     let t_x = tie_pairs_by(&idx, |&i| x[i]);
@@ -61,7 +59,7 @@ pub fn kendall_tau_b(x: &[f64], y: &[f64]) -> f64 {
     let mut y_sorted: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
     let t_y = {
         let mut yy: Vec<f64> = y.to_vec();
-        yy.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        yy.sort_by(|a, b| a.total_cmp(b));
         tie_pairs_sorted(&yy)
     };
 

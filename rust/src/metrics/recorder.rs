@@ -58,16 +58,29 @@ impl Recorder {
         self.records.is_empty()
     }
 
+    /// Fold another recorder's records into this one (sharded serving
+    /// merges per-replica recorders into one fleet-level report).
+    pub fn absorb(&mut self, mut other: Recorder) {
+        self.records.append(&mut other.records);
+    }
+
     pub fn report(&self, wall_ms: f64) -> LatencyReport {
-        let per_token: Vec<f64> = self.records.iter().map(|r| r.per_token_ms()).collect();
-        let e2e: Vec<f64> = self.records.iter().map(|r| r.e2e_ms()).collect();
-        let queue: Vec<f64> = self.records.iter().map(|r| r.queue_ms()).collect();
-        let ttft: Vec<f64> = self.records.iter().map(|r| r.ttft_ms()).collect();
+        let refs: Vec<&RequestRecord> = self.records.iter().collect();
+        Recorder::report_over(&refs, wall_ms)
+    }
+
+    /// Report over borrowed records from any number of recorders (the
+    /// sharded coordinator merges per-replica records without copying).
+    pub fn report_over(records: &[&RequestRecord], wall_ms: f64) -> LatencyReport {
+        let per_token: Vec<f64> = records.iter().map(|r| r.per_token_ms()).collect();
+        let e2e: Vec<f64> = records.iter().map(|r| r.e2e_ms()).collect();
+        let queue: Vec<f64> = records.iter().map(|r| r.queue_ms()).collect();
+        let ttft: Vec<f64> = records.iter().map(|r| r.ttft_ms()).collect();
         let mut pt_sorted = per_token.clone();
-        pt_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let tokens: u64 = self.records.iter().map(|r| r.output_len as u64).sum();
+        pt_sorted.sort_by(|a, b| a.total_cmp(b));
+        let tokens: u64 = records.iter().map(|r| r.output_len as u64).sum();
         LatencyReport {
-            n_requests: self.records.len(),
+            n_requests: records.len(),
             total_tokens: tokens,
             wall_ms,
             avg_per_token_ms: Summary::of(&per_token).mean,
@@ -78,11 +91,11 @@ impl Recorder {
             ttft: Summary::of(&ttft),
             throughput_tok_s: if wall_ms > 0.0 { tokens as f64 / (wall_ms / 1e3) } else { 0.0 },
             throughput_req_s: if wall_ms > 0.0 {
-                self.records.len() as f64 / (wall_ms / 1e3)
+                records.len() as f64 / (wall_ms / 1e3)
             } else {
                 0.0
             },
-            boosted: self.records.iter().filter(|r| r.boosted).count(),
+            boosted: records.iter().filter(|r| r.boosted).count(),
         }
     }
 }
@@ -154,6 +167,19 @@ mod tests {
         assert_eq!(rep.total_tokens, 30);
         assert!((rep.avg_per_token_ms - 6.0).abs() < 1e-12);
         assert!((rep.throughput_tok_s - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_merges_records() {
+        let mut a = Recorder::default();
+        a.push(rec(1, 0.0, 100.0, 10));
+        let mut b = Recorder::default();
+        b.push(rec(2, 0.0, 40.0, 20));
+        b.push(rec(3, 0.0, 60.0, 30));
+        a.absorb(b);
+        let rep = a.report(1000.0);
+        assert_eq!(rep.n_requests, 3);
+        assert_eq!(rep.total_tokens, 60);
     }
 
     #[test]

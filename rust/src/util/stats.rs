@@ -37,7 +37,7 @@ impl Summary {
             return Summary::default();
         }
         let mut v: Vec<f64> = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let n = v.len();
         let mean = v.iter().sum::<f64>() / n as f64;
         let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;

@@ -13,6 +13,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 
 /// One (dataset, model) evaluation corpus.
 #[derive(Clone, Debug)]
@@ -97,6 +98,72 @@ impl TestSet {
         })
     }
 
+    /// Build a synthetic corpus with no artifacts on disk: heavy-tailed
+    /// per-prompt mean output lengths (the property scheduling cares
+    /// about), random prompt tokens, and independent oracle draws for the
+    /// label / oracle / live lengths — the same shape `make artifacts`
+    /// exports.  Keeps the sim-engine serving paths, the sharded bench
+    /// and CI runnable on a fresh checkout.
+    pub fn synthetic(dataset: &str, model: &str, n_prompts: usize, seed: u64) -> TestSet {
+        assert!(n_prompts > 0);
+        let seq_len = 32usize;
+        let max_len = 512u32;
+        let sigma_run = 0.06;
+        let mut rng = Rng::new(seed ^ 0x5EED_C0DE);
+        // model families differ by mean output length, datasets by spread
+        let base = match model {
+            "r1" => 180.0, // reasoning traces: long, high variance
+            "gpt4" => 90.0,
+            _ => 60.0,
+        };
+        let spread = if dataset == "synthlmsys" { 1.0 } else { 0.7 };
+        let mu_eff: Vec<f64> = (0..n_prompts)
+            .map(|_| (base * rng.lognormal(spread)).clamp(4.0, max_len as f64))
+            .collect();
+
+        let mut tokens = Vec::with_capacity(n_prompts * seq_len);
+        let mut prompt_lens = Vec::with_capacity(n_prompts);
+        for _ in 0..n_prompts {
+            let plen = 4 + rng.below(seq_len - 4); // 4..seq_len real tokens
+            let mut row = vec![0i32; seq_len];
+            row[0] = 1; // BOS
+            for slot in row.iter_mut().take(plen - 1).skip(1) {
+                *slot = 3 + rng.below(250) as i32;
+            }
+            row[plen - 1] = 2; // EOS
+            prompt_lens.push(plen as u32);
+            tokens.extend_from_slice(&row);
+        }
+
+        let draw_run = |rng: &mut Rng| -> Vec<u32> {
+            mu_eff
+                .iter()
+                .map(|&mu| {
+                    let l = mu * rng.lognormal(sigma_run);
+                    (l.round().max(1.0) as u32).min(max_len)
+                })
+                .collect()
+        };
+        let label_len = draw_run(&mut rng);
+        let oracle_len = draw_run(&mut rng);
+        let live_len = draw_run(&mut rng);
+
+        TestSet {
+            dataset: dataset.to_string(),
+            model: model.to_string(),
+            seq_len,
+            tokens,
+            n_prompts,
+            prompt_lens,
+            label_len,
+            oracle_len,
+            live_len,
+            mu_eff,
+            sigma_run,
+            max_len,
+        }
+    }
+
     /// Token slice of one prompt.
     pub fn prompt(&self, i: usize) -> &[i32] {
         &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
@@ -134,6 +201,30 @@ mod tests {
         assert_eq!(ts.prompt(1), &[1, 11, 32, 2]);
         assert_eq!(ts.prompt_lens, vec![3, 4]);
         assert!((ts.mean_live_len() - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn synthetic_corpus_is_well_formed_and_deterministic() {
+        let ts = TestSet::synthetic("synthlmsys", "r1", 64, 7);
+        assert_eq!(ts.n_prompts, 64);
+        assert_eq!(ts.tokens.len(), 64 * ts.seq_len);
+        for i in 0..ts.n_prompts {
+            let plen = ts.prompt_lens[i] as usize;
+            assert!((4..=ts.seq_len).contains(&plen));
+            let row = ts.prompt(i);
+            // non-PAD prefix must be exactly plen (loader convention)
+            assert_eq!(row.iter().take_while(|&&t| t != 0).count(), plen);
+            assert!(ts.live_len[i] >= 1 && ts.live_len[i] <= ts.max_len);
+        }
+        // deterministic for a seed, different across seeds
+        let again = TestSet::synthetic("synthlmsys", "r1", 64, 7);
+        assert_eq!(ts.live_len, again.live_len);
+        let other = TestSet::synthetic("synthlmsys", "r1", 64, 8);
+        assert_ne!(ts.live_len, other.live_len);
+        // reasoning model skews longer than chat model
+        let llama = TestSet::synthetic("synthalpaca", "llama", 256, 7);
+        let r1 = TestSet::synthetic("synthalpaca", "r1", 256, 7);
+        assert!(r1.mean_live_len() > llama.mean_live_len());
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Refactor guard for the sharded coordinator: with a single replica the
+//! new dispatch loop must reproduce the PRE-refactor single-engine
+//! serving loop metric-for-metric (bitwise, not approximately).
+//!
+//! `reference_serve` below is a verbatim port of the original
+//! `Coordinator::serve` (pre-dispatch.rs), kept here frozen so any
+//! behavioural drift in the sharded loop shows up as a test failure.
+//! No artifacts needed — runs on the synthetic sim stack.
+
+use std::collections::HashMap;
+
+use pars_serve::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::{Coordinator, Policy, Request, ShardedCoordinator, WaitingQueue};
+use pars_serve::engine::{Engine, SimEngine};
+use pars_serve::metrics::{LatencyReport, Recorder, RequestRecord};
+
+struct InFlight {
+    req: Request,
+    admitted_ms: f64,
+    first_token_ms: Option<f64>,
+    boosted: bool,
+}
+
+struct ReferenceOutcome {
+    report: LatencyReport,
+    boosts: usize,
+    rejected: usize,
+    peak_waiting: usize,
+    makespan_ms: f64,
+}
+
+/// Verbatim port of the pre-refactor single-replica serving loop.
+fn reference_serve(
+    engine: &mut SimEngine,
+    policy: &dyn Policy,
+    sched: &SchedulerConfig,
+    mut requests: Vec<Request>,
+) -> ReferenceOutcome {
+    requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+    let caps = engine.caps();
+    let mut rejected = 0usize;
+    requests.retain(|r| {
+        let fits = (r.prompt_len + r.target_len) as usize <= caps.max_seq;
+        if !fits {
+            rejected += 1;
+        }
+        fits
+    });
+
+    let n = requests.len();
+    let mut next_arrival = 0usize;
+    let mut waiting = WaitingQueue::new(sched.starvation_ms);
+    let mut running: HashMap<usize, InFlight> = HashMap::new();
+    let mut recorder = Recorder::default();
+    let mut peak_waiting = 0usize;
+    let t0 = engine.now_ms();
+    let mut makespan = t0;
+
+    while recorder.len() < n || !waiting.is_empty() || !running.is_empty() {
+        let now = engine.now_ms();
+
+        // 1. ingest arrivals
+        while next_arrival < n && requests[next_arrival].arrival_ms <= now {
+            waiting.push(requests[next_arrival].clone(), policy);
+            next_arrival += 1;
+        }
+        peak_waiting = peak_waiting.max(waiting.len());
+
+        // 2. starvation guard
+        waiting.apply_starvation_guard(now);
+
+        // 3. admission (continuous: any free slot; static: empty batch)
+        let may_admit = sched.continuous || running.is_empty();
+        if may_admit {
+            while engine.free_slots() > 0 && !waiting.is_empty() {
+                let q = waiting.pop().unwrap();
+                let total = q.req.prompt_len + q.req.target_len;
+                if !engine.kv_headroom_for(total) {
+                    waiting.unpop(q);
+                    break;
+                }
+                let slot = engine.prefill(&q.req.tokens, q.req.target_len).unwrap();
+                running.insert(
+                    slot,
+                    InFlight {
+                        admitted_ms: engine.now_ms(),
+                        first_token_ms: None,
+                        boosted: q.boosted,
+                        req: q.req,
+                    },
+                );
+            }
+        }
+
+        // 4. one decode iteration (or idle until the next arrival)
+        if engine.active_slots() > 0 {
+            let events = engine.decode_step().unwrap();
+            let now = engine.now_ms();
+            for ev in events {
+                let inflight = running.get_mut(&ev.slot).expect("event for unknown slot");
+                if inflight.first_token_ms.is_none() {
+                    inflight.first_token_ms = Some(now);
+                }
+                if ev.finished {
+                    let f = running.remove(&ev.slot).unwrap();
+                    engine.release(ev.slot);
+                    makespan = now;
+                    recorder.push(RequestRecord {
+                        id: f.req.id,
+                        arrival_ms: f.req.arrival_ms,
+                        admitted_ms: f.admitted_ms,
+                        first_token_ms: f.first_token_ms.unwrap_or(now),
+                        completed_ms: now,
+                        prompt_len: f.req.prompt_len,
+                        output_len: ev.generated,
+                        boosted: f.boosted,
+                    });
+                }
+            }
+        } else if !waiting.is_empty() {
+            panic!("reference deadlock: head of queue exceeds idle-engine KV budget");
+        } else if next_arrival < n {
+            engine.advance_to(requests[next_arrival].arrival_ms);
+        } else {
+            break;
+        }
+    }
+
+    let wall = engine.now_ms() - t0;
+    ReferenceOutcome {
+        report: recorder.report(wall),
+        boosts: waiting.boosts,
+        rejected,
+        peak_waiting,
+        makespan_ms: makespan,
+    }
+}
+
+fn mk_req(id: u64, at: f64, target: u32) -> Request {
+    Request {
+        id,
+        tokens: vec![1, 9, 9, 2],
+        prompt_len: 4,
+        arrival_ms: at,
+        target_len: target,
+        oracle_len: target,
+        score: target as f32,
+    }
+}
+
+/// Mixed workload: staggered arrivals, long-tailed lengths, one request
+/// that can never fit (rejection path), enough pressure to fire the
+/// starvation guard and stall admissions on the KV budget.
+fn workload() -> Vec<Request> {
+    let mut v = Vec::new();
+    for i in 0..120u64 {
+        let target = if i % 7 == 0 { 150 } else { 5 + (i % 13) as u32 * 3 };
+        v.push(mk_req(i, (i / 3) as f64 * 4.0, target));
+    }
+    v.push(mk_req(120, 10.0, 5_000)); // oversized: rejected up front
+    v
+}
+
+fn assert_identical(sched: &SchedulerConfig, kind: PolicyKind) {
+    let mut ref_engine = SimEngine::new(CostModel::default(), sched, 4096);
+    let policy = make_policy(kind);
+    let want = reference_serve(&mut ref_engine, policy.as_ref(), sched, workload());
+
+    let mut engine = SimEngine::new(CostModel::default(), sched, 4096);
+    let mut coord = Coordinator::new(&mut engine, make_policy(kind), sched.clone());
+    let got = coord.serve(workload()).unwrap();
+
+    assert_eq!(got.report.n_requests, want.report.n_requests, "{kind:?} n");
+    assert_eq!(got.report.total_tokens, want.report.total_tokens, "{kind:?} tokens");
+    // bitwise equality: the refactor must not move a single event time
+    assert_eq!(got.report.avg_per_token_ms, want.report.avg_per_token_ms, "{kind:?} avg");
+    assert_eq!(got.report.p90_per_token_ms, want.report.p90_per_token_ms, "{kind:?} p90");
+    assert_eq!(got.report.per_token.p99, want.report.per_token.p99, "{kind:?} p99");
+    assert_eq!(got.report.e2e.mean, want.report.e2e.mean, "{kind:?} e2e");
+    assert_eq!(got.report.ttft.p50, want.report.ttft.p50, "{kind:?} ttft");
+    assert_eq!(got.report.queue.max, want.report.queue.max, "{kind:?} queue");
+    assert_eq!(got.report.wall_ms, want.report.wall_ms, "{kind:?} wall");
+    assert_eq!(got.report.throughput_tok_s, want.report.throughput_tok_s, "{kind:?} thru");
+    assert_eq!(got.boosts, want.boosts, "{kind:?} boosts");
+    assert_eq!(got.rejected, want.rejected, "{kind:?} rejected");
+    assert_eq!(got.peak_waiting, want.peak_waiting, "{kind:?} peak_waiting");
+    assert_eq!(got.makespan_ms, want.makespan_ms, "{kind:?} makespan");
+}
+
+#[test]
+fn n1_sharded_equals_legacy_fcfs() {
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 512, // 32 blocks: admissions stall on the KV budget
+        starvation_ms: 500.0,
+        ..Default::default()
+    };
+    assert_identical(&sched, PolicyKind::Fcfs);
+}
+
+#[test]
+fn n1_sharded_equals_legacy_oracle_sjf() {
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 512,
+        starvation_ms: 500.0,
+        ..Default::default()
+    };
+    assert_identical(&sched, PolicyKind::OracleSjf);
+}
+
+#[test]
+fn n1_sharded_equals_legacy_static_batching() {
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 1 << 14,
+        continuous: false,
+        ..Default::default()
+    };
+    assert_identical(&sched, PolicyKind::Fcfs);
+}
+
+#[test]
+fn sjf_boost_fires_in_the_reference_workload() {
+    // guard that `workload()` actually exercises the starvation path
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 512,
+        starvation_ms: 500.0,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(CostModel::default(), &sched, 4096);
+    let policy = make_policy(PolicyKind::OracleSjf);
+    let mut coord = Coordinator::new(&mut engine, policy, sched.clone());
+    let out = coord.serve(workload()).unwrap();
+    assert!(out.boosts > 0, "workload too gentle: starvation guard never fired");
+}
+
+#[test]
+fn sharded_n4_serves_everything_the_single_replica_does() {
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 1 << 14,
+        replicas: 4,
+        dispatch: DispatchKind::LeastLoaded,
+        ..Default::default()
+    };
+    let engines: Vec<SimEngine> =
+        (0..4).map(|_| SimEngine::new(CostModel::default(), &sched, 4096)).collect();
+    let policy = make_policy(PolicyKind::Pars);
+    let mut coord =
+        ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
+    let out = coord.serve(workload()).unwrap();
+    assert_eq!(out.merged.report.n_requests, 120);
+    assert_eq!(out.merged.rejected, 1);
+    assert_eq!(out.per_replica.iter().map(|r| r.report.n_requests).sum::<usize>(), 120);
+}

@@ -1,0 +1,137 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The real crate links the XLA C++ runtime, which is not available in
+//! this build environment.  This stub exposes the same API surface that
+//! `pars-serve::runtime` consumes so the crate always compiles; every
+//! entry point that would touch the device returns
+//! [`Error::Unavailable`] at runtime.  The sim-engine serving path, the
+//! scheduler, and all latency experiments are pure Rust and never reach
+//! these calls; only `--engine pjrt`, `predict`, and `calibrate` need the
+//! real bindings (swap this path dependency for the real crate to enable
+//! them).
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the PJRT runtime is not linked into this build.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "xla stub: {what} requires the real PJRT runtime (not linked in this build)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PjRtClient::cpu"));
+    }
+}
