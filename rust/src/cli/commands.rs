@@ -5,7 +5,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
-use crate::config::{Config, CostModel, DispatchKind, PolicyKind};
+use crate::config::{Config, CostModel, DispatchKind, PolicyKind, ReplicaCaps, StealMode};
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{Coordinator, PjrtScorer, Scorer};
 use crate::engine::{Engine, PjrtEngine};
@@ -46,11 +46,14 @@ COMMANDS:
                 --engine sim|pjrt   --rate <req/s> | --burst <n>
                 --n <requests>      --max-batch <n>   --seed <u64>
                 --replicas <k>      --dispatch round-robin|least-loaded|ranked
+                --steal off|idle|threshold(n)   cross-replica work stealing
+                --replica-caps <kv[:slots],...> per-replica capacity overrides
+                                                (`_` inherits the default)
                 (sim engine falls back to a synthetic corpus when no
                  artifacts are present, so it runs on a fresh checkout)
   sweep         arrival-rate x policy sweep, CSV to stdout or --csv <file>
                 --dataset ... --model ... --n <requests> --reps <k>
-                --replicas <k> --dispatch ...
+                --replicas <k> --dispatch ... --steal ... --replica-caps ...
   predict       score a test set with a predictor, report Kendall tau
                 --dataset ... --model ... --objective pairwise|pointwise|listwise
                 --backbone bert|opt|t5   --nofilter
@@ -82,6 +85,12 @@ fn load_config(args: &Args) -> Result<Config> {
     cfg.scheduler.replicas = args.usize_or("replicas", cfg.scheduler.replicas)?;
     if let Some(d) = args.str_opt("dispatch") {
         cfg.scheduler.dispatch = DispatchKind::parse(d)?;
+    }
+    if let Some(s) = args.str_opt("steal") {
+        cfg.scheduler.steal = StealMode::parse(s)?;
+    }
+    if let Some(rc) = args.str_opt("replica-caps") {
+        cfg.scheduler.replica_caps = ReplicaCaps::parse_list(rc)?;
     }
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.validate()?;
@@ -153,11 +162,13 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}",
+                 replicas={}  dispatch={}  steal={}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
-                cfg.scheduler.dispatch.name()
+                cfg.scheduler.dispatch.name(),
+                cfg.scheduler.steal.name(),
+                if cfg.scheduler.heterogeneous() { "  caps=heterogeneous" } else { "" }
             );
             if book.scoring_ms_per_prompt > 0.0 {
                 println!("admission scoring: {:.3} ms/prompt", book.scoring_ms_per_prompt);
@@ -175,9 +186,11 @@ fn serve(args: &Args) -> Result<()> {
             if cfg.scheduler.replicas > 1 {
                 for rep in &out.per_replica {
                     println!(
-                        "{}  dispatched={}",
+                        "{}  dispatched={}  stolen_in={}  stolen_out={}",
                         rep.report.one_line(&format!("  replica {}", rep.replica)),
-                        rep.dispatched
+                        rep.dispatched,
+                        rep.stolen_in,
+                        rep.stolen_out
                     );
                 }
             }
@@ -235,7 +248,7 @@ fn sweep(args: &Args) -> Result<()> {
     let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
 
     let mut csv = String::from(
-        "dataset,model,policy,replicas,dispatch,rate_req_s,rep,avg_ms_tok,p90_ms_tok,\
+        "dataset,model,policy,replicas,dispatch,steal,rate_req_s,rep,avg_ms_tok,p90_ms_tok,\
          p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts\n",
     );
     for &kind in &suite {
@@ -245,10 +258,11 @@ fn sweep(args: &Args) -> Result<()> {
                 let sc = &cfg.scheduler;
                 let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{}\n",
+                    "{dataset},{model},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{}\n",
                     kind.name().replace(' ', "_"),
                     cfg.scheduler.replicas,
                     cfg.scheduler.dispatch.name(),
+                    cfg.scheduler.steal.name(),
                     out.merged.report.avg_per_token_ms,
                     out.merged.report.p90_per_token_ms,
                     out.merged.report.per_token.p99,

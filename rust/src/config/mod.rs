@@ -103,6 +103,97 @@ impl DispatchKind {
     }
 }
 
+/// When idle replicas may pull queued work from overloaded siblings
+/// (cross-replica work stealing; corrects dispatch-time mis-routing the
+/// way post-admission rescheduling systems do).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealMode {
+    /// Never move work after dispatch (the pre-stealing behaviour).
+    Off,
+    /// A fully idle replica with a free slot steals whenever any sibling
+    /// has waiting work.
+    Idle,
+    /// Like `Idle`, but only when a sibling's waiting queue holds more
+    /// than `n` requests.
+    Threshold(usize),
+}
+
+impl StealMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        let t = s.to_ascii_lowercase();
+        Ok(match t.as_str() {
+            "off" | "none" => StealMode::Off,
+            "idle" => StealMode::Idle,
+            other => {
+                let Some(rest) = other.strip_prefix("threshold") else {
+                    bail!("unknown steal mode {s:?} (off | idle | threshold(n))");
+                };
+                // accept threshold(n) / threshold:n / threshold=n, but
+                // reject anything that is not a plain integer in between
+                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
+                match inner.trim().parse::<usize>() {
+                    Ok(n) => StealMode::Threshold(n),
+                    Err(_) => bail!("steal threshold needs a count, e.g. threshold(4): {s:?}"),
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            StealMode::Off => "off".to_string(),
+            StealMode::Idle => "idle".to_string(),
+            StealMode::Threshold(n) => format!("threshold({n})"),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [StealMode; 3] {
+        [StealMode::Off, StealMode::Idle, StealMode::Threshold(4)]
+    }
+}
+
+/// Per-replica capacity override for heterogeneous fleets.  `None`
+/// fields inherit the fleet-wide `SchedulerConfig` defaults.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaCaps {
+    pub max_batch: Option<usize>,
+    pub max_kv_tokens: Option<usize>,
+}
+
+impl ReplicaCaps {
+    /// Parse a `--replica-caps` list: one comma-separated entry per
+    /// replica, each `kv_tokens[:batch_slots]`; an empty field or `_`
+    /// inherits the fleet default.  Example: `65536:32,32768:16,_,8192`.
+    pub fn parse_list(s: &str) -> Result<Vec<ReplicaCaps>> {
+        fn field(v: &str, what: &str) -> Result<Option<usize>> {
+            let v = v.trim();
+            if v.is_empty() || v == "_" {
+                return Ok(None);
+            }
+            match v.parse::<usize>() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => bail!("replica caps: bad {what} {v:?}"),
+            }
+        }
+        s.split(',')
+            .map(|entry| {
+                let (kv, batch) = match entry.split_once(':') {
+                    Some((a, b)) => (a, Some(b)),
+                    None => (entry, None),
+                };
+                Ok(ReplicaCaps {
+                    max_kv_tokens: field(kv, "kv budget")?,
+                    max_batch: match batch {
+                        Some(b) => field(b, "batch slots")?,
+                        None => None,
+                    },
+                })
+            })
+            .collect()
+    }
+}
+
 /// Scheduler/batcher knobs (paper §III-B + vLLM-style limits).
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
@@ -121,6 +212,11 @@ pub struct SchedulerConfig {
     pub replicas: usize,
     /// Cross-replica dispatch policy (only meaningful for `replicas > 1`).
     pub dispatch: DispatchKind,
+    /// Cross-replica work stealing (only meaningful for `replicas > 1`).
+    pub steal: StealMode,
+    /// Per-replica capacity overrides (entry `i` applies to replica `i`;
+    /// shorter than `replicas` ⇒ the rest use the fleet defaults).
+    pub replica_caps: Vec<ReplicaCaps>,
 }
 
 impl Default for SchedulerConfig {
@@ -133,6 +229,37 @@ impl Default for SchedulerConfig {
             static_max_wait_ms: 50.0,
             replicas: 1,
             dispatch: DispatchKind::RoundRobin,
+            steal: StealMode::Off,
+            replica_caps: Vec::new(),
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Effective batch-slot count for replica `i`.
+    pub fn batch_for(&self, i: usize) -> usize {
+        self.replica_caps.get(i).and_then(|c| c.max_batch).unwrap_or(self.max_batch)
+    }
+
+    /// Effective KV-token budget for replica `i`.
+    pub fn kv_for(&self, i: usize) -> usize {
+        self.replica_caps.get(i).and_then(|c| c.max_kv_tokens).unwrap_or(self.max_kv_tokens)
+    }
+
+    /// True when any replica overrides the fleet-wide capacity defaults.
+    pub fn heterogeneous(&self) -> bool {
+        (0..self.replicas)
+            .any(|i| self.batch_for(i) != self.max_batch || self.kv_for(i) != self.max_kv_tokens)
+    }
+
+    /// The config as replica `i` sees it: capacity overrides applied,
+    /// everything else shared.  Engine builders use this so harness,
+    /// tests and benches construct heterogeneous fleets identically.
+    pub fn for_replica(&self, i: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: self.batch_for(i),
+            max_kv_tokens: self.kv_for(i),
+            ..self.clone()
         }
     }
 }
@@ -227,6 +354,16 @@ impl Config {
         if let Some(v) = doc.get_str("scheduler", "dispatch") {
             c.scheduler.dispatch = DispatchKind::parse(v)?;
         }
+        if let Some(v) = doc.get_str("scheduler", "steal") {
+            c.scheduler.steal = StealMode::parse(v)?;
+        }
+        for i in 0..doc.array_len("scheduler.replica") {
+            let sect = format!("scheduler.replica.{i}");
+            c.scheduler.replica_caps.push(ReplicaCaps {
+                max_batch: doc.get_num(&sect, "max_batch").map(|v| v as usize),
+                max_kv_tokens: doc.get_num(&sect, "max_kv_tokens").map(|v| v as usize),
+            });
+        }
         if let Some(v) = doc.get_num("cost", "decode_base_ms") {
             c.cost.decode_base_ms = v;
         }
@@ -255,6 +392,21 @@ impl Config {
         }
         if self.scheduler.replicas == 0 {
             bail!("scheduler.replicas must be > 0");
+        }
+        if self.scheduler.replica_caps.len() > self.scheduler.replicas {
+            bail!(
+                "{} replica capacity overrides for {} replicas",
+                self.scheduler.replica_caps.len(),
+                self.scheduler.replicas
+            );
+        }
+        for (i, rc) in self.scheduler.replica_caps.iter().enumerate() {
+            if rc.max_batch == Some(0) {
+                bail!("replica {i}: max_batch override must be > 0");
+            }
+            if rc.max_kv_tokens.is_some_and(|kv| kv < 256) {
+                bail!("replica {i}: max_kv_tokens override too small (< 256)");
+            }
         }
         if self.cost.decode_base_ms < 0.0
             || self.cost.decode_per_seq_ms < 0.0
@@ -323,6 +475,84 @@ mod tests {
         let d = Config::default();
         assert_eq!(d.scheduler.replicas, 1);
         assert_eq!(d.scheduler.dispatch, DispatchKind::RoundRobin);
+    }
+
+    #[test]
+    fn parse_steal_and_replica_caps() {
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            replicas = 3
+            dispatch = "least-loaded"
+            steal = "threshold(4)"
+            [[scheduler.replica]]
+            max_kv_tokens = 32768
+            max_batch = 16
+            [[scheduler.replica]]
+            max_kv_tokens = 8192
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.steal, StealMode::Threshold(4));
+        assert_eq!(c.scheduler.replica_caps.len(), 2);
+        assert_eq!(c.scheduler.kv_for(0), 32_768);
+        assert_eq!(c.scheduler.batch_for(0), 16);
+        assert_eq!(c.scheduler.kv_for(1), 8_192);
+        assert_eq!(c.scheduler.batch_for(1), 32); // inherits the default
+        assert_eq!(c.scheduler.kv_for(2), 65_536); // past the overrides
+        assert!(c.scheduler.heterogeneous());
+        assert!(!SchedulerConfig::default().heterogeneous());
+    }
+
+    #[test]
+    fn steal_mode_parse_and_names() {
+        assert_eq!(StealMode::parse("off").unwrap(), StealMode::Off);
+        assert_eq!(StealMode::parse("IDLE").unwrap(), StealMode::Idle);
+        assert_eq!(StealMode::parse("threshold(7)").unwrap(), StealMode::Threshold(7));
+        assert_eq!(StealMode::parse("threshold:7").unwrap(), StealMode::Threshold(7));
+        assert!(StealMode::parse("threshold").is_err());
+        assert!(StealMode::parse("eager").is_err());
+        // malformed counts must error, not silently misparse
+        assert!(StealMode::parse("threshold(2.5)").is_err());
+        assert!(StealMode::parse("threshold(-3)").is_err());
+        assert!(StealMode::parse("threshold(1)(2)").is_err());
+        for m in StealMode::all() {
+            assert_eq!(StealMode::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn replica_caps_cli_list() {
+        let caps = ReplicaCaps::parse_list("65536:32,32768:16,_,8192").unwrap();
+        assert_eq!(caps.len(), 4);
+        assert_eq!(caps[0], ReplicaCaps { max_batch: Some(32), max_kv_tokens: Some(65_536) });
+        assert_eq!(caps[1], ReplicaCaps { max_batch: Some(16), max_kv_tokens: Some(32_768) });
+        assert_eq!(caps[2], ReplicaCaps::default());
+        assert_eq!(caps[3], ReplicaCaps { max_batch: None, max_kv_tokens: Some(8_192) });
+        assert!(ReplicaCaps::parse_list("abc").is_err());
+        assert!(ReplicaCaps::parse_list("1024:x").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_replica_overrides() {
+        // more overrides than replicas
+        assert!(Config::from_toml(
+            "[scheduler]\nreplicas = 1\n[[scheduler.replica]]\nmax_batch = 4\n\
+             [[scheduler.replica]]\nmax_batch = 4"
+        )
+        .is_err());
+        // zero batch override
+        assert!(Config::from_toml(
+            "[scheduler]\nreplicas = 2\n[[scheduler.replica]]\nmax_batch = 0"
+        )
+        .is_err());
+        // tiny KV override
+        assert!(Config::from_toml(
+            "[scheduler]\nreplicas = 2\n[[scheduler.replica]]\nmax_kv_tokens = 64"
+        )
+        .is_err());
+        // bad steal mode
+        assert!(Config::from_toml("[scheduler]\nsteal = \"sometimes\"").is_err());
     }
 
     #[test]

@@ -1,6 +1,11 @@
-//! TOML-subset parser: `[section]` headers and `key = value` pairs with
-//! string / number / boolean values, `#` comments.  No arrays, dates or
-//! nested tables — deliberately small; config/mod.rs defines the schema.
+//! TOML-subset parser: `[section]` headers, `[[section]]` array-of-table
+//! headers, and `key = value` pairs with string / number / boolean
+//! values, `#` comments.  No value arrays, dates or nested inline tables
+//! — deliberately small; config/mod.rs defines the schema.
+//!
+//! An `[[name]]` header opens the next element of the `name` array:
+//! its keys land in the synthetic section `name.<index>` (0-based) and
+//! [`TomlDoc::array_len`] reports how many elements were seen.
 
 use std::collections::BTreeMap;
 
@@ -17,6 +22,8 @@ pub enum TomlValue {
 #[derive(Debug, Default)]
 pub struct TomlDoc {
     entries: BTreeMap<(String, String), TomlValue>,
+    /// `[[name]]` header counts: name → number of elements seen.
+    arrays: BTreeMap<String, usize>,
 }
 
 impl TomlDoc {
@@ -26,6 +33,19 @@ impl TomlDoc {
         for (lineno, raw) in src.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let Some(name) = rest.strip_suffix("]]") else {
+                    bail!("line {}: unterminated array-of-tables header", lineno + 1);
+                };
+                let name = name.trim();
+                if name.is_empty() {
+                    bail!("line {}: empty array-of-tables name", lineno + 1);
+                }
+                let idx = doc.arrays.entry(name.to_string()).or_insert(0);
+                section = format!("{name}.{idx}");
+                *idx += 1;
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -80,6 +100,12 @@ impl TomlDoc {
 
     pub fn keys(&self) -> impl Iterator<Item = &(String, String)> {
         self.entries.keys()
+    }
+
+    /// Number of `[[name]]` elements in the document (0 if absent).
+    /// Element `i`'s keys live under the section `"{name}.{i}"`.
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).copied().unwrap_or(0)
     }
 }
 
@@ -143,5 +169,22 @@ mod tests {
     fn hash_inside_string() {
         let doc = TomlDoc::parse("x = \"a#b\"").unwrap();
         assert_eq!(doc.get_str("", "x"), Some("a#b"));
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = TomlDoc::parse(
+            "[a]\nx = 1\n[[a.rep]]\nn = 10\n[[a.rep]]\nn = 20\nm = 30\n[b]\ny = 2\n",
+        )
+        .unwrap();
+        assert_eq!(doc.array_len("a.rep"), 2);
+        assert_eq!(doc.array_len("missing"), 0);
+        assert_eq!(doc.get_num("a.rep.0", "n"), Some(10.0));
+        assert_eq!(doc.get_num("a.rep.1", "n"), Some(20.0));
+        assert_eq!(doc.get_num("a.rep.1", "m"), Some(30.0));
+        assert_eq!(doc.get_num("a", "x"), Some(1.0));
+        assert_eq!(doc.get_num("b", "y"), Some(2.0));
+        assert!(TomlDoc::parse("[[oops]\nn = 1").is_err());
+        assert!(TomlDoc::parse("[[ ]]\nn = 1").is_err());
     }
 }

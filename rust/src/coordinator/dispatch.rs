@@ -23,13 +23,32 @@
 //! prompt + target tokens.  In the simulator the target is the oracle
 //! draw; a production dispatcher would substitute the predictor output,
 //! which is exactly what the PARS score estimates.
+//!
+//! Two fleet-level mechanisms sit on top of dispatch:
+//!
+//! * **Heterogeneous replicas** — per-replica KV/batch capacities
+//!   (`[[scheduler.replica]]` / `--replica-caps`).  Load keys are
+//!   normalised by capacity, so a replica with twice the KV budget
+//!   absorbs twice the token demand before looking "as loaded"; in a
+//!   homogeneous fleet the normalisation is exact identity and routing
+//!   is bit-for-bit what it was without it.
+//! * **Work stealing** (`[scheduler] steal = off|idle|threshold(n)`) —
+//!   a dispatch decision is made once, at admission, so one mis-routed
+//!   long job can pin short jobs behind it while sibling replicas drain
+//!   idle.  When a replica goes fully idle with a free slot, it pulls
+//!   the *lowest-priority* (longest-predicted) request from the deepest
+//!   over-threshold queue of a *busy* sibling — the victim keeps its
+//!   SJF pop order, both sides re-charge `queued_tokens`, and
+//!   `steal = off` leaves the serve loop untouched (pinned bitwise by
+//!   `tests/sharded.rs`).
 
 use std::collections::{HashMap, VecDeque};
 
 use anyhow::Context;
 
-use crate::config::{DispatchKind, SchedulerConfig};
+use crate::config::{DispatchKind, SchedulerConfig, StealMode};
 use crate::coordinator::queue::QueuedRequest;
+use crate::engine::kv_cache::BLOCK_TOKENS;
 use crate::coordinator::server::ServeOutcome;
 use crate::coordinator::{Policy, Request, WaitingQueue};
 use crate::engine::Engine;
@@ -55,10 +74,19 @@ struct Replica<E: Engine> {
     recorder: Recorder,
     /// Requests routed to this replica.
     dispatched: usize,
+    /// Requests this replica pulled from siblings' waiting queues.
+    stolen_in: usize,
+    /// Requests siblings pulled from this replica's waiting queue.
+    stolen_out: usize,
     /// prompt+target tokens sitting in inbox + waiting queue.
     queued_tokens: u64,
     /// prompt+target tokens reserved by the running batch.
     running_tokens: u64,
+    /// Static KV capacity in blocks (heterogeneous fleets normalise the
+    /// cross-replica load signal by this).
+    kv_blocks: usize,
+    /// Static batch-slot capacity.
+    slots: usize,
     peak_waiting: usize,
     t0: f64,
     makespan_ms: f64,
@@ -67,6 +95,8 @@ struct Replica<E: Engine> {
 impl<E: Engine> Replica<E> {
     fn new(engine: E, starvation_ms: f64) -> Replica<E> {
         let t0 = engine.now_ms();
+        let kv_blocks = engine.kv_blocks_total();
+        let slots = engine.caps().max_slots;
         Replica {
             engine,
             inbox: VecDeque::new(),
@@ -74,8 +104,12 @@ impl<E: Engine> Replica<E> {
             running: HashMap::new(),
             recorder: Recorder::default(),
             dispatched: 0,
+            stolen_in: 0,
+            stolen_out: 0,
             queued_tokens: 0,
             running_tokens: 0,
+            kv_blocks,
+            slots,
             peak_waiting: 0,
             t0,
             makespan_ms: t0,
@@ -98,11 +132,25 @@ impl<E: Engine> Replica<E> {
         self.queued_tokens + self.running_tokens
     }
 
-    /// Dispatch load key — KV/slot occupancy: reserved + queued token
-    /// demand, then in-system request count, then physically allocated
-    /// KV blocks.
-    fn load_key(&self) -> (u64, usize, usize) {
-        (self.in_system_tokens(), self.in_system(), self.engine.kv_blocks_used())
+    /// Dispatch load key — capacity-normalised KV/slot occupancy:
+    /// reserved + queued token demand scaled by `fleet_max_kv_blocks /
+    /// own_kv_blocks` (a replica with twice the KV budget counts as half
+    /// as loaded per token; in a homogeneous fleet the ratio is 1 and the
+    /// key is the raw token count, bit-for-bit), then in-system request
+    /// count, then physically allocated KV blocks.
+    fn load_key(&self, fleet_max_kv_blocks: usize) -> (u128, usize, usize) {
+        let scaled = self.in_system_tokens() as u128 * fleet_max_kv_blocks as u128
+            / self.kv_blocks.max(1) as u128;
+        (scaled, self.in_system(), self.engine.kv_blocks_used())
+    }
+
+    /// Whether this replica's *total* KV budget can ever hold a sequence
+    /// of `total_tokens` — the admission fit test against an empty cache.
+    /// In a heterogeneous fleet the dispatcher must not route (and a
+    /// thief must not steal) work onto a replica that could only ever
+    /// deadlock on it.
+    fn can_ever_hold(&self, total_tokens: u32) -> bool {
+        (total_tokens.max(1) as usize).div_ceil(BLOCK_TOKENS) <= self.kv_blocks
     }
 
     /// One scheduling iteration: ingest due arrivals, re-apply the
@@ -201,6 +249,10 @@ pub struct ReplicaOutcome {
     /// This replica's per-request records, in completion order.
     pub records: Vec<crate::metrics::RequestRecord>,
     pub dispatched: usize,
+    /// Requests pulled in from siblings by work stealing.
+    pub stolen_in: usize,
+    /// Requests siblings pulled out of this replica's waiting queue.
+    pub stolen_out: usize,
     pub boosts: usize,
     pub peak_waiting: usize,
     pub makespan_ms: f64,
@@ -223,6 +275,10 @@ pub struct ShardedCoordinator<'p, E: Engine> {
     dispatch: DispatchKind,
     sched: SchedulerConfig,
     rr_cursor: usize,
+    /// Largest per-replica KV capacity (blocks) — load normalisation.
+    fleet_max_kv_blocks: usize,
+    /// Largest per-replica batch-slot count — queue-depth normalisation.
+    fleet_max_slots: usize,
 }
 
 impl<'p, E: Engine> ShardedCoordinator<'p, E> {
@@ -234,12 +290,18 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
     ) -> Self {
         assert!(!engines.is_empty(), "sharded coordinator needs at least one replica");
         let starvation_ms = sched.starvation_ms;
+        let replicas: Vec<Replica<E>> =
+            engines.into_iter().map(|e| Replica::new(e, starvation_ms)).collect();
+        let fleet_max_kv_blocks = replicas.iter().map(|r| r.kv_blocks).max().unwrap_or(1);
+        let fleet_max_slots = replicas.iter().map(|r| r.slots).max().unwrap_or(1);
         ShardedCoordinator {
-            replicas: engines.into_iter().map(|e| Replica::new(e, starvation_ms)).collect(),
+            replicas,
             policy,
             dispatch,
             sched,
             rr_cursor: 0,
+            fleet_max_kv_blocks,
+            fleet_max_slots,
         }
     }
 
@@ -247,33 +309,141 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         self.replicas.len()
     }
 
-    fn argmin_by_key<K: Ord>(&self, load: impl Fn(&Replica<E>) -> K) -> usize {
-        // min_by_key keeps the FIRST minimum, so ties go to the lowest index
+    /// Argmin over replicas whose KV budget can hold the request at all
+    /// (every replica, in a homogeneous fleet — the caller has already
+    /// rejected requests nobody can hold).  min_by_key keeps the FIRST
+    /// minimum, so ties go to the lowest index.
+    fn argmin_eligible<K: Ord>(
+        &self,
+        total_tokens: u32,
+        load: impl Fn(&Replica<E>) -> K,
+    ) -> usize {
         self.replicas
             .iter()
             .enumerate()
+            .filter(|(_, r)| r.can_ever_hold(total_tokens))
             .min_by_key(|&(_, r)| load(r))
             .map(|(i, _)| i)
             .unwrap_or(0)
     }
 
     /// Choose the replica for the next arrival (ties go to the lowest
-    /// replica index, keeping dispatch deterministic).
-    fn pick_replica(&mut self) -> usize {
+    /// replica index, keeping dispatch deterministic).  Replicas whose
+    /// whole KV budget is smaller than the request are skipped, so a
+    /// heterogeneous fleet routes big jobs around its small replicas
+    /// instead of wedging them.
+    fn pick_replica(&mut self, total_tokens: u32) -> usize {
         if self.replicas.len() == 1 {
             return 0;
         }
         match self.dispatch {
             DispatchKind::RoundRobin => {
-                let i = self.rr_cursor % self.replicas.len();
+                let n = self.replicas.len();
+                let start = self.rr_cursor % n;
                 self.rr_cursor = self.rr_cursor.wrapping_add(1);
-                i
+                // probe forward from the cursor to the first replica that
+                // can hold the request (the cursor itself when the fleet
+                // is homogeneous, keeping PR 1 routing bit-for-bit)
+                (0..n)
+                    .map(|k| (start + k) % n)
+                    .find(|&i| self.replicas[i].can_ever_hold(total_tokens))
+                    .unwrap_or(start)
             }
-            DispatchKind::LeastLoaded => self.argmin_by_key(|r| r.load_key()),
-            // Emptiest waiting queue; the scheduling policy then runs
+            DispatchKind::LeastLoaded => {
+                let max_kv = self.fleet_max_kv_blocks;
+                self.argmin_eligible(total_tokens, |r| r.load_key(max_kv))
+            }
+            // Emptiest waiting queue relative to drain rate (queue depth
+            // scaled by `fleet_max_slots / own_slots`; raw depth in a
+            // homogeneous fleet); the scheduling policy then runs
             // shortest-predicted-first within the replica.
-            DispatchKind::Ranked => self.argmin_by_key(|r| (r.queue_len(), r.queued_tokens)),
+            DispatchKind::Ranked => {
+                let (max_kv, max_slots) = (self.fleet_max_kv_blocks, self.fleet_max_slots);
+                self.argmin_eligible(total_tokens, |r| {
+                    (
+                        r.queue_len() as u128 * max_slots as u128 / r.slots.max(1) as u128,
+                        r.queued_tokens as u128 * max_kv as u128 / r.kv_blocks.max(1) as u128,
+                    )
+                })
+            }
         }
+    }
+
+    /// One work-stealing round: the lowest-indexed fully idle replica
+    /// with a free batch slot *and KV headroom for the stolen entry*
+    /// pulls the single lowest-priority (longest-predicted) request from
+    /// the waiting queue of the *busy* sibling with the deepest
+    /// over-threshold backlog.  `queued_tokens` is re-charged on both
+    /// sides, the victim queue's pop order is preserved, and the stolen
+    /// entry keeps its starvation boost.  Returns true when a request
+    /// moved, so the serve loop re-derives the lagging clock before
+    /// stepping.
+    ///
+    /// Only replicas with something *running* are valid victims: a
+    /// replica with waiting work but an empty batch will admit that work
+    /// itself on its very next step, so robbing it helps nobody — and
+    /// allowing it would let two idle replicas steal a lone request back
+    /// and forth forever without the fleet ever stepping.
+    fn try_steal(&mut self) -> bool {
+        let min_victim_len = match self.sched.steal {
+            StealMode::Off => return false,
+            StealMode::Idle => 1,
+            StealMode::Threshold(n) => n.saturating_add(1),
+        };
+        if self.replicas.len() < 2 {
+            return false;
+        }
+        // cheap pre-check keeps the serve loop O(replicas) when nobody
+        // is idle (the common case)
+        if !self.replicas.iter().any(|r| !r.has_work() && r.engine.free_slots() > 0) {
+            return false;
+        }
+        // deepest waiting queue over the threshold among busy replicas;
+        // ties → lowest index.  Busy victims and idle thieves are
+        // disjoint sets, so no replica can rob itself.
+        let mut victim: Option<(usize, usize)> = None;
+        for (i, r) in self.replicas.iter().enumerate() {
+            if r.running.is_empty() {
+                continue;
+            }
+            let len = r.waiting.len();
+            let deeper = match victim {
+                None => true,
+                Some((_, best)) => len > best,
+            };
+            if len >= min_victim_len && deeper {
+                victim = Some((i, len));
+            }
+        }
+        let Some((victim, _)) = victim else {
+            return false;
+        };
+        let Some(q) = self.replicas[victim].waiting.steal_lowest_priority() else {
+            return false;
+        };
+        // thief: lowest-indexed idle replica that can actually hold the
+        // stolen entry — a small idle replica must not shield a larger
+        // idle sibling from doing the rescue
+        let total = q.req.prompt_len + q.req.target_len;
+        let thief = self.replicas.iter().position(|r| {
+            !r.has_work() && r.engine.free_slots() > 0 && r.engine.kv_headroom_for(total)
+        });
+        let Some(thief) = thief else {
+            // no idle replica can hold even this one — put it back untouched
+            self.replicas[victim].waiting.unpop(q);
+            return false;
+        };
+        let v = &mut self.replicas[victim];
+        v.queued_tokens = v.queued_tokens.saturating_sub(total as u64);
+        v.stolen_out += 1;
+        let t = &mut self.replicas[thief];
+        t.queued_tokens += total as u64;
+        t.stolen_in += 1;
+        // the hand-off cannot predate the request's existence: lift the
+        // idle thief's clock to the arrival before it runs stolen work
+        t.engine.advance_to(q.req.arrival_ms);
+        t.waiting.push_scored(q);
+        true
     }
 
     /// Serve a pre-collected workload.  Arrival times are totally ordered
@@ -298,7 +468,10 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
     where
         I: IntoIterator<Item = Request>,
     {
-        let caps = self.replicas[0].engine.caps();
+        // a request must fit the smallest sequence budget in the fleet —
+        // it could be routed (or stolen) onto any replica
+        let fleet_max_seq =
+            self.replicas.iter().map(|r| r.engine.caps().max_seq).min().unwrap_or(0);
         let mut stream = arrivals.into_iter().peekable();
         let mut rejected = 0usize;
 
@@ -324,18 +497,31 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                     req.arrival_ms = 0.0; // NaN-bearing traces arrive "now"
                 }
                 let total = req.prompt_len + req.target_len;
-                if total as usize > caps.max_seq {
-                    // can never fit any replica's sequence budget
+                if total as usize > fleet_max_seq {
+                    // can never fit every replica's sequence budget
+                    rejected += 1;
+                    continue;
+                }
+                if !self.replicas.iter().any(|r| r.can_ever_hold(total)) {
+                    // larger than every replica's entire KV budget —
+                    // reject up front instead of deadlocking whichever
+                    // replica it would land on
                     rejected += 1;
                     continue;
                 }
                 let key = self.policy.key(&req);
-                let idx = self.pick_replica();
+                let idx = self.pick_replica(total);
                 let r = &mut self.replicas[idx];
                 r.dispatched += 1;
                 r.queued_tokens += total as u64;
                 r.inbox.push_back(QueuedRequest { req, key, boosted: false });
                 continue;
+            }
+
+            // no arrival due: let an idle replica pull queued work off an
+            // overloaded sibling before the fleet advances
+            if self.try_steal() {
+                continue; // re-derive the lagging clock — the thief has work now
             }
 
             match next_step {
@@ -363,6 +549,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 report: rec.report(r_wall),
                 records: rec.records,
                 dispatched: r.dispatched,
+                stolen_in: r.stolen_in,
+                stolen_out: r.stolen_out,
                 boosts: r.waiting.boosts,
                 peak_waiting: r.peak_waiting,
                 makespan_ms: r.makespan_ms,
@@ -416,7 +604,9 @@ mod tests {
     }
 
     fn engines(s: &SchedulerConfig, max_seq: usize) -> Vec<SimEngine> {
-        (0..s.replicas).map(|_| SimEngine::new(CostModel::default(), s, max_seq)).collect()
+        (0..s.replicas)
+            .map(|i| SimEngine::new(CostModel::default(), &s.for_replica(i), max_seq))
+            .collect()
     }
 
     fn run(
@@ -519,6 +709,240 @@ mod tests {
         reqs[3].arrival_ms = f64::NAN;
         let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
         assert_eq!(out.merged.report.n_requests, 8);
+    }
+
+    /// The acceptance-criteria skew trace: one 1000-token job plus many
+    /// short jobs, all at t=0, across 4 single-slot replicas.  Under
+    /// FCFS + least-loaded the long job lands first on replica 0 and the
+    /// late shorts routed there queue behind it while siblings drain.
+    fn skewed_burst() -> Vec<Request> {
+        let mut v = vec![mk_req(0, 0.0, 1000)];
+        v.extend((1..=300).map(|i| mk_req(i, 0.0, 10)));
+        v
+    }
+
+    fn skew_sched(steal: StealMode) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: 1,
+            max_kv_tokens: 1 << 20,
+            replicas: 4,
+            dispatch: DispatchKind::LeastLoaded,
+            steal,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn steal_idle_beats_off_on_a_skewed_burst() {
+        let off = run(&skew_sched(StealMode::Off), PolicyKind::Fcfs, skewed_burst(), 4096);
+        let idle = run(&skew_sched(StealMode::Idle), PolicyKind::Fcfs, skewed_burst(), 4096);
+        assert_eq!(off.merged.report.n_requests, 301);
+        assert_eq!(idle.merged.report.n_requests, 301);
+        let stolen: usize = idle.per_replica.iter().map(|r| r.stolen_in).sum();
+        let donated: usize = idle.per_replica.iter().map(|r| r.stolen_out).sum();
+        assert!(stolen > 0, "idle replicas never stole from the blocked queue");
+        assert_eq!(stolen, donated, "every steal needs both sides re-charged");
+        assert!(
+            idle.merged.report.e2e.mean < off.merged.report.e2e.mean,
+            "stealing must strictly cut mean latency: off={:.1} idle={:.1}",
+            off.merged.report.e2e.mean,
+            idle.merged.report.e2e.mean
+        );
+        assert!(
+            idle.merged.makespan_ms < off.merged.makespan_ms,
+            "stealing must strictly cut makespan: off={:.1} idle={:.1}",
+            off.merged.makespan_ms,
+            idle.merged.makespan_ms
+        );
+    }
+
+    #[test]
+    fn threshold_mode_leaves_shallow_queues_alone() {
+        // the skew trace parks ~25 shorts behind the long job — far below
+        // a threshold of 200, so threshold mode must behave exactly like
+        // steal=off, down to the last event time
+        let off = run(&skew_sched(StealMode::Off), PolicyKind::Fcfs, skewed_burst(), 4096);
+        let th =
+            run(&skew_sched(StealMode::Threshold(200)), PolicyKind::Fcfs, skewed_burst(), 4096);
+        assert_eq!(th.per_replica.iter().map(|r| r.stolen_in).sum::<usize>(), 0);
+        assert_eq!(th.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(th.merged.report.avg_per_token_ms, off.merged.report.avg_per_token_ms);
+        // ... while a threshold the backlog does clear fires like idle
+        let th5 =
+            run(&skew_sched(StealMode::Threshold(5)), PolicyKind::Fcfs, skewed_burst(), 4096);
+        assert!(th5.per_replica.iter().map(|r| r.stolen_in).sum::<usize>() > 0);
+        assert!(th5.merged.makespan_ms < off.merged.makespan_ms);
+    }
+
+    #[test]
+    fn single_replica_cannot_steal() {
+        // N=1: no sibling to steal from — idle mode must be bitwise off
+        let mk = |steal: StealMode| {
+            let s = SchedulerConfig {
+                max_batch: 2,
+                max_kv_tokens: 1 << 14,
+                replicas: 1,
+                steal,
+                ..Default::default()
+            };
+            run(&s, PolicyKind::OracleSjf, skewed_burst(), 4096)
+        };
+        let off = mk(StealMode::Off);
+        let idle = mk(StealMode::Idle);
+        assert_eq!(idle.per_replica[0].stolen_in, 0);
+        assert_eq!(idle.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(idle.merged.report.avg_per_token_ms, off.merged.report.avg_per_token_ms);
+        assert_eq!(idle.merged.report.e2e.mean, off.merged.report.e2e.mean);
+    }
+
+    #[test]
+    fn stealing_conserves_every_request() {
+        for steal in StealMode::all() {
+            for dispatch in DispatchKind::all() {
+                let s = SchedulerConfig {
+                    max_batch: 2,
+                    max_kv_tokens: 1 << 14,
+                    replicas: 3,
+                    dispatch,
+                    steal,
+                    ..Default::default()
+                };
+                let out = run(&s, PolicyKind::OracleSjf, skewed_burst(), 4096);
+                assert_eq!(out.merged.report.n_requests, 301, "{steal:?}/{dispatch:?}");
+                let mut ids: Vec<u64> = out
+                    .per_replica
+                    .iter()
+                    .flat_map(|r| r.records.iter().map(|rec| rec.id))
+                    .collect();
+                ids.sort_unstable();
+                assert_eq!(ids, (0..=300).collect::<Vec<u64>>(), "{steal:?}/{dispatch:?}");
+                let dispatched: usize = out.per_replica.iter().map(|r| r.dispatched).sum();
+                assert_eq!(dispatched, 301, "{steal:?}/{dispatch:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_caps_normalise_least_loaded() {
+        // replica 0 has 4× the KV budget: capacity-normalised least-loaded
+        // routing should hand it roughly 4× the uniform-burst work
+        let mut s = sched(2, 32, DispatchKind::LeastLoaded);
+        s.max_kv_tokens = 1024;
+        s.replica_caps = vec![crate::config::ReplicaCaps {
+            max_batch: None,
+            max_kv_tokens: Some(4096),
+        }];
+        let reqs: Vec<Request> = (0..50).map(|i| mk_req(i, 0.0, 10)).collect();
+        let policy = make_policy(PolicyKind::Fcfs);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let out = coord.serve(reqs).unwrap();
+        assert_eq!(out.merged.report.n_requests, 50);
+        let (big, small) = (out.per_replica[0].dispatched, out.per_replica[1].dispatched);
+        assert!(
+            big >= 3 * small,
+            "big replica should absorb ~4× the work: big={big} small={small}"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_caps_normalise_ranked_queue_depth() {
+        // replica 0 has 4× the batch slots: it drains 4× faster, so the
+        // ranked dispatcher should hand it most of a uniform burst
+        let mut s = sched(2, 2, DispatchKind::Ranked);
+        s.replica_caps =
+            vec![crate::config::ReplicaCaps { max_batch: Some(8), max_kv_tokens: None }];
+        let reqs: Vec<Request> = (0..60).map(|i| mk_req(i, 0.0, 10)).collect();
+        let policy = make_policy(PolicyKind::Fcfs);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let out = coord.serve(reqs).unwrap();
+        assert_eq!(out.merged.report.n_requests, 60);
+        let (big, small) = (out.per_replica[0].dispatched, out.per_replica[1].dispatched);
+        assert!(big > 2 * small, "8-slot replica should dominate: big={big} small={small}");
+    }
+
+    #[test]
+    fn big_jobs_route_around_a_small_replica() {
+        // replica 1's whole KV budget (512 tokens) is smaller than the
+        // long jobs: every dispatch policy must steer them to replica 0
+        // instead of wedging replica 1 into the deadlock bail
+        for dispatch in DispatchKind::all() {
+            let mut s = sched(2, 2, dispatch);
+            s.max_kv_tokens = 1 << 16;
+            s.replica_caps = vec![
+                crate::config::ReplicaCaps::default(),
+                crate::config::ReplicaCaps { max_batch: None, max_kv_tokens: Some(512) },
+            ];
+            let mut reqs: Vec<Request> = (0..6).map(|i| mk_req(i, 0.0, 600)).collect();
+            reqs.extend((6..12).map(|i| mk_req(i, 0.0, 10)));
+            let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+            assert_eq!(out.merged.report.n_requests, 12, "{dispatch:?}");
+            assert_eq!(out.merged.rejected, 0, "{dispatch:?}");
+            for rec in &out.per_replica[1].records {
+                assert!(rec.output_len <= 10, "{dispatch:?}: replica 1 got a long job");
+            }
+        }
+    }
+
+    #[test]
+    fn small_idle_replica_does_not_shield_bigger_thieves() {
+        // r0's tiny KV budget cannot hold the stranded 605-token job, but
+        // idle r2 can: the steal must fall through to the first idle
+        // replica with headroom instead of giving up at r0
+        let mut s = sched(4, 1, DispatchKind::RoundRobin);
+        s.steal = StealMode::Idle;
+        s.replica_caps = vec![crate::config::ReplicaCaps {
+            max_batch: None,
+            max_kv_tokens: Some(512),
+        }];
+        let reqs = vec![
+            mk_req(0, 0.0, 10),   // r0: drains fast, then idles (too small to steal)
+            mk_req(1, 0.0, 1000), // r1: busy for a long time
+            mk_req(2, 0.0, 10),   // r2: drains fast, then idles (big enough)
+            mk_req(3, 0.0, 600),  // r3: busy for a while
+            mk_req(4, 0.0, 600),  // round-robin probes past r0 → behind r1's long job
+        ];
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 5);
+        assert_eq!(out.per_replica[0].stolen_in, 0, "r0 cannot hold the stolen job");
+        assert_eq!(out.per_replica[2].stolen_in, 1, "r2 must rescue the stranded job");
+        assert!(out.per_replica[2].records.iter().any(|r| r.output_len == 600));
+    }
+
+    #[test]
+    fn jobs_too_big_for_every_replica_are_rejected_not_fatal() {
+        // fits max_seq but exceeds both replicas' total KV budgets: the
+        // fleet must reject it up front, not abort the run mid-serve
+        let mut s = sched(2, 2, DispatchKind::LeastLoaded);
+        s.max_kv_tokens = 512;
+        let reqs = vec![mk_req(0, 0.0, 600), mk_req(1, 0.0, 10)];
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        assert_eq!(out.merged.rejected, 1);
+        assert_eq!(out.merged.report.n_requests, 1);
+    }
+
+    #[test]
+    fn stolen_work_lands_after_its_arrival_time() {
+        // a thief sitting idle in the past must not admit stolen work
+        // before the request even arrived: staggered arrivals + stealing,
+        // then every record satisfies admitted ≥ arrival
+        let mut s = skew_sched(StealMode::Idle);
+        s.max_batch = 1;
+        let mut reqs = vec![mk_req(0, 0.0, 400)];
+        reqs.extend((1..=40).map(|i| mk_req(i, (i % 5) as f64 * 50.0, 8)));
+        let out = run(&s, PolicyKind::Fcfs, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 41);
+        for rep in &out.per_replica {
+            for rec in &rep.records {
+                assert!(
+                    rec.admitted_ms >= rec.arrival_ms,
+                    "replica {} admitted id {} before it arrived",
+                    rep.replica,
+                    rec.id
+                );
+            }
+        }
     }
 
     #[test]

@@ -120,14 +120,42 @@ impl WaitingQueue {
         self.heap = all.into();
     }
 
-    /// Oldest un-boosted arrival (None if empty) — guard scheduling aid.
+    /// Oldest un-boosted arrival (None if empty or everything is already
+    /// boosted) — guard scheduling aid: boosted entries can never cross
+    /// the starvation threshold again, so only un-boosted ones matter for
+    /// the guard's next deadline.
     pub fn oldest_arrival(&self) -> Option<f64> {
-        self.heap.iter().map(|q| q.req.arrival_ms).fold(None, |acc, x| {
+        self.heap.iter().filter(|q| !q.boosted).map(|q| q.req.arrival_ms).fold(None, |acc, x| {
             Some(match acc {
                 None => x,
                 Some(a) => a.min(x),
             })
         })
+    }
+
+    /// Remove and return the lowest-priority entry — the one that would
+    /// pop LAST (longest-predicted under an SJF policy).  This is what a
+    /// cross-replica steal takes from a victim queue: the remaining
+    /// entries keep their exact pop order, and the entry keeps its boost.
+    /// O(n) heap rebuild, but stealing only happens when a sibling
+    /// replica idles, so it is off the per-iteration hot path.
+    pub fn steal_lowest_priority(&mut self) -> Option<QueuedRequest> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
+        // `Ord` is inverted for min-ordering (greatest = pops first), so
+        // the steal target is the minimum; ties keep the first index,
+        // which is deterministic because the order is total.
+        let worst = all
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.cmp(b))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let q = all.swap_remove(worst);
+        self.heap = all.into();
+        Some(q)
     }
 }
 
@@ -191,6 +219,51 @@ mod tests {
         w.push(req(1, 0.0, 0.0), &p);
         w.apply_starvation_guard(500.0);
         assert_eq!(w.boosts, 0);
+    }
+
+    #[test]
+    fn oldest_arrival_skips_boosted_entries() {
+        // regression: the doc promised "oldest un-boosted arrival" but the
+        // scan used to cover boosted entries too
+        let mut w = WaitingQueue::new(100.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 50.0), &p); // will be boosted at t=150
+        w.push(req(2, 120.0, 1.0), &p); // stays un-boosted
+        assert_eq!(w.oldest_arrival(), Some(0.0));
+        w.apply_starvation_guard(150.0);
+        assert_eq!(w.boosts, 1);
+        assert_eq!(w.oldest_arrival(), Some(120.0), "boosted entry must not count");
+        w.apply_starvation_guard(1000.0); // boosts req 2 as well
+        assert_eq!(w.oldest_arrival(), None, "all boosted ⇒ no guard deadline");
+        assert!(w.pop().is_some());
+    }
+
+    #[test]
+    fn steal_takes_the_lowest_priority_and_keeps_order() {
+        let mut w = WaitingQueue::new(1e9);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        for (id, score) in [(1u64, 5.0f32), (2, 90.0), (3, 1.0), (4, 40.0)] {
+            w.push(req(id, 0.0, score), &p);
+        }
+        let stolen = w.steal_lowest_priority().unwrap();
+        assert_eq!(stolen.req.id, 2, "must take the longest-predicted entry");
+        let ids: Vec<u64> = std::iter::from_fn(|| w.pop()).map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![3, 1, 4], "remaining pop order preserved");
+        assert!(w.steal_lowest_priority().is_none());
+    }
+
+    #[test]
+    fn steal_never_outranks_a_boost() {
+        // a boosted long job outranks un-boosted work, so the steal target
+        // is the worst *un-boosted* entry unless everything is boosted
+        let mut w = WaitingQueue::new(100.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 99.0), &p);
+        w.apply_starvation_guard(200.0); // req 1 boosted
+        w.push(req(2, 150.0, 50.0), &p);
+        let stolen = w.steal_lowest_priority().unwrap();
+        assert_eq!(stolen.req.id, 2);
+        assert!(w.pop().unwrap().boosted);
     }
 
     #[test]

@@ -80,6 +80,10 @@ pub trait Engine {
     /// Logical KV blocks currently reserved (cross-replica load signal).
     fn kv_blocks_used(&self) -> usize;
 
+    /// Total logical KV blocks this engine owns (capacity; heterogeneous
+    /// fleets normalise cross-replica load signals by this).
+    fn kv_blocks_total(&self) -> usize;
+
     /// Idle until `t_ms` (no runnable work; next arrival is in the future).
     fn advance_to(&mut self, t_ms: f64);
 }
@@ -124,6 +128,10 @@ impl<E: Engine + ?Sized> Engine for &mut E {
 
     fn kv_blocks_used(&self) -> usize {
         (**self).kv_blocks_used()
+    }
+
+    fn kv_blocks_total(&self) -> usize {
+        (**self).kv_blocks_total()
     }
 
     fn advance_to(&mut self, t_ms: f64) {

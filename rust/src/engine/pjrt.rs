@@ -254,6 +254,10 @@ impl Engine for PjrtEngine {
         self.kv_mgr.blocks_used()
     }
 
+    fn kv_blocks_total(&self) -> usize {
+        self.kv_mgr.blocks_total()
+    }
+
     fn advance_to(&mut self, t_ms: f64) {
         let now = self.now_ms();
         if t_ms > now {

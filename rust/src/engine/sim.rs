@@ -127,6 +127,10 @@ impl Engine for SimEngine {
         self.kv.blocks_used()
     }
 
+    fn kv_blocks_total(&self) -> usize {
+        self.kv.blocks_total()
+    }
+
     fn advance_to(&mut self, t_ms: f64) {
         if t_ms > self.now_ms {
             self.now_ms = t_ms;

@@ -159,10 +159,12 @@ pub fn run_sim(
 }
 
 /// Run one (policy, workload) pair across `sched.replicas` fresh
-/// SimEngine replicas under `sched.dispatch`.  Uses the same workload
-/// seed as [`run_sim`], so single- and multi-replica runs are directly
-/// comparable; with `replicas = 1` the outcome matches [`run_sim`]
-/// exactly.
+/// SimEngine replicas under `sched.dispatch` (+ `sched.steal`).  Each
+/// replica gets its own capacity from `sched.replica_caps` overrides
+/// (heterogeneous fleets), defaulting to the fleet-wide limits.  Uses
+/// the same workload seed as [`run_sim`], so single- and multi-replica
+/// runs are directly comparable; with `replicas = 1` the outcome
+/// matches [`run_sim`] exactly.
 pub fn run_sharded(
     ts: &TestSet,
     arrivals: &[Arrival],
@@ -181,7 +183,7 @@ pub fn run_sharded(
         .unwrap_or(0)
         .max(64);
     let engines: Vec<SimEngine> = (0..sched.replicas.max(1))
-        .map(|_| SimEngine::new(cost.clone(), sched, max_seq))
+        .map(|i| SimEngine::new(cost.clone(), &sched.for_replica(i), max_seq))
         .collect();
     let policy = make_policy(kind);
     let mut coord =
@@ -288,6 +290,27 @@ mod tests {
         let y: Vec<f64> = ts.live_len.iter().map(|&l| l as f64).collect();
         let tau = crate::eval::kendall_tau_b(&x, &y);
         assert!(tau > 0.5, "simulated predictor too weak: tau={tau:.2}");
+    }
+
+    #[test]
+    fn run_sharded_honours_overrides_and_stealing() {
+        use crate::config::{DispatchKind, ReplicaCaps, StealMode};
+        let ts = TestSet::synthetic("synthalpaca", "llama", 64, 5);
+        let book = ScoreBook::synthetic(&ts, &[PolicyKind::Pars], 5);
+        let sched = SchedulerConfig {
+            max_batch: 4,
+            replicas: 3,
+            dispatch: DispatchKind::LeastLoaded,
+            steal: StealMode::Idle,
+            replica_caps: vec![ReplicaCaps { max_batch: Some(8), max_kv_tokens: Some(1 << 17) }],
+            ..Default::default()
+        };
+        let arrivals = burst(&ts, 150, 9);
+        let cost = CostModel::default();
+        let out = run_sharded(&ts, &arrivals, PolicyKind::Pars, &book, &cost, &sched).unwrap();
+        assert_eq!(out.merged.report.n_requests, 150);
+        assert_eq!(out.per_replica.len(), 3);
+        assert_eq!(out.per_replica.iter().map(|r| r.report.n_requests).sum::<usize>(), 150);
     }
 
     #[test]

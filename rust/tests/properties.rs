@@ -1,0 +1,329 @@
+//! Property + metamorphic suite for the scheduling layer (uses the
+//! in-repo `util::prop` mini property-testing loop — no proptest in the
+//! offline vendor set).
+//!
+//! What is locked down:
+//!
+//! * `WaitingQueue` pop order is a *total, deterministic* order for
+//!   arbitrary (score, arrival, id) triples — including NaN keys and
+//!   NaN arrivals — and is insertion-order independent.
+//! * `unpop` is order-neutral: popping entries and putting them back
+//!   never changes the remaining pop sequence.
+//! * The starvation guard boosts exactly the over-threshold set.
+//! * Metamorphic conservation: for random traces × every `DispatchKind`
+//!   × `PolicyKind` × steal mode, every request is served exactly once
+//!   or rejected (no id duplicated or lost across replicas), and fleet
+//!   `total_tokens` matches the trace.
+//! * Determinism: two runs of the same trace under work stealing
+//!   produce byte-identical per-replica record sequences (the
+//!   lagging-clock event order is pinned).
+//!
+//! Reproduce a CI failure locally with the printed seed:
+//! `PROP_SEED=<seed> cargo test --release --test properties`.
+
+use pars_serve::config::{
+    CostModel, DispatchKind, PolicyKind, ReplicaCaps, SchedulerConfig, StealMode,
+};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::{
+    QueuedRequest, Request, ShardedCoordinator, ShardedOutcome, WaitingQueue,
+};
+use pars_serve::engine::SimEngine;
+use pars_serve::util::prop::check_with;
+use pars_serve::util::rng::Rng;
+
+/// Suite seed: `PROP_SEED` env override (CI pins it), default fixed.
+fn prop_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+fn mk_queued(key: f64, arrival: f64, id: u64) -> QueuedRequest {
+    QueuedRequest {
+        req: Request {
+            id,
+            tokens: vec![1, 2],
+            prompt_len: 2,
+            arrival_ms: arrival,
+            target_len: 3,
+            oracle_len: 3,
+            score: key as f32,
+        },
+        key,
+        boosted: false,
+    }
+}
+
+/// Arbitrary queue entries: keys and arrivals include NaN, zero and
+/// negative values; ids may collide.
+fn gen_entries(rng: &mut Rng) -> Vec<(f64, f64, u64)> {
+    let n = rng.below(24);
+    (0..n)
+        .map(|_| {
+            let key = match rng.below(6) {
+                0 => f64::NAN,
+                1 => 0.0,
+                2 => -rng.f64() * 10.0,
+                _ => rng.f64() * 100.0,
+            };
+            let arrival = match rng.below(8) {
+                0 => f64::NAN,
+                _ => rng.f64() * 1000.0,
+            };
+            (key, arrival, rng.below(64) as u64)
+        })
+        .collect()
+}
+
+fn fill(entries: &[(f64, f64, u64)]) -> WaitingQueue {
+    let mut w = WaitingQueue::new(1e12);
+    for &(k, a, id) in entries {
+        w.push_scored(mk_queued(k, a, id));
+    }
+    w
+}
+
+fn drain_sig(w: &mut WaitingQueue) -> Vec<(u64, u64, u64, bool)> {
+    std::iter::from_fn(|| w.pop())
+        .map(|q| (q.req.id, q.key.to_bits(), q.req.arrival_ms.to_bits(), q.boosted))
+        .collect()
+}
+
+#[test]
+fn prop_pop_order_is_insertion_order_independent() {
+    let seed = prop_seed();
+    check_with(seed, 300, gen_entries, |entries| {
+        let a = drain_sig(&mut fill(entries));
+        let mut shuffled = entries.clone();
+        let mut r = Rng::new(seed ^ 0x5AFE);
+        r.shuffle(&mut shuffled);
+        let b = drain_sig(&mut fill(&shuffled));
+        a == b
+    });
+}
+
+#[test]
+fn prop_pop_sequence_follows_the_total_order() {
+    check_with(prop_seed(), 300, gen_entries, |entries| {
+        let mut w = fill(entries);
+        let popped: Vec<QueuedRequest> = std::iter::from_fn(|| w.pop()).collect();
+        // pop yields the heap maximum first, so the sequence must be
+        // non-increasing under the queue's total `Ord` — even with NaNs
+        popped.len() == entries.len()
+            && popped.windows(2).all(|p| p[0].cmp(&p[1]) != std::cmp::Ordering::Less)
+    });
+}
+
+#[test]
+fn prop_unpop_is_order_neutral() {
+    check_with(
+        prop_seed(),
+        200,
+        |rng| (gen_entries(rng), rng.below(8)),
+        |case| {
+            let (entries, k) = case;
+            let mut plain = fill(entries);
+            let mut poked = fill(entries);
+            let mut held: Vec<QueuedRequest> = (0..*k).filter_map(|_| poked.pop()).collect();
+            while let Some(q) = held.pop() {
+                poked.unpop(q);
+            }
+            drain_sig(&mut plain) == drain_sig(&mut poked)
+        },
+    );
+}
+
+#[test]
+fn prop_steal_removes_exactly_the_last_pop() {
+    check_with(prop_seed(), 300, gen_entries, |entries| {
+        if entries.is_empty() {
+            return fill(entries).steal_lowest_priority().is_none();
+        }
+        let full = drain_sig(&mut fill(entries));
+        let mut w = fill(entries);
+        let stolen = w.steal_lowest_priority().unwrap();
+        let sig =
+            (stolen.req.id, stolen.key.to_bits(), stolen.req.arrival_ms.to_bits(), stolen.boosted);
+        let rest = drain_sig(&mut w);
+        sig == full[full.len() - 1] && rest.as_slice() == &full[..full.len() - 1]
+    });
+}
+
+#[test]
+fn prop_guard_boosts_exactly_the_overdue_set() {
+    check_with(
+        prop_seed(),
+        300,
+        |rng| {
+            let entries = gen_entries(rng);
+            let threshold = rng.f64() * 500.0 + 1.0;
+            let now = rng.f64() * 1500.0;
+            (entries, threshold, now)
+        },
+        |case| {
+            let (entries, threshold, now) = case;
+            let mut w = WaitingQueue::new(*threshold);
+            for &(k, a, id) in entries {
+                w.push_scored(mk_queued(k, a, id));
+            }
+            w.apply_starvation_guard(*now);
+            let popped: Vec<QueuedRequest> = std::iter::from_fn(|| w.pop()).collect();
+            // overdue ⇔ boosted, entry by entry (NaN arrivals never boost)
+            let n_over =
+                popped.iter().filter(|q| *now - q.req.arrival_ms > *threshold).count();
+            popped.len() == entries.len()
+                && w.boosts == n_over
+                && popped.iter().all(|q| q.boosted == (*now - q.req.arrival_ms > *threshold))
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Metamorphic fleet-level suite
+// ---------------------------------------------------------------------------
+
+const TRACE_MAX_SEQ: usize = 4096;
+
+/// Random serving trace: mixed lengths, scattered arrivals, an
+/// occasional oversized request that must be rejected fleet-wide.
+fn gen_trace(rng: &mut Rng) -> Vec<Request> {
+    let n = 20 + rng.below(60);
+    (0..n as u64)
+        .map(|id| {
+            let prompt = 1 + rng.below(12);
+            let target =
+                if rng.below(25) == 0 { 10_000 } else { 1 + rng.below(120) as u32 };
+            Request {
+                id,
+                tokens: vec![1; prompt],
+                prompt_len: prompt as u32,
+                arrival_ms: rng.f64() * 400.0,
+                target_len: target,
+                oracle_len: target,
+                score: target as f32 + rng.normal() as f32,
+            }
+        })
+        .collect()
+}
+
+fn run_fleet(
+    trace: &[Request],
+    kind: PolicyKind,
+    dispatch: DispatchKind,
+    steal: StealMode,
+    replicas: usize,
+    max_batch: usize,
+    caps: &[ReplicaCaps],
+) -> ShardedOutcome {
+    let sched = SchedulerConfig {
+        max_batch,
+        max_kv_tokens: 8192,
+        starvation_ms: 300.0,
+        replicas,
+        dispatch,
+        steal,
+        replica_caps: caps.to_vec(),
+        ..Default::default()
+    };
+    let engines: Vec<SimEngine> = (0..replicas)
+        .map(|i| SimEngine::new(CostModel::default(), &sched.for_replica(i), TRACE_MAX_SEQ))
+        .collect();
+    let policy = make_policy(kind);
+    let mut coord =
+        ShardedCoordinator::new(engines, policy.as_ref(), dispatch, sched.clone());
+    coord.serve(trace.to_vec()).unwrap()
+}
+
+#[test]
+fn metamorphic_conservation_across_policy_dispatch_and_steal() {
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed);
+    for case in 0..4 {
+        let trace = gen_trace(&mut rng);
+        let fits = |r: &Request| ((r.prompt_len + r.target_len) as usize) <= TRACE_MAX_SEQ;
+        let n_rejected = trace.iter().filter(|r| !fits(r)).count();
+        let mut expect_ids: Vec<u64> =
+            trace.iter().filter(|r| fits(r)).map(|r| r.id).collect();
+        expect_ids.sort_unstable();
+        let expect_tokens: u64 =
+            trace.iter().filter(|r| fits(r)).map(|r| r.target_len as u64).sum();
+        let check = |out: &ShardedOutcome, steal: StealMode, label: &str| {
+            assert_eq!(out.merged.rejected, n_rejected, "{label}: rejected");
+            assert_eq!(out.merged.report.n_requests, expect_ids.len(), "{label}: completed");
+            // every dispatched request is eventually completed:
+            // sum(dispatched) == completed, and together with the
+            // rejects the whole trace is accounted for
+            let dispatched: usize = out.per_replica.iter().map(|r| r.dispatched).sum();
+            assert_eq!(dispatched, expect_ids.len(), "{label}: dispatched");
+            assert_eq!(dispatched + out.merged.rejected, trace.len(), "{label}: accounting");
+            let mut ids: Vec<u64> = out
+                .per_replica
+                .iter()
+                .flat_map(|r| r.records.iter().map(|rec| rec.id))
+                .collect();
+            ids.sort_unstable();
+            assert_eq!(ids, expect_ids, "{label}: ids lost or duplicated");
+            assert_eq!(
+                out.merged.report.total_tokens, expect_tokens,
+                "{label}: token conservation"
+            );
+            let stolen_in: usize = out.per_replica.iter().map(|r| r.stolen_in).sum();
+            let stolen_out: usize = out.per_replica.iter().map(|r| r.stolen_out).sum();
+            assert_eq!(stolen_in, stolen_out, "{label}: steal books unbalanced");
+            if steal == StealMode::Off {
+                assert_eq!(stolen_in, 0, "{label}: steal=off must not move work");
+            }
+        };
+        for kind in PolicyKind::all() {
+            for dispatch in DispatchKind::all() {
+                for steal in StealMode::all() {
+                    let out = run_fleet(&trace, kind, dispatch, steal, 3, 2, &[]);
+                    let label =
+                        format!("seed {seed} case {case} {kind:?}/{dispatch:?}/{steal:?}");
+                    check(&out, steal, &label);
+                }
+            }
+        }
+        // heterogeneous fleet: the same conservation laws must hold with
+        // per-replica capacity overrides (every fitting request in the
+        // trace fits the smallest replica, so nothing extra is rejected)
+        let het = [
+            ReplicaCaps { max_batch: Some(1), max_kv_tokens: Some(4096) },
+            ReplicaCaps { max_batch: Some(4), max_kv_tokens: Some(2048) },
+        ];
+        for dispatch in DispatchKind::all() {
+            for steal in StealMode::all() {
+                let out = run_fleet(&trace, PolicyKind::Pars, dispatch, steal, 3, 2, &het);
+                let label =
+                    format!("seed {seed} case {case} het/{dispatch:?}/{steal:?}");
+                check(&out, steal, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn determinism_under_stealing_is_bitwise() {
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0xD37E);
+    for case in 0..3 {
+        let trace = gen_trace(&mut rng);
+        let run = || -> Vec<String> {
+            let out = run_fleet(
+                &trace,
+                PolicyKind::Pars,
+                DispatchKind::LeastLoaded,
+                StealMode::Idle,
+                4,
+                1,
+                &[],
+            );
+            out.per_replica.iter().map(|r| format!("{:?}", r.records)).collect()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(
+            a, b,
+            "seed {seed} case {case}: identical runs diverged — the lagging-clock \
+             event order (and steal order) must be deterministic"
+        );
+    }
+}

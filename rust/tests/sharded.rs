@@ -7,11 +7,13 @@
 //! behavioural drift in the sharded loop shows up as a test failure.
 //! No artifacts needed — runs on the synthetic sim stack.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
-use pars_serve::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig};
+use pars_serve::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig, StealMode};
 use pars_serve::coordinator::policy::make_policy;
-use pars_serve::coordinator::{Coordinator, Policy, Request, ShardedCoordinator, WaitingQueue};
+use pars_serve::coordinator::{
+    Coordinator, Policy, QueuedRequest, Request, ShardedCoordinator, WaitingQueue,
+};
 use pars_serve::engine::{Engine, SimEngine};
 use pars_serve::metrics::{LatencyReport, Recorder, RequestRecord};
 
@@ -137,6 +139,199 @@ fn reference_serve(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Frozen PR 1 multi-replica dispatch loop (pre-work-stealing, homogeneous
+// fleets only).  Any behavioural drift of the current `ShardedCoordinator`
+// under `steal = off` shows up as a record-for-record mismatch below.
+// ---------------------------------------------------------------------------
+
+struct RefReplica {
+    engine: SimEngine,
+    inbox: VecDeque<QueuedRequest>,
+    waiting: WaitingQueue,
+    running: HashMap<usize, InFlight>,
+    recorder: Recorder,
+    dispatched: usize,
+    queued_tokens: u64,
+    running_tokens: u64,
+}
+
+impl RefReplica {
+    fn new(engine: SimEngine, starvation_ms: f64) -> RefReplica {
+        RefReplica {
+            engine,
+            inbox: VecDeque::new(),
+            waiting: WaitingQueue::new(starvation_ms),
+            running: HashMap::new(),
+            recorder: Recorder::default(),
+            dispatched: 0,
+            queued_tokens: 0,
+            running_tokens: 0,
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        !self.inbox.is_empty() || !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    fn queue_len(&self) -> usize {
+        self.inbox.len() + self.waiting.len()
+    }
+
+    fn in_system(&self) -> usize {
+        self.queue_len() + self.running.len()
+    }
+
+    fn in_system_tokens(&self) -> u64 {
+        self.queued_tokens + self.running_tokens
+    }
+
+    fn step(&mut self, sched: &SchedulerConfig) {
+        let now = self.engine.now_ms();
+        while self.inbox.front().is_some_and(|q| q.req.arrival_ms <= now) {
+            let q = self.inbox.pop_front().unwrap();
+            self.waiting.push_scored(q);
+        }
+        self.waiting.apply_starvation_guard(now);
+        let may_admit = sched.continuous || self.running.is_empty();
+        if may_admit {
+            while self.engine.free_slots() > 0 && !self.waiting.is_empty() {
+                let q = self.waiting.pop().unwrap();
+                let total = q.req.prompt_len + q.req.target_len;
+                if !self.engine.kv_headroom_for(total) {
+                    self.waiting.unpop(q);
+                    break;
+                }
+                let slot = self.engine.prefill(&q.req.tokens, q.req.target_len).unwrap();
+                self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
+                self.running_tokens += total as u64;
+                self.running.insert(
+                    slot,
+                    InFlight {
+                        admitted_ms: self.engine.now_ms(),
+                        first_token_ms: None,
+                        boosted: q.boosted,
+                        req: q.req,
+                    },
+                );
+            }
+        }
+        if self.engine.active_slots() > 0 {
+            let events = self.engine.decode_step().unwrap();
+            let now = self.engine.now_ms();
+            for ev in events {
+                let inflight = self.running.get_mut(&ev.slot).expect("event for unknown slot");
+                if inflight.first_token_ms.is_none() {
+                    inflight.first_token_ms = Some(now);
+                }
+                if ev.finished {
+                    let f = self.running.remove(&ev.slot).unwrap();
+                    self.engine.release(ev.slot);
+                    let total = (f.req.prompt_len + f.req.target_len) as u64;
+                    self.running_tokens = self.running_tokens.saturating_sub(total);
+                    self.recorder.push(RequestRecord {
+                        id: f.req.id,
+                        arrival_ms: f.req.arrival_ms,
+                        admitted_ms: f.admitted_ms,
+                        first_token_ms: f.first_token_ms.unwrap_or(now),
+                        completed_ms: now,
+                        prompt_len: f.req.prompt_len,
+                        output_len: ev.generated,
+                        boosted: f.boosted,
+                    });
+                }
+            }
+        } else if !self.waiting.is_empty() {
+            panic!("reference deadlock");
+        } else if let Some(front) = self.inbox.front() {
+            self.engine.advance_to(front.req.arrival_ms);
+        }
+    }
+}
+
+/// Verbatim port of the PR 1 `ShardedCoordinator::serve` loop: raw
+/// (un-normalised) load keys, no stealing.
+fn reference_sharded_serve(
+    engines: Vec<SimEngine>,
+    policy: &dyn Policy,
+    dispatch: DispatchKind,
+    sched: &SchedulerConfig,
+    mut requests: Vec<Request>,
+) -> (Vec<Vec<RequestRecord>>, Vec<usize>, usize) {
+    for r in &mut requests {
+        if !r.arrival_ms.is_finite() {
+            r.arrival_ms = 0.0;
+        }
+    }
+    requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+    let mut replicas: Vec<RefReplica> =
+        engines.into_iter().map(|e| RefReplica::new(e, sched.starvation_ms)).collect();
+    let max_seq = replicas[0].engine.caps().max_seq;
+    let mut rr_cursor = 0usize;
+    let mut rejected = 0usize;
+    let mut stream = requests.into_iter().peekable();
+    loop {
+        let next_step: Option<(f64, usize)> = replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.has_work())
+            .map(|(i, r)| (r.engine.now_ms(), i))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let due = match (stream.peek(), next_step) {
+            (Some(req), Some((t, _))) => req.arrival_ms <= t,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if due {
+            let req = stream.next().unwrap();
+            let total = req.prompt_len + req.target_len;
+            if total as usize > max_seq {
+                rejected += 1;
+                continue;
+            }
+            let key = policy.key(&req);
+            let idx = if replicas.len() == 1 {
+                0
+            } else {
+                match dispatch {
+                    DispatchKind::RoundRobin => {
+                        let i = rr_cursor % replicas.len();
+                        rr_cursor = rr_cursor.wrapping_add(1);
+                        i
+                    }
+                    DispatchKind::LeastLoaded => replicas
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|&(_, r)| {
+                            (r.in_system_tokens(), r.in_system(), r.engine.kv_blocks_used())
+                        })
+                        .map(|(i, _)| i)
+                        .unwrap_or(0),
+                    DispatchKind::Ranked => replicas
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|&(_, r)| (r.queue_len(), r.queued_tokens))
+                        .map(|(i, _)| i)
+                        .unwrap_or(0),
+                }
+            };
+            let r = &mut replicas[idx];
+            r.dispatched += 1;
+            r.queued_tokens += total as u64;
+            r.inbox.push_back(QueuedRequest { req, key, boosted: false });
+            continue;
+        }
+        match next_step {
+            Some((_, idx)) => replicas[idx].step(sched),
+            None => break,
+        }
+    }
+    let records: Vec<Vec<RequestRecord>> =
+        replicas.iter_mut().map(|r| std::mem::take(&mut r.recorder).records).collect();
+    let dispatched: Vec<usize> = replicas.iter().map(|r| r.dispatched).collect();
+    (records, dispatched, rejected)
+}
+
 fn mk_req(id: u64, at: f64, target: u32) -> Request {
     Request {
         id,
@@ -235,6 +430,77 @@ fn sjf_boost_fires_in_the_reference_workload() {
     let mut coord = Coordinator::new(&mut engine, policy, sched.clone());
     let out = coord.serve(workload()).unwrap();
     assert!(out.boosts > 0, "workload too gentle: starvation guard never fired");
+}
+
+/// Pin the current coordinator (steal = off) to the frozen PR 1 loop:
+/// per-replica record streams must match byte-for-byte (Debug-formatted
+/// f64 roundtrips exactly, so string equality ⇔ bitwise equality).
+fn assert_sharded_pinned(dispatch: DispatchKind, kind: PolicyKind) {
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 512,
+        starvation_ms: 500.0,
+        replicas: 4,
+        dispatch,
+        steal: StealMode::Off,
+        ..Default::default()
+    };
+    let mk_engines =
+        || -> Vec<SimEngine> { (0..4).map(|_| SimEngine::new(CostModel::default(), &sched, 4096)).collect() };
+    let policy = make_policy(kind);
+    let (want_records, want_dispatched, want_rejected) =
+        reference_sharded_serve(mk_engines(), policy.as_ref(), dispatch, &sched, workload());
+
+    let mut coord =
+        ShardedCoordinator::new(mk_engines(), policy.as_ref(), dispatch, sched.clone());
+    let out = coord.serve(workload()).unwrap();
+    assert_eq!(out.merged.rejected, want_rejected, "{kind:?}/{dispatch:?} rejected");
+    for (i, rep) in out.per_replica.iter().enumerate() {
+        assert_eq!(
+            rep.dispatched, want_dispatched[i],
+            "{kind:?}/{dispatch:?} replica {i} dispatched"
+        );
+        assert_eq!(rep.stolen_in + rep.stolen_out, 0, "steal=off must never move work");
+        assert_eq!(
+            format!("{:?}", rep.records),
+            format!("{:?}", want_records[i]),
+            "{kind:?}/{dispatch:?} replica {i} record stream drifted from the PR 1 loop"
+        );
+    }
+}
+
+#[test]
+fn steal_off_n4_round_robin_pins_to_pr1_loop() {
+    assert_sharded_pinned(DispatchKind::RoundRobin, PolicyKind::Fcfs);
+    assert_sharded_pinned(DispatchKind::RoundRobin, PolicyKind::OracleSjf);
+}
+
+#[test]
+fn steal_off_n4_least_loaded_pins_to_pr1_loop() {
+    assert_sharded_pinned(DispatchKind::LeastLoaded, PolicyKind::Fcfs);
+    assert_sharded_pinned(DispatchKind::LeastLoaded, PolicyKind::OracleSjf);
+}
+
+#[test]
+fn steal_off_n4_ranked_pins_to_pr1_loop() {
+    assert_sharded_pinned(DispatchKind::Ranked, PolicyKind::Fcfs);
+    assert_sharded_pinned(DispatchKind::Ranked, PolicyKind::OracleSjf);
+}
+
+#[test]
+fn n1_sharded_with_steal_enabled_equals_legacy() {
+    // a single replica has no sibling to steal from: every steal mode
+    // must stay bitwise identical to the pre-refactor serving loop
+    for steal in StealMode::all() {
+        let sched = SchedulerConfig {
+            max_batch: 4,
+            max_kv_tokens: 512,
+            starvation_ms: 500.0,
+            steal,
+            ..Default::default()
+        };
+        assert_identical(&sched, PolicyKind::OracleSjf);
+    }
 }
 
 #[test]
