@@ -10,7 +10,7 @@
 //! ```
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, ReplicaCaps, SchedulerConfig, StealMode,
+    CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, SchedulerConfig, StealMode,
 };
 use pars_serve::harness;
 use pars_serve::util::bench::Table;
@@ -76,6 +76,31 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}", out.merged.report.p90_per_token_ms),
             format!("{:.0}", out.merged.makespan_ms / 1e3),
             stolen.to_string(),
+        ]);
+    }
+    t.print();
+
+    // -- score-aware preemption: evict running long jobs for short ones ----
+    let mut t = Table::new(
+        "preemption — PARS, 2 replicas, ranked dispatch, staggered arrivals",
+        &["preempt", "avg ms/tok", "p90 ms/tok", "evictions", "wasted tok"],
+    );
+    let staggered = harness::poisson(&ts, 40.0, burst_n.min(400), 5);
+    for preempt in PreemptMode::all() {
+        let sched = SchedulerConfig {
+            max_batch: 2,
+            replicas: 2,
+            dispatch: DispatchKind::Ranked,
+            preempt,
+            ..Default::default()
+        };
+        let out = harness::run_sharded(&ts, &staggered, PolicyKind::Pars, &book, &cost, &sched)?;
+        t.row(&[
+            preempt.name(),
+            format!("{:.1}", out.merged.report.avg_per_token_ms),
+            format!("{:.1}", out.merged.report.p90_per_token_ms),
+            out.merged.preemptions.to_string(),
+            out.merged.wasted_decode_tokens.to_string(),
         ]);
     }
     t.print();

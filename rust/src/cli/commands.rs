@@ -5,7 +5,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
-use crate::config::{Config, CostModel, DispatchKind, PolicyKind, ReplicaCaps, StealMode};
+use crate::config::{
+    Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, StealMode,
+};
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{Coordinator, PjrtScorer, Scorer};
 use crate::engine::{Engine, PjrtEngine};
@@ -47,13 +49,19 @@ COMMANDS:
                 --n <requests>      --max-batch <n>   --seed <u64>
                 --replicas <k>      --dispatch round-robin|least-loaded|ranked
                 --steal off|idle|threshold(n)   cross-replica work stealing
+                --preempt off|arrival|pressure(k)  score-aware eviction of
+                                                running jobs (recompute-on-resume)
+                --preempt-margin <f>  candidate must undercut the victim's
+                                      remaining work by this factor (>= 1)
+                --max-preemptions <n> anti-thrash: evict a job at most n times
                 --replica-caps <kv[:slots],...> per-replica capacity overrides
                                                 (`_` inherits the default)
                 (sim engine falls back to a synthetic corpus when no
                  artifacts are present, so it runs on a fresh checkout)
   sweep         arrival-rate x policy sweep, CSV to stdout or --csv <file>
                 --dataset ... --model ... --n <requests> --reps <k>
-                --replicas <k> --dispatch ... --steal ... --replica-caps ...
+                --replicas <k> --dispatch ... --steal ... --preempt ...
+                --replica-caps ...
   predict       score a test set with a predictor, report Kendall tau
                 --dataset ... --model ... --objective pairwise|pointwise|listwise
                 --backbone bert|opt|t5   --nofilter
@@ -89,6 +97,14 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(s) = args.str_opt("steal") {
         cfg.scheduler.steal = StealMode::parse(s)?;
     }
+    if let Some(p) = args.str_opt("preempt") {
+        cfg.scheduler.preempt = PreemptMode::parse(p)?;
+    }
+    cfg.scheduler.preempt_margin =
+        args.f64_or("preempt-margin", cfg.scheduler.preempt_margin)?;
+    cfg.scheduler.max_preemptions = args
+        .usize_or("max-preemptions", cfg.scheduler.max_preemptions as usize)?
+        .min(u32::MAX as usize) as u32;
     if let Some(rc) = args.str_opt("replica-caps") {
         cfg.scheduler.replica_caps = ReplicaCaps::parse_list(rc)?;
     }
@@ -162,12 +178,13 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}  steal={}{}",
+                 replicas={}  dispatch={}  steal={}  preempt={}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
                 cfg.scheduler.dispatch.name(),
                 cfg.scheduler.steal.name(),
+                cfg.scheduler.preempt.name(),
                 if cfg.scheduler.heterogeneous() { "  caps=heterogeneous" } else { "" }
             );
             if book.scoring_ms_per_prompt > 0.0 {
@@ -177,20 +194,24 @@ fn serve(args: &Args) -> Result<()> {
                 harness::run_sharded(&ts, &arrivals, cfg.policy, &book, &cost, &cfg.scheduler)?;
             println!("{}", out.merged.report.one_line(cfg.policy.name()));
             println!(
-                "makespan={:.1}s  peak_waiting={}  boosts={}  rejected={}",
+                "makespan={:.1}s  peak_waiting={}  boosts={}  rejected={}  \
+                 preemptions={}  wasted_decode_tokens={}",
                 out.merged.makespan_ms / 1e3,
                 out.merged.peak_waiting,
                 out.merged.boosts,
-                out.merged.rejected
+                out.merged.rejected,
+                out.merged.preemptions,
+                out.merged.wasted_decode_tokens
             );
             if cfg.scheduler.replicas > 1 {
                 for rep in &out.per_replica {
                     println!(
-                        "{}  dispatched={}  stolen_in={}  stolen_out={}",
+                        "{}  dispatched={}  stolen_in={}  stolen_out={}  preempted={}",
                         rep.report.one_line(&format!("  replica {}", rep.replica)),
                         rep.dispatched,
                         rep.stolen_in,
-                        rep.stolen_out
+                        rep.stolen_out,
+                        rep.preempted
                     );
                 }
             }
@@ -248,8 +269,8 @@ fn sweep(args: &Args) -> Result<()> {
     let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
 
     let mut csv = String::from(
-        "dataset,model,policy,replicas,dispatch,steal,rate_req_s,rep,avg_ms_tok,p90_ms_tok,\
-         p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts\n",
+        "dataset,model,policy,replicas,dispatch,steal,preempt,rate_req_s,rep,avg_ms_tok,\
+         p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,wasted_tokens\n",
     );
     for &kind in &suite {
         for &rate in &rates {
@@ -258,17 +279,20 @@ fn sweep(args: &Args) -> Result<()> {
                 let sc = &cfg.scheduler;
                 let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{}\n",
+                    "{dataset},{model},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{}\n",
                     kind.name().replace(' ', "_"),
                     cfg.scheduler.replicas,
                     cfg.scheduler.dispatch.name(),
                     cfg.scheduler.steal.name(),
+                    cfg.scheduler.preempt.name(),
                     out.merged.report.avg_per_token_ms,
                     out.merged.report.p90_per_token_ms,
                     out.merged.report.per_token.p99,
                     out.merged.report.ttft.p50,
                     out.merged.report.throughput_tok_s,
-                    out.merged.boosts
+                    out.merged.boosts,
+                    out.merged.preemptions,
+                    out.merged.wasted_decode_tokens
                 ));
             }
         }

@@ -153,6 +153,57 @@ impl StealMode {
     }
 }
 
+/// When a replica may evict a *running* job to admit a shorter one
+/// (score-aware preemption; the post-admission displacement that
+/// ranking-based schedulers need to beat HOL blocking inside the
+/// running batch, vLLM-style).  Evicted jobs resume by recompute: the
+/// generated tokens are discarded and the request re-enters the
+/// waiting queue with its original arrival, score and boost state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptMode {
+    /// Never evict running work (the pre-preemption behaviour).
+    Off,
+    /// Evict whenever the head of the waiting queue undercuts the worst
+    /// running job's remaining predicted work by the margin.
+    Arrival,
+    /// Like `Arrival`, but only while the waiting queue holds more than
+    /// `n` requests (preempt under backlog pressure only).
+    Pressure(usize),
+}
+
+impl PreemptMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        let t = s.to_ascii_lowercase();
+        Ok(match t.as_str() {
+            "off" | "none" => PreemptMode::Off,
+            "arrival" => PreemptMode::Arrival,
+            other => {
+                let Some(rest) = other.strip_prefix("pressure") else {
+                    bail!("unknown preempt mode {s:?} (off | arrival | pressure(n))");
+                };
+                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
+                match inner.trim().parse::<usize>() {
+                    Ok(n) => PreemptMode::Pressure(n),
+                    Err(_) => bail!("preempt pressure needs a depth, e.g. pressure(4): {s:?}"),
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PreemptMode::Off => "off".to_string(),
+            PreemptMode::Arrival => "arrival".to_string(),
+            PreemptMode::Pressure(n) => format!("pressure({n})"),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [PreemptMode; 3] {
+        [PreemptMode::Off, PreemptMode::Arrival, PreemptMode::Pressure(4)]
+    }
+}
+
 /// Per-replica capacity override for heterogeneous fleets.  `None`
 /// fields inherit the fleet-wide `SchedulerConfig` defaults.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -217,6 +268,17 @@ pub struct SchedulerConfig {
     /// Per-replica capacity overrides (entry `i` applies to replica `i`;
     /// shorter than `replicas` ⇒ the rest use the fleet defaults).
     pub replica_caps: Vec<ReplicaCaps>,
+    /// Score-aware preemption of running jobs (per replica; meaningful
+    /// for any replica count, unlike stealing).
+    pub preempt: PreemptMode,
+    /// Preemption margin: the candidate's predicted length times this
+    /// factor must undercut the victim's remaining predicted work.
+    /// Must be ≥ 1 — that keeps eviction KV-sound (the candidate's full
+    /// reservation always fits in the blocks the victim frees).
+    pub preempt_margin: f64,
+    /// Anti-thrash guard: a job preempted this many times becomes
+    /// non-evictable (mirrors the starvation boost bounding SJF delay).
+    pub max_preemptions: u32,
 }
 
 impl Default for SchedulerConfig {
@@ -231,6 +293,9 @@ impl Default for SchedulerConfig {
             dispatch: DispatchKind::RoundRobin,
             steal: StealMode::Off,
             replica_caps: Vec::new(),
+            preempt: PreemptMode::Off,
+            preempt_margin: 2.0,
+            max_preemptions: 2,
         }
     }
 }
@@ -357,6 +422,21 @@ impl Config {
         if let Some(v) = doc.get_str("scheduler", "steal") {
             c.scheduler.steal = StealMode::parse(v)?;
         }
+        if let Some(v) = doc.get_str("scheduler", "preempt") {
+            c.scheduler.preempt = PreemptMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_num("scheduler", "preempt_margin") {
+            c.scheduler.preempt_margin = v;
+        }
+        if let Some(v) = doc.get_num("scheduler", "max_preemptions") {
+            // a bare `as u32` would saturate -1 to 0 — which silently
+            // disables the preemption the user just turned on — and
+            // truncate 2.7 to 2; reject both instead
+            if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+                bail!("scheduler.max_preemptions must be a non-negative integer (got {v})");
+            }
+            c.scheduler.max_preemptions = v as u32;
+        }
         for i in 0..doc.array_len("scheduler.replica") {
             let sect = format!("scheduler.replica.{i}");
             c.scheduler.replica_caps.push(ReplicaCaps {
@@ -392,6 +472,13 @@ impl Config {
         }
         if self.scheduler.replicas == 0 {
             bail!("scheduler.replicas must be > 0");
+        }
+        if self.scheduler.preempt_margin < 1.0 || self.scheduler.preempt_margin.is_nan() {
+            bail!(
+                "scheduler.preempt_margin must be >= 1.0 (got {}): smaller margins \
+                 could evict a job whose freed KV blocks cannot hold the candidate",
+                self.scheduler.preempt_margin
+            );
         }
         if self.scheduler.replica_caps.len() > self.scheduler.replicas {
             bail!(
@@ -553,6 +640,57 @@ mod tests {
         .is_err());
         // bad steal mode
         assert!(Config::from_toml("[scheduler]\nsteal = \"sometimes\"").is_err());
+    }
+
+    #[test]
+    fn parse_preemption_knobs() {
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            replicas = 2
+            preempt = "pressure(6)"
+            preempt_margin = 3.5
+            max_preemptions = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.preempt, PreemptMode::Pressure(6));
+        assert_eq!(c.scheduler.preempt_margin, 3.5);
+        assert_eq!(c.scheduler.max_preemptions, 5);
+        // defaults: preemption off, margin 2, cap 2
+        let d = SchedulerConfig::default();
+        assert_eq!(d.preempt, PreemptMode::Off);
+        assert_eq!(d.preempt_margin, 2.0);
+        assert_eq!(d.max_preemptions, 2);
+    }
+
+    #[test]
+    fn preempt_mode_parse_and_names() {
+        assert_eq!(PreemptMode::parse("off").unwrap(), PreemptMode::Off);
+        assert_eq!(PreemptMode::parse("ARRIVAL").unwrap(), PreemptMode::Arrival);
+        assert_eq!(PreemptMode::parse("pressure(3)").unwrap(), PreemptMode::Pressure(3));
+        assert_eq!(PreemptMode::parse("pressure:3").unwrap(), PreemptMode::Pressure(3));
+        assert!(PreemptMode::parse("pressure").is_err());
+        assert!(PreemptMode::parse("pressure(2.5)").is_err());
+        assert!(PreemptMode::parse("eager").is_err());
+        for m in PreemptMode::all() {
+            assert_eq!(PreemptMode::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_unsound_preempt_margin() {
+        // margins below 1 could evict a victim whose freed KV blocks are
+        // too few for the candidate — validation must refuse them
+        assert!(Config::from_toml("[scheduler]\npreempt_margin = 0.5").is_err());
+        assert!(Config::from_toml("[scheduler]\npreempt_margin = 1.0").is_ok());
+        assert!(Config::from_toml("[scheduler]\npreempt = \"sometimes\"").is_err());
+        // -1 would saturate to 0 (silently disabling the feature) and
+        // 2.7 would truncate — both must be parse errors, while an
+        // explicit 0 stays legal as the deliberate kill switch
+        assert!(Config::from_toml("[scheduler]\nmax_preemptions = -1").is_err());
+        assert!(Config::from_toml("[scheduler]\nmax_preemptions = 2.7").is_err());
+        assert!(Config::from_toml("[scheduler]\nmax_preemptions = 0").is_ok());
     }
 
     #[test]

@@ -41,12 +41,29 @@
 //!   SJF pop order, both sides re-charge `queued_tokens`, and
 //!   `steal = off` leaves the serve loop untouched (pinned bitwise by
 //!   `tests/sharded.rs`).
+//! * **Score-aware preemption** (`[scheduler] preempt =
+//!   off|arrival|pressure(k)`) — stealing moves *queued* work, but once
+//!   a long job occupies a slot it used to run to completion, so a
+//!   burst of short arrivals still ate HOL blocking inside the running
+//!   batch.  With preemption on, a queue head whose predicted length
+//!   undercuts the worst running job's *remaining* predicted work by
+//!   `preempt_margin` evicts that job via [`Engine::evict`]
+//!   (recompute-on-resume: generated tokens are discarded and counted
+//!   as wasted; the request re-enters the waiting queue with its
+//!   original arrival, score, boost and an incremented preemption
+//!   count, re-charged against `queued_tokens`).  An anti-thrash guard
+//!   makes a job non-evictable after `max_preemptions` evictions,
+//!   mirroring the starvation boost; boosted jobs are never evicted at
+//!   all.  `preempt = off` leaves the serve loop untouched (pinned
+//!   record-for-record by `tests/sharded.rs`), and preemption composes
+//!   with stealing — a stolen-then-preempted request keeps every
+//!   conservation invariant (`tests/properties.rs`).
 
 use std::collections::{HashMap, VecDeque};
 
 use anyhow::Context;
 
-use crate::config::{DispatchKind, SchedulerConfig, StealMode};
+use crate::config::{DispatchKind, PreemptMode, SchedulerConfig, StealMode};
 use crate::coordinator::queue::QueuedRequest;
 use crate::engine::kv_cache::BLOCK_TOKENS;
 use crate::coordinator::server::ServeOutcome;
@@ -60,6 +77,14 @@ struct InFlight {
     admitted_ms: f64,
     first_token_ms: Option<f64>,
     boosted: bool,
+    /// Frozen policy key, kept so an eviction can re-queue the request
+    /// without re-scoring it (requests are scored once, at admission).
+    key: f64,
+    /// Decode tokens generated so far (mirrors the engine's slot state;
+    /// the preemption victim scan needs remaining = target − generated).
+    generated: u32,
+    /// Times this request has been evicted (anti-thrash guard input).
+    preemptions: u32,
 }
 
 /// One engine replica plus its scheduling state.
@@ -78,6 +103,10 @@ struct Replica<E: Engine> {
     stolen_in: usize,
     /// Requests siblings pulled from this replica's waiting queue.
     stolen_out: usize,
+    /// Running jobs this replica evicted (score-aware preemption).
+    preempted: usize,
+    /// Decode tokens discarded by those evictions (recompute-on-resume).
+    wasted_decode_tokens: u64,
     /// prompt+target tokens sitting in inbox + waiting queue.
     queued_tokens: u64,
     /// prompt+target tokens reserved by the running batch.
@@ -106,6 +135,8 @@ impl<E: Engine> Replica<E> {
             dispatched: 0,
             stolen_in: 0,
             stolen_out: 0,
+            preempted: 0,
+            wasted_decode_tokens: 0,
             queued_tokens: 0,
             running_tokens: 0,
             kv_blocks,
@@ -169,31 +200,44 @@ impl<E: Engine> Replica<E> {
         // 2. starvation guard
         self.waiting.apply_starvation_guard(now);
 
-        // 3. admission (continuous: any free slot; static: empty batch)
+        // 3. admission (continuous: any free slot; static: empty batch),
+        //    interleaved with score-aware preemption: once the batch is
+        //    full, a sufficiently short queue head may displace the worst
+        //    running job (each eviction frees exactly one slot, which the
+        //    admission pass re-fills in policy order; the loop stops when
+        //    neither admission nor preemption makes progress)
         let may_admit = sched.continuous || self.running.is_empty();
         if may_admit {
-            while self.engine.free_slots() > 0 && !self.waiting.is_empty() {
-                let q = self.waiting.pop().unwrap();
-                let total = q.req.prompt_len + q.req.target_len;
-                if !self.engine.kv_headroom_for(total) {
-                    self.waiting.unpop(q);
+            loop {
+                while self.engine.free_slots() > 0 && !self.waiting.is_empty() {
+                    let q = self.waiting.pop().unwrap();
+                    let total = q.req.prompt_len + q.req.target_len;
+                    if !self.engine.kv_headroom_for(total) {
+                        self.waiting.unpop(q);
+                        break;
+                    }
+                    let slot = self
+                        .engine
+                        .prefill(&q.req.tokens, q.req.target_len)
+                        .context("prefill during admission")?;
+                    self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
+                    self.running_tokens += total as u64;
+                    self.running.insert(
+                        slot,
+                        InFlight {
+                            admitted_ms: self.engine.now_ms(),
+                            first_token_ms: None,
+                            boosted: q.boosted,
+                            key: q.key,
+                            generated: 0,
+                            preemptions: q.preemptions,
+                            req: q.req,
+                        },
+                    );
+                }
+                if !self.try_preempt(sched) {
                     break;
                 }
-                let slot = self
-                    .engine
-                    .prefill(&q.req.tokens, q.req.target_len)
-                    .context("prefill during admission")?;
-                self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
-                self.running_tokens += total as u64;
-                self.running.insert(
-                    slot,
-                    InFlight {
-                        admitted_ms: self.engine.now_ms(),
-                        first_token_ms: None,
-                        boosted: q.boosted,
-                        req: q.req,
-                    },
-                );
             }
         }
 
@@ -206,6 +250,7 @@ impl<E: Engine> Replica<E> {
                 if inflight.first_token_ms.is_none() {
                     inflight.first_token_ms = Some(now);
                 }
+                inflight.generated = ev.generated;
                 if ev.finished {
                     let f = self.running.remove(&ev.slot).unwrap();
                     self.engine.release(ev.slot);
@@ -221,6 +266,7 @@ impl<E: Engine> Replica<E> {
                         prompt_len: f.req.prompt_len,
                         output_len: ev.generated,
                         boosted: f.boosted,
+                        preemptions: f.preemptions,
                     });
                 }
             }
@@ -239,6 +285,126 @@ impl<E: Engine> Replica<E> {
         }
         Ok(())
     }
+
+    /// One score-aware preemption attempt: when the batch is full, evict
+    /// the running job with the most *remaining* predicted work iff the
+    /// head of the waiting queue undercuts that remainder by
+    /// `preempt_margin` AND would actually be admitted ahead of the
+    /// re-queued victim.  Returns true when a job was evicted (one slot
+    /// is then free and the caller's admission pass re-fills it).
+    ///
+    /// Guard rails, in order:
+    /// * `pressure(k)` only fires while the waiting queue holds more
+    ///   than `k` entries; `arrival` fires for any non-empty queue.
+    /// * static batching never preempts — its contract is "admit only
+    ///   into an empty batch", which displacement would violate.
+    /// * boosted running jobs are non-evictable: the starvation guard
+    ///   already decided they waited too long once.  The same goes for a
+    ///   running job whose in-system time already exceeds the starvation
+    ///   threshold — its re-queued entry would be boosted on the very
+    ///   next step and bounce straight back, so evicting it could only
+    ///   burn its progress.
+    /// * the anti-thrash guard: a job evicted `max_preemptions` times
+    ///   becomes non-evictable, so eviction work per request is bounded
+    ///   and a long job cannot be starved by an endless short stream
+    ///   (the guard plays the same role the boost plays against SJF).
+    /// * the candidate must outrank the victim's re-queued entry under
+    ///   the queue's total order — otherwise the victim would pop
+    ///   straight back into the freed slot and the eviction would only
+    ///   burn the victim's generated tokens.  (This is what makes FCFS
+    ///   effectively preemption-free: the victim always arrived first.)
+    ///
+    /// Lengths are the oracle draws standing in for predictor output —
+    /// the same substitution the dispatch load keys make (module doc).
+    /// `preempt_margin >= 1` (validated) keeps eviction KV-sound: the
+    /// candidate's full reservation always fits in the blocks the victim
+    /// frees, because cand_total < victim_remaining <= victim_total.
+    fn try_preempt(&mut self, sched: &SchedulerConfig) -> bool {
+        let min_queue = match sched.preempt {
+            PreemptMode::Off => return false,
+            PreemptMode::Arrival => 1,
+            PreemptMode::Pressure(k) => k.saturating_add(1),
+        };
+        if !sched.continuous || self.engine.free_slots() > 0 || self.waiting.len() < min_queue {
+            return false;
+        }
+        // victim scan: most remaining work wins, slot index breaks ties
+        // (sorted scan — HashMap iteration order is not deterministic)
+        let now = self.engine.now_ms();
+        let mut slots: Vec<usize> = self.running.keys().copied().collect();
+        slots.sort_unstable();
+        let mut victim: Option<(usize, u32)> = None;
+        for slot in slots {
+            let f = &self.running[&slot];
+            // skip boosted jobs, jobs at the anti-thrash cap, and jobs
+            // already past the starvation threshold: evicting the latter
+            // re-queues an entry the guard boosts on the very next step,
+            // which would bounce straight back to the front — all the
+            // eviction would buy is a full recompute of its progress
+            if f.boosted
+                || f.preemptions >= sched.max_preemptions
+                || now - f.req.arrival_ms > sched.starvation_ms
+            {
+                continue;
+            }
+            let remaining = f.req.target_len.saturating_sub(f.generated);
+            let longer = match victim {
+                None => true,
+                Some((_, best)) => remaining > best,
+            };
+            if longer {
+                victim = Some((slot, remaining));
+            }
+        }
+        let Some((slot, remaining)) = victim else {
+            return false;
+        };
+        let Some(cand) = self.waiting.pop() else {
+            return false;
+        };
+        let undercuts =
+            (cand.req.target_len.max(1) as f64) * sched.preempt_margin < remaining as f64;
+        if !undercuts {
+            self.waiting.unpop(cand);
+            return false;
+        }
+        let f = self.running.get(&slot).unwrap();
+        // the eviction must actually let the candidate in: its full
+        // reservation has to fit the blocks the victim frees plus the
+        // current headroom (the margin bounds target lengths, but a
+        // prompt-heavy candidate can still outweigh the victim)
+        let total_c = (cand.req.prompt_len + cand.req.target_len).max(1) as usize;
+        let total_v = (f.req.prompt_len + f.req.target_len).max(1) as usize;
+        let free = self.kv_blocks.saturating_sub(self.engine.kv_blocks_used());
+        if total_c.div_ceil(BLOCK_TOKENS) > free + total_v.div_ceil(BLOCK_TOKENS) {
+            self.waiting.unpop(cand);
+            return false;
+        }
+        if !cand.pops_before(f.boosted, f.key, f.req.arrival_ms, f.req.id) {
+            // the re-queued victim would outrank the candidate and be
+            // re-admitted immediately — pure thrash, skip (probed via
+            // the Copy ordering fields; no request clone on this path,
+            // which FCFS hits every full-batch step)
+            self.waiting.unpop(cand);
+            return false;
+        }
+        let f = self.running.remove(&slot).unwrap();
+        let wasted = self.engine.evict(slot);
+        debug_assert_eq!(wasted, f.generated, "engine and scheduler disagree on progress");
+        self.preempted += 1;
+        self.wasted_decode_tokens += wasted as u64;
+        let total = (f.req.prompt_len + f.req.target_len) as u64;
+        self.running_tokens = self.running_tokens.saturating_sub(total);
+        self.queued_tokens += total;
+        self.waiting.unpop(cand);
+        self.waiting.push_scored(QueuedRequest {
+            key: f.key,
+            boosted: f.boosted,
+            preemptions: f.preemptions + 1,
+            req: f.req,
+        });
+        true
+    }
 }
 
 /// Per-replica slice of a sharded run.
@@ -253,6 +419,10 @@ pub struct ReplicaOutcome {
     pub stolen_in: usize,
     /// Requests siblings pulled out of this replica's waiting queue.
     pub stolen_out: usize,
+    /// Running jobs this replica evicted (score-aware preemption).
+    pub preempted: usize,
+    /// Decode tokens those evictions discarded (recompute-on-resume).
+    pub wasted_decode_tokens: u64,
     pub boosts: usize,
     pub peak_waiting: usize,
     pub makespan_ms: f64,
@@ -261,8 +431,11 @@ pub struct ReplicaOutcome {
 /// Outcome of a sharded run: fleet-level metrics plus the breakdown.
 #[derive(Clone, Debug)]
 pub struct ShardedOutcome {
-    /// Merged across replicas (all records in one [`crate::metrics::LatencyReport`];
-    /// wall/makespan are fleet-wide maxima, boosts are summed).
+    /// Merged across replicas: all records in one
+    /// [`crate::metrics::LatencyReport`]; wall/makespan are fleet-wide
+    /// maxima; boosts, preemptions and wasted decode tokens are summed.
+    /// Steal counts are a zero-sum transfer between replicas, so they
+    /// only appear in the per-replica breakdown (`stolen_in`/`stolen_out`).
     pub merged: ServeOutcome,
     pub per_replica: Vec<ReplicaOutcome>,
 }
@@ -307,6 +480,14 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
 
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
+    }
+
+    /// Borrow replica `i`'s engine — post-run audits (tests, benches)
+    /// reconcile engine counters against the outcome, e.g. a SimEngine's
+    /// `tokens_generated` must equal completed output plus the decode
+    /// tokens that preemption discarded.
+    pub fn engine(&self, i: usize) -> &E {
+        &self.replicas[i].engine
     }
 
     /// Argmin over replicas whose KV budget can hold the request at all
@@ -514,7 +695,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 let r = &mut self.replicas[idx];
                 r.dispatched += 1;
                 r.queued_tokens += total as u64;
-                r.inbox.push_back(QueuedRequest { req, key, boosted: false });
+                r.inbox.push_back(QueuedRequest { req, key, boosted: false, preemptions: 0 });
                 continue;
             }
 
@@ -538,6 +719,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
     fn collect(&mut self, rejected: usize) -> ShardedOutcome {
         let mut per_replica = Vec::with_capacity(self.replicas.len());
         let mut boosts = 0usize;
+        let mut preemptions = 0usize;
+        let mut wasted_decode_tokens = 0u64;
         let mut peak_waiting = 0usize;
         let mut makespan = f64::NEG_INFINITY;
         let mut wall = f64::NEG_INFINITY;
@@ -551,11 +734,15 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 dispatched: r.dispatched,
                 stolen_in: r.stolen_in,
                 stolen_out: r.stolen_out,
+                preempted: r.preempted,
+                wasted_decode_tokens: r.wasted_decode_tokens,
                 boosts: r.waiting.boosts,
                 peak_waiting: r.peak_waiting,
                 makespan_ms: r.makespan_ms,
             });
             boosts += r.waiting.boosts;
+            preemptions += r.preempted;
+            wasted_decode_tokens += r.wasted_decode_tokens;
             peak_waiting = peak_waiting.max(r.peak_waiting);
             makespan = makespan.max(r.makespan_ms);
             wall = wall.max(r_wall);
@@ -568,6 +755,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 rejected,
                 peak_waiting,
                 makespan_ms: makespan,
+                preemptions,
+                wasted_decode_tokens,
             },
             per_replica,
         }
@@ -943,6 +1132,205 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The acceptance trace for score-aware preemption: one long job
+    /// arrives first and monopolises the single slot; a burst of shorts
+    /// lands right behind it.  (`mk_req` sets `score = target`, so the
+    /// ranked policies see an oracle-quality predictor.)
+    fn long_job_then_burst(n_short: usize) -> Vec<Request> {
+        let mut v = vec![mk_req(0, 0.0, 1000)];
+        v.extend((1..=n_short as u64).map(|i| mk_req(i, 40.0, 10)));
+        v
+    }
+
+    fn preempt_sched(preempt: PreemptMode) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: 1,
+            max_kv_tokens: 1 << 20,
+            replicas: 1,
+            dispatch: DispatchKind::Ranked,
+            preempt,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn preempt_arrival_beats_off_on_long_job_then_burst() {
+        // the PR acceptance criterion: under the ranked (score-SJF)
+        // policy, preempt=arrival must strictly cut BOTH mean e2e
+        // latency and p99 TTFT versus preempt=off on the long-job-head
+        // + short-burst trace
+        let off =
+            run(&preempt_sched(PreemptMode::Off), PolicyKind::Pars, long_job_then_burst(60), 4096);
+        let arr = run(
+            &preempt_sched(PreemptMode::Arrival),
+            PolicyKind::Pars,
+            long_job_then_burst(60),
+            4096,
+        );
+        assert_eq!(off.merged.report.n_requests, 61);
+        assert_eq!(arr.merged.report.n_requests, 61);
+        assert_eq!(off.merged.preemptions, 0);
+        assert!(arr.merged.preemptions > 0, "the long job was never evicted");
+        assert!(arr.merged.wasted_decode_tokens > 0, "eviction must discard progress");
+        assert!(
+            arr.merged.report.e2e.mean < off.merged.report.e2e.mean,
+            "preemption must strictly cut mean e2e: off={:.1} arrival={:.1}",
+            off.merged.report.e2e.mean,
+            arr.merged.report.e2e.mean
+        );
+        assert!(
+            arr.merged.report.ttft.p99 < off.merged.report.ttft.p99,
+            "preemption must strictly cut p99 TTFT: off={:.1} arrival={:.1}",
+            off.merged.report.ttft.p99,
+            arr.merged.report.ttft.p99
+        );
+        // the long job carries the eviction count; recompute-on-resume
+        // means its final admission postdates the burst
+        let long = arr.per_replica[0].records.iter().find(|r| r.id == 0).unwrap();
+        assert!(long.preemptions >= 1);
+        assert!(long.admitted_ms > 40.0, "recompute: final admission is after the burst");
+    }
+
+    #[test]
+    fn fcfs_never_preempts_by_construction() {
+        // under FCFS the running victim always arrived before the queue
+        // head, so the re-queued victim would outrank the candidate and
+        // bounce straight back — the thrash check must refuse every
+        // eviction and reproduce preempt=off exactly
+        let off =
+            run(&preempt_sched(PreemptMode::Off), PolicyKind::Fcfs, long_job_then_burst(30), 4096);
+        let arr = run(
+            &preempt_sched(PreemptMode::Arrival),
+            PolicyKind::Fcfs,
+            long_job_then_burst(30),
+            4096,
+        );
+        assert_eq!(arr.merged.preemptions, 0);
+        assert_eq!(arr.merged.wasted_decode_tokens, 0);
+        assert_eq!(arr.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(arr.merged.report.e2e.mean, off.merged.report.e2e.mean);
+    }
+
+    #[test]
+    fn pressure_mode_only_fires_over_the_backlog_threshold() {
+        // queue depth stays at 30 shorts: pressure(200) must behave
+        // exactly like off, pressure(2) like arrival
+        let off =
+            run(&preempt_sched(PreemptMode::Off), PolicyKind::Pars, long_job_then_burst(30), 4096);
+        let deep = run(
+            &preempt_sched(PreemptMode::Pressure(200)),
+            PolicyKind::Pars,
+            long_job_then_burst(30),
+            4096,
+        );
+        assert_eq!(deep.merged.preemptions, 0);
+        assert_eq!(deep.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(deep.merged.report.avg_per_token_ms, off.merged.report.avg_per_token_ms);
+        let shallow = run(
+            &preempt_sched(PreemptMode::Pressure(2)),
+            PolicyKind::Pars,
+            long_job_then_burst(30),
+            4096,
+        );
+        assert!(shallow.merged.preemptions > 0);
+        assert!(shallow.merged.report.e2e.mean < off.merged.report.e2e.mean);
+    }
+
+    #[test]
+    fn anti_thrash_guard_caps_evictions_exactly() {
+        // one long job, three widely-spaced shorts: each short evicts the
+        // long job once until it hits max_preemptions = 2; the third
+        // short must then WAIT even though the margin condition holds —
+        // exactly the over-preempted job becomes non-evictable
+        let mut s = preempt_sched(PreemptMode::Arrival);
+        s.max_preemptions = 2;
+        let reqs = vec![
+            mk_req(0, 0.0, 300),
+            mk_req(1, 10.0, 5),
+            mk_req(2, 100.0, 5),
+            mk_req(3, 200.0, 5),
+        ];
+        let out = run(&s, PolicyKind::Pars, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 4);
+        assert_eq!(out.merged.preemptions, 2, "cap must stop the third eviction");
+        let recs = &out.per_replica[0].records;
+        let long = recs.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(long.preemptions, 2, "only the long job was ever evicted");
+        for id in 1..=3 {
+            assert_eq!(recs.iter().find(|r| r.id == id).unwrap().preemptions, 0);
+        }
+        // the third short queued behind the now-non-evictable long job
+        let s3 = recs.iter().find(|r| r.id == 3).unwrap();
+        assert!(
+            s3.admitted_ms >= long.completed_ms,
+            "short 3 must wait for the capped long job: admitted={:.1} long done={:.1}",
+            s3.admitted_ms,
+            long.completed_ms
+        );
+    }
+
+    #[test]
+    fn preemption_composes_with_stealing_and_conserves_work() {
+        // three single-slot replicas each pinned by a long job, then a
+        // wave of shorts: preemption must fire inside replicas while the
+        // conservation books (ids, dispatch counts, steal transfers,
+        // per-request eviction counts) all stay balanced
+        let s = SchedulerConfig {
+            max_batch: 1,
+            max_kv_tokens: 1 << 20,
+            replicas: 3,
+            dispatch: DispatchKind::LeastLoaded,
+            steal: StealMode::Idle,
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        };
+        let mut reqs = vec![mk_req(0, 0.0, 800), mk_req(1, 0.0, 600), mk_req(2, 0.0, 400)];
+        reqs.extend((3..15).map(|i| mk_req(i, 50.0, 5)));
+        let out = run(&s, PolicyKind::Pars, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 15);
+        assert!(out.merged.preemptions > 0, "no replica ever preempted its long job");
+        let mut ids: Vec<u64> = out
+            .per_replica
+            .iter()
+            .flat_map(|r| r.records.iter().map(|rec| rec.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..15).collect::<Vec<u64>>(), "ids lost or duplicated");
+        assert_eq!(out.per_replica.iter().map(|r| r.dispatched).sum::<usize>(), 15);
+        let stolen_in: usize = out.per_replica.iter().map(|r| r.stolen_in).sum();
+        let stolen_out: usize = out.per_replica.iter().map(|r| r.stolen_out).sum();
+        assert_eq!(stolen_in, stolen_out, "steal books unbalanced");
+        let per_request: u64 = out
+            .per_replica
+            .iter()
+            .flat_map(|r| r.records.iter())
+            .map(|rec| rec.preemptions as u64)
+            .sum();
+        assert_eq!(per_request, out.merged.preemptions as u64);
+    }
+
+    #[test]
+    fn boosted_running_jobs_are_never_evicted() {
+        // force the long job to be boosted BEFORE admission (tiny
+        // starvation threshold); once running boosted it must survive a
+        // preempt-worthy burst untouched
+        let mut s = preempt_sched(PreemptMode::Arrival);
+        s.starvation_ms = 5.0;
+        let mut reqs = vec![mk_req(0, 0.0, 200), mk_req(1, 0.0, 150)];
+        reqs.extend((2..10).map(|i| mk_req(i, 30.0, 5)));
+        let out = run(&s, PolicyKind::Pars, reqs, 4096);
+        assert_eq!(out.merged.report.n_requests, 10);
+        let recs = &out.per_replica[0].records;
+        for rec in recs.iter().filter(|r| r.boosted) {
+            assert_eq!(
+                rec.preemptions, 0,
+                "id {}: a starvation-boosted job must be non-evictable",
+                rec.id
+            );
+        }
+        assert!(recs.iter().any(|r| r.boosted), "trace too gentle: nothing boosted");
     }
 
     #[test]

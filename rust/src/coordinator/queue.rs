@@ -17,6 +17,11 @@ pub struct QueuedRequest {
     pub req: Request,
     pub key: f64,
     pub boosted: bool,
+    /// How many times this request has been evicted from a running
+    /// batch (score-aware preemption).  Carried through every re-queue
+    /// so the anti-thrash guard can make over-preempted jobs
+    /// non-evictable; never part of the ordering key.
+    pub preemptions: u32,
 }
 
 impl PartialEq for QueuedRequest {
@@ -30,6 +35,22 @@ impl QueuedRequest {
     /// Min-ordering tuple: boosted first, then key, arrival, id.
     fn cmp_key(&self) -> (bool, f64, f64, u64) {
         (!self.boosted, self.key, self.req.arrival_ms, self.req.id)
+    }
+
+    /// Would `self` pop strictly before an entry with the given boost /
+    /// key / arrival / id?  Same total order as [`Ord`] (both go through
+    /// `cmp_key`), but callers can probe a *hypothetical* entry — the
+    /// preemption thrash check ranks a would-be re-queued victim without
+    /// cloning its request.  Ties rank the probe first (not strictly
+    /// before).
+    pub fn pops_before(&self, boosted: bool, key: f64, arrival_ms: f64, id: u64) -> bool {
+        let a = self.cmp_key();
+        let b = (!boosted, key, arrival_ms, id);
+        a.0.cmp(&b.0)
+            .then_with(|| a.1.total_cmp(&b.1))
+            .then_with(|| a.2.total_cmp(&b.2))
+            .then_with(|| a.3.cmp(&b.3))
+            == Ordering::Less
     }
 }
 
@@ -77,11 +98,15 @@ impl WaitingQueue {
     /// Enqueue with the policy's key.
     pub fn push(&mut self, req: Request, policy: &dyn Policy) {
         let key = policy.key(&req);
-        self.heap.push(QueuedRequest { req, key, boosted: false });
+        self.heap.push(QueuedRequest { req, key, boosted: false, preemptions: 0 });
     }
 
     /// Enqueue an entry whose key was already computed (the sharded
-    /// dispatcher scores each request exactly once, at admission).
+    /// dispatcher scores each request exactly once, at admission).  Also
+    /// the re-queue path for preempted jobs: the entry keeps its
+    /// original `arrival_ms` (so the starvation guard measures wait from
+    /// first arrival, not from eviction), its score key, its boost and
+    /// its preemption count.
     pub fn push_scored(&mut self, q: QueuedRequest) {
         self.heap.push(q);
     }
@@ -264,6 +289,80 @@ mod tests {
         let stolen = w.steal_lowest_priority().unwrap();
         assert_eq!(stolen.req.id, 2);
         assert!(w.pop().unwrap().boosted);
+    }
+
+    #[test]
+    fn requeued_preempted_request_keeps_original_arrival_for_the_guard() {
+        // regression: eviction re-queues through push_scored; the guard
+        // must measure the wait from the ORIGINAL arrival, not from the
+        // eviction time — a job that arrived at t=0, ran a while, and was
+        // evicted at t=90 is already 90 ms into its starvation budget
+        let mut w = WaitingQueue::new(100.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 50.0), &p);
+        let mut q = w.pop().unwrap(); // "admitted" at t=10, evicted at t=90
+        assert!(!q.boosted);
+        q.preemptions += 1;
+        w.push_scored(q); // re-queue at t=90 with arrival_ms still 0.0
+        w.push(req(2, 90.0, 1.0), &p);
+        assert_eq!(w.oldest_arrival(), Some(0.0), "re-queue must not reset arrival");
+        w.apply_starvation_guard(150.0); // 150 > 100 since ORIGINAL arrival only
+        assert_eq!(w.boosts, 1, "guard must fire off the original arrival");
+        let first = w.pop().unwrap();
+        assert_eq!(first.req.id, 1);
+        assert!(first.boosted);
+        assert_eq!(first.preemptions, 1, "preemption count survives the re-queue");
+    }
+
+    #[test]
+    fn requeued_boosted_request_stays_boosted_and_is_not_recounted() {
+        // a previously-boosted job that gets preempted re-enters with its
+        // boost intact; the guard must neither strip it nor double-count
+        let mut w = WaitingQueue::new(100.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 99.0), &p);
+        w.apply_starvation_guard(200.0);
+        assert_eq!(w.boosts, 1);
+        let mut q = w.pop().unwrap(); // admitted boosted, then evicted
+        assert!(q.boosted);
+        q.preemptions += 1;
+        w.push_scored(q);
+        assert_eq!(w.oldest_arrival(), None, "boosted entry must not set a guard deadline");
+        w.apply_starvation_guard(500.0);
+        assert_eq!(w.boosts, 1, "an already-boosted re-queued entry must not recount");
+        let back = w.pop().unwrap();
+        assert!(back.boosted && back.preemptions == 1);
+    }
+
+    #[test]
+    fn pops_before_agrees_with_the_heap_order() {
+        // the preemption thrash check probes a hypothetical entry via
+        // pops_before; it must rank exactly like Ord ranks a real entry
+        // (including boost dominance, key ties and NaN keys)
+        let mk = |id: u64, arrival: f64, key: f64, boosted: bool| QueuedRequest {
+            req: req(id, arrival, key as f32),
+            key,
+            boosted,
+            preemptions: 0,
+        };
+        let entries = [
+            mk(1, 5.0, 2.0, false),
+            mk(2, 3.0, 2.0, false), // key tie → arrival decides
+            mk(3, 9.0, 1.0, true),  // boost outranks everything
+            mk(4, 0.0, f64::NAN, false),
+            mk(5, 0.0, 9.0, false),
+        ];
+        for a in &entries {
+            for b in &entries {
+                assert_eq!(
+                    a.pops_before(b.boosted, b.key, b.req.arrival_ms, b.req.id),
+                    a.cmp(b) == Ordering::Greater,
+                    "probe/Ord drift for ids {} vs {}",
+                    a.req.id,
+                    b.req.id
+                );
+            }
+        }
     }
 
     #[test]

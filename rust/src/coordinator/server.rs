@@ -17,7 +17,13 @@ use crate::engine::Engine;
 use crate::metrics::LatencyReport;
 use crate::Result;
 
-/// Serving statistics beyond latency (queue dynamics, guard activity).
+/// Serving statistics beyond latency: queue dynamics (`peak_waiting`,
+/// `rejected`), starvation-guard activity (`boosts`) and score-aware
+/// preemption activity (`preemptions`, `wasted_decode_tokens`).  For a
+/// sharded run this is the fleet-wide merge; per-replica counters —
+/// including the work-stealing `stolen_in`/`stolen_out` transfer books,
+/// which sum to zero across the fleet and so never appear here — live in
+/// [`crate::coordinator::ReplicaOutcome`].
 #[derive(Clone, Debug)]
 pub struct ServeOutcome {
     pub report: LatencyReport,
@@ -26,6 +32,11 @@ pub struct ServeOutcome {
     pub peak_waiting: usize,
     /// Engine-clock time when the last request completed.
     pub makespan_ms: f64,
+    /// Running jobs evicted by score-aware preemption (fleet total).
+    pub preemptions: usize,
+    /// Decode tokens discarded by those evictions — the recompute-on-
+    /// resume price (fleet total).
+    pub wasted_decode_tokens: u64,
 }
 
 /// Drives one workload through an engine under a policy.

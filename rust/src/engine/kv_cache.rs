@@ -77,7 +77,11 @@ impl KvBlockManager {
     /// reserved for `reserved` tokens upfront.  With forced-length
     /// generation the total is known at admission, so reserving
     /// prompt+target makes admission sound: a running batch can never
-    /// exhaust the pool mid-decode (vLLM needs preemption for this).
+    /// exhaust the pool mid-decode.  (vLLM needs preemption as its
+    /// escape hatch for exactly this; here `Engine::evict` exists too,
+    /// but as a latency lever — it releases a victim's whole
+    /// reservation at once, so the scheduler can trade a long job's
+    /// progress for a shorter arrival.)
     pub fn admit_reserved(&mut self, used: usize, reserved: usize) -> Result<SeqHandle> {
         let reserved = reserved.max(used).max(1);
         let need = Self::blocks_for(reserved);

@@ -68,6 +68,15 @@ pub trait Engine {
     /// Release a finished sequence's slot and KV.
     fn release(&mut self, slot: SlotId);
 
+    /// Forcibly evict a *running* sequence — score-aware preemption's
+    /// recompute-on-resume: the slot and its full KV reservation are
+    /// released immediately and every generated token is discarded (the
+    /// caller re-queues the request; on re-admission `prefill` recomputes
+    /// the prompt from scratch).  Returns the number of discarded decode
+    /// tokens — the wasted work the preemption metrics account for — or
+    /// 0 when the slot was already empty.
+    fn evict(&mut self, slot: SlotId) -> u32;
+
     fn active_slots(&self) -> usize;
 
     fn free_slots(&self) -> usize {
@@ -112,6 +121,10 @@ impl<E: Engine + ?Sized> Engine for &mut E {
 
     fn release(&mut self, slot: SlotId) {
         (**self).release(slot)
+    }
+
+    fn evict(&mut self, slot: SlotId) -> u32 {
+        (**self).evict(slot)
     }
 
     fn active_slots(&self) -> usize {

@@ -242,6 +242,20 @@ impl Engine for PjrtEngine {
         }
     }
 
+    fn evict(&mut self, slot: SlotId) -> u32 {
+        // Recompute-on-resume: free the slot + logical KV blocks and
+        // discard the generated tokens.  The physical cache rows need no
+        // scrub — the next `prefill` into this slot splices a fresh B=1
+        // KV slice over them, and decode masks inactive slots anyway.
+        match self.slots[slot].take() {
+            Some(s) => {
+                self.kv_mgr.release(s.kv);
+                s.generated
+            }
+            None => 0,
+        }
+    }
+
     fn active_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }

@@ -74,8 +74,11 @@ impl Engine for SimEngine {
         };
         // Reserve the FULL sequence (prompt + forced output) upfront:
         // admission is then sound — a running batch can never exhaust the
-        // pool mid-decode (vLLM avoids this with preemption; with known
-        // target lengths conservative reservation is exact).
+        // pool mid-decode (with known target lengths conservative
+        // reservation is exact).  Preemption here is therefore purely a
+        // *latency* lever — `evict` displaces long running jobs for
+        // shorter arrivals — not the KV-exhaustion escape hatch vLLM
+        // needs it for.
         let kv = self
             .kv
             .admit_reserved(prompt_len, prompt_len + target_len.max(1) as usize)?;
@@ -112,6 +115,20 @@ impl Engine for SimEngine {
     fn release(&mut self, slot: SlotId) {
         if let Some(s) = self.slots[slot].take() {
             self.kv.release(s.kv);
+        }
+    }
+
+    fn evict(&mut self, slot: SlotId) -> u32 {
+        // Recompute-on-resume: drop the slot and its full reservation;
+        // the tokens it generated are the wasted work.  Eviction costs no
+        // virtual time — the expensive part is the re-prefill, which is
+        // charged when the request is admitted again.
+        match self.slots[slot].take() {
+            Some(s) => {
+                self.kv.release(s.kv);
+                s.generated
+            }
+            None => 0,
         }
     }
 
@@ -193,6 +210,24 @@ mod tests {
         }
         assert!(e.prefill(&[1, 2], 10).is_err());
         assert_eq!(e.free_slots(), 0);
+    }
+
+    #[test]
+    fn evict_discards_generated_work_and_frees_kv() {
+        let mut e = engine();
+        let slot = e.prefill(&[1, 10, 2], 50).unwrap();
+        for _ in 0..7 {
+            e.decode_step().unwrap();
+        }
+        let used = e.kv().blocks_used();
+        assert!(used > 0);
+        assert_eq!(e.evict(slot), 7, "must report the discarded decode tokens");
+        assert_eq!(e.active_slots(), 0);
+        assert_eq!(e.kv().blocks_used(), 0, "the full reservation must be released");
+        assert_eq!(e.evict(slot), 0, "evicting an empty slot is a counted no-op");
+        // the slot is reusable immediately
+        e.prefill(&[1, 2], 5).unwrap();
+        assert_eq!(e.active_slots(), 1);
     }
 
     #[test]

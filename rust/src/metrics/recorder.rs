@@ -14,6 +14,11 @@ pub struct RequestRecord {
     pub output_len: u32,
     /// Was the starvation guard triggered for this request?
     pub boosted: bool,
+    /// How many times this request was evicted from a running batch and
+    /// recomputed from scratch (score-aware preemption).  `admitted_ms`
+    /// and `first_token_ms` describe the FINAL admission — earlier
+    /// partial runs were discarded.
+    pub preemptions: u32,
 }
 
 impl RequestRecord {
@@ -148,6 +153,7 @@ mod tests {
             prompt_len: 10,
             output_len: out,
             boosted: false,
+            preemptions: 0,
         }
     }
 

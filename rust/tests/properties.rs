@@ -11,18 +11,23 @@
 //!   never changes the remaining pop sequence.
 //! * The starvation guard boosts exactly the over-threshold set.
 //! * Metamorphic conservation: for random traces × every `DispatchKind`
-//!   × `PolicyKind` × steal mode, every request is served exactly once
-//!   or rejected (no id duplicated or lost across replicas), and fleet
-//!   `total_tokens` matches the trace.
-//! * Determinism: two runs of the same trace under work stealing
-//!   produce byte-identical per-replica record sequences (the
-//!   lagging-clock event order is pinned).
+//!   × `PolicyKind` × steal mode × preempt mode, every request is served
+//!   exactly once or rejected (no id duplicated or lost across
+//!   replicas), fleet `total_tokens` matches the trace, and every decode
+//!   token the engines produced is either delivered output or accounted
+//!   as preemption waste (`tokens_generated = Σ output + Σ discarded`).
+//! * Determinism: two runs of the same trace under work stealing — and
+//!   under stealing + preemption — produce byte-identical per-replica
+//!   record sequences (the lagging-clock event order is pinned).
+//! * The anti-thrash guard caps per-request evictions at
+//!   `max_preemptions` exactly; with a cap of 0 preemption degenerates
+//!   to `preempt = off` record-for-record.
 //!
 //! Reproduce a CI failure locally with the printed seed:
 //! `PROP_SEED=<seed> cargo test --release --test properties`.
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, ReplicaCaps, SchedulerConfig, StealMode,
+    CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, SchedulerConfig, StealMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -50,6 +55,7 @@ fn mk_queued(key: f64, arrival: f64, id: u64) -> QueuedRequest {
         },
         key,
         boosted: false,
+        preemptions: 0,
     }
 }
 
@@ -205,11 +211,13 @@ fn gen_trace(rng: &mut Rng) -> Vec<Request> {
         .collect()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_fleet(
     trace: &[Request],
     kind: PolicyKind,
     dispatch: DispatchKind,
     steal: StealMode,
+    preempt: PreemptMode,
     replicas: usize,
     max_batch: usize,
     caps: &[ReplicaCaps],
@@ -221,6 +229,7 @@ fn run_fleet(
         replicas,
         dispatch,
         steal,
+        preempt,
         replica_caps: caps.to_vec(),
         ..Default::default()
     };
@@ -230,7 +239,20 @@ fn run_fleet(
     let policy = make_policy(kind);
     let mut coord =
         ShardedCoordinator::new(engines, policy.as_ref(), dispatch, sched.clone());
-    coord.serve(trace.to_vec()).unwrap()
+    let out = coord.serve(trace.to_vec()).unwrap();
+    // engine-level waste accounting: every decode token a SimEngine ever
+    // produced is either delivered output or discarded by an eviction —
+    // wasted tokens are exactly the sum of discarded generations
+    for (i, rep) in out.per_replica.iter().enumerate() {
+        let delivered: u64 = rep.records.iter().map(|r| r.output_len as u64).sum();
+        assert_eq!(
+            coord.engine(i).tokens_generated,
+            delivered + rep.wasted_decode_tokens,
+            "replica {i} ({kind:?}/{dispatch:?}/{steal:?}/{preempt:?}): generated tokens \
+             must split exactly into delivered output + preemption waste"
+        );
+    }
+    out
 }
 
 #[test]
@@ -246,7 +268,7 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
         expect_ids.sort_unstable();
         let expect_tokens: u64 =
             trace.iter().filter(|r| fits(r)).map(|r| r.target_len as u64).sum();
-        let check = |out: &ShardedOutcome, steal: StealMode, label: &str| {
+        let check = |out: &ShardedOutcome, steal: StealMode, preempt: PreemptMode, label: &str| {
             assert_eq!(out.merged.rejected, n_rejected, "{label}: rejected");
             assert_eq!(out.merged.report.n_requests, expect_ids.len(), "{label}: completed");
             // every dispatched request is eventually completed:
@@ -272,14 +294,44 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
             if steal == StealMode::Off {
                 assert_eq!(stolen_in, 0, "{label}: steal=off must not move work");
             }
+            // preemption bookkeeping: merged counters are the replica
+            // sums; per-request evictions respect the anti-thrash cap;
+            // and preempt=off means no evictions and no wasted tokens
+            let preempted: usize = out.per_replica.iter().map(|r| r.preempted).sum();
+            let wasted: u64 = out.per_replica.iter().map(|r| r.wasted_decode_tokens).sum();
+            assert_eq!(out.merged.preemptions, preempted, "{label}: preempt books");
+            assert_eq!(out.merged.wasted_decode_tokens, wasted, "{label}: waste books");
+            let cap = SchedulerConfig::default().max_preemptions;
+            let per_request: u64 = out
+                .per_replica
+                .iter()
+                .flat_map(|r| r.records.iter())
+                .map(|rec| {
+                    assert!(
+                        rec.preemptions <= cap,
+                        "{label}: id {} evicted {} times past the anti-thrash cap {cap}",
+                        rec.id,
+                        rec.preemptions
+                    );
+                    rec.preemptions as u64
+                })
+                .sum();
+            assert_eq!(per_request, preempted as u64, "{label}: per-request preempt books");
+            if preempt == PreemptMode::Off {
+                assert_eq!(preempted, 0, "{label}: preempt=off must not evict");
+                assert_eq!(wasted, 0, "{label}: preempt=off must not waste tokens");
+            }
         };
         for kind in PolicyKind::all() {
             for dispatch in DispatchKind::all() {
                 for steal in StealMode::all() {
-                    let out = run_fleet(&trace, kind, dispatch, steal, 3, 2, &[]);
-                    let label =
-                        format!("seed {seed} case {case} {kind:?}/{dispatch:?}/{steal:?}");
-                    check(&out, steal, &label);
+                    for preempt in PreemptMode::all() {
+                        let out = run_fleet(&trace, kind, dispatch, steal, preempt, 3, 2, &[]);
+                        let label = format!(
+                            "seed {seed} case {case} {kind:?}/{dispatch:?}/{steal:?}/{preempt:?}"
+                        );
+                        check(&out, steal, preempt, &label);
+                    }
                 }
             }
         }
@@ -292,10 +344,13 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
         ];
         for dispatch in DispatchKind::all() {
             for steal in StealMode::all() {
-                let out = run_fleet(&trace, PolicyKind::Pars, dispatch, steal, 3, 2, &het);
-                let label =
-                    format!("seed {seed} case {case} het/{dispatch:?}/{steal:?}");
-                check(&out, steal, &label);
+                for preempt in PreemptMode::all() {
+                    let out =
+                        run_fleet(&trace, PolicyKind::Pars, dispatch, steal, preempt, 3, 2, &het);
+                    let label =
+                        format!("seed {seed} case {case} het/{dispatch:?}/{steal:?}/{preempt:?}");
+                    check(&out, steal, preempt, &label);
+                }
             }
         }
     }
@@ -313,6 +368,7 @@ fn determinism_under_stealing_is_bitwise() {
                 PolicyKind::Pars,
                 DispatchKind::LeastLoaded,
                 StealMode::Idle,
+                PreemptMode::Off,
                 4,
                 1,
                 &[],
@@ -324,6 +380,87 @@ fn determinism_under_stealing_is_bitwise() {
             a, b,
             "seed {seed} case {case}: identical runs diverged — the lagging-clock \
              event order (and steal order) must be deterministic"
+        );
+    }
+}
+
+#[test]
+fn determinism_under_preemption_is_bitwise() {
+    // stealing AND preemption on together: the victim scan must be as
+    // deterministic as the lagging-clock event order (a HashMap-order
+    // victim pick would show up here as run-to-run divergence)
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0xEE1C);
+    for case in 0..3 {
+        let trace = gen_trace(&mut rng);
+        for preempt in [PreemptMode::Arrival, PreemptMode::Pressure(2)] {
+            let run = || -> Vec<String> {
+                let out = run_fleet(
+                    &trace,
+                    PolicyKind::Pars,
+                    DispatchKind::LeastLoaded,
+                    StealMode::Idle,
+                    preempt,
+                    4,
+                    2,
+                    &[],
+                );
+                out.per_replica
+                    .iter()
+                    .map(|r| {
+                        format!("{:?} p={} w={}", r.records, r.preempted, r.wasted_decode_tokens)
+                    })
+                    .collect()
+            };
+            let (a, b) = (run(), run());
+            assert_eq!(
+                a, b,
+                "seed {seed} case {case} {preempt:?}: identical runs diverged — \
+                 eviction order must be deterministic"
+            );
+        }
+    }
+}
+
+#[test]
+fn anti_thrash_cap_zero_degenerates_to_preempt_off() {
+    // max_preemptions = 0 makes EVERY running job non-evictable from the
+    // start: preempt=arrival must then reproduce preempt=off
+    // record-for-record — the guard alone fully disables the feature
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0xCA90);
+    for case in 0..3 {
+        let trace = gen_trace(&mut rng);
+        let run = |preempt: PreemptMode, cap: u32| -> (Vec<String>, usize) {
+            let sched = SchedulerConfig {
+                max_batch: 2,
+                max_kv_tokens: 8192,
+                starvation_ms: 300.0,
+                replicas: 3,
+                dispatch: DispatchKind::LeastLoaded,
+                preempt,
+                max_preemptions: cap,
+                ..Default::default()
+            };
+            let engines: Vec<SimEngine> = (0..3)
+                .map(|i| {
+                    SimEngine::new(CostModel::default(), &sched.for_replica(i), TRACE_MAX_SEQ)
+                })
+                .collect();
+            let policy = make_policy(PolicyKind::Pars);
+            let mut coord =
+                ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
+            let out = coord.serve(trace.to_vec()).unwrap();
+            let sig = out.per_replica.iter().map(|r| format!("{:?}", r.records)).collect();
+            (sig, out.merged.preemptions)
+        };
+        let (off_sig, off_n) = run(PreemptMode::Off, 0);
+        let (capped_sig, capped_n) = run(PreemptMode::Arrival, 0);
+        assert_eq!(off_n, 0);
+        assert_eq!(capped_n, 0, "seed {seed} case {case}: cap 0 must forbid every eviction");
+        assert_eq!(
+            off_sig, capped_sig,
+            "seed {seed} case {case}: cap 0 must be record-for-record identical to off"
         );
     }
 }

@@ -9,7 +9,9 @@
 
 use std::collections::{HashMap, VecDeque};
 
-use pars_serve::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig, StealMode};
+use pars_serve::config::{
+    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode,
+};
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
     Coordinator, Policy, QueuedRequest, Request, ShardedCoordinator, WaitingQueue,
@@ -117,6 +119,7 @@ fn reference_serve(
                         prompt_len: f.req.prompt_len,
                         output_len: ev.generated,
                         boosted: f.boosted,
+                        preemptions: 0, // the reference loops predate preemption
                     });
                 }
             }
@@ -238,6 +241,7 @@ impl RefReplica {
                         prompt_len: f.req.prompt_len,
                         output_len: ev.generated,
                         boosted: f.boosted,
+                        preemptions: 0, // the reference loops predate preemption
                     });
                 }
             }
@@ -318,7 +322,7 @@ fn reference_sharded_serve(
             let r = &mut replicas[idx];
             r.dispatched += 1;
             r.queued_tokens += total as u64;
-            r.inbox.push_back(QueuedRequest { req, key, boosted: false });
+            r.inbox.push_back(QueuedRequest { req, key, boosted: false, preemptions: 0 });
             continue;
         }
         match next_step {
@@ -435,6 +439,36 @@ fn sjf_boost_fires_in_the_reference_workload() {
 /// Pin the current coordinator (steal = off) to the frozen PR 1 loop:
 /// per-replica record streams must match byte-for-byte (Debug-formatted
 /// f64 roundtrips exactly, so string equality ⇔ bitwise equality).
+fn assert_sharded_pinned_sched(sched: &SchedulerConfig, kind: PolicyKind) {
+    let dispatch = sched.dispatch;
+    let mk_engines = || -> Vec<SimEngine> {
+        (0..sched.replicas).map(|_| SimEngine::new(CostModel::default(), sched, 4096)).collect()
+    };
+    let policy = make_policy(kind);
+    let (want_records, want_dispatched, want_rejected) =
+        reference_sharded_serve(mk_engines(), policy.as_ref(), dispatch, sched, workload());
+
+    let mut coord =
+        ShardedCoordinator::new(mk_engines(), policy.as_ref(), dispatch, sched.clone());
+    let out = coord.serve(workload()).unwrap();
+    assert_eq!(out.merged.rejected, want_rejected, "{kind:?}/{dispatch:?} rejected");
+    assert_eq!(out.merged.preemptions, 0, "{kind:?}/{dispatch:?} preempt=off evicted work");
+    assert_eq!(out.merged.wasted_decode_tokens, 0, "{kind:?}/{dispatch:?} wasted tokens");
+    for (i, rep) in out.per_replica.iter().enumerate() {
+        assert_eq!(
+            rep.dispatched, want_dispatched[i],
+            "{kind:?}/{dispatch:?} replica {i} dispatched"
+        );
+        assert_eq!(rep.stolen_in + rep.stolen_out, 0, "steal=off must never move work");
+        assert_eq!(rep.preempted, 0, "preempt=off must never evict");
+        assert_eq!(
+            format!("{:?}", rep.records),
+            format!("{:?}", want_records[i]),
+            "{kind:?}/{dispatch:?} replica {i} record stream drifted from the PR 1 loop"
+        );
+    }
+}
+
 fn assert_sharded_pinned(dispatch: DispatchKind, kind: PolicyKind) {
     let sched = SchedulerConfig {
         max_batch: 4,
@@ -445,28 +479,7 @@ fn assert_sharded_pinned(dispatch: DispatchKind, kind: PolicyKind) {
         steal: StealMode::Off,
         ..Default::default()
     };
-    let mk_engines =
-        || -> Vec<SimEngine> { (0..4).map(|_| SimEngine::new(CostModel::default(), &sched, 4096)).collect() };
-    let policy = make_policy(kind);
-    let (want_records, want_dispatched, want_rejected) =
-        reference_sharded_serve(mk_engines(), policy.as_ref(), dispatch, &sched, workload());
-
-    let mut coord =
-        ShardedCoordinator::new(mk_engines(), policy.as_ref(), dispatch, sched.clone());
-    let out = coord.serve(workload()).unwrap();
-    assert_eq!(out.merged.rejected, want_rejected, "{kind:?}/{dispatch:?} rejected");
-    for (i, rep) in out.per_replica.iter().enumerate() {
-        assert_eq!(
-            rep.dispatched, want_dispatched[i],
-            "{kind:?}/{dispatch:?} replica {i} dispatched"
-        );
-        assert_eq!(rep.stolen_in + rep.stolen_out, 0, "steal=off must never move work");
-        assert_eq!(
-            format!("{:?}", rep.records),
-            format!("{:?}", want_records[i]),
-            "{kind:?}/{dispatch:?} replica {i} record stream drifted from the PR 1 loop"
-        );
-    }
+    assert_sharded_pinned_sched(&sched, kind);
 }
 
 #[test]
@@ -500,6 +513,54 @@ fn n1_sharded_with_steal_enabled_equals_legacy() {
             ..Default::default()
         };
         assert_identical(&sched, PolicyKind::OracleSjf);
+    }
+}
+
+/// PR 3 pin: with `preempt = off` the refactored inner loop (preemption
+/// checks woven into the admission pass) must reproduce the frozen PR 2
+/// reference loop record-for-record — N=4, every dispatch kind, with a
+/// deliberately non-default margin and anti-thrash cap to prove neither
+/// is consulted while the feature is off.
+#[test]
+fn preempt_off_n4_pins_to_reference_loop_every_dispatch() {
+    for dispatch in DispatchKind::all() {
+        for kind in [PolicyKind::Fcfs, PolicyKind::OracleSjf] {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                steal: StealMode::Off,
+                preempt: PreemptMode::Off,
+                preempt_margin: 7.5,
+                max_preemptions: 1,
+                ..Default::default()
+            };
+            assert_sharded_pinned_sched(&sched, kind);
+        }
+    }
+}
+
+/// PR 3 pin, N=1: a single replica with `preempt = off` must stay
+/// bitwise identical to the pre-refactor single-engine serving loop for
+/// every dispatch kind (dispatch is trivial at N=1, but the inner step
+/// loop — where the preemption hook lives — is exactly what is pinned).
+#[test]
+fn preempt_off_n1_equals_legacy_every_dispatch() {
+    for dispatch in DispatchKind::all() {
+        let sched = SchedulerConfig {
+            max_batch: 4,
+            max_kv_tokens: 512,
+            starvation_ms: 500.0,
+            dispatch,
+            preempt: PreemptMode::Off,
+            preempt_margin: 7.5,
+            max_preemptions: 1,
+            ..Default::default()
+        };
+        assert_identical(&sched, PolicyKind::OracleSjf);
+        assert_identical(&sched, PolicyKind::Fcfs);
     }
 }
 
