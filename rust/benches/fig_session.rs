@@ -1,0 +1,129 @@
+//! Session-API overhead bench: the same staggered trace served through
+//! (a) the batch wrapper (`serve`, NullSink, no status map reads), (b) a
+//! session with the default bounded EventLog, and (c) a session feeding
+//! a JSONL sink into an in-memory buffer.  The three must produce
+//! record-for-record identical outcomes — the sinks are pure observers —
+//! and the table shows what observing costs in wall-clock.
+//!
+//! Runs on a fresh checkout (trace synthesised inline, no artifacts).
+//! `PARS_BENCH_N` overrides the request count (CI smoke keeps it tiny).
+
+use pars_serve::config::{
+    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode,
+};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::{
+    EventSink, JsonlSink, Request, ShardedCoordinator, ShardedOutcome,
+};
+use pars_serve::engine::SimEngine;
+use pars_serve::util::bench::Table;
+
+fn trace(n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| {
+            let target = if i % 9 == 0 { 300 } else { 8 + (i % 11) as u32 * 4 };
+            Request {
+                id: i,
+                tokens: vec![1, 3, 5, 7, 2],
+                prompt_len: 5,
+                arrival_ms: (i / 2) as f64 * 3.0,
+                target_len: target,
+                oracle_len: target,
+                score: target as f32,
+            }
+        })
+        .collect()
+}
+
+fn sched() -> SchedulerConfig {
+    SchedulerConfig {
+        max_batch: 2,
+        max_kv_tokens: 1 << 16,
+        replicas: 4,
+        dispatch: DispatchKind::Ranked,
+        steal: StealMode::Idle,
+        preempt: PreemptMode::Arrival,
+        ..Default::default()
+    }
+}
+
+fn engines(s: &SchedulerConfig) -> Vec<SimEngine> {
+    (0..s.replicas)
+        .map(|i| SimEngine::new(CostModel::default(), &s.for_replica(i), 4096))
+        .collect()
+}
+
+fn sig(out: &ShardedOutcome) -> Vec<String> {
+    out.per_replica.iter().map(|r| format!("{:?}", r.records)).collect()
+}
+
+fn run_batch(
+    s: &SchedulerConfig,
+    policy: &dyn pars_serve::coordinator::Policy,
+    n: usize,
+) -> (ShardedOutcome, f64) {
+    let mut c = ShardedCoordinator::new(engines(s), policy, s.dispatch, s.clone());
+    let t0 = std::time::Instant::now();
+    let out = c.serve(trace(n)).expect("serve");
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn run_session(
+    s: &SchedulerConfig,
+    policy: &dyn pars_serve::coordinator::Policy,
+    n: usize,
+    sink: Option<&mut dyn EventSink>,
+) -> (ShardedOutcome, f64) {
+    let mut c = ShardedCoordinator::new(engines(s), policy, s.dispatch, s.clone());
+    let t0 = std::time::Instant::now();
+    let reqs = trace(n); // submit() orders arrivals; no pre-sort needed
+    let mut session = match sink {
+        Some(sk) => c.session_with(sk),
+        None => c.session(),
+    };
+    for r in reqs {
+        session.submit(r);
+    }
+    let out = session.finish().expect("session finish");
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() {
+    let n: usize = std::env::var("PARS_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let s = sched();
+    let policy = make_policy(PolicyKind::Pars);
+
+    let (batch, batch_ms) = run_batch(&s, policy.as_ref(), n);
+    let (logged, logged_ms) = run_session(&s, policy.as_ref(), n, None);
+    let mut jsonl = JsonlSink::new(Vec::<u8>::new());
+    let (streamed, streamed_ms) =
+        run_session(&s, policy.as_ref(), n, Some(&mut jsonl));
+    let n_events = jsonl.finish().expect("in-memory writer cannot fail");
+
+    assert_eq!(sig(&batch), sig(&logged), "EventLog session drifted from the batch path");
+    assert_eq!(sig(&batch), sig(&streamed), "JSONL session drifted from the batch path");
+    assert!(n_events > 0, "the JSONL sink observed nothing");
+
+    let mut t = Table::new(
+        &format!("session-API overhead ({n} requests, 4 ranked replicas, steal+preempt)"),
+        &["path", "wall ms", "vs batch", "events"],
+    );
+    let rel = |ms: f64| format!("{:+.1}%", (ms / batch_ms - 1.0) * 100.0);
+    t.row(&["batch serve (NullSink)".into(), format!("{batch_ms:.1}"), "—".into(), "0".into()]);
+    t.row(&[
+        "session + EventLog".into(),
+        format!("{logged_ms:.1}"),
+        rel(logged_ms),
+        "bounded".into(),
+    ]);
+    t.row(&[
+        "session + JSONL buffer".into(),
+        format!("{streamed_ms:.1}"),
+        rel(streamed_ms),
+        format!("{n_events}"),
+    ]);
+    t.print();
+}

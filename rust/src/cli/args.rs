@@ -26,10 +26,21 @@ impl Args {
             let Some(key) = tok.strip_prefix("--") else {
                 bail!("unexpected positional argument {tok:?}");
             };
+            if key.is_empty() {
+                bail!("empty flag name (`--`)");
+            }
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
-                    a.flags.insert(key.to_string(), it.next().unwrap().clone());
+                    // the peek guarantees a value token exists; consume it
+                    // without the old `it.next().unwrap()` footgun
+                    let Some(v) = it.next() else {
+                        bail!("--{key} expects a value but none was given");
+                    };
+                    a.flags.insert(key.to_string(), v.clone());
                 }
+                // trailing flag / flag followed by another flag: legal
+                // only as a boolean switch — the typed accessors reject
+                // it with a parse error if a value was actually required
                 _ => a.bools.push(key.to_string()),
             }
         }
@@ -41,15 +52,33 @@ impl Args {
         Args::parse(&argv)
     }
 
-    pub fn str_opt(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+    /// Error when `key` was given as a bare `--key` with no value — a
+    /// trailing flag, or one followed by another `--flag`.  Before this
+    /// guard such a flag silently fell back to the accessor's default.
+    fn require_value(&self, key: &str) -> Result<()> {
+        if self.bools.iter().any(|b| b == key) {
+            bail!("--{key} expects a value but none was given");
+        }
+        Ok(())
     }
 
-    pub fn str_or(&self, key: &str, default: &str) -> String {
-        self.str_opt(key).unwrap_or(default).to_string()
+    /// Was `key` given WITH a value?  (`has` is true for bare switches
+    /// too — use this to read an optional value off a switch flag.)
+    pub fn has_value(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Result<Option<&str>> {
+        self.require_value(key)?;
+        Ok(self.flags.get(key).map(|s| s.as_str()))
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.str_opt(key)?.unwrap_or(default).to_string())
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.require_value(key)?;
         match self.flags.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not a number: {v}")),
@@ -57,6 +86,7 @@ impl Args {
     }
 
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.require_value(key)?;
         match self.flags.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not an integer: {v}")),
@@ -64,6 +94,7 @@ impl Args {
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.require_value(key)?;
         match self.flags.get(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| anyhow!("--{key}: not an integer: {v}")),
@@ -87,9 +118,11 @@ mod tests {
     fn basic() {
         let a = parse(&["serve", "--policy", "pars", "--rate", "4.5", "--verbose"]);
         assert_eq!(a.command, "serve");
-        assert_eq!(a.str_or("policy", "fcfs"), "pars");
+        assert_eq!(a.str_or("policy", "fcfs").unwrap(), "pars");
         assert_eq!(a.f64_or("rate", 0.0).unwrap(), 4.5);
         assert!(a.has("verbose"));
+        assert!(a.has_value("policy"));
+        assert!(!a.has_value("verbose"));
         assert!(!a.has("quiet"));
         assert_eq!(a.usize_or("n", 7).unwrap(), 7);
     }
@@ -104,5 +137,41 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["x", "--rate", "abc"]);
         assert!(a.f64_or("rate", 0.0).is_err());
+    }
+
+    #[test]
+    fn trailing_value_flag_is_an_error_not_a_silent_default() {
+        // regression: `serve --rate` (value forgotten) used to fall
+        // through to the accessor default without a peep
+        let a = parse(&["serve", "--rate"]);
+        assert!(a.f64_or("rate", 4.0).is_err());
+        let a = parse(&["serve", "--n", "--verbose"]);
+        assert!(a.usize_or("n", 10).is_err());
+        assert!(a.has("verbose"));
+        let a = parse(&["serve", "--seed"]);
+        assert!(a.u64_or("seed", 0).is_err());
+        // string flags get the same guard: `--events --n 120` must not
+        // silently skip the event log
+        let a = parse(&["serve", "--events", "--n", "120"]);
+        assert!(a.str_opt("events").is_err());
+        assert!(a.str_or("dataset", "synthalpaca").is_ok());
+        let a = parse(&["serve", "--dataset"]);
+        assert!(a.str_or("dataset", "synthalpaca").is_err());
+    }
+
+    #[test]
+    fn trailing_boolean_flag_still_works() {
+        let a = parse(&["serve", "--rate", "2.5", "--verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        // an absent key still yields its default
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.str_or("dataset", "synthalpaca").unwrap(), "synthalpaca");
+    }
+
+    #[test]
+    fn bare_double_dash_is_rejected() {
+        let argv: Vec<String> = vec!["serve".into(), "--".into()];
+        assert!(Args::parse(&argv).is_err());
     }
 }

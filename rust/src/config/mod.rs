@@ -279,6 +279,12 @@ pub struct SchedulerConfig {
     /// Anti-thrash guard: a job preempted this many times becomes
     /// non-evictable (mirrors the starvation boost bounding SJF delay).
     pub max_preemptions: u32,
+    /// Capacity of the bounded in-memory event log a default
+    /// [`ServeSession`] keeps (most recent events win; 0 keeps none).
+    /// Sessions created with an explicit sink ignore it.
+    ///
+    /// [`ServeSession`]: crate::coordinator::ServeSession
+    pub event_log_capacity: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -296,6 +302,7 @@ impl Default for SchedulerConfig {
             preempt: PreemptMode::Off,
             preempt_margin: 2.0,
             max_preemptions: 2,
+            event_log_capacity: 16_384,
         }
     }
 }
@@ -436,6 +443,12 @@ impl Config {
                 bail!("scheduler.max_preemptions must be a non-negative integer (got {v})");
             }
             c.scheduler.max_preemptions = v as u32;
+        }
+        if let Some(v) = doc.get_num("scheduler", "event_log_capacity") {
+            if v < 0.0 || v.fract() != 0.0 {
+                bail!("scheduler.event_log_capacity must be a non-negative integer (got {v})");
+            }
+            c.scheduler.event_log_capacity = v as usize;
         }
         for i in 0..doc.array_len("scheduler.replica") {
             let sect = format!("scheduler.replica.{i}");
@@ -618,6 +631,57 @@ mod tests {
         assert_eq!(caps[3], ReplicaCaps { max_batch: None, max_kv_tokens: Some(8_192) });
         assert!(ReplicaCaps::parse_list("abc").is_err());
         assert!(ReplicaCaps::parse_list("1024:x").is_err());
+    }
+
+    #[test]
+    fn empty_replica_tables_inherit_fleet_defaults() {
+        // a bare [[scheduler.replica]] block (no keys, maybe just a
+        // comment) is a legal "no override" element — the replica falls
+        // back to the fleet-wide caps instead of erroring or vanishing
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            replicas = 3
+            max_batch = 8
+            max_kv_tokens = 4096
+            [[scheduler.replica]]
+            # all defaults for replica 0
+            [[scheduler.replica]]
+            max_batch = 2  # trailing comment on an override
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.replica_caps.len(), 2);
+        assert_eq!(c.scheduler.replica_caps[0], ReplicaCaps::default());
+        assert_eq!(c.scheduler.batch_for(0), 8);
+        assert_eq!(c.scheduler.kv_for(0), 4096);
+        assert_eq!(c.scheduler.batch_for(1), 2);
+        assert_eq!(c.scheduler.batch_for(2), 8); // past the overrides
+        // an empty block still counts against the replicas bound
+        assert!(Config::from_toml(
+            "[scheduler]\nreplicas = 1\n[[scheduler.replica]]\n[[scheduler.replica]]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn duplicate_scheduler_keys_last_binding_wins() {
+        let c = Config::from_toml(
+            "[scheduler]\nmax_batch = 4\nmax_batch = 16 # later binding wins\n",
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.max_batch, 16);
+    }
+
+    #[test]
+    fn parse_event_log_capacity() {
+        let c = Config::from_toml("[scheduler]\nevent_log_capacity = 128").unwrap();
+        assert_eq!(c.scheduler.event_log_capacity, 128);
+        assert_eq!(SchedulerConfig::default().event_log_capacity, 16_384);
+        // negative or fractional capacities are parse errors, not casts
+        assert!(Config::from_toml("[scheduler]\nevent_log_capacity = -1").is_err());
+        assert!(Config::from_toml("[scheduler]\nevent_log_capacity = 2.5").is_err());
+        assert!(Config::from_toml("[scheduler]\nevent_log_capacity = 0").is_ok());
     }
 
     #[test]

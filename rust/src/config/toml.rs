@@ -172,6 +172,50 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_keys_last_one_wins() {
+        // the subset parser has no duplicate-key diagnostics: within a
+        // section the later binding simply overwrites the earlier one,
+        // in the root and in array-of-tables elements alike
+        let doc = TomlDoc::parse("x = 1\nx = 2\n[a]\ny = \"old\"\ny = \"new\"\n").unwrap();
+        assert_eq!(doc.get_num("", "x"), Some(2.0));
+        assert_eq!(doc.get_str("a", "y"), Some("new"));
+        let doc = TomlDoc::parse("[[r]]\nn = 1\nn = 7\n[[r]]\nn = 2\n").unwrap();
+        assert_eq!(doc.get_num("r.0", "n"), Some(7.0));
+        assert_eq!(doc.get_num("r.1", "n"), Some(2.0));
+    }
+
+    #[test]
+    fn trailing_comments_everywhere() {
+        let doc = TomlDoc::parse(
+            "x = 3 # after a number\n\
+             b = true# no space before the hash\n\
+             s = \"a#b\" # hash inside the string survives\n\
+             [sec] # after a section header\n\
+             y = 1.5   # after a float\n\
+             # a full-line comment between keys\n\
+             z = \"v\"\t# after a string, tab-separated\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_num("", "x"), Some(3.0));
+        assert_eq!(doc.get_bool("", "b"), Some(true));
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+        assert_eq!(doc.get_num("sec", "y"), Some(1.5));
+        assert_eq!(doc.get_str("sec", "z"), Some("v"));
+    }
+
+    #[test]
+    fn empty_array_of_tables_elements_count() {
+        // a bare [[name]] header with no keys still opens (and counts)
+        // an element — config/mod.rs turns each into a default override
+        let doc = TomlDoc::parse("[[rep]]\n[[rep]]\nn = 4\n[[rep]] # trailing comment\n")
+            .unwrap();
+        assert_eq!(doc.array_len("rep"), 3);
+        assert_eq!(doc.get_num("rep.0", "n"), None);
+        assert_eq!(doc.get_num("rep.1", "n"), Some(4.0));
+        assert_eq!(doc.get_num("rep.2", "n"), None);
+    }
+
+    #[test]
     fn array_of_tables() {
         let doc = TomlDoc::parse(
             "[a]\nx = 1\n[[a.rep]]\nn = 10\n[[a.rep]]\nn = 20\nm = 30\n[b]\ny = 2\n",

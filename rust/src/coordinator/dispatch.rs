@@ -58,13 +58,26 @@
 //!   record-for-record by `tests/sharded.rs`), and preemption composes
 //!   with stealing — a stolen-then-preempted request keeps every
 //!   conservation invariant (`tests/properties.rs`).
+//!
+//! Since the session refactor the loop itself is **re-entrant**: the
+//! batch entry points (`serve` / `serve_stream`) are thin wrappers that
+//! drive a [`ServeSession`] to completion, and every decision the loop
+//! makes — dispatch one arrival, steal, step the lagging replica — is a
+//! single [`ServeSession::tick`].  Lifecycle transitions (`Rejected` /
+//! `Dispatched` / `Admitted` / `FirstToken` / `Boosted` / `Stolen` /
+//! `Preempted` / `Completed`) are emitted through the session's
+//! [`EventSink`]; the wrappers use a [`NullSink`], so batch behaviour
+//! stays bitwise what the frozen reference loops in `tests/sharded.rs`
+//! pin.
 
 use std::collections::{HashMap, VecDeque};
 
 use anyhow::Context;
 
 use crate::config::{DispatchKind, PreemptMode, SchedulerConfig, StealMode};
+use crate::coordinator::events::{EventSink, NullSink, ServeEvent, SessionCtx};
 use crate::coordinator::queue::QueuedRequest;
+use crate::coordinator::session::ServeSession;
 use crate::engine::kv_cache::BLOCK_TOKENS;
 use crate::coordinator::server::ServeOutcome;
 use crate::coordinator::{Policy, Request, WaitingQueue};
@@ -187,7 +200,15 @@ impl<E: Engine> Replica<E> {
     /// One scheduling iteration: ingest due arrivals, re-apply the
     /// starvation guard, top up the running batch in policy order, then
     /// run one decode step (or hop the clock to the next arrival).
-    fn step(&mut self, sched: &SchedulerConfig) -> Result<()> {
+    /// `idx` is this replica's fleet index; every lifecycle transition
+    /// is reported through `ctx` (a pure observer — the sink never
+    /// changes a decision).
+    fn step(
+        &mut self,
+        sched: &SchedulerConfig,
+        idx: usize,
+        ctx: &mut SessionCtx<'_>,
+    ) -> Result<()> {
         let now = self.engine.now_ms();
 
         // 1. ingest arrivals that are due on this replica's clock
@@ -198,7 +219,9 @@ impl<E: Engine> Replica<E> {
         self.peak_waiting = self.peak_waiting.max(self.waiting.len());
 
         // 2. starvation guard
-        self.waiting.apply_starvation_guard(now);
+        for id in self.waiting.apply_starvation_guard(now) {
+            ctx.emit(ServeEvent::Boosted { id, replica: idx, t_ms: now });
+        }
 
         // 3. admission (continuous: any free slot; static: empty batch),
         //    interleaved with score-aware preemption: once the batch is
@@ -222,10 +245,16 @@ impl<E: Engine> Replica<E> {
                         .context("prefill during admission")?;
                     self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
                     self.running_tokens += total as u64;
+                    let admitted_ms = self.engine.now_ms();
+                    ctx.emit(ServeEvent::Admitted {
+                        id: q.req.id,
+                        replica: idx,
+                        t_ms: admitted_ms,
+                    });
                     self.running.insert(
                         slot,
                         InFlight {
-                            admitted_ms: self.engine.now_ms(),
+                            admitted_ms,
                             first_token_ms: None,
                             boosted: q.boosted,
                             key: q.key,
@@ -235,7 +264,7 @@ impl<E: Engine> Replica<E> {
                         },
                     );
                 }
-                if !self.try_preempt(sched) {
+                if !self.try_preempt(sched, idx, ctx) {
                     break;
                 }
             }
@@ -249,6 +278,11 @@ impl<E: Engine> Replica<E> {
                 let inflight = self.running.get_mut(&ev.slot).expect("event for unknown slot");
                 if inflight.first_token_ms.is_none() {
                     inflight.first_token_ms = Some(now);
+                    ctx.emit(ServeEvent::FirstToken {
+                        id: inflight.req.id,
+                        replica: idx,
+                        t_ms: now,
+                    });
                 }
                 inflight.generated = ev.generated;
                 if ev.finished {
@@ -257,7 +291,7 @@ impl<E: Engine> Replica<E> {
                     self.makespan_ms = now;
                     let total = (f.req.prompt_len + f.req.target_len) as u64;
                     self.running_tokens = self.running_tokens.saturating_sub(total);
-                    self.recorder.push(RequestRecord {
+                    let record = RequestRecord {
                         id: f.req.id,
                         arrival_ms: f.req.arrival_ms,
                         admitted_ms: f.admitted_ms,
@@ -267,7 +301,9 @@ impl<E: Engine> Replica<E> {
                         output_len: ev.generated,
                         boosted: f.boosted,
                         preemptions: f.preemptions,
-                    });
+                    };
+                    ctx.emit(ServeEvent::Completed { replica: idx, record: record.clone() });
+                    self.recorder.push(record);
                 }
             }
         } else if !self.waiting.is_empty() {
@@ -319,7 +355,12 @@ impl<E: Engine> Replica<E> {
     /// `preempt_margin >= 1` (validated) keeps eviction KV-sound: the
     /// candidate's full reservation always fits in the blocks the victim
     /// frees, because cand_total < victim_remaining <= victim_total.
-    fn try_preempt(&mut self, sched: &SchedulerConfig) -> bool {
+    fn try_preempt(
+        &mut self,
+        sched: &SchedulerConfig,
+        idx: usize,
+        ctx: &mut SessionCtx<'_>,
+    ) -> bool {
         let min_queue = match sched.preempt {
             PreemptMode::Off => return false,
             PreemptMode::Arrival => 1,
@@ -393,6 +434,7 @@ impl<E: Engine> Replica<E> {
         debug_assert_eq!(wasted, f.generated, "engine and scheduler disagree on progress");
         self.preempted += 1;
         self.wasted_decode_tokens += wasted as u64;
+        ctx.emit(ServeEvent::Preempted { id: f.req.id, replica: idx, wasted, t_ms: now });
         let total = (f.req.prompt_len + f.req.target_len) as u64;
         self.running_tokens = self.running_tokens.saturating_sub(total);
         self.queued_tokens += total;
@@ -565,7 +607,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
     /// itself on its very next step, so robbing it helps nobody — and
     /// allowing it would let two idle replicas steal a lone request back
     /// and forth forever without the fleet ever stepping.
-    fn try_steal(&mut self) -> bool {
+    pub(crate) fn try_steal(&mut self, ctx: &mut SessionCtx<'_>) -> bool {
         let min_victim_len = match self.sched.steal {
             StealMode::Off => return false,
             StealMode::Idle => 1,
@@ -623,100 +665,126 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         // the hand-off cannot predate the request's existence: lift the
         // idle thief's clock to the arrival before it runs stolen work
         t.engine.advance_to(q.req.arrival_ms);
+        ctx.emit(ServeEvent::Stolen {
+            id: q.req.id,
+            from: victim,
+            to: thief,
+            t_ms: t.engine.now_ms(),
+        });
         t.waiting.push_scored(q);
         true
     }
 
     /// Serve a pre-collected workload.  Arrival times are totally ordered
     /// with `f64::total_cmp` and non-finite arrivals are clamped to t=0,
-    /// so NaN-bearing traces cannot panic or wedge the scheduler.
-    pub fn serve(&mut self, mut requests: Vec<Request>) -> Result<ShardedOutcome> {
-        for r in &mut requests {
-            if !r.arrival_ms.is_finite() {
-                r.arrival_ms = 0.0;
-            }
-        }
-        requests.sort_by(|a, b| a.arrival_ms.total_cmp(&b.arrival_ms));
+    /// so NaN-bearing traces cannot panic or wedge the scheduler —
+    /// [`ServeSession::submit`] clamps and keeps a stable arrival order,
+    /// which for a whole `Vec` is exactly the old clamp + stable sort.
+    pub fn serve(&mut self, requests: Vec<Request>) -> Result<ShardedOutcome> {
         self.serve_stream(requests)
     }
 
-    /// Serve a streamed, arrival-ordered request sequence to completion.
+    /// Serve a request sequence to completion — a thin wrapper that
+    /// submits everything to a [`ServeSession`] and drives it to idle
+    /// (events go to a [`NullSink`]; use [`Self::session`] /
+    /// [`Self::session_with`] to observe the run or inject work mid-run).
     ///
-    /// The stream is consumed lazily: a request is scored and dispatched
-    /// only once the fleet's lagging clock reaches its arrival time, so
-    /// dispatch decisions always see the queue state of that moment.
+    /// The sequence is buffered into the session's pending queue up
+    /// front (re-entrancy traded away the old lazy iterator pull), but a
+    /// request is still scored and dispatched only once the fleet's
+    /// lagging clock reaches its arrival time, so dispatch decisions see
+    /// the queue state of that moment exactly as the pre-session loop
+    /// did (pinned by `tests/sharded.rs`).
     pub fn serve_stream<I>(&mut self, arrivals: I) -> Result<ShardedOutcome>
     where
         I: IntoIterator<Item = Request>,
     {
-        // a request must fit the smallest sequence budget in the fleet —
-        // it could be routed (or stolen) onto any replica
-        let fleet_max_seq =
-            self.replicas.iter().map(|r| r.engine.caps().max_seq).min().unwrap_or(0);
-        let mut stream = arrivals.into_iter().peekable();
-        let mut rejected = 0usize;
-
-        loop {
-            // the replica that would step next (lagging clock; tie → index)
-            let next_step: Option<(f64, usize)> = self
-                .replicas
-                .iter()
-                .enumerate()
-                .filter(|(_, r)| r.has_work())
-                .map(|(i, r)| (r.engine.now_ms(), i))
-                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-
-            // dispatch the next arrival if it is due before that step
-            let due = match (stream.peek(), next_step) {
-                (Some(req), Some((t, _))) => !req.arrival_ms.is_finite() || req.arrival_ms <= t,
-                (Some(_), None) => true,
-                (None, _) => false,
-            };
-            if due {
-                let mut req = stream.next().unwrap();
-                if !req.arrival_ms.is_finite() {
-                    req.arrival_ms = 0.0; // NaN-bearing traces arrive "now"
-                }
-                let total = req.prompt_len + req.target_len;
-                if total as usize > fleet_max_seq {
-                    // can never fit every replica's sequence budget
-                    rejected += 1;
-                    continue;
-                }
-                if !self.replicas.iter().any(|r| r.can_ever_hold(total)) {
-                    // larger than every replica's entire KV budget —
-                    // reject up front instead of deadlocking whichever
-                    // replica it would land on
-                    rejected += 1;
-                    continue;
-                }
-                let key = self.policy.key(&req);
-                let idx = self.pick_replica(total);
-                let r = &mut self.replicas[idx];
-                r.dispatched += 1;
-                r.queued_tokens += total as u64;
-                r.inbox.push_back(QueuedRequest { req, key, boosted: false, preemptions: 0 });
-                continue;
-            }
-
-            // no arrival due: let an idle replica pull queued work off an
-            // overloaded sibling before the fleet advances
-            if self.try_steal() {
-                continue; // re-derive the lagging clock — the thief has work now
-            }
-
-            match next_step {
-                Some((_, idx)) => self.replicas[idx].step(&self.sched)?,
-                None => break, // stream exhausted and every replica idle
-            }
+        let mut sink = NullSink;
+        let mut session = ServeSession::new(self, Some(&mut sink));
+        for req in arrivals {
+            session.submit(req);
         }
-        Ok(self.collect(rejected))
+        session.finish()
+    }
+
+    /// Open a re-entrant serving session with the default bounded
+    /// in-memory event log (`[scheduler] event_log_capacity`).
+    pub fn session(&mut self) -> ServeSession<'_, 'p, E> {
+        ServeSession::new(self, None)
+    }
+
+    /// Open a re-entrant serving session that emits lifecycle events
+    /// into `sink` (JSONL writer, test capture, custom observer...).
+    pub fn session_with<'c>(
+        &'c mut self,
+        sink: &'c mut dyn EventSink,
+    ) -> ServeSession<'c, 'p, E> {
+        ServeSession::new(self, Some(sink))
+    }
+
+    /// Smallest per-replica sequence budget: a request must fit every
+    /// replica, since dispatch or stealing could route it anywhere.
+    pub(crate) fn fleet_min_max_seq(&self) -> usize {
+        self.replicas.iter().map(|r| r.engine.caps().max_seq).min().unwrap_or(0)
+    }
+
+    /// Event-log capacity a default session uses.
+    pub(crate) fn event_log_capacity(&self) -> usize {
+        self.sched.event_log_capacity
+    }
+
+    /// The replica that would step next (lagging clock; tie → index).
+    pub(crate) fn next_step(&self) -> Option<(f64, usize)> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.has_work())
+            .map(|(i, r)| (r.engine.now_ms(), i))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+    }
+
+    /// Route one due arrival: score it once, pick a replica, enqueue it
+    /// in that replica's inbox.  Returns the replica index, or `None`
+    /// when no replica can ever hold the request (rejected).  The caller
+    /// guarantees the arrival time is finite (the session clamps at
+    /// submit) and supplies `decision_ms`, the lagging-clock time the
+    /// dispatch decision is made at (events are stamped with it).
+    pub(crate) fn dispatch_one(
+        &mut self,
+        req: Request,
+        fleet_max_seq: usize,
+        decision_ms: f64,
+        ctx: &mut SessionCtx<'_>,
+    ) -> Option<usize> {
+        let total = req.prompt_len + req.target_len;
+        // can never fit every replica's sequence budget, or larger than
+        // every replica's entire KV budget — reject up front instead of
+        // deadlocking whichever replica it would land on
+        if total as usize > fleet_max_seq
+            || !self.replicas.iter().any(|r| r.can_ever_hold(total))
+        {
+            ctx.emit(ServeEvent::Rejected { id: req.id, t_ms: decision_ms });
+            return None;
+        }
+        let key = self.policy.key(&req);
+        let idx = self.pick_replica(total);
+        let r = &mut self.replicas[idx];
+        r.dispatched += 1;
+        r.queued_tokens += total as u64;
+        ctx.emit(ServeEvent::Dispatched { id: req.id, replica: idx, t_ms: decision_ms });
+        r.inbox.push_back(QueuedRequest { req, key, boosted: false, preemptions: 0 });
+        Some(idx)
+    }
+
+    /// Run one scheduling iteration on replica `idx`.
+    pub(crate) fn step_replica(&mut self, idx: usize, ctx: &mut SessionCtx<'_>) -> Result<()> {
+        self.replicas[idx].step(&self.sched, idx, ctx)
     }
 
     /// Merge per-replica recorders into the fleet outcome + breakdowns.
     /// Records move into the per-replica breakdowns; the fleet report is
     /// computed over borrows, so nothing is copied.
-    fn collect(&mut self, rejected: usize) -> ShardedOutcome {
+    pub(crate) fn collect(&mut self, rejected: usize) -> ShardedOutcome {
         let mut per_replica = Vec::with_capacity(self.replicas.len());
         let mut boosts = 0usize;
         let mut preemptions = 0usize;

@@ -1,0 +1,362 @@
+//! Lifecycle events for the re-entrant session API.
+//!
+//! Every observable transition a request makes inside the serving loop —
+//! rejection, dispatch, admission, first token, starvation boost, steal,
+//! preemption, completion — is emitted as a [`ServeEvent`] through an
+//! [`EventSink`].  The sink is a pure observer: emitting events never
+//! changes a scheduling decision, which is what keeps the batch wrappers
+//! (`serve` / `serve_stream`) bitwise identical to the frozen reference
+//! loops in `tests/sharded.rs` while an embedding application watches
+//! the same run live.
+//!
+//! Sinks in the box:
+//!
+//! * [`NullSink`]  — drops everything (what the batch wrappers use).
+//! * [`EventLog`]  — bounded in-memory ring (the [`ServeSession`]
+//!   default; capacity from `[scheduler] event_log_capacity`).
+//! * [`JsonlSink`] — one JSON object per line to any `io::Write`
+//!   (`pallas serve --events out.jsonl`), built on the in-repo
+//!   `util::json` writer.
+//! * `Vec<ServeEvent>` — unbounded capture, handy in tests.
+//!
+//! [`ServeSession`]: crate::coordinator::ServeSession
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+
+use crate::coordinator::session::RequestStatus;
+use crate::metrics::RequestRecord;
+use crate::util::json::Json;
+
+/// One lifecycle transition, stamped with the engine-clock time the
+/// decision was made at: `Dispatched`/`Rejected` carry the fleet's
+/// lagging clock at the dispatch decision (the arrival time itself when
+/// the fleet is idle — a mid-run submission "from the past" is stamped
+/// with the clock that processed it, keeping logs near-monotone),
+/// per-replica events carry that replica's clock, and
+/// [`ServeEvent::Completed`]'s record carries its own timestamps.  A request's event chain is conserved: exactly one
+/// `Dispatched` (or one `Rejected`), then per admission round one
+/// `Admitted`, and a final `Completed`; `Preempted` closes an admission
+/// round early, `Stolen` moves a *queued* request between replicas, and
+/// `Boosted` marks the starvation guard firing — `tests/properties.rs`
+/// pins these conservation laws across the whole mode grid.
+#[derive(Clone, Debug)]
+pub enum ServeEvent {
+    /// No replica could ever hold the request (sequence budget or total
+    /// KV capacity) — it never enters a queue.
+    Rejected { id: u64, t_ms: f64 },
+    /// Routed to `replica`'s inbox by the dispatch policy.
+    Dispatched { id: u64, replica: usize, t_ms: f64 },
+    /// Admitted into `replica`'s running batch (prefill done).
+    Admitted { id: u64, replica: usize, t_ms: f64 },
+    /// First decode token of the current admission round.
+    FirstToken { id: u64, replica: usize, t_ms: f64 },
+    /// Starvation guard promoted the queued request.
+    Boosted { id: u64, replica: usize, t_ms: f64 },
+    /// An idle replica pulled the queued request from a busy sibling.
+    Stolen { id: u64, from: usize, to: usize, t_ms: f64 },
+    /// Score-aware preemption evicted the running request, discarding
+    /// `wasted` decode tokens (recompute-on-resume).
+    Preempted { id: u64, replica: usize, wasted: u32, t_ms: f64 },
+    /// The request finished; `record` is exactly what the replica's
+    /// recorder keeps (final-admission timestamps).
+    Completed { replica: usize, record: RequestRecord },
+}
+
+impl ServeEvent {
+    /// The request this event belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeEvent::Rejected { id, .. }
+            | ServeEvent::Dispatched { id, .. }
+            | ServeEvent::Admitted { id, .. }
+            | ServeEvent::FirstToken { id, .. }
+            | ServeEvent::Boosted { id, .. }
+            | ServeEvent::Stolen { id, .. }
+            | ServeEvent::Preempted { id, .. } => *id,
+            ServeEvent::Completed { record, .. } => record.id,
+        }
+    }
+
+    /// Stable lowercase tag (the `event` field of the JSONL encoding).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeEvent::Rejected { .. } => "rejected",
+            ServeEvent::Dispatched { .. } => "dispatched",
+            ServeEvent::Admitted { .. } => "admitted",
+            ServeEvent::FirstToken { .. } => "first_token",
+            ServeEvent::Boosted { .. } => "boosted",
+            ServeEvent::Stolen { .. } => "stolen",
+            ServeEvent::Preempted { .. } => "preempted",
+            ServeEvent::Completed { .. } => "completed",
+        }
+    }
+
+    /// Engine-clock timestamp of the transition.
+    pub fn t_ms(&self) -> f64 {
+        match self {
+            ServeEvent::Rejected { t_ms, .. }
+            | ServeEvent::Dispatched { t_ms, .. }
+            | ServeEvent::Admitted { t_ms, .. }
+            | ServeEvent::FirstToken { t_ms, .. }
+            | ServeEvent::Boosted { t_ms, .. }
+            | ServeEvent::Stolen { t_ms, .. }
+            | ServeEvent::Preempted { t_ms, .. } => *t_ms,
+            ServeEvent::Completed { record, .. } => record.completed_ms,
+        }
+    }
+
+    /// One-object JSON encoding (what [`JsonlSink`] writes per line).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("event", Json::Str(self.kind().to_string())),
+            ("id", Json::Num(self.id() as f64)),
+            ("t_ms", Json::Num(self.t_ms())),
+        ];
+        match self {
+            ServeEvent::Rejected { .. } => {}
+            ServeEvent::Dispatched { replica, .. }
+            | ServeEvent::Admitted { replica, .. }
+            | ServeEvent::FirstToken { replica, .. }
+            | ServeEvent::Boosted { replica, .. } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+            }
+            ServeEvent::Stolen { from, to, .. } => {
+                pairs.push(("from", Json::Num(*from as f64)));
+                pairs.push(("to", Json::Num(*to as f64)));
+            }
+            ServeEvent::Preempted { replica, wasted, .. } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+                pairs.push(("wasted", Json::Num(*wasted as f64)));
+            }
+            ServeEvent::Completed { replica, record } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+                pairs.push(("record", record.to_json()));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Where lifecycle events go.  Implementations must be pure observers —
+/// the serving loop's behaviour is pinned independent of the sink.
+pub trait EventSink {
+    fn emit(&mut self, ev: &ServeEvent);
+}
+
+/// Drops every event (zero-overhead default for the batch wrappers).
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&mut self, _ev: &ServeEvent) {}
+}
+
+/// Unbounded capture — convenient for tests and short runs.
+impl EventSink for Vec<ServeEvent> {
+    fn emit(&mut self, ev: &ServeEvent) {
+        self.push(ev.clone());
+    }
+}
+
+/// Bounded in-memory ring of the most recent events.  When full, the
+/// oldest event is dropped and counted — long sessions keep a window of
+/// recent history instead of growing without bound.
+pub struct EventLog {
+    cap: usize,
+    events: VecDeque<ServeEvent>,
+    seen: u64,
+    dropped: u64,
+}
+
+impl EventLog {
+    /// A log keeping at most `cap` events (`cap = 0` keeps none but
+    /// still counts them).
+    pub fn bounded(cap: usize) -> EventLog {
+        EventLog { cap, events: VecDeque::new(), seen: 0, dropped: 0 }
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &ServeEvent> {
+        self.events.iter()
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total events ever emitted into this log.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Events evicted by the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+impl EventSink for EventLog {
+    fn emit(&mut self, ev: &ServeEvent) {
+        self.seen += 1;
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev.clone());
+    }
+}
+
+/// Streams events as JSON Lines to any writer (`serve --events` wraps a
+/// buffered file).  `emit` cannot fail, so the first I/O error is
+/// latched and surfaced by [`JsonlSink::finish`]; later events are
+/// discarded once the writer is broken.
+pub struct JsonlSink<W: Write> {
+    w: W,
+    written: u64,
+    err: Option<std::io::Error>,
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w, written: 0, err: None }
+    }
+
+    /// Events successfully written so far.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Flush and close, reporting the event count or the first error.
+    pub fn finish(mut self) -> std::io::Result<u64> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.w.flush()?;
+        Ok(self.written)
+    }
+}
+
+impl<W: Write> EventSink for JsonlSink<W> {
+    fn emit(&mut self, ev: &ServeEvent) {
+        if self.err.is_some() {
+            return;
+        }
+        match writeln!(self.w, "{}", ev.to_json().to_string()) {
+            Ok(()) => self.written += 1,
+            Err(e) => self.err = Some(e),
+        }
+    }
+}
+
+/// The scheduling loop's handle on a session: emits events and keeps
+/// the per-request status map in lockstep with them (the status is
+/// *derived* from the event stream, so `poll` can never disagree with
+/// what a sink observed).
+pub(crate) struct SessionCtx<'a> {
+    pub(crate) sink: &'a mut dyn EventSink,
+    pub(crate) status: &'a mut HashMap<u64, RequestStatus>,
+}
+
+impl SessionCtx<'_> {
+    pub(crate) fn emit(&mut self, ev: ServeEvent) {
+        let update = match &ev {
+            ServeEvent::Rejected { id, .. } => Some((*id, RequestStatus::Rejected)),
+            ServeEvent::Dispatched { id, replica, .. } => {
+                Some((*id, RequestStatus::Queued { replica: *replica }))
+            }
+            ServeEvent::Admitted { id, replica, .. } => {
+                Some((*id, RequestStatus::Running { replica: *replica }))
+            }
+            // neither changes where the request sits
+            ServeEvent::FirstToken { .. } | ServeEvent::Boosted { .. } => None,
+            ServeEvent::Stolen { id, to, .. } => {
+                Some((*id, RequestStatus::Queued { replica: *to }))
+            }
+            ServeEvent::Preempted { id, replica, .. } => {
+                Some((*id, RequestStatus::Queued { replica: *replica }))
+            }
+            ServeEvent::Completed { record, .. } => {
+                Some((record.id, RequestStatus::Completed))
+            }
+        };
+        if let Some((id, st)) = update {
+            self.status.insert(id, st);
+        }
+        self.sink.emit(&ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn ev(id: u64) -> ServeEvent {
+        ServeEvent::Dispatched { id, replica: 1, t_ms: 2.5 }
+    }
+
+    #[test]
+    fn event_log_bounds_and_counts() {
+        let mut log = EventLog::bounded(3);
+        for id in 0..5 {
+            log.emit(&ev(id));
+        }
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.seen(), 5);
+        assert_eq!(log.dropped(), 2);
+        let ids: Vec<u64> = log.events().map(|e| e.id()).collect();
+        assert_eq!(ids, vec![2, 3, 4], "oldest events must be the ones dropped");
+        let mut zero = EventLog::bounded(0);
+        zero.emit(&ev(9));
+        assert!(zero.is_empty());
+        assert_eq!(zero.dropped(), 1);
+    }
+
+    #[test]
+    fn jsonl_sink_writes_parseable_lines() {
+        let mut sink = JsonlSink::new(Vec::<u8>::new());
+        sink.emit(&ev(7));
+        sink.emit(&ServeEvent::Preempted { id: 3, replica: 0, wasted: 11, t_ms: 40.0 });
+        assert_eq!(sink.written(), 2);
+        let buf = String::from_utf8(sink.w.clone()).unwrap();
+        for line in buf.lines() {
+            let v = json::parse(line).unwrap();
+            assert!(v.get("event").is_ok() && v.get("id").is_ok() && v.get("t_ms").is_ok());
+        }
+        let last = json::parse(buf.lines().last().unwrap()).unwrap();
+        assert_eq!(last.get("event").unwrap().as_str().unwrap(), "preempted");
+        assert_eq!(last.get("wasted").unwrap().as_i64().unwrap(), 11);
+    }
+
+    #[test]
+    fn completed_event_embeds_the_record() {
+        let record = RequestRecord {
+            id: 5,
+            arrival_ms: 1.0,
+            admitted_ms: 2.0,
+            first_token_ms: 3.0,
+            completed_ms: 4.0,
+            prompt_len: 6,
+            output_len: 7,
+            boosted: true,
+            preemptions: 1,
+        };
+        let ev = ServeEvent::Completed { replica: 2, record };
+        assert_eq!(ev.t_ms(), 4.0);
+        let j = ev.to_json();
+        let rec = j.get("record").unwrap();
+        assert_eq!(rec.get("output_len").unwrap().as_i64().unwrap(), 7);
+        assert!(rec.get("boosted").unwrap().as_bool().unwrap());
+        // the whole line roundtrips through the parser
+        assert!(json::parse(&j.to_string()).is_ok());
+    }
+}

@@ -19,18 +19,27 @@
 //! * [`dispatch`]  — the multi-replica serving loop: N engines behind a
 //!   round-robin / least-loaded / ranked dispatcher.
 //! * [`server`]    — the single-replica facade (N=1 case of `dispatch`).
+//! * [`session`]   — the re-entrant session API: `submit` / `tick` /
+//!   `run_until` / `poll` / `finish` over the same loop, one decision
+//!   at a time.
+//! * [`events`]    — lifecycle events ([`ServeEvent`]) + sinks
+//!   ([`EventLog`], [`JsonlSink`], [`NullSink`]).
 
 pub mod dispatch;
+pub mod events;
 pub mod policy;
 pub mod predictor;
 pub mod queue;
 pub mod server;
+pub mod session;
 
 pub use dispatch::{ReplicaOutcome, ShardedCoordinator, ShardedOutcome};
+pub use events::{EventLog, EventSink, JsonlSink, NullSink, ServeEvent};
 pub use policy::Policy;
 pub use predictor::{PjrtScorer, Scorer};
 pub use queue::{QueuedRequest, WaitingQueue};
 pub use server::{Coordinator, ServeOutcome};
+pub use session::{RequestId, RequestStatus, ServeSession, Tick};
 
 /// A request as submitted to the coordinator.
 #[derive(Clone, Debug)]

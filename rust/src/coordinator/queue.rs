@@ -124,25 +124,31 @@ impl WaitingQueue {
     /// Starvation guard: promote requests waiting longer than the
     /// threshold.  O(n) re-heap, but runs only when something actually
     /// crosses the threshold (checked O(1) against the oldest arrival).
-    pub fn apply_starvation_guard(&mut self, now_ms: f64) {
+    /// Returns the ids boosted by *this* call (empty in the common case,
+    /// so no allocation) — the session layer turns them into `Boosted`
+    /// lifecycle events.
+    pub fn apply_starvation_guard(&mut self, now_ms: f64) -> Vec<u64> {
         if self.heap.is_empty() {
-            return;
+            return Vec::new();
         }
         let needs = self
             .heap
             .iter()
             .any(|q| !q.boosted && now_ms - q.req.arrival_ms > self.starvation_ms);
         if !needs {
-            return;
+            return Vec::new();
         }
+        let mut newly = Vec::new();
         let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
         for q in &mut all {
             if !q.boosted && now_ms - q.req.arrival_ms > self.starvation_ms {
                 q.boosted = true;
                 self.boosts += 1;
+                newly.push(q.req.id);
             }
         }
         self.heap = all.into();
+        newly
     }
 
     /// Oldest un-boosted arrival (None if empty or everything is already
@@ -230,8 +236,10 @@ mod tests {
         let p = ScoreSjf { label: PolicyKind::Pars };
         w.push(req(1, 0.0, 100.0), &p); // long job, arrived early
         w.push(req(2, 90.0, 1.0), &p); // short job, recent
-        w.apply_starvation_guard(150.0); // req 1 waited 150 > 100
+        let newly = w.apply_starvation_guard(150.0); // req 1 waited 150 > 100
+        assert_eq!(newly, vec![1], "the guard must report exactly the ids it boosted");
         assert_eq!(w.boosts, 1);
+        assert!(w.apply_starvation_guard(151.0).is_empty(), "no re-boost, no re-report");
         let first = w.pop().unwrap();
         assert_eq!(first.req.id, 1);
         assert!(first.boosted);

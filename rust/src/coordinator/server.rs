@@ -12,6 +12,7 @@
 
 use crate::config::{DispatchKind, SchedulerConfig};
 use crate::coordinator::dispatch::ShardedCoordinator;
+use crate::coordinator::events::EventSink;
 use crate::coordinator::{Policy, Request};
 use crate::engine::Engine;
 use crate::metrics::LatencyReport;
@@ -58,7 +59,9 @@ impl<'a, E: Engine> Coordinator<'a, E> {
     /// Serve a complete workload to completion and report latency
     /// metrics.  Requests are sorted by arrival here (NaN-safe total
     /// order); the single engine is lent to the sharded loop as its only
-    /// replica.
+    /// replica, whose batch wrapper drives a [`ServeSession`] to idle.
+    ///
+    /// [`ServeSession`]: crate::coordinator::ServeSession
     pub fn serve(&mut self, requests: Vec<Request>) -> Result<ServeOutcome> {
         let mut sharded = ShardedCoordinator::new(
             vec![&mut *self.engine],
@@ -67,6 +70,30 @@ impl<'a, E: Engine> Coordinator<'a, E> {
             self.sched.clone(),
         );
         Ok(sharded.serve(requests)?.merged)
+    }
+
+    /// Like [`Coordinator::serve`], but emits every lifecycle event into
+    /// `sink` (e.g. a [`crate::coordinator::JsonlSink`] for
+    /// `serve --events out.jsonl`).  The sink is a pure observer: the
+    /// outcome is bitwise identical to [`Coordinator::serve`].
+    pub fn serve_with_events(
+        &mut self,
+        requests: Vec<Request>,
+        sink: &mut dyn EventSink,
+    ) -> Result<ServeOutcome> {
+        let mut sharded = ShardedCoordinator::new(
+            vec![&mut *self.engine],
+            self.policy.as_ref(),
+            DispatchKind::RoundRobin,
+            self.sched.clone(),
+        );
+        // submit() clamps non-finite arrivals and keeps a stable
+        // arrival order, so no pre-sort is needed here
+        let mut session = sharded.session_with(sink);
+        for req in requests {
+            session.submit(req);
+        }
+        Ok(session.finish()?.merged)
     }
 }
 

@@ -1,0 +1,258 @@
+//! The re-entrant session API: event-driven serving with per-request
+//! handles.
+//!
+//! The batch entry points (`serve` / `serve_stream`) run the whole
+//! lagging-clock loop to completion and return one merged outcome —
+//! nothing outside the loop can observe or inject work mid-run.  A
+//! [`ServeSession`] exposes the *same* loop one decision at a time:
+//!
+//! ```text
+//!   let mut session = coord.session();          // or session_with(&mut sink)
+//!   let id = session.submit(request);           // any time, even mid-run
+//!   session.run_until(t_ms)?;                   // advance the fleet clock
+//!   while session.tick()? != Tick::Idle {}      // ... or drain one decision
+//!   match session.poll(id) { RequestStatus::Completed => ..., _ => ... }
+//!   let outcome = session.finish()?;            // the usual ShardedOutcome
+//! ```
+//!
+//! Each decision emits lifecycle events
+//! ([`ServeEvent`](crate::coordinator::ServeEvent)) through the
+//! session's [`EventSink`] and updates the per-request status map the
+//! events are derived from, so `poll` and the sink can never disagree.  The batch
+//! wrappers are thin shells over this type (submit everything, tick to
+//! idle, collect) — `tests/sharded.rs` pins them record-for-record to
+//! the frozen pre-session loops, and `tests/properties.rs` pins event
+//! conservation across the whole policy × dispatch × steal × preempt
+//! grid, including submissions injected mid-run.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::coordinator::dispatch::{ShardedCoordinator, ShardedOutcome};
+use crate::coordinator::events::{EventLog, EventSink, SessionCtx};
+use crate::coordinator::Request;
+use crate::engine::Engine;
+use crate::Result;
+
+/// Handle returned by [`ServeSession::submit`] — the request's own `id`
+/// field, usable with [`ServeSession::poll`].  Callers are expected to
+/// keep ids unique within a session (the conservation suite relies on
+/// it); a resubmitted id simply overwrites the previous status entry.
+pub type RequestId = u64;
+
+/// Where a submitted request currently sits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Never submitted through this session.
+    Unknown,
+    /// Submitted, not yet dispatched (its arrival is still in the
+    /// session's future, or the loop has not reached it).
+    Pending,
+    /// No replica can ever hold it — dropped at dispatch time.
+    Rejected,
+    /// Dispatched to `replica` (inbox or waiting queue).
+    Queued { replica: usize },
+    /// In `replica`'s running batch.
+    Running { replica: usize },
+    /// Served; its record is in the outcome [`ServeSession::finish`]
+    /// returns (and in the `Completed` event).
+    Completed,
+}
+
+/// What one call to [`ServeSession::tick`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tick {
+    /// The next due submission was routed to `replica`.
+    Dispatched { id: RequestId, replica: usize },
+    /// The next due submission fits no replica and was dropped.
+    Rejected { id: RequestId },
+    /// An idle replica stole queued work from a busy sibling.
+    Stole,
+    /// The lagging replica ran one scheduling iteration.
+    Stepped { replica: usize },
+    /// Nothing to do: no submissions pending, every replica drained.
+    Idle,
+}
+
+/// The session's sink: the default owned [`EventLog`], or a borrowed
+/// caller-provided sink.
+enum SinkSlot<'s> {
+    Owned(EventLog),
+    Borrowed(&'s mut dyn EventSink),
+}
+
+/// A re-entrant serving session over a [`ShardedCoordinator`].
+///
+/// Created by [`ShardedCoordinator::session`] (bounded in-memory
+/// [`EventLog`], capacity `[scheduler] event_log_capacity`) or
+/// [`ShardedCoordinator::session_with`] (any [`EventSink`]).
+pub struct ServeSession<'c, 'p, E: Engine> {
+    coord: &'c mut ShardedCoordinator<'p, E>,
+    sink: SinkSlot<'c>,
+    /// Submitted-but-undispatched requests, arrival-ordered (stable for
+    /// equal arrivals, so submission order breaks ties exactly like the
+    /// batch path's stable sort).
+    pending: VecDeque<Request>,
+    status: HashMap<u64, RequestStatus>,
+    rejected: usize,
+    /// Smallest per-replica sequence budget — a request must fit every
+    /// replica, since dispatch or stealing could route it anywhere.
+    fleet_max_seq: usize,
+}
+
+impl<'c, 'p, E: Engine> ServeSession<'c, 'p, E> {
+    pub(crate) fn new(
+        coord: &'c mut ShardedCoordinator<'p, E>,
+        sink: Option<&'c mut dyn EventSink>,
+    ) -> Self {
+        let fleet_max_seq = coord.fleet_min_max_seq();
+        let sink = match sink {
+            Some(s) => SinkSlot::Borrowed(s),
+            None => SinkSlot::Owned(EventLog::bounded(coord.event_log_capacity())),
+        };
+        ServeSession {
+            coord,
+            sink,
+            pending: VecDeque::new(),
+            status: HashMap::new(),
+            rejected: 0,
+            fleet_max_seq,
+        }
+    }
+
+    /// Split the session into the coordinator borrow and the event
+    /// context the scheduling loop threads through each decision.
+    fn parts(&mut self) -> (&mut ShardedCoordinator<'p, E>, SessionCtx<'_>) {
+        let sink: &mut dyn EventSink = match &mut self.sink {
+            SinkSlot::Owned(log) => log,
+            SinkSlot::Borrowed(s) => &mut **s,
+        };
+        (&mut *self.coord, SessionCtx { sink, status: &mut self.status })
+    }
+
+    /// Submit a request.  Non-finite arrival times are clamped to t=0
+    /// (same contract as the batch path); the request is dispatched once
+    /// the fleet's lagging clock reaches its arrival.  Returns the
+    /// request's id as its poll handle.
+    pub fn submit(&mut self, mut req: Request) -> RequestId {
+        if !req.arrival_ms.is_finite() {
+            req.arrival_ms = 0.0;
+        }
+        let id = req.id;
+        // stable upper-bound insert keeps equal arrivals in submit order
+        let at = self
+            .pending
+            .partition_point(|r| r.arrival_ms.total_cmp(&req.arrival_ms).is_le());
+        self.pending.insert(at, req);
+        self.status.insert(id, RequestStatus::Pending);
+        id
+    }
+
+    /// Current status of a submitted request.
+    pub fn poll(&self, id: RequestId) -> RequestStatus {
+        self.status.get(&id).copied().unwrap_or(RequestStatus::Unknown)
+    }
+
+    /// Submissions not yet dispatched.
+    pub fn n_pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Submissions rejected so far.
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// The session's own bounded event log — `Some` unless the session
+    /// was created with a caller-provided sink.
+    pub fn events(&self) -> Option<&EventLog> {
+        match &self.sink {
+            SinkSlot::Owned(log) => Some(log),
+            SinkSlot::Borrowed(_) => None,
+        }
+    }
+
+    /// Engine-clock time of the next decision: the earlier of the next
+    /// pending arrival and the lagging busy replica's clock.  `None`
+    /// when the session is fully drained.
+    pub fn next_decision_ms(&self) -> Option<f64> {
+        let step = self.coord.next_step().map(|(t, _)| t);
+        let front = self.pending.front().map(|r| r.arrival_ms);
+        match (front, step) {
+            (None, None) => None,
+            (Some(f), None) => Some(f),
+            (None, Some(t)) => Some(t),
+            (Some(f), Some(t)) => Some(if f.total_cmp(&t).is_le() { f } else { t }),
+        }
+    }
+
+    /// Execute exactly one decision of the lagging-clock loop — the same
+    /// decision the batch loop would make next: dispatch the next due
+    /// submission, else let an idle replica steal, else step the lagging
+    /// replica.  Returns [`Tick::Idle`] when there is nothing to do.
+    pub fn tick(&mut self) -> Result<Tick> {
+        let next_step = self.coord.next_step();
+        let due = match (self.pending.front(), next_step) {
+            (Some(r), Some((t, _))) => r.arrival_ms <= t,
+            // idle fleet: the next submission is the only possible work
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if due {
+            let req = self.pending.pop_front().unwrap();
+            let id = req.id;
+            let fleet_max_seq = self.fleet_max_seq;
+            // the decision happens on the fleet's lagging clock (a
+            // mid-run submission can arrive "in the past"); with an idle
+            // fleet the clock will jump to the arrival itself
+            let decision_ms = match next_step {
+                Some((t, _)) => req.arrival_ms.max(t),
+                None => req.arrival_ms,
+            };
+            let (coord, mut ctx) = self.parts();
+            let routed = coord.dispatch_one(req, fleet_max_seq, decision_ms, &mut ctx);
+            return Ok(match routed {
+                Some(replica) => Tick::Dispatched { id, replica },
+                None => {
+                    self.rejected += 1;
+                    Tick::Rejected { id }
+                }
+            });
+        }
+        let (coord, mut ctx) = self.parts();
+        if coord.try_steal(&mut ctx) {
+            return Ok(Tick::Stole);
+        }
+        match next_step {
+            Some((_, idx)) => {
+                coord.step_replica(idx, &mut ctx)?;
+                Ok(Tick::Stepped { replica: idx })
+            }
+            None => Ok(Tick::Idle),
+        }
+    }
+
+    /// Run every decision scheduled at or before `t_ms`: submissions
+    /// arriving by then are dispatched and busy replicas step while
+    /// their clocks lag it.  (A decode step starting before `t_ms` may
+    /// finish past it — discrete events are not split.)  Returns the
+    /// number of decisions executed.
+    pub fn run_until(&mut self, t_ms: f64) -> Result<usize> {
+        let mut n = 0usize;
+        while let Some(d) = self.next_decision_ms() {
+            if d.is_nan() || d > t_ms {
+                break; // future work only (a NaN clock stops, never spins)
+            }
+            self.tick()?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Drain every remaining decision and return the merged outcome —
+    /// exactly what the batch `serve` would have returned for the same
+    /// submissions.
+    pub fn finish(mut self) -> Result<ShardedOutcome> {
+        while self.tick()? != Tick::Idle {}
+        Ok(self.coord.collect(self.rejected))
+    }
+}

@@ -74,7 +74,10 @@ pub trait Engine {
     /// caller re-queues the request; on re-admission `prefill` recomputes
     /// the prompt from scratch).  Returns the number of discarded decode
     /// tokens — the wasted work the preemption metrics account for — or
-    /// 0 when the slot was already empty.
+    /// 0 when the slot was already empty.  The scheduling layer reports
+    /// each eviction as a `Preempted { wasted }` lifecycle event through
+    /// the session's [`EventSink`](crate::coordinator::EventSink), so
+    /// engines never talk to sinks directly.
     fn evict(&mut self, slot: SlotId) -> u32;
 
     fn active_slots(&self) -> usize;

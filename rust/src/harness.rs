@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 use crate::config::{CostModel, PolicyKind, SchedulerConfig};
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{
-    PjrtScorer, Request, Scorer, ServeOutcome, ShardedCoordinator, ShardedOutcome,
+    EventSink, PjrtScorer, Request, Scorer, ServeOutcome, ShardedCoordinator, ShardedOutcome,
 };
 use crate::engine::SimEngine;
 use crate::runtime::{ArtifactManifest, Runtime};
@@ -173,6 +173,24 @@ pub fn run_sharded(
     cost: &CostModel,
     sched: &SchedulerConfig,
 ) -> Result<ShardedOutcome> {
+    run_sharded_with(ts, arrivals, kind, book, cost, sched, None)
+}
+
+/// [`run_sharded`] with an optional lifecycle-event sink: the run is
+/// driven through a [`crate::coordinator::ServeSession`] and every
+/// `Rejected`/`Dispatched`/…/`Completed` transition is emitted into
+/// `sink` (e.g. the CLI's `--events out.jsonl` JSONL writer).  The sink
+/// is a pure observer — the outcome is bitwise identical to
+/// [`run_sharded`].
+pub fn run_sharded_with(
+    ts: &TestSet,
+    arrivals: &[Arrival],
+    kind: PolicyKind,
+    book: &ScoreBook,
+    cost: &CostModel,
+    sched: &SchedulerConfig,
+    sink: Option<&mut dyn EventSink>,
+) -> Result<ShardedOutcome> {
     let scores = book.scores.get(kind.name()).map(|v| v.as_slice());
     let mut rng = Rng::new(0xA11CE);
     let reqs = build_requests(ts, arrivals, scores, LiveLengths::Fresh(&mut rng));
@@ -188,7 +206,17 @@ pub fn run_sharded(
     let policy = make_policy(kind);
     let mut coord =
         ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
-    coord.serve(reqs)
+    match sink {
+        None => coord.serve(reqs),
+        Some(sink) => {
+            // submit() clamps + orders arrivals exactly like serve()
+            let mut session = coord.session_with(sink);
+            for req in reqs {
+                session.submit(req);
+            }
+            session.finish()
+        }
+    }
 }
 
 /// The policy suite used in the paper's figures for a given target model.

@@ -1,5 +1,6 @@
 //! Per-request latency recording and report generation.
 
+use crate::util::json::Json;
 use crate::util::stats::{percentile, Summary};
 
 /// Lifecycle timestamps for one served request (all ms, engine clock).
@@ -40,6 +41,23 @@ impl RequestRecord {
     /// Time to first token.
     pub fn ttft_ms(&self) -> f64 {
         self.first_token_ms - self.arrival_ms
+    }
+
+    /// JSON encoding (embedded in `completed` lifecycle events, so an
+    /// event-log consumer gets the full latency breakdown per request
+    /// without joining against a separate report).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("arrival_ms", Json::Num(self.arrival_ms)),
+            ("admitted_ms", Json::Num(self.admitted_ms)),
+            ("first_token_ms", Json::Num(self.first_token_ms)),
+            ("completed_ms", Json::Num(self.completed_ms)),
+            ("prompt_len", Json::Num(self.prompt_len as f64)),
+            ("output_len", Json::Num(self.output_len as f64)),
+            ("boosted", Json::Bool(self.boosted)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+        ])
     }
 }
 

@@ -22,6 +22,15 @@
 //! * The anti-thrash guard caps per-request evictions at
 //!   `max_preemptions` exactly; with a cap of 0 preemption degenerates
 //!   to `preempt = off` record-for-record.
+//! * Event conservation (session API): across the whole policy ×
+//!   dispatch × steal × preempt grid, every dispatched id's event chain
+//!   is exactly one `Dispatched`, one `Admitted` per admission round
+//!   (= preemptions + 1, each followed by a `FirstToken`), and one
+//!   final `Completed`; `Preempted` events sum to
+//!   `ServeOutcome::preemptions` (waste included), `Boosted` to
+//!   `boosts`, `Stolen` to the per-replica transfer books, and
+//!   `Rejected` to `rejected`.  Submitting mid-run (two interleaved
+//!   sessions' worth of arrivals) loses no ids.
 //!
 //! Reproduce a CI failure locally with the printed seed:
 //! `PROP_SEED=<seed> cargo test --release --test properties`.
@@ -31,7 +40,8 @@ use pars_serve::config::{
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
-    QueuedRequest, Request, ShardedCoordinator, ShardedOutcome, WaitingQueue,
+    QueuedRequest, Request, RequestStatus, ServeEvent, ShardedCoordinator, ShardedOutcome,
+    Tick, WaitingQueue,
 };
 use pars_serve::engine::SimEngine;
 use pars_serve::util::prop::check_with;
@@ -353,6 +363,213 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
                 }
             }
         }
+    }
+}
+
+/// Run a trace through a [`ServeSession`] capturing every lifecycle
+/// event, with the same fleet shape `run_fleet` uses.
+fn run_fleet_session(
+    trace: &[Request],
+    kind: PolicyKind,
+    dispatch: DispatchKind,
+    steal: StealMode,
+    preempt: PreemptMode,
+    replicas: usize,
+    max_batch: usize,
+) -> (ShardedOutcome, Vec<ServeEvent>) {
+    let sched = SchedulerConfig {
+        max_batch,
+        max_kv_tokens: 8192,
+        starvation_ms: 300.0,
+        replicas,
+        dispatch,
+        steal,
+        preempt,
+        ..Default::default()
+    };
+    let engines: Vec<SimEngine> = (0..replicas)
+        .map(|i| SimEngine::new(CostModel::default(), &sched.for_replica(i), TRACE_MAX_SEQ))
+        .collect();
+    let policy = make_policy(kind);
+    let mut coord = ShardedCoordinator::new(engines, policy.as_ref(), dispatch, sched);
+    let mut events: Vec<ServeEvent> = Vec::new();
+    // submit() keeps a stable arrival order, so the raw trace order is
+    // exactly what serve(trace) would see after its stable sort
+    let mut session = coord.session_with(&mut events);
+    for r in trace.to_vec() {
+        session.submit(r);
+    }
+    let out = session.finish().unwrap();
+    (out, events)
+}
+
+/// The event-conservation laws for one run (see the module doc).
+fn assert_events_conserved(
+    trace: &[Request],
+    events: &[ServeEvent],
+    out: &ShardedOutcome,
+    label: &str,
+) {
+    #[derive(Default)]
+    struct Chain {
+        rejected: u64,
+        dispatched: u64,
+        admitted: u64,
+        first_token: u64,
+        preempted: u64,
+        completed: u64,
+    }
+    let mut chains: std::collections::HashMap<u64, Chain> = std::collections::HashMap::new();
+    let (mut boosted, mut stolen, mut wasted) = (0usize, 0usize, 0u64);
+    for ev in events {
+        let c = chains.entry(ev.id()).or_default();
+        assert_eq!(c.completed, 0, "{label}: id {} has events after Completed", ev.id());
+        match ev {
+            ServeEvent::Rejected { .. } => c.rejected += 1,
+            ServeEvent::Dispatched { .. } => c.dispatched += 1,
+            ServeEvent::Admitted { .. } => c.admitted += 1,
+            ServeEvent::FirstToken { .. } => c.first_token += 1,
+            ServeEvent::Boosted { .. } => boosted += 1,
+            ServeEvent::Stolen { .. } => stolen += 1,
+            ServeEvent::Preempted { wasted: w, .. } => {
+                c.preempted += 1;
+                wasted += *w as u64;
+            }
+            ServeEvent::Completed { .. } => c.completed += 1,
+        }
+    }
+    let mut n_rejected = 0usize;
+    let mut n_preempted = 0u64;
+    for r in trace {
+        let c = chains
+            .get(&r.id)
+            .unwrap_or_else(|| panic!("{label}: id {} emitted no events at all", r.id));
+        if c.rejected > 0 {
+            n_rejected += 1;
+            assert_eq!(
+                (c.rejected, c.dispatched, c.admitted, c.completed),
+                (1, 0, 0, 0),
+                "{label}: rejected id {} has a partial lifecycle chain",
+                r.id
+            );
+            continue;
+        }
+        assert_eq!(c.dispatched, 1, "{label}: id {} dispatched {} times", r.id, c.dispatched);
+        assert_eq!(c.completed, 1, "{label}: id {} completed {} times", r.id, c.completed);
+        assert_eq!(
+            c.admitted,
+            c.preempted + 1,
+            "{label}: id {} needs one admission per preemption plus the final one",
+            r.id
+        );
+        assert_eq!(
+            c.first_token, c.admitted,
+            "{label}: id {} must see a first token every admission round",
+            r.id
+        );
+        n_preempted += c.preempted;
+    }
+    assert_eq!(n_rejected, out.merged.rejected, "{label}: Rejected events vs outcome");
+    assert_eq!(
+        n_preempted, out.merged.preemptions as u64,
+        "{label}: Preempted events vs outcome"
+    );
+    assert_eq!(wasted, out.merged.wasted_decode_tokens, "{label}: event waste vs outcome");
+    assert_eq!(boosted, out.merged.boosts, "{label}: Boosted events vs outcome");
+    let stolen_in: usize = out.per_replica.iter().map(|r| r.stolen_in).sum();
+    assert_eq!(stolen, stolen_in, "{label}: Stolen events vs transfer books");
+}
+
+#[test]
+fn event_log_is_conserved_across_the_mode_grid() {
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0xEB3);
+    for case in 0..2 {
+        let trace = gen_trace(&mut rng);
+        for kind in PolicyKind::all() {
+            for dispatch in DispatchKind::all() {
+                for steal in StealMode::all() {
+                    for preempt in PreemptMode::all() {
+                        let (out, events) =
+                            run_fleet_session(&trace, kind, dispatch, steal, preempt, 3, 2);
+                        let label = format!(
+                            "seed {seed} case {case} {kind:?}/{dispatch:?}/{steal:?}/{preempt:?}"
+                        );
+                        assert_events_conserved(&trace, &events, &out, &label);
+                        // the session path serves exactly what the batch
+                        // path serves (same loop, observed)
+                        let batch = run_fleet(&trace, kind, dispatch, steal, preempt, 3, 2, &[]);
+                        assert_eq!(
+                            out.merged.report.n_requests, batch.merged.report.n_requests,
+                            "{label}: session vs batch completion count"
+                        );
+                        assert_eq!(
+                            out.merged.makespan_ms, batch.merged.makespan_ms,
+                            "{label}: session vs batch makespan"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn submit_mid_run_interleaved_sessions_lose_no_ids() {
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0x51D3);
+    for case in 0..3 {
+        let first = gen_trace(&mut rng);
+        let mut second = gen_trace(&mut rng);
+        for r in &mut second {
+            r.id += 10_000; // keep the two waves' ids disjoint
+        }
+        let sched = SchedulerConfig {
+            max_batch: 2,
+            max_kv_tokens: 8192,
+            starvation_ms: 300.0,
+            replicas: 3,
+            dispatch: DispatchKind::LeastLoaded,
+            steal: StealMode::Idle,
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        };
+        let engines: Vec<SimEngine> = (0..3)
+            .map(|i| SimEngine::new(CostModel::default(), &sched.for_replica(i), TRACE_MAX_SEQ))
+            .collect();
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
+        let mut session = coord.session();
+        for r in first.clone() {
+            session.submit(r);
+        }
+        // run partway, then inject a whole second session's worth of
+        // arrivals — some already in the fleet's past — and hand-drive
+        // the loop to idle
+        session.run_until(200.0).unwrap();
+        for r in second.clone() {
+            session.submit(r);
+        }
+        while session.tick().unwrap() != Tick::Idle {}
+        let fits = |r: &Request| ((r.prompt_len + r.target_len) as usize) <= TRACE_MAX_SEQ;
+        for r in first.iter().chain(second.iter()) {
+            let st = session.poll(r.id);
+            let want =
+                if fits(r) { RequestStatus::Completed } else { RequestStatus::Rejected };
+            assert_eq!(st, want, "seed {seed} case {case} id {} not terminal", r.id);
+        }
+        let out = session.finish().unwrap();
+        let mut ids: Vec<u64> = out
+            .per_replica
+            .iter()
+            .flat_map(|r| r.records.iter().map(|rec| rec.id))
+            .collect();
+        ids.sort_unstable();
+        let mut expect: Vec<u64> =
+            first.iter().chain(second.iter()).filter(|r| fits(r)).map(|r| r.id).collect();
+        expect.sort_unstable();
+        assert_eq!(ids, expect, "seed {seed} case {case}: ids lost or duplicated mid-run");
     }
 }
 

@@ -564,6 +564,66 @@ fn preempt_off_n1_equals_legacy_every_dispatch() {
     }
 }
 
+/// Session-API pin: hand-driving a [`pars_serve::coordinator::ServeSession`]
+/// (submit everything, tick to idle, poll, finish) must reproduce the
+/// batch wrapper byte-for-byte — the wrapper IS a session, so any drift
+/// here means the re-entrant path and the batch path diverged.
+#[test]
+fn manual_session_ticks_reproduce_the_batch_wrapper() {
+    use pars_serve::coordinator::{RequestStatus, Tick};
+    let sched = SchedulerConfig {
+        max_batch: 4,
+        max_kv_tokens: 512,
+        starvation_ms: 500.0,
+        replicas: 4,
+        dispatch: DispatchKind::Ranked,
+        steal: StealMode::Idle,
+        preempt: PreemptMode::Arrival,
+        ..Default::default()
+    };
+    let mk_engines = || -> Vec<SimEngine> {
+        (0..sched.replicas).map(|_| SimEngine::new(CostModel::default(), &sched, 4096)).collect()
+    };
+    let policy = make_policy(PolicyKind::OracleSjf);
+
+    let mut batch =
+        ShardedCoordinator::new(mk_engines(), policy.as_ref(), sched.dispatch, sched.clone());
+    let want = batch.serve(workload()).unwrap();
+
+    let mut coord =
+        ShardedCoordinator::new(mk_engines(), policy.as_ref(), sched.dispatch, sched.clone());
+    // submit() keeps a stable arrival order, so the raw workload order
+    // matches what serve(workload()) sees after its stable sort
+    let mut session = coord.session();
+    for r in workload() {
+        session.submit(r);
+    }
+    let mut decisions = 0usize;
+    while session.tick().unwrap() != Tick::Idle {
+        decisions += 1;
+    }
+    assert!(decisions > 0, "the workload cannot be a no-op");
+    let log = session.events().expect("default session owns its event log");
+    assert!(log.seen() > 0, "the default event log observed nothing");
+    assert_eq!(session.poll(0), RequestStatus::Completed);
+    assert_eq!(session.poll(120), RequestStatus::Rejected, "the oversized request");
+    assert_eq!(session.poll(999_999), RequestStatus::Unknown);
+    let got = session.finish().unwrap();
+
+    assert_eq!(got.merged.rejected, want.merged.rejected);
+    assert_eq!(got.merged.report.n_requests, want.merged.report.n_requests);
+    assert_eq!(got.merged.makespan_ms, want.merged.makespan_ms);
+    assert_eq!(got.merged.preemptions, want.merged.preemptions);
+    for (g, w) in got.per_replica.iter().zip(want.per_replica.iter()) {
+        assert_eq!(
+            format!("{:?}", g.records),
+            format!("{:?}", w.records),
+            "replica {}: session-driven record stream drifted from the batch wrapper",
+            g.replica
+        );
+    }
+}
+
 #[test]
 fn sharded_n4_serves_everything_the_single_replica_does() {
     let sched = SchedulerConfig {
