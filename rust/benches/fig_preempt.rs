@@ -21,28 +21,10 @@ use pars_serve::config::{
     CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode,
 };
 use pars_serve::coordinator::policy::make_policy;
-use pars_serve::coordinator::{Request, ShardedCoordinator};
+use pars_serve::coordinator::ShardedCoordinator;
 use pars_serve::engine::SimEngine;
+use pars_serve::harness::long_job_then_burst;
 use pars_serve::util::bench::Table;
-
-fn mk_req(id: u64, arrival: f64, target: u32) -> Request {
-    Request {
-        id,
-        tokens: vec![1, 7, 19, 31, 2],
-        prompt_len: 5,
-        arrival_ms: arrival,
-        target_len: target,
-        oracle_len: target,
-        score: target as f32,
-    }
-}
-
-/// One 1000-token job at t=0, then `n_short` 10-token jobs at t=40.
-fn long_job_then_burst(n_short: usize) -> Vec<Request> {
-    let mut v = vec![mk_req(0, 0.0, 1000)];
-    v.extend((1..=n_short as u64).map(|i| mk_req(i, 40.0, 10)));
-    v
-}
 
 struct Row {
     e2e_mean: f64,

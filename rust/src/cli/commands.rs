@@ -6,7 +6,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 use crate::config::{
-    Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, StealMode,
+    Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, StealMode, SwapMode,
 };
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{Coordinator, EventSink, JsonlSink, PjrtScorer, Scorer};
@@ -26,6 +26,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "predict" => predict(args),
         "calibrate" => calibrate(args),
         "gen-workload" => gen_workload(args),
+        "replay" => replay(args),
         "info" => info(args),
         "help" | "" => {
             print_help();
@@ -54,6 +55,12 @@ COMMANDS:
                 --preempt-margin <f>  candidate must undercut the victim's
                                       remaining work by this factor (>= 1)
                 --max-preemptions <n> anti-thrash: evict a job at most n times
+                --swap off|host(blocks)  park evicted jobs' KV in a bounded
+                                      host pool (progress preserved; falls
+                                      back to recompute per eviction when
+                                      the pool is full)
+                --swap-bw-gbps <f>  host<->device swap bandwidth the sim
+                                    cost model charges (default 16)
                 --replica-caps <kv[:slots],...> per-replica capacity overrides
                                                 (`_` inherits the default)
                 --events <file>     stream lifecycle events (rejected/dispatched/
@@ -73,6 +80,10 @@ COMMANDS:
   calibrate     fit the SimEngine cost model against the PJRT engine
                 (writes artifacts/costmodel.json)
   gen-workload  summarise an arrival trace (--rate / --burst / --n)
+  replay        reconstruct per-replica timelines from an --events JSONL
+                capture: occupancy, preemption (by mode), resume and
+                steal summaries per replica
+                --events <file>     the JSONL log a serve run wrote
   info          print artifact manifest summary
   help          this message
 
@@ -110,6 +121,10 @@ fn load_config(args: &Args) -> Result<Config> {
     cfg.scheduler.max_preemptions = args
         .usize_or("max-preemptions", cfg.scheduler.max_preemptions as usize)?
         .min(u32::MAX as usize) as u32;
+    if let Some(s) = args.str_opt("swap")? {
+        cfg.scheduler.swap = SwapMode::parse(s)?;
+    }
+    cfg.scheduler.swap_bw_gbps = args.f64_or("swap-bw-gbps", cfg.scheduler.swap_bw_gbps)?;
     if let Some(rc) = args.str_opt("replica-caps")? {
         cfg.scheduler.replica_caps = ReplicaCaps::parse_list(rc)?;
     }
@@ -213,13 +228,14 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}  steal={}  preempt={}{}",
+                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
                 cfg.scheduler.dispatch.name(),
                 cfg.scheduler.steal.name(),
                 cfg.scheduler.preempt.name(),
+                cfg.scheduler.swap.name(),
                 if cfg.scheduler.heterogeneous() { "  caps=heterogeneous" } else { "" }
             );
             if book.scoring_ms_per_prompt > 0.0 {
@@ -247,15 +263,33 @@ fn serve(args: &Args) -> Result<()> {
                 out.merged.preemptions,
                 out.merged.wasted_decode_tokens
             );
+            if cfg.scheduler.swap != SwapMode::Off {
+                let mean_restore = if out.merged.resumes > 0 {
+                    out.merged.restore_delay_ms / out.merged.resumes as f64
+                } else {
+                    0.0
+                };
+                println!(
+                    "swap: swapped_out_tokens={}  resumed_tokens={}  resumes={}  \
+                     mean_restore_delay={:.1} ms",
+                    out.merged.swapped_out_tokens,
+                    out.merged.resumed_tokens,
+                    out.merged.resumes,
+                    mean_restore
+                );
+            }
             if cfg.scheduler.replicas > 1 {
                 for rep in &out.per_replica {
                     println!(
-                        "{}  dispatched={}  stolen_in={}  stolen_out={}  preempted={}",
+                        "{}  dispatched={}  stolen_in={}  stolen_out={}  preempted={}  \
+                         swapped_out={}  resumed={}",
                         rep.report.one_line(&format!("  replica {}", rep.replica)),
                         rep.dispatched,
                         rep.stolen_in,
                         rep.stolen_out,
-                        rep.preempted
+                        rep.preempted,
+                        rep.swapped_out_tokens,
+                        rep.resumed_tokens
                     );
                 }
             }
@@ -280,8 +314,13 @@ fn serve(args: &Args) -> Result<()> {
                 scores,
                 harness::LiveLengths::Fresh(&mut rng),
             );
-            let mut engine =
-                PjrtEngine::load(&rt, &manifest, cfg.scheduler.max_kv_tokens, cfg.seed)?;
+            let mut engine = PjrtEngine::load_with_swap(
+                &rt,
+                &manifest,
+                cfg.scheduler.max_kv_tokens,
+                cfg.scheduler.swap.host_blocks(),
+                cfg.seed,
+            )?;
             let mut coord =
                 Coordinator::new(&mut engine, make_policy(cfg.policy), cfg.scheduler.clone());
             let mut events = open_event_sink(args)?;
@@ -318,8 +357,9 @@ fn sweep(args: &Args) -> Result<()> {
     let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
 
     let mut csv = String::from(
-        "dataset,model,policy,replicas,dispatch,steal,preempt,rate_req_s,rep,avg_ms_tok,\
-         p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,wasted_tokens\n",
+        "dataset,model,policy,replicas,dispatch,steal,preempt,swap,rate_req_s,rep,avg_ms_tok,\
+         p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,wasted_tokens,\
+         swapped_tokens,resumed_tokens\n",
     );
     for &kind in &suite {
         for &rate in &rates {
@@ -328,12 +368,13 @@ fn sweep(args: &Args) -> Result<()> {
                 let sc = &cfg.scheduler;
                 let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{}\n",
+                    "{dataset},{model},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{}\n",
                     kind.name().replace(' ', "_"),
                     cfg.scheduler.replicas,
                     cfg.scheduler.dispatch.name(),
                     cfg.scheduler.steal.name(),
                     cfg.scheduler.preempt.name(),
+                    cfg.scheduler.swap.name(),
                     out.merged.report.avg_per_token_ms,
                     out.merged.report.p90_per_token_ms,
                     out.merged.report.per_token.p99,
@@ -341,7 +382,9 @@ fn sweep(args: &Args) -> Result<()> {
                     out.merged.report.throughput_tok_s,
                     out.merged.boosts,
                     out.merged.preemptions,
-                    out.merged.wasted_decode_tokens
+                    out.merged.wasted_decode_tokens,
+                    out.merged.swapped_out_tokens,
+                    out.merged.resumed_tokens
                 ));
             }
         }
@@ -457,9 +500,67 @@ fn gen_workload(args: &Args) -> Result<()> {
     // panicking on arrivals.last()
     let span_s = arrivals.last().map_or(0.0, |a| a.at_ms / 1e3);
     t.row(&["span (s)".into(), format!("{span_s:.1}")]);
+    // total over degenerate traces: 0.0 for empty/single/zero-span
+    let rate = crate::workload::measured_rate_per_s(&arrivals);
+    t.row(&["measured rate (req/s)".into(), format!("{rate:.2}")]);
     t.row(&["mean output len".into(), format!("{:.1}", s.mean)]);
     t.row(&["p50 / p90 / p99 len".into(), format!("{:.0} / {:.0} / {:.0}", s.p50, s.p90, s.p99)]);
     t.row(&["max len".into(), format!("{:.0}", s.max)]);
+    t.print();
+    Ok(())
+}
+
+/// Reconstruct per-replica timelines from an `--events` JSONL capture
+/// (the ROADMAP's event-stream-consumer open item): per replica, the
+/// lifecycle counters, the preemption split by mode, the resume book
+/// and a slot-occupancy estimate over the replica's active window.
+fn replay(args: &Args) -> Result<()> {
+    let Some(path) = args.str_opt("events")? else {
+        bail!("replay needs --events <file> (a JSONL log from `pallas serve --events`)");
+    };
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading event log {path}"))?;
+    let book = crate::coordinator::ReplayBook::from_jsonl(&src)
+        .with_context(|| format!("replaying event log {path}"))?;
+    println!(
+        "replay: {} events, {} replicas, {} rejected",
+        book.events,
+        book.replicas.len(),
+        book.rejected
+    );
+    let mut t = Table::new(
+        &format!("per-replica timelines ({path})"),
+        &[
+            "replica",
+            "dispatched",
+            "completed",
+            "out tok",
+            "span s",
+            "occupancy",
+            "boosts",
+            "stolen in/out",
+            "preempt rc/swap",
+            "resumes",
+            "restored tok",
+            "wasted tok",
+        ],
+    );
+    for r in &book.replicas {
+        t.row(&[
+            r.replica.to_string(),
+            r.dispatched.to_string(),
+            r.completed.to_string(),
+            r.output_tokens.to_string(),
+            format!("{:.2}", r.span_ms() / 1e3),
+            format!("{:.2}", r.occupancy()),
+            r.boosts.to_string(),
+            format!("{}/{}", r.stolen_in, r.stolen_out),
+            format!("{}/{}", r.preempted_recompute, r.preempted_swap),
+            r.resumes.to_string(),
+            r.restored_tokens.to_string(),
+            r.wasted_tokens.to_string(),
+        ]);
+    }
     t.print();
     Ok(())
 }
@@ -509,6 +610,80 @@ mod tests {
         // must print an all-zero summary row instead (runs on the
         // synthetic corpus — no artifacts in the test environment)
         dispatch(&args(&["gen-workload", "--n", "0"])).unwrap();
+    }
+
+    /// Flags shared by this test and the CI swap smoke: single slot,
+    /// near-saturation oracle-SJF traffic, margin 1 — a long job
+    /// admitted off an empty queue gets displaced by the next shorter
+    /// arrival, and with a host pool every swap suspension must resume
+    /// before its job can complete (N=1 has no steal downgrade).  The
+    /// run is seed-deterministic, so if this test sees `resumed` events
+    /// the CI smoke on the same flags cannot flake.
+    const SWAP_SMOKE_FLAGS: [&str; 17] = [
+        "serve", "--policy", "oracle", "--max-batch", "1", "--rate", "6", "--n", "500",
+        "--preempt", "arrival", "--preempt-margin", "1", "--swap", "host:256", "--seed",
+        "20260730",
+    ];
+
+    #[test]
+    fn serve_with_swap_emits_resumed_events_and_replay_balances_the_books() {
+        let dir = std::env::temp_dir().join("pars_swap_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("swap_ev.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut argv: Vec<&str> = SWAP_SMOKE_FLAGS.to_vec();
+        argv.extend(["--events", &path_s]);
+        dispatch(&args(&argv)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut kinds = std::collections::BTreeSet::new();
+        for line in body.lines() {
+            let v = crate::util::json::parse(line).expect("every line is valid JSON");
+            let kind = v.get("event").unwrap().as_str().unwrap().to_string();
+            if kind == "preempted" {
+                // every preemption declares its mode, never silently
+                let mode = v.get("mode").unwrap().as_str().unwrap();
+                assert!(mode == "swap" || mode == "recompute", "bad mode {mode:?}");
+            }
+            kinds.insert(kind);
+        }
+        assert!(kinds.contains("preempted"), "smoke trace never preempted: {kinds:?}");
+        assert!(
+            kinds.contains("resumed"),
+            "swap-mode preemptions must come back as resumed events: {kinds:?}"
+        );
+        // the replay subcommand consumes the same file losslessly
+        dispatch(&args(&["replay", "--events", &path_s])).unwrap();
+        let book = crate::coordinator::ReplayBook::from_jsonl(&body).unwrap();
+        assert_eq!(book.replicas.len(), 1);
+        let r = &book.replicas[0];
+        assert_eq!(r.completed, 500, "every request completes exactly once");
+        assert!(r.preempted_swap > 0, "no swap-mode preemption in the books");
+        assert_eq!(r.resumes, r.preempted_swap, "N=1: every suspension must resume");
+        assert!(r.occupancy() > 0.0 && r.span_ms() > 0.0);
+        // host-parked time is NOT slot residency: a single-slot replica
+        // can never average more than one busy slot, even though swap
+        // rounds keep their original admitted_ms across the park
+        assert!(
+            r.occupancy() <= 1.0 + 1e-9,
+            "occupancy {:.3} exceeds the single batch slot",
+            r.occupancy()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_rejects_garbage_and_requires_the_events_flag() {
+        assert!(dispatch(&args(&["replay"])).is_err(), "--events is mandatory");
+        let dir = std::env::temp_dir().join("pars_replay_garbage_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.jsonl");
+        std::fs::write(&path, "{\"event\": \"dispatched\"}\nnot json\n").unwrap();
+        let path_s = path.to_str().unwrap().to_string();
+        assert!(
+            dispatch(&args(&["replay", "--events", &path_s])).is_err(),
+            "a corrupted log must fail loudly, not be half-summarised"
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -153,12 +153,14 @@ impl StealMode {
     }
 }
 
-/// When a replica may evict a *running* job to admit a shorter one
+/// When a replica may displace a *running* job to admit a shorter one
 /// (score-aware preemption; the post-admission displacement that
 /// ranking-based schedulers need to beat HOL blocking inside the
-/// running batch, vLLM-style).  Evicted jobs resume by recompute: the
-/// generated tokens are discarded and the request re-enters the
-/// waiting queue with its original arrival, score and boost state.
+/// running batch, vLLM-style).  How the victim comes back is governed
+/// by [`SwapMode`]: suspended with progress intact when a host pool is
+/// configured and has room, recompute (generated tokens discarded)
+/// otherwise.  Either way the request re-enters the waiting queue with
+/// its original arrival, score and boost state.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PreemptMode {
     /// Never evict running work (the pre-preemption behaviour).
@@ -201,6 +203,67 @@ impl PreemptMode {
     /// Representative modes for sweeps/tests.
     pub fn all() -> [PreemptMode; 3] {
         [PreemptMode::Off, PreemptMode::Arrival, PreemptMode::Pressure(4)]
+    }
+}
+
+/// Where a preempted job's KV pages go (partial-progress preemption).
+///
+/// With `Off`, eviction is recompute-on-resume: the victim's generated
+/// tokens are discarded and the prompt is re-prefilled on re-admission
+/// (the PR 3 behaviour, bit-for-bit).  With `Host(blocks)`, each replica
+/// owns a bounded host block pool: eviction *suspends* the victim — KV
+/// pages move to the host pool, generated tokens are preserved — and
+/// re-admission *resumes* it (pages swapped back, decode continues).
+/// When the host pool cannot hold a victim's pages the eviction falls
+/// back to recompute for that victim only, and the `Preempted` event
+/// says which mode fired — the fallback is selected per eviction, never
+/// silently lossy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapMode {
+    /// Recompute-on-resume (the pre-swap behaviour).
+    Off,
+    /// Per-replica host block pool of `n` KV blocks for suspended jobs.
+    /// `host(0)` is legal and degenerates to `Off` (the pool can never
+    /// hold a page, so every eviction takes the recompute fallback).
+    Host(usize),
+}
+
+impl SwapMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        let t = s.to_ascii_lowercase();
+        Ok(match t.as_str() {
+            "off" | "none" => SwapMode::Off,
+            other => {
+                let Some(rest) = other.strip_prefix("host") else {
+                    bail!("unknown swap mode {s:?} (off | host(blocks))");
+                };
+                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
+                match inner.trim().parse::<usize>() {
+                    Ok(n) => SwapMode::Host(n),
+                    Err(_) => bail!("swap pool needs a block count, e.g. host(256): {s:?}"),
+                }
+            }
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SwapMode::Off => "off".to_string(),
+            SwapMode::Host(n) => format!("host({n})"),
+        }
+    }
+
+    /// Host-pool size in blocks (0 when swapping is off).
+    pub fn host_blocks(&self) -> usize {
+        match self {
+            SwapMode::Off => 0,
+            SwapMode::Host(n) => *n,
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [SwapMode; 2] {
+        [SwapMode::Off, SwapMode::Host(256)]
     }
 }
 
@@ -279,6 +342,13 @@ pub struct SchedulerConfig {
     /// Anti-thrash guard: a job preempted this many times becomes
     /// non-evictable (mirrors the starvation boost bounding SJF delay).
     pub max_preemptions: u32,
+    /// Partial-progress preemption: where a victim's KV pages go
+    /// (`off` = recompute-on-resume, `host(blocks)` = per-replica host
+    /// swap pool with recompute as the per-eviction fallback).
+    pub swap: SwapMode,
+    /// Host↔device swap bandwidth (GB/s) the SimEngine cost model
+    /// charges on suspend/resume (PJRT pays the real copy time).
+    pub swap_bw_gbps: f64,
     /// Capacity of the bounded in-memory event log a default
     /// [`ServeSession`] keeps (most recent events win; 0 keeps none).
     /// Sessions created with an explicit sink ignore it.
@@ -302,6 +372,8 @@ impl Default for SchedulerConfig {
             preempt: PreemptMode::Off,
             preempt_margin: 2.0,
             max_preemptions: 2,
+            swap: SwapMode::Off,
+            swap_bw_gbps: 16.0,
             event_log_capacity: 16_384,
         }
     }
@@ -444,6 +516,12 @@ impl Config {
             }
             c.scheduler.max_preemptions = v as u32;
         }
+        if let Some(v) = doc.get_str("scheduler", "swap") {
+            c.scheduler.swap = SwapMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_num("scheduler", "swap_bw_gbps") {
+            c.scheduler.swap_bw_gbps = v;
+        }
         if let Some(v) = doc.get_num("scheduler", "event_log_capacity") {
             if v < 0.0 || v.fract() != 0.0 {
                 bail!("scheduler.event_log_capacity must be a non-negative integer (got {v})");
@@ -491,6 +569,12 @@ impl Config {
                 "scheduler.preempt_margin must be >= 1.0 (got {}): smaller margins \
                  could evict a job whose freed KV blocks cannot hold the candidate",
                 self.scheduler.preempt_margin
+            );
+        }
+        if !self.scheduler.swap_bw_gbps.is_finite() || self.scheduler.swap_bw_gbps <= 0.0 {
+            bail!(
+                "scheduler.swap_bw_gbps must be a positive finite bandwidth (got {})",
+                self.scheduler.swap_bw_gbps
             );
         }
         if self.scheduler.replica_caps.len() > self.scheduler.replicas {
@@ -755,6 +839,52 @@ mod tests {
         assert!(Config::from_toml("[scheduler]\nmax_preemptions = -1").is_err());
         assert!(Config::from_toml("[scheduler]\nmax_preemptions = 2.7").is_err());
         assert!(Config::from_toml("[scheduler]\nmax_preemptions = 0").is_ok());
+    }
+
+    #[test]
+    fn parse_swap_knobs() {
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            preempt = "arrival"
+            swap = "host(512)"
+            swap_bw_gbps = 32.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.swap, SwapMode::Host(512));
+        assert_eq!(c.scheduler.swap_bw_gbps, 32.0);
+        // defaults: swapping off, 16 GB/s
+        let d = SchedulerConfig::default();
+        assert_eq!(d.swap, SwapMode::Off);
+        assert_eq!(d.swap_bw_gbps, 16.0);
+        assert_eq!(d.swap.host_blocks(), 0);
+        assert_eq!(SwapMode::Host(64).host_blocks(), 64);
+    }
+
+    #[test]
+    fn swap_mode_parse_and_names() {
+        assert_eq!(SwapMode::parse("off").unwrap(), SwapMode::Off);
+        assert_eq!(SwapMode::parse("HOST(256)").unwrap(), SwapMode::Host(256));
+        assert_eq!(SwapMode::parse("host:256").unwrap(), SwapMode::Host(256));
+        assert_eq!(SwapMode::parse("host=0").unwrap(), SwapMode::Host(0));
+        assert!(SwapMode::parse("host").is_err());
+        assert!(SwapMode::parse("host(2.5)").is_err());
+        assert!(SwapMode::parse("host(-3)").is_err());
+        assert!(SwapMode::parse("disk(4)").is_err());
+        for m in SwapMode::all() {
+            assert_eq!(SwapMode::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_swap_bandwidth() {
+        assert!(Config::from_toml("[scheduler]\nswap_bw_gbps = 0").is_err());
+        assert!(Config::from_toml("[scheduler]\nswap_bw_gbps = -4").is_err());
+        assert!(Config::from_toml("[scheduler]\nswap_bw_gbps = 16").is_ok());
+        assert!(Config::from_toml("[scheduler]\nswap = \"sometimes\"").is_err());
+        // host(0) is the legal degenerate pool (bitwise recompute)
+        assert!(Config::from_toml("[scheduler]\nswap = \"host(0)\"").is_ok());
     }
 
     #[test]

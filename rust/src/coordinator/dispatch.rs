@@ -47,17 +47,29 @@
 //!   burst of short arrivals still ate HOL blocking inside the running
 //!   batch.  With preemption on, a queue head whose predicted length
 //!   undercuts the worst running job's *remaining* predicted work by
-//!   `preempt_margin` evicts that job via [`Engine::evict`]
-//!   (recompute-on-resume: generated tokens are discarded and counted
-//!   as wasted; the request re-enters the waiting queue with its
-//!   original arrival, score, boost and an incremented preemption
-//!   count, re-charged against `queued_tokens`).  An anti-thrash guard
-//!   makes a job non-evictable after `max_preemptions` evictions,
-//!   mirroring the starvation boost; boosted jobs are never evicted at
-//!   all.  `preempt = off` leaves the serve loop untouched (pinned
+//!   `preempt_margin` vacates that job's slot through the suspend/
+//!   resume lifecycle: with `[scheduler] swap = host(blocks)` and room
+//!   in the host pool the victim is *suspended* via
+//!   [`Engine::suspend`] — KV pages move to the bounded host block
+//!   pool, generated tokens are preserved, and re-admission swaps the
+//!   pages back with [`Engine::resume`] so decode continues where it
+//!   left off.  When the pool cannot hold the victim (or `swap = off`)
+//!   the eviction falls back to [`Engine::evict`] — recompute: the
+//!   tokens are discarded and counted as wasted, and re-admission
+//!   prefills from scratch.  The mode is chosen per eviction and
+//!   reported in the `Preempted { wasted, mode }` event — never
+//!   silently lossy.  Either way the request re-enters the waiting
+//!   queue with its original arrival, score, boost and an incremented
+//!   preemption count, re-charged against `queued_tokens`.  An
+//!   anti-thrash guard makes a job non-evictable after
+//!   `max_preemptions` evictions, mirroring the starvation boost;
+//!   boosted jobs are never evicted at all.  `preempt = off` (and
+//!   `swap = off` under it) leaves the serve loop untouched (pinned
 //!   record-for-record by `tests/sharded.rs`), and preemption composes
-//!   with stealing — a stolen-then-preempted request keeps every
-//!   conservation invariant (`tests/properties.rs`).
+//!   with stealing — a stolen *suspended* job downgrades to recompute
+//!   (its KV lives on the victim replica's host pool) with the burned
+//!   progress carried on the `Stolen { wasted }` event, and every
+//!   conservation invariant holds (`tests/properties.rs`).
 //!
 //! Since the session refactor the loop itself is **re-entrant**: the
 //! batch entry points (`serve` / `serve_stream`) are thin wrappers that
@@ -75,8 +87,8 @@ use std::collections::{HashMap, VecDeque};
 use anyhow::Context;
 
 use crate::config::{DispatchKind, PreemptMode, SchedulerConfig, StealMode};
-use crate::coordinator::events::{EventSink, NullSink, ServeEvent, SessionCtx};
-use crate::coordinator::queue::QueuedRequest;
+use crate::coordinator::events::{EventSink, NullSink, PreemptKind, ServeEvent, SessionCtx};
+use crate::coordinator::queue::{QueuedRequest, SuspendedEntry};
 use crate::coordinator::session::ServeSession;
 use crate::engine::kv_cache::BLOCK_TOKENS;
 use crate::coordinator::server::ServeOutcome;
@@ -116,10 +128,20 @@ struct Replica<E: Engine> {
     stolen_in: usize,
     /// Requests siblings pulled from this replica's waiting queue.
     stolen_out: usize,
-    /// Running jobs this replica evicted (score-aware preemption).
+    /// Running jobs this replica evicted (score-aware preemption, both
+    /// modes: swap suspensions and recompute evictions).
     preempted: usize,
-    /// Decode tokens discarded by those evictions (recompute-on-resume).
+    /// Decode tokens discarded — recompute evictions plus suspended
+    /// jobs downgraded by a steal.
     wasted_decode_tokens: u64,
+    /// Decode tokens preserved by swap-mode suspensions.
+    swapped_out_tokens: u64,
+    /// Decode tokens restored by resumes (≤ `swapped_out_tokens`).
+    resumed_tokens: u64,
+    /// Suspended jobs swapped back into the batch.
+    resumes: usize,
+    /// Total suspend→resume delay across those resumes (ms).
+    restore_delay_ms: f64,
     /// prompt+target tokens sitting in inbox + waiting queue.
     queued_tokens: u64,
     /// prompt+target tokens reserved by the running batch.
@@ -150,6 +172,10 @@ impl<E: Engine> Replica<E> {
             stolen_out: 0,
             preempted: 0,
             wasted_decode_tokens: 0,
+            swapped_out_tokens: 0,
+            resumed_tokens: 0,
+            resumes: 0,
+            restore_delay_ms: 0.0,
             queued_tokens: 0,
             running_tokens: 0,
             kv_blocks,
@@ -233,8 +259,48 @@ impl<E: Engine> Replica<E> {
         if may_admit {
             loop {
                 while self.engine.free_slots() > 0 && !self.waiting.is_empty() {
-                    let q = self.waiting.pop().unwrap();
+                    let mut q = self.waiting.pop().unwrap();
                     let total = q.req.prompt_len + q.req.target_len;
+                    // a suspended entry re-enters by swapping its pages
+                    // back (same device reservation the fit checks
+                    // guard) instead of re-prefilling
+                    if let Some(entry) = q.suspended.take() {
+                        if !self.engine.can_resume(&entry.sus) {
+                            q.suspended = Some(entry);
+                            self.waiting.unpop(q);
+                            break;
+                        }
+                        let restored = entry.sus.generated;
+                        let slot = self
+                            .engine
+                            .resume(entry.sus)
+                            .context("resume during admission")?;
+                        self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
+                        self.running_tokens += total as u64;
+                        let now = self.engine.now_ms();
+                        self.resumes += 1;
+                        self.resumed_tokens += restored as u64;
+                        self.restore_delay_ms += now - entry.suspended_ms;
+                        ctx.emit(ServeEvent::Resumed {
+                            id: q.req.id,
+                            replica: idx,
+                            restored,
+                            t_ms: now,
+                        });
+                        self.running.insert(
+                            slot,
+                            InFlight {
+                                admitted_ms: entry.admitted_ms,
+                                first_token_ms: entry.first_token_ms,
+                                boosted: q.boosted,
+                                key: q.key,
+                                generated: restored,
+                                preemptions: q.preemptions,
+                                req: q.req,
+                            },
+                        );
+                        continue;
+                    }
                     if !self.engine.kv_headroom_for(total) {
                         self.waiting.unpop(q);
                         break;
@@ -322,12 +388,17 @@ impl<E: Engine> Replica<E> {
         Ok(())
     }
 
-    /// One score-aware preemption attempt: when the batch is full, evict
-    /// the running job with the most *remaining* predicted work iff the
-    /// head of the waiting queue undercuts that remainder by
-    /// `preempt_margin` AND would actually be admitted ahead of the
-    /// re-queued victim.  Returns true when a job was evicted (one slot
-    /// is then free and the caller's admission pass re-fills it).
+    /// One score-aware preemption attempt: when the batch is full,
+    /// vacate the slot of the running job with the most *remaining*
+    /// predicted work iff the head of the waiting queue undercuts that
+    /// remainder by `preempt_margin` AND would actually be admitted
+    /// ahead of the re-queued victim.  The slot is vacated through the
+    /// suspend/resume lifecycle — suspended with progress intact when
+    /// the host swap pool can hold the victim's pages, evicted with
+    /// recompute-on-resume otherwise (selected per eviction, reported
+    /// as the `Preempted` event's `mode`).  Returns true when a job was
+    /// displaced (one slot is then free and the caller's admission pass
+    /// re-fills it).
     ///
     /// Guard rails, in order:
     /// * `pressure(k)` only fires while the waiting queue holds more
@@ -430,11 +501,32 @@ impl<E: Engine> Replica<E> {
             return false;
         }
         let f = self.running.remove(&slot).unwrap();
-        let wasted = self.engine.evict(slot);
-        debug_assert_eq!(wasted, f.generated, "engine and scheduler disagree on progress");
+        // per-eviction mode selection: park the victim's pages in the
+        // host pool when they fit (progress preserved, nothing wasted),
+        // recompute fallback otherwise — never silently lossy, the
+        // event's `mode` reports which one fired
+        let (wasted, mode, suspended) = if self.engine.can_suspend(slot) {
+            let sus = self
+                .engine
+                .suspend(slot)
+                .expect("can_suspend guaranteed host-pool room");
+            debug_assert_eq!(sus.generated, f.generated, "engine/scheduler progress drift");
+            self.swapped_out_tokens += sus.generated as u64;
+            let entry = SuspendedEntry {
+                sus,
+                admitted_ms: f.admitted_ms,
+                first_token_ms: f.first_token_ms,
+                suspended_ms: now,
+            };
+            (0, PreemptKind::Swap, Some(entry))
+        } else {
+            let wasted = self.engine.evict(slot);
+            debug_assert_eq!(wasted, f.generated, "engine and scheduler disagree on progress");
+            (wasted, PreemptKind::Recompute, None)
+        };
         self.preempted += 1;
         self.wasted_decode_tokens += wasted as u64;
-        ctx.emit(ServeEvent::Preempted { id: f.req.id, replica: idx, wasted, t_ms: now });
+        ctx.emit(ServeEvent::Preempted { id: f.req.id, replica: idx, wasted, mode, t_ms: now });
         let total = (f.req.prompt_len + f.req.target_len) as u64;
         self.running_tokens = self.running_tokens.saturating_sub(total);
         self.queued_tokens += total;
@@ -443,6 +535,7 @@ impl<E: Engine> Replica<E> {
             key: f.key,
             boosted: f.boosted,
             preemptions: f.preemptions + 1,
+            suspended,
             req: f.req,
         });
         true
@@ -461,10 +554,20 @@ pub struct ReplicaOutcome {
     pub stolen_in: usize,
     /// Requests siblings pulled out of this replica's waiting queue.
     pub stolen_out: usize,
-    /// Running jobs this replica evicted (score-aware preemption).
+    /// Running jobs this replica evicted (score-aware preemption, both
+    /// modes).
     pub preempted: usize,
-    /// Decode tokens those evictions discarded (recompute-on-resume).
+    /// Decode tokens discarded: recompute evictions plus suspended jobs
+    /// downgraded by a steal.
     pub wasted_decode_tokens: u64,
+    /// Decode tokens preserved by swap-mode suspensions.
+    pub swapped_out_tokens: u64,
+    /// Decode tokens restored by resumes (≤ `swapped_out_tokens`).
+    pub resumed_tokens: u64,
+    /// Suspended jobs swapped back into this replica's batch.
+    pub resumes: usize,
+    /// Total suspend→resume delay across those resumes (ms).
+    pub restore_delay_ms: f64,
     pub boosts: usize,
     pub peak_waiting: usize,
     pub makespan_ms: f64,
@@ -641,7 +744,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         let Some((victim, _)) = victim else {
             return false;
         };
-        let Some(q) = self.replicas[victim].waiting.steal_lowest_priority() else {
+        let Some(mut q) = self.replicas[victim].waiting.steal_lowest_priority() else {
             return false;
         };
         // thief: lowest-indexed idle replica that can actually hold the
@@ -652,11 +755,21 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             !r.has_work() && r.engine.free_slots() > 0 && r.engine.kv_headroom_for(total)
         });
         let Some(thief) = thief else {
-            // no idle replica can hold even this one — put it back untouched
+            // no idle replica can hold even this one — put it back
+            // untouched (suspended state included)
             self.replicas[victim].waiting.unpop(q);
             return false;
         };
         let v = &mut self.replicas[victim];
+        // a suspended entry's KV pages live in the VICTIM's host pool;
+        // the thief cannot reach them, so the steal downgrades the job
+        // to recompute: the parked progress is discarded here and
+        // carried on the Stolen event as wasted work
+        let mut wasted = 0u32;
+        if let Some(entry) = q.suspended.take() {
+            wasted = v.engine.discard_suspended(entry.sus);
+            v.wasted_decode_tokens += wasted as u64;
+        }
         v.queued_tokens = v.queued_tokens.saturating_sub(total as u64);
         v.stolen_out += 1;
         let t = &mut self.replicas[thief];
@@ -669,6 +782,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             id: q.req.id,
             from: victim,
             to: thief,
+            wasted,
             t_ms: t.engine.now_ms(),
         });
         t.waiting.push_scored(q);
@@ -772,7 +886,13 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         r.dispatched += 1;
         r.queued_tokens += total as u64;
         ctx.emit(ServeEvent::Dispatched { id: req.id, replica: idx, t_ms: decision_ms });
-        r.inbox.push_back(QueuedRequest { req, key, boosted: false, preemptions: 0 });
+        r.inbox.push_back(QueuedRequest {
+            req,
+            key,
+            boosted: false,
+            preemptions: 0,
+            suspended: None,
+        });
         Some(idx)
     }
 
@@ -789,6 +909,10 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         let mut boosts = 0usize;
         let mut preemptions = 0usize;
         let mut wasted_decode_tokens = 0u64;
+        let mut swapped_out_tokens = 0u64;
+        let mut resumed_tokens = 0u64;
+        let mut resumes = 0usize;
+        let mut restore_delay_ms = 0.0f64;
         let mut peak_waiting = 0usize;
         let mut makespan = f64::NEG_INFINITY;
         let mut wall = f64::NEG_INFINITY;
@@ -804,6 +928,10 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 stolen_out: r.stolen_out,
                 preempted: r.preempted,
                 wasted_decode_tokens: r.wasted_decode_tokens,
+                swapped_out_tokens: r.swapped_out_tokens,
+                resumed_tokens: r.resumed_tokens,
+                resumes: r.resumes,
+                restore_delay_ms: r.restore_delay_ms,
                 boosts: r.waiting.boosts,
                 peak_waiting: r.peak_waiting,
                 makespan_ms: r.makespan_ms,
@@ -811,6 +939,10 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             boosts += r.waiting.boosts;
             preemptions += r.preempted;
             wasted_decode_tokens += r.wasted_decode_tokens;
+            swapped_out_tokens += r.swapped_out_tokens;
+            resumed_tokens += r.resumed_tokens;
+            resumes += r.resumes;
+            restore_delay_ms += r.restore_delay_ms;
             peak_waiting = peak_waiting.max(r.peak_waiting);
             makespan = makespan.max(r.makespan_ms);
             wall = wall.max(r_wall);
@@ -825,6 +957,10 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 makespan_ms: makespan,
                 preemptions,
                 wasted_decode_tokens,
+                swapped_out_tokens,
+                resumed_tokens,
+                resumes,
+                restore_delay_ms,
             },
             per_replica,
         }
@@ -1202,15 +1338,10 @@ mod tests {
         }
     }
 
-    /// The acceptance trace for score-aware preemption: one long job
-    /// arrives first and monopolises the single slot; a burst of shorts
-    /// lands right behind it.  (`mk_req` sets `score = target`, so the
-    /// ranked policies see an oracle-quality predictor.)
-    fn long_job_then_burst(n_short: usize) -> Vec<Request> {
-        let mut v = vec![mk_req(0, 0.0, 1000)];
-        v.extend((1..=n_short as u64).map(|i| mk_req(i, 40.0, 10)));
-        v
-    }
+    // The acceptance trace for score-aware preemption — the shared
+    // definition in `crate::harness`, so these tests, `fig_preempt`
+    // and `fig_swap` always judge their criteria on the same trace.
+    use crate::harness::long_job_then_burst;
 
     fn preempt_sched(preempt: PreemptMode) -> SchedulerConfig {
         SchedulerConfig {
@@ -1259,6 +1390,72 @@ mod tests {
         let long = arr.per_replica[0].records.iter().find(|r| r.id == 0).unwrap();
         assert!(long.preemptions >= 1);
         assert!(long.admitted_ms > 40.0, "recompute: final admission is after the burst");
+    }
+
+    #[test]
+    fn swap_preemption_cuts_waste_without_regressing_latency() {
+        use crate::config::SwapMode;
+        // the PR acceptance criterion: on the long-job-then-burst trace
+        // under the ranked policy, swap=host must strictly reduce
+        // wasted_decode_tokens vs recompute (preemptions still fire, but
+        // the long job's progress survives in the host pool) while
+        // holding or improving mean e2e latency
+        let recompute = run(
+            &preempt_sched(PreemptMode::Arrival),
+            PolicyKind::Pars,
+            long_job_then_burst(60),
+            4096,
+        );
+        let mut s = preempt_sched(PreemptMode::Arrival);
+        s.swap = SwapMode::Host(1 << 12);
+        let swap = run(&s, PolicyKind::Pars, long_job_then_burst(60), 4096);
+        assert_eq!(swap.merged.report.n_requests, 61);
+        assert!(swap.merged.preemptions > 0, "swap mode must still preempt");
+        assert!(recompute.merged.wasted_decode_tokens > 0);
+        assert!(
+            swap.merged.wasted_decode_tokens < recompute.merged.wasted_decode_tokens,
+            "swap must strictly cut waste: recompute={} swap={}",
+            recompute.merged.wasted_decode_tokens,
+            swap.merged.wasted_decode_tokens
+        );
+        assert!(
+            swap.merged.report.e2e.mean <= recompute.merged.report.e2e.mean,
+            "swap must hold or improve mean e2e: recompute={:.1} swap={:.1}",
+            recompute.merged.report.e2e.mean,
+            swap.merged.report.e2e.mean
+        );
+        assert!(swap.merged.resumes > 0, "suspended jobs must resume");
+        assert!(swap.merged.swapped_out_tokens > 0);
+        assert!(swap.merged.resumed_tokens <= swap.merged.swapped_out_tokens);
+        assert!(swap.merged.restore_delay_ms > 0.0, "parked time must be accounted");
+        // progress preservation is visible end-to-end: the long job's
+        // record still counts its preemptions, but nothing was recomputed
+        let long = swap.per_replica[0].records.iter().find(|r| r.id == 0).unwrap();
+        assert!(long.preemptions >= 1);
+        // recompute=off books stay zero in swap mode
+        assert_eq!(swap.merged.wasted_decode_tokens, 0, "pool large enough: zero waste");
+    }
+
+    #[test]
+    fn tiny_swap_pool_falls_back_to_recompute_per_eviction() {
+        use crate::config::SwapMode;
+        // host(0): the pool can never hold a page — every eviction takes
+        // the recompute fallback and the books match swap=off exactly
+        let off = run(
+            &preempt_sched(PreemptMode::Arrival),
+            PolicyKind::Pars,
+            long_job_then_burst(40),
+            4096,
+        );
+        let mut s = preempt_sched(PreemptMode::Arrival);
+        s.swap = SwapMode::Host(0);
+        let zero = run(&s, PolicyKind::Pars, long_job_then_burst(40), 4096);
+        assert_eq!(zero.merged.preemptions, off.merged.preemptions);
+        assert_eq!(zero.merged.wasted_decode_tokens, off.merged.wasted_decode_tokens);
+        assert_eq!(zero.merged.swapped_out_tokens, 0);
+        assert_eq!(zero.merged.resumes, 0);
+        assert_eq!(zero.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(zero.merged.report.e2e.mean, off.merged.report.e2e.mean);
     }
 
     #[test]

@@ -28,6 +28,27 @@ use crate::coordinator::session::RequestStatus;
 use crate::metrics::RequestRecord;
 use crate::util::json::Json;
 
+/// How a preemption vacated the victim's slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptKind {
+    /// The victim's KV reservation was dropped and its generated tokens
+    /// discarded (`wasted`); re-admission prefills from scratch.
+    Recompute,
+    /// The victim was suspended: KV pages moved to the host swap pool,
+    /// progress preserved (`wasted = 0`); re-admission resumes it.
+    Swap,
+}
+
+impl PreemptKind {
+    /// Stable lowercase tag (the `mode` field of the JSONL encoding).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptKind::Recompute => "recompute",
+            PreemptKind::Swap => "swap",
+        }
+    }
+}
+
 /// One lifecycle transition, stamped with the engine-clock time the
 /// decision was made at: `Dispatched`/`Rejected` carry the fleet's
 /// lagging clock at the dispatch decision (the arrival time itself when
@@ -36,10 +57,13 @@ use crate::util::json::Json;
 /// per-replica events carry that replica's clock, and
 /// [`ServeEvent::Completed`]'s record carries its own timestamps.  A request's event chain is conserved: exactly one
 /// `Dispatched` (or one `Rejected`), then per admission round one
-/// `Admitted`, and a final `Completed`; `Preempted` closes an admission
-/// round early, `Stolen` moves a *queued* request between replicas, and
-/// `Boosted` marks the starvation guard firing — `tests/properties.rs`
-/// pins these conservation laws across the whole mode grid.
+/// `Admitted` **or** one `Resumed`, and a final `Completed`; `Preempted`
+/// closes an admission round early (its `mode` says whether progress
+/// was preserved), `Stolen` moves a *queued* request between replicas
+/// (downgrading a suspended one to recompute — the `wasted` field
+/// carries the discarded progress), and `Boosted` marks the starvation
+/// guard firing — `tests/properties.rs` pins these conservation laws
+/// across the whole mode grid.
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
     /// No replica could ever hold the request (sequence budget or total
@@ -54,10 +78,19 @@ pub enum ServeEvent {
     /// Starvation guard promoted the queued request.
     Boosted { id: u64, replica: usize, t_ms: f64 },
     /// An idle replica pulled the queued request from a busy sibling.
-    Stolen { id: u64, from: usize, to: usize, t_ms: f64 },
-    /// Score-aware preemption evicted the running request, discarding
-    /// `wasted` decode tokens (recompute-on-resume).
-    Preempted { id: u64, replica: usize, wasted: u32, t_ms: f64 },
+    /// `wasted` is 0 unless the entry was suspended: its KV lives on the
+    /// victim's host pool, so the steal downgrades it to recompute and
+    /// discards that many decode tokens.
+    Stolen { id: u64, from: usize, to: usize, wasted: u32, t_ms: f64 },
+    /// Score-aware preemption vacated the running request's slot.
+    /// `mode` says how: `Recompute` discarded `wasted` decode tokens;
+    /// `Swap` parked the KV pages host-side with progress intact
+    /// (`wasted = 0`).
+    Preempted { id: u64, replica: usize, wasted: u32, mode: PreemptKind, t_ms: f64 },
+    /// A suspended request swapped back into `replica`'s running batch
+    /// with `restored` decode tokens of preserved progress (no
+    /// re-prefill, decode continues where it left off).
+    Resumed { id: u64, replica: usize, restored: u32, t_ms: f64 },
     /// The request finished; `record` is exactly what the replica's
     /// recorder keeps (final-admission timestamps).
     Completed { replica: usize, record: RequestRecord },
@@ -73,7 +106,8 @@ impl ServeEvent {
             | ServeEvent::FirstToken { id, .. }
             | ServeEvent::Boosted { id, .. }
             | ServeEvent::Stolen { id, .. }
-            | ServeEvent::Preempted { id, .. } => *id,
+            | ServeEvent::Preempted { id, .. }
+            | ServeEvent::Resumed { id, .. } => *id,
             ServeEvent::Completed { record, .. } => record.id,
         }
     }
@@ -88,6 +122,7 @@ impl ServeEvent {
             ServeEvent::Boosted { .. } => "boosted",
             ServeEvent::Stolen { .. } => "stolen",
             ServeEvent::Preempted { .. } => "preempted",
+            ServeEvent::Resumed { .. } => "resumed",
             ServeEvent::Completed { .. } => "completed",
         }
     }
@@ -101,7 +136,8 @@ impl ServeEvent {
             | ServeEvent::FirstToken { t_ms, .. }
             | ServeEvent::Boosted { t_ms, .. }
             | ServeEvent::Stolen { t_ms, .. }
-            | ServeEvent::Preempted { t_ms, .. } => *t_ms,
+            | ServeEvent::Preempted { t_ms, .. }
+            | ServeEvent::Resumed { t_ms, .. } => *t_ms,
             ServeEvent::Completed { record, .. } => record.completed_ms,
         }
     }
@@ -121,13 +157,19 @@ impl ServeEvent {
             | ServeEvent::Boosted { replica, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
             }
-            ServeEvent::Stolen { from, to, .. } => {
+            ServeEvent::Stolen { from, to, wasted, .. } => {
                 pairs.push(("from", Json::Num(*from as f64)));
                 pairs.push(("to", Json::Num(*to as f64)));
+                pairs.push(("wasted", Json::Num(*wasted as f64)));
             }
-            ServeEvent::Preempted { replica, wasted, .. } => {
+            ServeEvent::Preempted { replica, wasted, mode, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
                 pairs.push(("wasted", Json::Num(*wasted as f64)));
+                pairs.push(("mode", Json::Str(mode.name().to_string())));
+            }
+            ServeEvent::Resumed { replica, restored, .. } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+                pairs.push(("restored", Json::Num(*restored as f64)));
             }
             ServeEvent::Completed { replica, record } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
@@ -257,6 +299,268 @@ impl<W: Write> EventSink for JsonlSink<W> {
     }
 }
 
+/// Per-replica timeline reconstructed from an event stream — what the
+/// `pallas replay` subcommand prints for an `--events` JSONL capture.
+/// Counters mirror the outcome books (`tests/properties.rs` pins the
+/// round trip), and the occupancy numbers come from `Completed`
+/// records: `busy_slot_ms` sums each request's admission→completion
+/// residency MINUS the time it spent suspended in the host pool (a
+/// swap round keeps the record's original `admitted_ms`, but the slot
+/// was someone else's while the pages were parked), so
+/// `busy_slot_ms / span_ms` is the mean number of busy batch slots
+/// over the replica's active window and never exceeds the batch size.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplicaTimeline {
+    pub replica: usize,
+    pub dispatched: u64,
+    pub admissions: u64,
+    pub first_tokens: u64,
+    pub boosts: u64,
+    pub stolen_in: u64,
+    pub stolen_out: u64,
+    /// Preemptions that discarded progress (`mode = "recompute"`).
+    pub preempted_recompute: u64,
+    /// Preemptions that parked progress host-side (`mode = "swap"`).
+    pub preempted_swap: u64,
+    /// Decode tokens discarded (recompute `wasted` + steal downgrades
+    /// charged to the replica the pages lived on).
+    pub wasted_tokens: u64,
+    pub resumes: u64,
+    /// Decode tokens restored by those resumes.
+    pub restored_tokens: u64,
+    pub completed: u64,
+    pub output_tokens: u64,
+    /// First event time on this replica's clock (ms).
+    pub first_ms: f64,
+    /// Last event time on this replica's clock (ms).
+    pub last_ms: f64,
+    /// Σ (completed − admitted − host-parked) over this replica's
+    /// records (ms) — true slot residency, excluding suspended time.
+    pub busy_slot_ms: f64,
+}
+
+impl ReplicaTimeline {
+    fn observe(&mut self, t_ms: f64) {
+        if self.first_ms.is_nan() || t_ms < self.first_ms {
+            self.first_ms = t_ms;
+        }
+        if self.last_ms.is_nan() || t_ms > self.last_ms {
+            self.last_ms = t_ms;
+        }
+    }
+
+    /// Active window of this replica's timeline (ms).
+    pub fn span_ms(&self) -> f64 {
+        if self.first_ms.is_nan() {
+            0.0
+        } else {
+            self.last_ms - self.first_ms
+        }
+    }
+
+    /// Mean busy batch slots over the active window (0 when the window
+    /// is empty).
+    pub fn occupancy(&self) -> f64 {
+        let span = self.span_ms();
+        if span > 0.0 {
+            self.busy_slot_ms / span
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A whole run reconstructed from its lifecycle event stream.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayBook {
+    pub replicas: Vec<ReplicaTimeline>,
+    pub rejected: u64,
+    /// Events consumed (JSONL lines parsed).
+    pub events: u64,
+    /// Suspend timestamp of requests currently parked in a host pool
+    /// (cleared by `Resumed`, a steal downgrade, or a fresh admission).
+    park_started: HashMap<u64, f64>,
+    /// Host-parked time accumulated inside the CURRENT admission chain
+    /// of each request (a recompute re-admission starts a new chain and
+    /// a new record, so earlier parks must not be charged against it).
+    parked_ms: HashMap<u64, f64>,
+}
+
+impl ReplayBook {
+    fn replica(&mut self, idx: usize) -> &mut ReplicaTimeline {
+        while self.replicas.len() <= idx {
+            let replica = self.replicas.len();
+            self.replicas.push(ReplicaTimeline {
+                replica,
+                first_ms: f64::NAN,
+                last_ms: f64::NAN,
+                ..Default::default()
+            });
+        }
+        &mut self.replicas[idx]
+    }
+
+    /// Fold one event into the book (the JSONL path parses each line
+    /// into exactly these calls, so in-memory captures and files replay
+    /// identically).
+    pub fn push(&mut self, ev: &ServeEvent) {
+        self.events += 1;
+        match ev {
+            ServeEvent::Rejected { .. } => self.rejected += 1,
+            ServeEvent::Dispatched { replica, t_ms, .. } => {
+                let r = self.replica(*replica);
+                r.dispatched += 1;
+                r.observe(*t_ms);
+            }
+            ServeEvent::Admitted { id, replica, t_ms, .. } => {
+                // a fresh (re-)admission opens a new record chain: any
+                // parked time belongs to the discarded earlier chain
+                self.park_started.remove(id);
+                self.parked_ms.remove(id);
+                let r = self.replica(*replica);
+                r.admissions += 1;
+                r.observe(*t_ms);
+            }
+            ServeEvent::FirstToken { replica, t_ms, .. } => {
+                let r = self.replica(*replica);
+                r.first_tokens += 1;
+                r.observe(*t_ms);
+            }
+            ServeEvent::Boosted { replica, t_ms, .. } => {
+                let r = self.replica(*replica);
+                r.boosts += 1;
+                r.observe(*t_ms);
+            }
+            ServeEvent::Stolen { id, from, to, wasted, t_ms, .. } => {
+                // a stolen suspended entry was downgraded: its park is
+                // over (the pages were discarded) and its next entry
+                // will be a fresh admission
+                self.park_started.remove(id);
+                let v = self.replica(*from);
+                v.stolen_out += 1;
+                v.wasted_tokens += *wasted as u64;
+                v.observe(*t_ms);
+                let t = self.replica(*to);
+                t.stolen_in += 1;
+                t.observe(*t_ms);
+            }
+            ServeEvent::Preempted { id, replica, wasted, mode, t_ms, .. } => {
+                if *mode == PreemptKind::Swap {
+                    self.park_started.insert(*id, *t_ms);
+                }
+                let r = self.replica(*replica);
+                match mode {
+                    PreemptKind::Recompute => r.preempted_recompute += 1,
+                    PreemptKind::Swap => r.preempted_swap += 1,
+                }
+                r.wasted_tokens += *wasted as u64;
+                r.observe(*t_ms);
+            }
+            ServeEvent::Resumed { id, replica, restored, t_ms, .. } => {
+                if let Some(t0) = self.park_started.remove(id) {
+                    *self.parked_ms.entry(*id).or_insert(0.0) += *t_ms - t0;
+                }
+                let r = self.replica(*replica);
+                r.resumes += 1;
+                r.restored_tokens += *restored as u64;
+                r.observe(*t_ms);
+            }
+            ServeEvent::Completed { replica, record } => {
+                let parked = self.parked_ms.remove(&record.id).unwrap_or(0.0);
+                let r = self.replica(*replica);
+                r.completed += 1;
+                r.output_tokens += record.output_len as u64;
+                r.busy_slot_ms += record.completed_ms - record.admitted_ms - parked;
+                r.observe(record.completed_ms);
+            }
+        }
+    }
+
+    /// Reconstruct a run from its `--events` JSONL capture (one event
+    /// object per line; blank lines are skipped, anything else is an
+    /// error — a truncated or corrupted log should fail loudly).
+    pub fn from_jsonl(src: &str) -> anyhow::Result<ReplayBook> {
+        use anyhow::Context;
+        let mut book = ReplayBook::default();
+        for (lineno, line) in src.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = crate::util::json::parse(line)
+                .with_context(|| format!("events line {}: invalid JSON", lineno + 1))?;
+            let ev = Self::event_from_json(&v)
+                .with_context(|| format!("events line {}", lineno + 1))?;
+            book.push(&ev);
+        }
+        Ok(book)
+    }
+
+    /// Decode one JSONL object back into a [`ServeEvent`] (the inverse
+    /// of [`ServeEvent::to_json`]; `completed` records rebuild the full
+    /// [`RequestRecord`]).
+    fn event_from_json(v: &Json) -> anyhow::Result<ServeEvent> {
+        use anyhow::{anyhow, bail};
+        let kind = v.get("event")?.as_str()?.to_string();
+        let id = v.get("id")?.as_i64()? as u64;
+        let t_ms = v.get("t_ms")?.as_f64()?;
+        let replica = |v: &Json| -> anyhow::Result<usize> {
+            Ok(v.get("replica")?.as_i64()? as usize)
+        };
+        Ok(match kind.as_str() {
+            "rejected" => ServeEvent::Rejected { id, t_ms },
+            "dispatched" => ServeEvent::Dispatched { id, replica: replica(v)?, t_ms },
+            "admitted" => ServeEvent::Admitted { id, replica: replica(v)?, t_ms },
+            "first_token" => ServeEvent::FirstToken { id, replica: replica(v)?, t_ms },
+            "boosted" => ServeEvent::Boosted { id, replica: replica(v)?, t_ms },
+            "stolen" => ServeEvent::Stolen {
+                id,
+                from: v.get("from")?.as_i64()? as usize,
+                to: v.get("to")?.as_i64()? as usize,
+                wasted: v.get("wasted")?.as_i64()? as u32,
+                t_ms,
+            },
+            "preempted" => {
+                let mode = match v.get("mode")?.as_str()? {
+                    "recompute" => PreemptKind::Recompute,
+                    "swap" => PreemptKind::Swap,
+                    other => bail!("unknown preemption mode {other:?}"),
+                };
+                ServeEvent::Preempted {
+                    id,
+                    replica: replica(v)?,
+                    wasted: v.get("wasted")?.as_i64()? as u32,
+                    mode,
+                    t_ms,
+                }
+            }
+            "resumed" => ServeEvent::Resumed {
+                id,
+                replica: replica(v)?,
+                restored: v.get("restored")?.as_i64()? as u32,
+                t_ms,
+            },
+            "completed" => {
+                let rec = v.get("record")?;
+                ServeEvent::Completed {
+                    replica: replica(v)?,
+                    record: RequestRecord {
+                        id: rec.get("id")?.as_i64()? as u64,
+                        arrival_ms: rec.get("arrival_ms")?.as_f64()?,
+                        admitted_ms: rec.get("admitted_ms")?.as_f64()?,
+                        first_token_ms: rec.get("first_token_ms")?.as_f64()?,
+                        completed_ms: rec.get("completed_ms")?.as_f64()?,
+                        prompt_len: rec.get("prompt_len")?.as_i64()? as u32,
+                        output_len: rec.get("output_len")?.as_i64()? as u32,
+                        boosted: rec.get("boosted")?.as_bool()?,
+                        preemptions: rec.get("preemptions")?.as_i64()? as u32,
+                    },
+                }
+            }
+            other => return Err(anyhow!("unknown event kind {other:?}")),
+        })
+    }
+}
+
 /// The scheduling loop's handle on a session: emits events and keeps
 /// the per-request status map in lockstep with them (the status is
 /// *derived* from the event stream, so `poll` can never disagree with
@@ -283,6 +587,9 @@ impl SessionCtx<'_> {
             }
             ServeEvent::Preempted { id, replica, .. } => {
                 Some((*id, RequestStatus::Queued { replica: *replica }))
+            }
+            ServeEvent::Resumed { id, replica, .. } => {
+                Some((*id, RequestStatus::Running { replica: *replica }))
             }
             ServeEvent::Completed { record, .. } => {
                 Some((record.id, RequestStatus::Completed))
@@ -325,16 +632,42 @@ mod tests {
     fn jsonl_sink_writes_parseable_lines() {
         let mut sink = JsonlSink::new(Vec::<u8>::new());
         sink.emit(&ev(7));
-        sink.emit(&ServeEvent::Preempted { id: 3, replica: 0, wasted: 11, t_ms: 40.0 });
-        assert_eq!(sink.written(), 2);
+        sink.emit(&ServeEvent::Preempted {
+            id: 3,
+            replica: 0,
+            wasted: 11,
+            mode: PreemptKind::Recompute,
+            t_ms: 40.0,
+        });
+        sink.emit(&ServeEvent::Preempted {
+            id: 4,
+            replica: 1,
+            wasted: 0,
+            mode: PreemptKind::Swap,
+            t_ms: 41.0,
+        });
+        sink.emit(&ServeEvent::Resumed { id: 4, replica: 1, restored: 9, t_ms: 55.0 });
+        sink.emit(&ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, t_ms: 60.0 });
+        assert_eq!(sink.written(), 5);
         let buf = String::from_utf8(sink.w.clone()).unwrap();
         for line in buf.lines() {
             let v = json::parse(line).unwrap();
             assert!(v.get("event").is_ok() && v.get("id").is_ok() && v.get("t_ms").is_ok());
         }
-        let last = json::parse(buf.lines().last().unwrap()).unwrap();
-        assert_eq!(last.get("event").unwrap().as_str().unwrap(), "preempted");
-        assert_eq!(last.get("wasted").unwrap().as_i64().unwrap(), 11);
+        let lines: Vec<&str> = buf.lines().collect();
+        let recompute = json::parse(lines[1]).unwrap();
+        assert_eq!(recompute.get("event").unwrap().as_str().unwrap(), "preempted");
+        assert_eq!(recompute.get("wasted").unwrap().as_i64().unwrap(), 11);
+        assert_eq!(recompute.get("mode").unwrap().as_str().unwrap(), "recompute");
+        let swap = json::parse(lines[2]).unwrap();
+        assert_eq!(swap.get("mode").unwrap().as_str().unwrap(), "swap");
+        assert_eq!(swap.get("wasted").unwrap().as_i64().unwrap(), 0);
+        let resumed = json::parse(lines[3]).unwrap();
+        assert_eq!(resumed.get("event").unwrap().as_str().unwrap(), "resumed");
+        assert_eq!(resumed.get("restored").unwrap().as_i64().unwrap(), 9);
+        let stolen = json::parse(lines[4]).unwrap();
+        assert_eq!(stolen.get("event").unwrap().as_str().unwrap(), "stolen");
+        assert_eq!(stolen.get("wasted").unwrap().as_i64().unwrap(), 3);
     }
 
     #[test]

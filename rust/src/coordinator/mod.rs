@@ -34,10 +34,13 @@ pub mod server;
 pub mod session;
 
 pub use dispatch::{ReplicaOutcome, ShardedCoordinator, ShardedOutcome};
-pub use events::{EventLog, EventSink, JsonlSink, NullSink, ServeEvent};
+pub use events::{
+    EventLog, EventSink, JsonlSink, NullSink, PreemptKind, ReplayBook, ReplicaTimeline,
+    ServeEvent,
+};
 pub use policy::Policy;
 pub use predictor::{PjrtScorer, Scorer};
-pub use queue::{QueuedRequest, WaitingQueue};
+pub use queue::{QueuedRequest, SuspendedEntry, WaitingQueue};
 pub use server::{Coordinator, ServeOutcome};
 pub use session::{RequestId, RequestStatus, ServeSession, Tick};
 

@@ -10,6 +10,27 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::coordinator::{Policy, Request};
+use crate::engine::Suspended;
+
+/// The suspended-state bundle a swap-mode preemption victim carries
+/// through the waiting queue: its engine [`Suspended`] handle (KV pages
+/// parked in the host pool) plus the timestamps of the admission round
+/// the suspension interrupted, restored verbatim on resume so the
+/// request's record reflects that no progress was lost.  Recompute
+/// evictions carry `None` instead — on re-admission they prefill from
+/// scratch and re-stamp both timestamps.
+#[derive(Clone, Debug)]
+pub struct SuspendedEntry {
+    /// Engine-side suspension (progress + parked KV pages).
+    pub sus: Suspended,
+    /// Admission time of the interrupted round.
+    pub admitted_ms: f64,
+    /// First-token time of the interrupted round (`None` when the job
+    /// was suspended before producing one).
+    pub first_token_ms: Option<f64>,
+    /// Engine-clock time of the suspension (restore-delay metric).
+    pub suspended_ms: f64,
+}
 
 /// A request in the waiting queue with its frozen priority key.
 #[derive(Clone, Debug)]
@@ -22,6 +43,11 @@ pub struct QueuedRequest {
     /// so the anti-thrash guard can make over-preempted jobs
     /// non-evictable; never part of the ordering key.
     pub preemptions: u32,
+    /// `Some` while this entry's KV pages sit in the host swap pool
+    /// (partial-progress preemption): admission resumes it instead of
+    /// re-prefilling.  Never part of the ordering key — a suspended
+    /// entry competes exactly like its recompute twin would.
+    pub suspended: Option<SuspendedEntry>,
 }
 
 impl PartialEq for QueuedRequest {
@@ -98,7 +124,13 @@ impl WaitingQueue {
     /// Enqueue with the policy's key.
     pub fn push(&mut self, req: Request, policy: &dyn Policy) {
         let key = policy.key(&req);
-        self.heap.push(QueuedRequest { req, key, boosted: false, preemptions: 0 });
+        self.heap.push(QueuedRequest {
+            req,
+            key,
+            boosted: false,
+            preemptions: 0,
+            suspended: None,
+        });
     }
 
     /// Enqueue an entry whose key was already computed (the sharded
@@ -352,6 +384,7 @@ mod tests {
             key,
             boosted,
             preemptions: 0,
+            suspended: None,
         };
         let entries = [
             mk(1, 5.0, 2.0, false),

@@ -19,11 +19,13 @@ use crate::metrics::LatencyReport;
 use crate::Result;
 
 /// Serving statistics beyond latency: queue dynamics (`peak_waiting`,
-/// `rejected`), starvation-guard activity (`boosts`) and score-aware
-/// preemption activity (`preemptions`, `wasted_decode_tokens`).  For a
-/// sharded run this is the fleet-wide merge; per-replica counters —
-/// including the work-stealing `stolen_in`/`stolen_out` transfer books,
-/// which sum to zero across the fleet and so never appear here — live in
+/// `rejected`), starvation-guard activity (`boosts`), score-aware
+/// preemption activity (`preemptions`, `wasted_decode_tokens`) and the
+/// KV swap economy (`swapped_out_tokens`, `resumed_tokens`, `resumes`,
+/// `restore_delay_ms`).  For a sharded run this is the fleet-wide
+/// merge; per-replica counters — including the work-stealing
+/// `stolen_in`/`stolen_out` transfer books, which sum to zero across
+/// the fleet and so never appear here — live in
 /// [`crate::coordinator::ReplicaOutcome`].
 #[derive(Clone, Debug)]
 pub struct ServeOutcome {
@@ -33,11 +35,24 @@ pub struct ServeOutcome {
     pub peak_waiting: usize,
     /// Engine-clock time when the last request completed.
     pub makespan_ms: f64,
-    /// Running jobs evicted by score-aware preemption (fleet total).
+    /// Running jobs displaced by score-aware preemption (fleet total,
+    /// both modes: swap suspensions and recompute evictions).
     pub preemptions: usize,
-    /// Decode tokens discarded by those evictions — the recompute-on-
-    /// resume price (fleet total).
+    /// Decode tokens discarded — recompute evictions plus suspended
+    /// jobs a steal downgraded (fleet total).  This is the price swap
+    /// mode exists to shrink.
     pub wasted_decode_tokens: u64,
+    /// Decode tokens preserved by swap-mode suspensions (fleet total).
+    pub swapped_out_tokens: u64,
+    /// Decode tokens restored by resumes (fleet total; always ≤
+    /// `swapped_out_tokens` — the gap is steal-downgraded progress plus
+    /// anything still parked when the run ended).
+    pub resumed_tokens: u64,
+    /// Suspended jobs swapped back into a running batch (fleet total).
+    pub resumes: usize,
+    /// Total suspend→resume delay summed over `resumes` (ms) — how long
+    /// preserved progress sat parked in the host pools.
+    pub restore_delay_ms: f64,
 }
 
 /// Drives one workload through an engine under a policy.

@@ -7,6 +7,17 @@
 //! fit right now?".  The coordinator consults it before moving a request
 //! from the waiting to the running queue, which is exactly how cache
 //! pressure feeds back into scheduling in vLLM.
+//!
+//! Since the partial-progress preemption refactor the economy spans TWO
+//! pools: the device pool (what admission reserves against) and an
+//! optional bounded *host* pool ([`KvBlockManager::with_host_pool`]).
+//! Suspending a sequence moves its *content* blocks (the tokens written
+//! so far) to the host pool and returns its whole device reservation to
+//! the free list; resuming re-claims the full reservation on the device
+//! and frees the host blocks.  Each pool keeps its own conservation
+//! invariant (`used + free == total`), pinned by the property suite
+//! below — a swap can move pages between pools but never mint or leak a
+//! block.
 
 use std::collections::BTreeMap;
 
@@ -19,14 +30,23 @@ pub type SeqHandle = u64;
 
 #[derive(Debug)]
 struct SeqAlloc {
+    /// Device block ids while resident, host block ids while suspended
+    /// (content blocks only — the device headroom of the reservation is
+    /// returned to the free list for the duration of the suspension).
     blocks: Vec<usize>,
     tokens: usize,
+    /// Device blocks the reservation spans (what resume must re-claim).
+    reserved_blocks: usize,
+    /// True while the sequence's pages sit in the host pool.
+    on_host: bool,
 }
 
-/// Fixed-pool block allocator.
+/// Fixed-pool block allocator (device pool + optional host swap pool).
 pub struct KvBlockManager {
     n_blocks: usize,
     free: Vec<usize>,
+    host_blocks: usize,
+    host_free: Vec<usize>,
     seqs: BTreeMap<SeqHandle, SeqAlloc>,
     next_handle: SeqHandle,
     /// High-water mark (for reports).
@@ -34,12 +54,22 @@ pub struct KvBlockManager {
 }
 
 impl KvBlockManager {
-    /// Build a manager covering `max_tokens` of KV budget.
+    /// Build a manager covering `max_tokens` of device KV budget and no
+    /// host pool (every suspension attempt is refused — the pre-swap
+    /// recompute economy, bit-for-bit).
     pub fn new(max_tokens: usize) -> KvBlockManager {
+        KvBlockManager::with_host_pool(max_tokens, 0)
+    }
+
+    /// Build a manager with a bounded host swap pool of `host_blocks`
+    /// blocks next to the device pool.
+    pub fn with_host_pool(max_tokens: usize, host_blocks: usize) -> KvBlockManager {
         let n_blocks = max_tokens / BLOCK_TOKENS;
         KvBlockManager {
             n_blocks,
             free: (0..n_blocks).rev().collect(),
+            host_blocks,
+            host_free: (0..host_blocks).rev().collect(),
             seqs: BTreeMap::new(),
             next_handle: 1,
             peak_blocks_used: 0,
@@ -56,6 +86,18 @@ impl KvBlockManager {
 
     pub fn blocks_used(&self) -> usize {
         self.n_blocks - self.free.len()
+    }
+
+    pub fn host_blocks_total(&self) -> usize {
+        self.host_blocks
+    }
+
+    pub fn host_blocks_free(&self) -> usize {
+        self.host_free.len()
+    }
+
+    pub fn host_blocks_used(&self) -> usize {
+        self.host_blocks - self.host_free.len()
     }
 
     fn blocks_for(tokens: usize) -> usize {
@@ -78,10 +120,14 @@ impl KvBlockManager {
     /// generation the total is known at admission, so reserving
     /// prompt+target makes admission sound: a running batch can never
     /// exhaust the pool mid-decode.  (vLLM needs preemption as its
-    /// escape hatch for exactly this; here `Engine::evict` exists too,
-    /// but as a latency lever — it releases a victim's whole
-    /// reservation at once, so the scheduler can trade a long job's
-    /// progress for a shorter arrival.)
+    /// escape hatch for exactly this; here the suspend/resume lifecycle
+    /// exists too, but as a latency lever — `suspend` parks a victim's
+    /// content blocks in the host pool and returns its whole device
+    /// reservation to the free list, so the scheduler can trade a long
+    /// job's slot for a shorter arrival without burning its progress;
+    /// `Engine::evict` is the recompute fallback that drops the
+    /// reservation entirely when the host pool is full or swapping is
+    /// off.)
     pub fn admit_reserved(&mut self, used: usize, reserved: usize) -> Result<SeqHandle> {
         let reserved = reserved.max(used).max(1);
         let need = Self::blocks_for(reserved);
@@ -91,16 +137,23 @@ impl KvBlockManager {
         let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
         let h = self.next_handle;
         self.next_handle += 1;
-        self.seqs.insert(h, SeqAlloc { blocks, tokens: used.max(1) });
+        self.seqs.insert(
+            h,
+            SeqAlloc { reserved_blocks: blocks.len(), blocks, tokens: used.max(1), on_host: false },
+        );
         self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
         Ok(h)
     }
 
-    /// Append one decoded token; may claim a new block.
+    /// Append one decoded token; may claim a new block.  Suspended
+    /// sequences cannot decode — resume them first.
     pub fn append_token(&mut self, h: SeqHandle) -> Result<()> {
         let Some(seq) = self.seqs.get_mut(&h) else {
             bail!("unknown sequence handle {h}");
         };
+        if seq.on_host {
+            bail!("sequence {h} is suspended to the host pool; resume before decoding");
+        }
         seq.tokens += 1;
         let need = Self::blocks_for(seq.tokens);
         if need > seq.blocks.len() {
@@ -108,15 +161,93 @@ impl KvBlockManager {
                 bail!("KV cache exhausted while decoding seq {h}");
             };
             seq.blocks.push(b);
+            seq.reserved_blocks = seq.blocks.len();
             self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
         }
         Ok(())
     }
 
-    /// Release a sequence's blocks.
+    /// Can this resident sequence's content blocks move to the host pool
+    /// right now?
+    pub fn can_suspend(&self, h: SeqHandle) -> bool {
+        match self.seqs.get(&h) {
+            Some(seq) if !seq.on_host => {
+                Self::blocks_for(seq.tokens) <= self.host_free.len()
+            }
+            _ => false,
+        }
+    }
+
+    /// Move a resident sequence's content blocks (the tokens written so
+    /// far) into the host pool and return its whole device reservation —
+    /// content plus headroom — to the device free list.  Returns the
+    /// number of blocks swapped out (what a cost model should charge).
+    pub fn suspend(&mut self, h: SeqHandle) -> Result<usize> {
+        let Some(seq) = self.seqs.get_mut(&h) else {
+            bail!("unknown sequence handle {h}");
+        };
+        if seq.on_host {
+            bail!("sequence {h} is already suspended");
+        }
+        let content = Self::blocks_for(seq.tokens);
+        if content > self.host_free.len() {
+            bail!(
+                "host swap pool exhausted: need {content} blocks, {} free",
+                self.host_free.len()
+            );
+        }
+        seq.reserved_blocks = seq.blocks.len();
+        let device: Vec<usize> = std::mem::take(&mut seq.blocks);
+        self.free.extend(device);
+        seq.blocks = (0..content).map(|_| self.host_free.pop().unwrap()).collect();
+        seq.on_host = true;
+        Ok(content)
+    }
+
+    /// Can this suspended sequence's full device reservation be
+    /// re-claimed right now?
+    pub fn can_resume(&self, h: SeqHandle) -> bool {
+        match self.seqs.get(&h) {
+            Some(seq) if seq.on_host => seq.reserved_blocks <= self.free.len(),
+            _ => false,
+        }
+    }
+
+    /// Swap a suspended sequence back: re-claim its full device
+    /// reservation and free its host blocks.  Returns the number of
+    /// content blocks swapped back in (the cost-model charge).
+    pub fn resume(&mut self, h: SeqHandle) -> Result<usize> {
+        let Some(seq) = self.seqs.get_mut(&h) else {
+            bail!("unknown sequence handle {h}");
+        };
+        if !seq.on_host {
+            bail!("sequence {h} is not suspended");
+        }
+        if seq.reserved_blocks > self.free.len() {
+            bail!(
+                "KV cache exhausted on resume: need {} blocks, {} free",
+                seq.reserved_blocks,
+                self.free.len()
+            );
+        }
+        let content = seq.blocks.len();
+        let host: Vec<usize> = std::mem::take(&mut seq.blocks);
+        self.host_free.extend(host);
+        seq.blocks = (0..seq.reserved_blocks).map(|_| self.free.pop().unwrap()).collect();
+        seq.on_host = false;
+        self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
+        Ok(content)
+    }
+
+    /// Release a sequence's blocks (resident or suspended — each block
+    /// returns to the pool it currently sits in).
     pub fn release(&mut self, h: SeqHandle) {
         if let Some(seq) = self.seqs.remove(&h) {
-            self.free.extend(seq.blocks);
+            if seq.on_host {
+                self.host_free.extend(seq.blocks);
+            } else {
+                self.free.extend(seq.blocks);
+            }
         }
     }
 
@@ -124,8 +255,19 @@ impl KvBlockManager {
         self.seqs.get(&h).map(|s| s.tokens)
     }
 
+    /// Is this sequence currently parked in the host pool?
+    pub fn is_suspended(&self, h: SeqHandle) -> bool {
+        self.seqs.get(&h).is_some_and(|s| s.on_host)
+    }
+
+    /// Sequences with live reservations (resident + suspended).
     pub fn active_seqs(&self) -> usize {
         self.seqs.len()
+    }
+
+    /// Sequences currently parked in the host pool.
+    pub fn suspended_seqs(&self) -> usize {
+        self.seqs.values().filter(|s| s.on_host).count()
     }
 }
 
@@ -217,6 +359,173 @@ mod tests {
                     m.release(h);
                 }
                 m.blocks_used() == 0
+            },
+        );
+    }
+
+    #[test]
+    fn suspend_resume_roundtrip_conserves_both_pools() {
+        let mut m = KvBlockManager::with_host_pool(1024, 8); // 64 device, 8 host
+        let h = m.admit_reserved(20, 100).unwrap(); // 7-block reservation, 2 content
+        assert_eq!(m.blocks_used(), 7);
+        assert!(m.can_suspend(h));
+        assert_eq!(m.suspend(h).unwrap(), 2, "only the content blocks move to host");
+        assert!(m.is_suspended(h));
+        assert_eq!(m.blocks_used(), 0, "the whole device reservation is returned");
+        assert_eq!(m.host_blocks_used(), 2);
+        assert_eq!(m.suspended_seqs(), 1);
+        assert!(m.append_token(h).is_err(), "suspended sequences cannot decode");
+        assert!(m.can_resume(h));
+        assert_eq!(m.resume(h).unwrap(), 2, "content blocks swap back in");
+        assert!(!m.is_suspended(h));
+        assert_eq!(m.blocks_used(), 7, "the full reservation is re-claimed");
+        assert_eq!(m.host_blocks_used(), 0);
+        assert_eq!(m.seq_tokens(h), Some(20), "progress survives the round trip");
+        // decode continues where it left off
+        m.append_token(h).unwrap();
+        assert_eq!(m.seq_tokens(h), Some(21));
+        m.release(h);
+        assert_eq!(m.blocks_used() + m.host_blocks_used(), 0);
+    }
+
+    #[test]
+    fn full_host_pool_refuses_suspension() {
+        let mut m = KvBlockManager::with_host_pool(1024, 2); // host: 2 blocks
+        let big = m.admit_reserved(60, 60).unwrap(); // 4 content blocks
+        assert!(!m.can_suspend(big), "content exceeds the host pool");
+        assert!(m.suspend(big).is_err());
+        let small = m.admit_reserved(16, 40).unwrap(); // 1 content block
+        assert!(m.can_suspend(small));
+        m.suspend(small).unwrap();
+        let small2 = m.admit_reserved(17, 40).unwrap(); // 2 content blocks
+        assert!(!m.can_suspend(small2), "pool has 1 block left, content needs 2");
+        // releasing the suspended seq frees its HOST blocks
+        m.release(small);
+        assert_eq!(m.host_blocks_used(), 0);
+        assert!(m.can_suspend(small2));
+    }
+
+    #[test]
+    fn resume_requires_the_full_reservation() {
+        let mut m = KvBlockManager::with_host_pool(256, 16); // 16 device blocks
+        let h = m.admit_reserved(16, 200).unwrap(); // 13-block reservation
+        m.suspend(h).unwrap();
+        let _squatter = m.admit_reserved(100, 100).unwrap(); // 7 blocks
+        assert!(!m.can_resume(h), "9 free < the 13-block reservation");
+        assert!(m.resume(h).is_err());
+        m.release(_squatter);
+        assert!(m.can_resume(h));
+        m.resume(h).unwrap();
+        assert_eq!(m.blocks_used(), 13);
+    }
+
+    #[test]
+    fn zero_host_pool_behaves_like_the_recompute_manager() {
+        // swap-pool-0: every suspension is refused, so any op sequence
+        // drives `with_host_pool(_, 0)` through bitwise the same device
+        // economy as the plain PR 3 manager
+        let mut a = KvBlockManager::new(512);
+        let mut b = KvBlockManager::with_host_pool(512, 0);
+        let toks = [30usize, 64, 7, 100];
+        for &t in &toks {
+            let ha = a.admit(t).unwrap();
+            let hb = b.admit(t).unwrap();
+            assert_eq!(ha, hb);
+            assert!(!b.can_suspend(hb));
+            assert!(b.suspend(hb).is_err());
+            assert_eq!(a.blocks_used(), b.blocks_used());
+            assert_eq!(a.blocks_free(), b.blocks_free());
+        }
+        assert_eq!(b.host_blocks_total(), 0);
+        assert_eq!(b.suspended_seqs(), 0);
+    }
+
+    /// The two-pool satellite property: random admit / append / suspend /
+    /// resume / release interleavings uphold BOTH conservation invariants
+    /// (`device_used + device_free == device_total`, `host_used +
+    /// host_free == host_total`), no handle survives release, and a
+    /// zero-block host pool tracks the plain recompute manager bitwise.
+    #[test]
+    fn property_two_pool_economy_conserves_blocks() {
+        check_with(
+            4242,
+            200,
+            |r: &mut Rng| {
+                let host = [0usize, 4, 16][r.below(3)];
+                let ops: Vec<u64> = (0..80).map(|_| r.next_u64()).collect();
+                (host, ops)
+            },
+            |case| {
+                let (host, ops) = case;
+                let mut m = KvBlockManager::with_host_pool(512, *host); // 32 device blocks
+                let mut live: Vec<SeqHandle> = Vec::new();
+                let mut released: Vec<SeqHandle> = Vec::new();
+                for &op in ops {
+                    match op % 5 {
+                        0 => {
+                            let toks = (op % 80 + 1) as usize;
+                            if m.can_admit(toks) {
+                                live.push(m.admit(toks).unwrap());
+                            }
+                        }
+                        1 => {
+                            if let Some(&h) = live.first() {
+                                let _ = m.append_token(h);
+                            }
+                        }
+                        2 => {
+                            if let Some(&h) = live.last() {
+                                if m.can_suspend(h) {
+                                    m.suspend(h).unwrap();
+                                } else if m.suspend(h).is_ok() {
+                                    return false; // can_suspend lied
+                                }
+                            }
+                        }
+                        3 => {
+                            // resume the first suspended live handle
+                            if let Some(&h) = live.iter().find(|&&h| m.is_suspended(h)) {
+                                if m.can_resume(h) {
+                                    m.resume(h).unwrap();
+                                } else if m.resume(h).is_ok() {
+                                    return false; // can_resume lied
+                                }
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let h = live.remove((op % live.len() as u64) as usize);
+                                m.release(h);
+                                released.push(h);
+                            }
+                        }
+                    }
+                    // both conservation invariants, every step
+                    if m.blocks_used() + m.blocks_free() != m.blocks_total() {
+                        return false;
+                    }
+                    if m.host_blocks_used() + m.host_blocks_free() != m.host_blocks_total() {
+                        return false;
+                    }
+                    if m.active_seqs() != live.len() {
+                        return false;
+                    }
+                }
+                // no handle survives release: released handles answer to
+                // nothing, and releasing everything empties both pools
+                for &h in &released {
+                    if m.seq_tokens(h).is_some()
+                        || m.can_suspend(h)
+                        || m.can_resume(h)
+                        || m.append_token(h).is_ok()
+                    {
+                        return false;
+                    }
+                }
+                for h in live {
+                    m.release(h);
+                }
+                m.blocks_used() == 0 && m.host_blocks_used() == 0 && m.active_seqs() == 0
             },
         );
     }

@@ -50,6 +50,45 @@ pub struct EngineCaps {
     pub max_seq: usize,
 }
 
+/// A sequence suspended out of the running batch with its progress
+/// intact: the KV pages sit in the owning engine's bounded host block
+/// pool, and `generated` decode tokens are preserved.  Produced by
+/// [`Engine::suspend`], consumed by [`Engine::resume`] (pages swapped
+/// back, decode continues where it left off) or
+/// [`Engine::discard_suspended`] (pages dropped, progress becomes
+/// wasted work — e.g. when a stolen suspended job downgrades to
+/// recompute because its KV lives on the victim replica's host pool).
+///
+/// A `Suspended` is only meaningful to the engine that produced it: the
+/// handle indexes that engine's block manager, and for the PJRT backend
+/// the payload carries the staged KV rows and sampler state.  Handing
+/// it to another engine fails loudly (`resume` reports an unknown
+/// handle) — never silently.
+#[derive(Clone, Debug)]
+pub struct Suspended {
+    /// Decode tokens generated before suspension (preserved progress —
+    /// what recompute-on-resume would have discarded as waste).
+    pub generated: u32,
+    /// Forced output length of the sequence.
+    pub target_len: u32,
+    /// Reservation handle in the owning engine's block manager (the
+    /// pages now live in its host pool).
+    pub(crate) kv: kv_cache::SeqHandle,
+    /// Backend-specific state needed to continue decoding.
+    pub(crate) payload: SuspendPayload,
+}
+
+/// What each backend must stash to continue a suspended sequence.
+#[derive(Clone, Debug)]
+pub(crate) enum SuspendPayload {
+    /// The simulator's slot state is fully captured by the public
+    /// fields; the block manager holds the logical pages.
+    Sim,
+    /// PJRT stages the slot's physical KV rows in a host buffer, plus
+    /// the sampler chain state (current token and write position).
+    Pjrt { rows: Vec<f32>, cur_token: i32, pos: i32 },
+}
+
 /// The contract between coordinator and execution backend.
 pub trait Engine {
     fn caps(&self) -> EngineCaps;
@@ -68,17 +107,51 @@ pub trait Engine {
     /// Release a finished sequence's slot and KV.
     fn release(&mut self, slot: SlotId);
 
-    /// Forcibly evict a *running* sequence — score-aware preemption's
-    /// recompute-on-resume: the slot and its full KV reservation are
-    /// released immediately and every generated token is discarded (the
-    /// caller re-queues the request; on re-admission `prefill` recomputes
-    /// the prompt from scratch).  Returns the number of discarded decode
-    /// tokens — the wasted work the preemption metrics account for — or
-    /// 0 when the slot was already empty.  The scheduling layer reports
-    /// each eviction as a `Preempted { wasted }` lifecycle event through
-    /// the session's [`EventSink`](crate::coordinator::EventSink), so
+    /// Forcibly evict a *running* sequence — the **recompute fallback**
+    /// of the suspend/resume lifecycle: the slot and its full KV
+    /// reservation are released immediately and every generated token is
+    /// discarded (the caller re-queues the request; on re-admission
+    /// `prefill` recomputes the prompt from scratch).  Returns the
+    /// number of discarded decode tokens — the wasted work the
+    /// preemption metrics account for — or 0 when the slot was already
+    /// empty.  The scheduler prefers [`Engine::suspend`] when the host
+    /// pool can hold the victim's pages and falls back to this per
+    /// eviction; the choice is reported as the `mode` of the
+    /// `Preempted { wasted, mode }` lifecycle event through the
+    /// session's [`EventSink`](crate::coordinator::EventSink), so
     /// engines never talk to sinks directly.
     fn evict(&mut self, slot: SlotId) -> u32;
+
+    /// Can `slot`'s KV content move to the host swap pool right now?
+    /// Always false with `swap = off` (zero-block pool) or an empty
+    /// slot.
+    fn can_suspend(&self, slot: SlotId) -> bool;
+
+    /// Suspend a *running* sequence with its progress intact: KV pages
+    /// move to the bounded host block pool, the device reservation is
+    /// freed, the slot empties, and nothing is discarded.  The swap-out
+    /// cost is charged on the engine clock.  Callers check
+    /// [`Engine::can_suspend`] first and fall back to [`Engine::evict`]
+    /// when the pool is full — suspension never silently degrades to a
+    /// lossy eviction.
+    fn suspend(&mut self, slot: SlotId) -> Result<Suspended>;
+
+    /// Whether the device has room to swap this suspended sequence back
+    /// in (its full prompt + target reservation, same soundness rule as
+    /// admission).
+    fn can_resume(&self, s: &Suspended) -> bool;
+
+    /// Resume a suspended sequence: re-claim its device reservation,
+    /// swap the pages back (charged on the engine clock), and seat it in
+    /// a free slot — decode continues at `generated`, no re-prefill.
+    fn resume(&mut self, s: Suspended) -> Result<SlotId>;
+
+    /// Drop a suspended sequence without resuming it, freeing its host
+    /// pages.  Returns the discarded decode tokens (the progress that
+    /// just became wasted work) — the downgrade path for suspended jobs
+    /// that can no longer be resumed here, e.g. after a cross-replica
+    /// steal moved the request away from the pool holding its KV.
+    fn discard_suspended(&mut self, s: Suspended) -> u32;
 
     fn active_slots(&self) -> usize;
 
@@ -128,6 +201,26 @@ impl<E: Engine + ?Sized> Engine for &mut E {
 
     fn evict(&mut self, slot: SlotId) -> u32 {
         (**self).evict(slot)
+    }
+
+    fn can_suspend(&self, slot: SlotId) -> bool {
+        (**self).can_suspend(slot)
+    }
+
+    fn suspend(&mut self, slot: SlotId) -> Result<Suspended> {
+        (**self).suspend(slot)
+    }
+
+    fn can_resume(&self, s: &Suspended) -> bool {
+        (**self).can_resume(s)
+    }
+
+    fn resume(&mut self, s: Suspended) -> Result<SlotId> {
+        (**self).resume(s)
+    }
+
+    fn discard_suspended(&mut self, s: Suspended) -> u32 {
+        (**self).discard_suspended(s)
     }
 
     fn active_slots(&self) -> usize {

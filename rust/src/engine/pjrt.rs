@@ -22,7 +22,7 @@ use std::time::Instant;
 use anyhow::{bail, Context};
 
 use super::sampler::{sample, SamplerConfig};
-use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId};
+use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId, SuspendPayload, Suspended};
 use crate::engine::kv_cache::SeqHandle;
 use crate::runtime::{ArtifactManifest, Executable, HostArg, Runtime};
 use crate::util::rng::Rng;
@@ -72,6 +72,21 @@ impl PjrtEngine {
         max_kv_tokens: usize,
         seed: u64,
     ) -> Result<PjrtEngine> {
+        Self::load_with_swap(rt, manifest, max_kv_tokens, 0, seed)
+    }
+
+    /// Like [`PjrtEngine::load`], with a bounded host swap pool of
+    /// `swap_blocks` KV blocks for partial-progress preemption
+    /// (`[scheduler] swap = host(blocks)`).  Suspended slots stage their
+    /// physical KV rows in per-sequence host buffers; the logical block
+    /// economy lives in the shared [`KvBlockManager`].
+    pub fn load_with_swap(
+        rt: &Runtime,
+        manifest: &ArtifactManifest,
+        max_kv_tokens: usize,
+        swap_blocks: usize,
+        seed: u64,
+    ) -> Result<PjrtEngine> {
         let prefill_exe = rt
             .load_hlo_text(&manifest.picolm_prefill)
             .context("loading picoLM prefill artifact")?;
@@ -86,7 +101,7 @@ impl PjrtEngine {
             prefill_exe,
             decode_exe,
             slots: (0..b).map(|_| None).collect(),
-            kv_mgr: KvBlockManager::new(max_kv_tokens.min(b * max_seq)),
+            kv_mgr: KvBlockManager::with_host_pool(max_kv_tokens.min(b * max_seq), swap_blocks),
             kv: vec![0.0; kv_len],
             sampler: SamplerConfig::default(),
             rng: Rng::new(seed),
@@ -134,6 +149,22 @@ impl PjrtEngine {
                 self.kv[dst..dst + row].copy_from_slice(&slice[src..src + row]);
             }
         }
+    }
+
+    /// Stage batch slot `slot`'s KV rows into a B=1-shaped host buffer
+    /// (the inverse of [`PjrtEngine::splice_kv`]) — what a suspension
+    /// parks while the slot is reused by other sequences.
+    fn extract_kv(&self, slot: usize) -> Vec<f32> {
+        let row = self.max_seq * PICO_HEADS * PICO_HEAD_DIM;
+        let mut out = vec![0.0f32; PICO_LAYERS * 2 * row];
+        for l in 0..PICO_LAYERS {
+            for k in 0..2 {
+                let dst = (l * 2 + k) * row;
+                let src = ((l * 2 + k) * self.batch + slot) * row;
+                out[dst..dst + row].copy_from_slice(&self.kv[src..src + row]);
+            }
+        }
+        out
     }
 }
 
@@ -243,7 +274,7 @@ impl Engine for PjrtEngine {
     }
 
     fn evict(&mut self, slot: SlotId) -> u32 {
-        // Recompute-on-resume: free the slot + logical KV blocks and
+        // The recompute fallback: free the slot + logical KV blocks and
         // discard the generated tokens.  The physical cache rows need no
         // scrub — the next `prefill` into this slot splices a fresh B=1
         // KV slice over them, and decode masks inactive slots anyway.
@@ -254,6 +285,58 @@ impl Engine for PjrtEngine {
             }
             None => 0,
         }
+    }
+
+    fn can_suspend(&self, slot: SlotId) -> bool {
+        matches!(self.slots.get(slot), Some(Some(s)) if self.kv_mgr.can_suspend(s.kv))
+    }
+
+    fn suspend(&mut self, slot: SlotId) -> Result<Suspended> {
+        let Some(s) = self.slots.get(slot).and_then(Option::as_ref) else {
+            bail!("suspend on empty slot {slot}");
+        };
+        if !self.kv_mgr.can_suspend(s.kv) {
+            bail!("host swap pool cannot hold slot {slot}'s KV pages");
+        }
+        // stage the physical rows BEFORE vacating the slot — the copy is
+        // the real swap-out cost on this backend's wall clock
+        let rows = self.extract_kv(slot);
+        let s = self.slots[slot].take().unwrap();
+        self.kv_mgr.suspend(s.kv)?;
+        Ok(Suspended {
+            generated: s.generated,
+            target_len: s.target_len,
+            kv: s.kv,
+            payload: SuspendPayload::Pjrt { rows, cur_token: s.cur_token, pos: s.pos },
+        })
+    }
+
+    fn can_resume(&self, s: &Suspended) -> bool {
+        self.kv_mgr.can_resume(s.kv)
+    }
+
+    fn resume(&mut self, s: Suspended) -> Result<SlotId> {
+        let Some(slot) = self.slots.iter().position(Option::is_none) else {
+            bail!("no free slot to resume into");
+        };
+        let SuspendPayload::Pjrt { rows, cur_token, pos } = s.payload else {
+            bail!("suspension was produced by a different engine backend");
+        };
+        self.kv_mgr.resume(s.kv)?;
+        self.splice_kv(slot, &rows);
+        self.slots[slot] = Some(PjrtSlot {
+            target_len: s.target_len,
+            generated: s.generated,
+            cur_token,
+            pos,
+            kv: s.kv,
+        });
+        Ok(slot)
+    }
+
+    fn discard_suspended(&mut self, s: Suspended) -> u32 {
+        self.kv_mgr.release(s.kv);
+        s.generated
     }
 
     fn active_slots(&self) -> usize {

@@ -17,10 +17,17 @@
 
 use anyhow::bail;
 
-use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId};
+use super::pjrt::{PICO_HEADS, PICO_HEAD_DIM, PICO_LAYERS};
+use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId, SuspendPayload, Suspended};
 use crate::config::{CostModel, SchedulerConfig};
-use crate::engine::kv_cache::SeqHandle;
+use crate::engine::kv_cache::{SeqHandle, BLOCK_TOKENS};
 use crate::Result;
+
+/// Bytes one logical KV block occupies at picoLM scale (f32 K and V
+/// entries for every layer/head/dim, `BLOCK_TOKENS` tokens per block) —
+/// what the swap-latency cost model moves per block.
+const KV_BYTES_PER_BLOCK: f64 =
+    (PICO_LAYERS * 2 * PICO_HEADS * PICO_HEAD_DIM * 4 * BLOCK_TOKENS) as f64;
 
 struct SimSlot {
     target_len: u32,
@@ -35,6 +42,9 @@ pub struct SimEngine {
     kv: KvBlockManager,
     now_ms: f64,
     max_seq: usize,
+    /// Virtual cost of moving one KV block across the host↔device link
+    /// (from `[scheduler] swap_bw_gbps`), charged on suspend and resume.
+    swap_ms_per_block: f64,
     /// Counters for reports.
     pub decode_steps: u64,
     pub tokens_generated: u64,
@@ -45,9 +55,10 @@ impl SimEngine {
         SimEngine {
             cost,
             slots: (0..sched.max_batch).map(|_| None).collect(),
-            kv: KvBlockManager::new(sched.max_kv_tokens),
+            kv: KvBlockManager::with_host_pool(sched.max_kv_tokens, sched.swap.host_blocks()),
             now_ms: 0.0,
             max_seq,
+            swap_ms_per_block: KV_BYTES_PER_BLOCK / (sched.swap_bw_gbps * 1e6),
             decode_steps: 0,
             tokens_generated: 0,
         }
@@ -76,9 +87,9 @@ impl Engine for SimEngine {
         // admission is then sound — a running batch can never exhaust the
         // pool mid-decode (with known target lengths conservative
         // reservation is exact).  Preemption here is therefore purely a
-        // *latency* lever — `evict` displaces long running jobs for
-        // shorter arrivals — not the KV-exhaustion escape hatch vLLM
-        // needs it for.
+        // *latency* lever — `suspend` (or its recompute fallback
+        // `evict`) displaces long running jobs for shorter arrivals —
+        // not the KV-exhaustion escape hatch vLLM needs it for.
         let kv = self
             .kv
             .admit_reserved(prompt_len, prompt_len + target_len.max(1) as usize)?;
@@ -119,10 +130,11 @@ impl Engine for SimEngine {
     }
 
     fn evict(&mut self, slot: SlotId) -> u32 {
-        // Recompute-on-resume: drop the slot and its full reservation;
-        // the tokens it generated are the wasted work.  Eviction costs no
-        // virtual time — the expensive part is the re-prefill, which is
-        // charged when the request is admitted again.
+        // The recompute fallback of the suspend lifecycle: drop the slot
+        // and its full reservation; the tokens it generated are the
+        // wasted work.  Eviction costs no virtual time — the expensive
+        // part is the re-prefill, which is charged when the request is
+        // admitted again.
         match self.slots[slot].take() {
             Some(s) => {
                 self.kv.release(s.kv);
@@ -130,6 +142,48 @@ impl Engine for SimEngine {
             }
             None => 0,
         }
+    }
+
+    fn can_suspend(&self, slot: SlotId) -> bool {
+        matches!(self.slots.get(slot), Some(Some(s)) if self.kv.can_suspend(s.kv))
+    }
+
+    fn suspend(&mut self, slot: SlotId) -> Result<Suspended> {
+        let Some(s) = self.slots.get(slot).and_then(Option::as_ref) else {
+            bail!("suspend on empty slot {slot}");
+        };
+        if !self.kv.can_suspend(s.kv) {
+            bail!("host swap pool cannot hold slot {slot}'s KV pages");
+        }
+        let s = self.slots[slot].take().unwrap();
+        let blocks = self.kv.suspend(s.kv)?;
+        self.now_ms += blocks as f64 * self.swap_ms_per_block;
+        Ok(Suspended {
+            generated: s.generated,
+            target_len: s.target_len,
+            kv: s.kv,
+            payload: SuspendPayload::Sim,
+        })
+    }
+
+    fn can_resume(&self, s: &Suspended) -> bool {
+        self.kv.can_resume(s.kv)
+    }
+
+    fn resume(&mut self, s: Suspended) -> Result<SlotId> {
+        let Some(slot) = self.slots.iter().position(Option::is_none) else {
+            bail!("no free slot to resume into");
+        };
+        let blocks = self.kv.resume(s.kv)?;
+        self.now_ms += blocks as f64 * self.swap_ms_per_block;
+        self.slots[slot] =
+            Some(SimSlot { target_len: s.target_len, generated: s.generated, kv: s.kv });
+        Ok(slot)
+    }
+
+    fn discard_suspended(&mut self, s: Suspended) -> u32 {
+        self.kv.release(s.kv);
+        s.generated
     }
 
     fn active_slots(&self) -> usize {
@@ -228,6 +282,101 @@ mod tests {
         // the slot is reusable immediately
         e.prefill(&[1, 2], 5).unwrap();
         assert_eq!(e.active_slots(), 1);
+    }
+
+    #[test]
+    fn suspend_preserves_progress_and_resume_continues() {
+        use crate::config::SwapMode;
+        let sched = SchedulerConfig {
+            max_batch: 2,
+            max_kv_tokens: 4096,
+            swap: SwapMode::Host(64),
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(CostModel::default(), &sched, 160);
+        let slot = e.prefill(&[1, 10, 2], 50).unwrap();
+        for _ in 0..7 {
+            e.decode_step().unwrap();
+        }
+        assert!(e.can_suspend(slot));
+        let t0 = e.now_ms();
+        let sus = e.suspend(slot).unwrap();
+        assert!(e.now_ms() > t0, "swap-out must cost engine time");
+        assert_eq!(sus.generated, 7, "progress travels with the suspension");
+        assert_eq!(e.active_slots(), 0);
+        assert_eq!(e.kv().blocks_used(), 0, "device reservation fully returned");
+        assert!(e.kv().host_blocks_used() > 0, "pages parked in the host pool");
+        // the freed slot is reusable while the job is parked
+        let other = e.prefill(&[1, 2], 5).unwrap();
+        e.release(other);
+        assert!(e.can_resume(&sus));
+        let t1 = e.now_ms();
+        let slot2 = e.resume(sus).unwrap();
+        assert!(e.now_ms() > t1, "swap-in must cost engine time");
+        assert_eq!(e.kv().host_blocks_used(), 0);
+        // decode continues at token 8, not from scratch
+        let ev = e.decode_step().unwrap();
+        let resumed = ev.iter().find(|x| x.slot == slot2).unwrap();
+        assert_eq!(resumed.generated, 8);
+        // the run finishes after exactly target_len decode steps overall
+        let mut fin = false;
+        while !fin {
+            fin = e.decode_step().unwrap().iter().any(|x| x.slot == slot2 && x.finished);
+        }
+        assert_eq!(e.tokens_generated, 50, "no token generated twice");
+    }
+
+    #[test]
+    fn swap_off_refuses_suspension_and_discard_reports_waste() {
+        use crate::config::SwapMode;
+        let mut e = engine(); // default sched: swap = off
+        let slot = e.prefill(&[1, 10, 2], 50).unwrap();
+        for _ in 0..3 {
+            e.decode_step().unwrap();
+        }
+        assert!(!e.can_suspend(slot), "swap=off means a zero-block host pool");
+        assert!(e.suspend(slot).is_err());
+        assert!(!e.can_suspend(99), "out-of-range slot is not suspendable");
+        // with a pool: discard of a suspended job frees the host pages
+        // and reports its progress as the wasted work
+        let sched = SchedulerConfig {
+            max_batch: 4,
+            max_kv_tokens: 4096,
+            swap: SwapMode::Host(64),
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(CostModel::default(), &sched, 160);
+        let slot = e.prefill(&[1, 10, 2], 50).unwrap();
+        for _ in 0..4 {
+            e.decode_step().unwrap();
+        }
+        let sus = e.suspend(slot).unwrap();
+        assert!(e.kv().host_blocks_used() > 0);
+        assert_eq!(e.discard_suspended(sus), 4, "discard reports the burned progress");
+        assert_eq!(e.kv().host_blocks_used(), 0);
+        assert_eq!(e.kv().blocks_used(), 0);
+    }
+
+    #[test]
+    fn tiny_host_pool_falls_back_per_eviction() {
+        use crate::config::SwapMode;
+        // pool of 2 blocks: a long-running job's content does not fit,
+        // a fresh short one does — can_suspend answers per sequence
+        let sched = SchedulerConfig {
+            max_batch: 2,
+            max_kv_tokens: 4096,
+            swap: SwapMode::Host(2),
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(CostModel::default(), &sched, 4096);
+        let long = e.prefill(&[1; 40], 200).unwrap();
+        let short = e.prefill(&[1, 2], 20).unwrap();
+        for _ in 0..20 {
+            e.decode_step().unwrap();
+        }
+        assert!(!e.can_suspend(long), "60 content tokens exceed the 2-block pool");
+        assert!(e.can_suspend(short), "short job's content fits");
+        assert_eq!(e.evict(long), 20, "the fallback is still a plain recompute evict");
     }
 
     #[test]

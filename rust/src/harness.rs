@@ -285,6 +285,31 @@ pub fn burst(ts: &TestSet, n: usize, seed: u64) -> Vec<Arrival> {
     ArrivalProcess::Burst { n }.generate(ts.n_prompts, &mut Rng::new(seed))
 }
 
+/// The long-job-then-burst acceptance trace: one 1000-token job at t=0
+/// monopolises the batch, then `n_short` 10-token jobs land at t=40 —
+/// the worst case for admission-time-only scheduling.  Shared by the
+/// preemption acceptance tests in `coordinator::dispatch`,
+/// `benches/fig_preempt.rs` and `benches/fig_swap.rs`, so the criteria
+/// they assert ("preempt=arrival beats off", "swap strictly cuts waste
+/// without regressing e2e") are always judged on the SAME trace.
+/// Scores equal the true target (an oracle-quality predictor).
+pub fn long_job_then_burst(n_short: usize) -> Vec<Request> {
+    fn req(id: u64, arrival_ms: f64, target: u32) -> Request {
+        Request {
+            id,
+            tokens: vec![1, 7, 19, 31, 2],
+            prompt_len: 5,
+            arrival_ms,
+            target_len: target,
+            oracle_len: target,
+            score: target as f32,
+        }
+    }
+    let mut v = vec![req(0, 0.0, 1000)];
+    v.extend((1..=n_short as u64).map(|i| req(i, 40.0, 10)));
+    v
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

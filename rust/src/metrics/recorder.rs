@@ -15,10 +15,13 @@ pub struct RequestRecord {
     pub output_len: u32,
     /// Was the starvation guard triggered for this request?
     pub boosted: bool,
-    /// How many times this request was evicted from a running batch and
-    /// recomputed from scratch (score-aware preemption).  `admitted_ms`
-    /// and `first_token_ms` describe the FINAL admission — earlier
-    /// partial runs were discarded.
+    /// How many times this request was displaced from a running batch
+    /// (score-aware preemption, both swap suspensions and recompute
+    /// evictions).  `admitted_ms` and `first_token_ms` describe the
+    /// FINAL admission *chain*: a recompute eviction discards the
+    /// earlier partial run and re-stamps both on re-admission, while a
+    /// swap suspension preserves them across its resume — the round
+    /// continues, nothing was lost.
     pub preemptions: u32,
 }
 

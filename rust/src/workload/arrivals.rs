@@ -23,6 +23,23 @@ pub enum ArrivalProcess {
     Uniform { gap_ms: f64, n: usize },
 }
 
+/// Measured arrival rate of a trace (requests per second over the span
+/// from t=0 to the last arrival).  Empty and single-arrival traces —
+/// and degenerate bursts whose span is zero — report 0.0 instead of
+/// panicking on `last().unwrap()` or dividing by a zero span (the same
+/// bug class as the `gen-workload --n 0` fix: summaries must be total
+/// over every trace a generator can produce).
+pub fn measured_rate_per_s(arrivals: &[Arrival]) -> f64 {
+    let Some(last) = arrivals.last() else {
+        return 0.0;
+    };
+    let span_s = last.at_ms / 1e3;
+    if arrivals.len() < 2 || span_s.is_nan() || span_s <= 0.0 {
+        return 0.0;
+    }
+    arrivals.len() as f64 / span_s
+}
+
 impl ArrivalProcess {
     /// Materialise the arrival sequence, assigning prompts round-robin with
     /// a shuffled order (so prompt difficulty is independent of time).
@@ -69,11 +86,35 @@ mod tests {
         let mut rng = Rng::new(1);
         let a = p.generate(100, &mut rng);
         assert_eq!(a.len(), 20_000);
-        let span_s = a.last().unwrap().at_ms / 1e3;
-        let rate = a.len() as f64 / span_s;
+        let rate = measured_rate_per_s(&a);
         assert!((rate - 20.0).abs() < 0.5, "measured rate {rate}");
         // arrivals are sorted by construction
         assert!(a.windows(2).all(|w| w[0].at_ms <= w[1].at_ms));
+    }
+
+    #[test]
+    fn rate_summary_is_total_over_degenerate_traces() {
+        // regression: the rate summary used to unwrap `last()` and
+        // divide by the span — an empty trace panicked, a single
+        // arrival (span from its own timestamp) and a burst (span 0)
+        // divided by zero
+        assert_eq!(measured_rate_per_s(&[]), 0.0, "empty trace");
+        assert_eq!(
+            measured_rate_per_s(&[Arrival { prompt_idx: 0, at_ms: 0.0 }]),
+            0.0,
+            "single arrival at t=0"
+        );
+        assert_eq!(
+            measured_rate_per_s(&[Arrival { prompt_idx: 0, at_ms: 500.0 }]),
+            0.0,
+            "a lone arrival is not a rate"
+        );
+        let mut rng = Rng::new(3);
+        let burst = ArrivalProcess::Burst { n: 50 }.generate(10, &mut rng);
+        assert_eq!(measured_rate_per_s(&burst), 0.0, "zero-span burst");
+        let spaced = ArrivalProcess::Uniform { gap_ms: 100.0, n: 11 }.generate(10, &mut rng);
+        let rate = measured_rate_per_s(&spaced);
+        assert!(rate.is_finite() && rate > 0.0, "uniform trace has a real rate: {rate}");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode,
+    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode, SwapMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -322,7 +322,13 @@ fn reference_sharded_serve(
             let r = &mut replicas[idx];
             r.dispatched += 1;
             r.queued_tokens += total as u64;
-            r.inbox.push_back(QueuedRequest { req, key, boosted: false, preemptions: 0 });
+            r.inbox.push_back(QueuedRequest {
+                req,
+                key,
+                boosted: false,
+                preemptions: 0,
+                suspended: None,
+            });
             continue;
         }
         match next_step {
@@ -516,11 +522,12 @@ fn n1_sharded_with_steal_enabled_equals_legacy() {
     }
 }
 
-/// PR 3 pin: with `preempt = off` the refactored inner loop (preemption
-/// checks woven into the admission pass) must reproduce the frozen PR 2
-/// reference loop record-for-record — N=4, every dispatch kind, with a
-/// deliberately non-default margin and anti-thrash cap to prove neither
-/// is consulted while the feature is off.
+/// PR 3/5 pin: with `preempt = off` and `swap = off` the refactored
+/// inner loop (suspend/resume checks woven into the admission pass)
+/// must reproduce the frozen PR 2 reference loop record-for-record —
+/// N=4, every dispatch kind, with a deliberately non-default margin,
+/// anti-thrash cap and swap bandwidth to prove none of them is
+/// consulted while the features are off.
 #[test]
 fn preempt_off_n4_pins_to_reference_loop_every_dispatch() {
     for dispatch in DispatchKind::all() {
@@ -535,6 +542,8 @@ fn preempt_off_n4_pins_to_reference_loop_every_dispatch() {
                 preempt: PreemptMode::Off,
                 preempt_margin: 7.5,
                 max_preemptions: 1,
+                swap: SwapMode::Off,
+                swap_bw_gbps: 0.125,
                 ..Default::default()
             };
             assert_sharded_pinned_sched(&sched, kind);
@@ -542,10 +551,11 @@ fn preempt_off_n4_pins_to_reference_loop_every_dispatch() {
     }
 }
 
-/// PR 3 pin, N=1: a single replica with `preempt = off` must stay
-/// bitwise identical to the pre-refactor single-engine serving loop for
-/// every dispatch kind (dispatch is trivial at N=1, but the inner step
-/// loop — where the preemption hook lives — is exactly what is pinned).
+/// PR 3/5 pin, N=1: a single replica with `preempt = off` / `swap =
+/// off` must stay bitwise identical to the pre-refactor single-engine
+/// serving loop for every dispatch kind (dispatch is trivial at N=1,
+/// but the inner step loop — where the suspend/resume hooks live — is
+/// exactly what is pinned).
 #[test]
 fn preempt_off_n1_equals_legacy_every_dispatch() {
     for dispatch in DispatchKind::all() {
@@ -557,10 +567,60 @@ fn preempt_off_n1_equals_legacy_every_dispatch() {
             preempt: PreemptMode::Off,
             preempt_margin: 7.5,
             max_preemptions: 1,
+            swap: SwapMode::Off,
+            swap_bw_gbps: 0.125,
             ..Default::default()
         };
         assert_identical(&sched, PolicyKind::OracleSjf);
         assert_identical(&sched, PolicyKind::Fcfs);
+    }
+}
+
+/// PR 5 pin: with preemption ON but `swap = off`, a swap pool of zero
+/// blocks (`host(0)`) must be record-for-record identical to `off` —
+/// the per-eviction fallback alone reproduces PR 3's recompute
+/// behaviour on the frozen reference workload, N=4, every dispatch
+/// kind.  (The swap win itself is asserted in `benches/fig_swap.rs`
+/// and the dispatch test suite.)
+#[test]
+fn swap_host_zero_equals_swap_off_under_preemption_every_dispatch() {
+    for dispatch in DispatchKind::all() {
+        let mk = |swap: SwapMode| {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                preempt: PreemptMode::Arrival,
+                swap,
+                ..Default::default()
+            };
+            let engines: Vec<SimEngine> = (0..sched.replicas)
+                .map(|_| SimEngine::new(CostModel::default(), &sched, 4096))
+                .collect();
+            let policy = make_policy(PolicyKind::OracleSjf);
+            let mut coord =
+                ShardedCoordinator::new(engines, policy.as_ref(), dispatch, sched.clone());
+            coord.serve(workload()).unwrap()
+        };
+        let off = mk(SwapMode::Off);
+        let zero = mk(SwapMode::Host(0));
+        assert_eq!(zero.merged.preemptions, off.merged.preemptions, "{dispatch:?}");
+        assert_eq!(
+            zero.merged.wasted_decode_tokens, off.merged.wasted_decode_tokens,
+            "{dispatch:?}"
+        );
+        assert_eq!(zero.merged.swapped_out_tokens, 0, "{dispatch:?}");
+        assert_eq!(zero.merged.resumes, 0, "{dispatch:?}");
+        for (z, o) in zero.per_replica.iter().zip(off.per_replica.iter()) {
+            assert_eq!(
+                format!("{:?}", z.records),
+                format!("{:?}", o.records),
+                "{dispatch:?} replica {}: host(0) drifted from swap=off",
+                z.replica
+            );
+        }
     }
 }
 
@@ -579,6 +639,7 @@ fn manual_session_ticks_reproduce_the_batch_wrapper() {
         dispatch: DispatchKind::Ranked,
         steal: StealMode::Idle,
         preempt: PreemptMode::Arrival,
+        swap: SwapMode::Host(16),
         ..Default::default()
     };
     let mk_engines = || -> Vec<SimEngine> {
@@ -614,6 +675,9 @@ fn manual_session_ticks_reproduce_the_batch_wrapper() {
     assert_eq!(got.merged.report.n_requests, want.merged.report.n_requests);
     assert_eq!(got.merged.makespan_ms, want.merged.makespan_ms);
     assert_eq!(got.merged.preemptions, want.merged.preemptions);
+    assert_eq!(got.merged.swapped_out_tokens, want.merged.swapped_out_tokens);
+    assert_eq!(got.merged.resumes, want.merged.resumes);
+    assert_eq!(got.merged.resumed_tokens, want.merged.resumed_tokens);
     for (g, w) in got.per_replica.iter().zip(want.per_replica.iter()) {
         assert_eq!(
             format!("{:?}", g.records),
