@@ -9,7 +9,7 @@
 //! Run with: `cargo run --release --example session`
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode,
+    CostModel, DispatchKind, PolicyKind, PreemptMode, RerankMode, SchedulerConfig, StealMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{Request, RequestStatus, ServeEvent, ShardedCoordinator, Tick};
@@ -35,6 +35,7 @@ fn main() -> pars_serve::Result<()> {
         dispatch: DispatchKind::Ranked,
         steal: StealMode::Idle,
         preempt: PreemptMode::Arrival,
+        rerank: RerankMode::OnToken, // refine length estimates as tokens arrive
         ..Default::default()
     };
     let engines: Vec<SimEngine> = (0..sched.replicas)
@@ -47,15 +48,28 @@ fn main() -> pars_serve::Result<()> {
     // A session with the default bounded in-memory event log.
     let mut session = coord.session();
 
-    // Wave 1: a long job followed by a burst of shorts.
-    let long = session.submit(mk_req(0, 0.0, 400));
+    // Wave 1: a long job the predictor badly underestimates (true 400
+    // tokens, scored as ~50), followed by a burst of shorts.
+    let mut misscored = mk_req(0, 0.0, 400);
+    misscored.score = 50.0; // the underestimate continuous re-ranking repairs
+    let long = session.submit(misscored);
     for i in 1..=8u64 {
         session.submit(mk_req(i, 5.0, 10));
     }
 
-    // Advance the fleet to t = 60 ms and peek mid-run.
+    // Advance the fleet to t = 60 ms and peek mid-run: `poll` carries
+    // the live predicted-remaining estimate (refreshed by re-ranking as
+    // tokens arrive) and the eviction/restore counts so far.
     session.run_until(60.0)?;
-    println!("t=60ms  long job: {:?}  pending: {}", session.poll(long), session.n_pending());
+    match session.poll(long) {
+        RequestStatus::Queued { replica, remaining, preemptions, resumes }
+        | RequestStatus::Running { replica, remaining, preemptions, resumes } => println!(
+            "t=60ms  long job on replica {replica}: ~{remaining:.0} tokens of work left \
+             (admitted at ~50), preempted {preemptions}x, resumed {resumes}x, pending: {}",
+            session.n_pending()
+        ),
+        other => println!("t=60ms  long job: {other:?}  pending: {}", session.n_pending()),
+    }
 
     // Wave 2 arrives while the fleet is busy — the batch API cannot do
     // this; the session just takes it.

@@ -78,5 +78,48 @@ fn main() {
         }
         t.print();
     }
+    // sharded-fleet transfer: the same cross-model keys driving ranked
+    // dispatch + idle stealing across a 4-replica fleet — the transfer
+    // story has to survive the multi-replica serving stack, not just
+    // the single-engine queue
+    let fleet = SchedulerConfig {
+        replicas: 4,
+        dispatch: pars_serve::config::DispatchKind::Ranked,
+        steal: pars_serve::config::StealMode::Idle,
+        ..sched.clone()
+    };
+    for (ds, m) in common::SERVE_COMBOS {
+        let ts = TestSet::load(&dir, ds, m).expect("testset");
+        let suite = harness::policy_suite(m);
+        let book = harness::ScoreBook::build(&rt, &manifest, &ts, &suite).expect("scores");
+        // sweep_rates is per-replica saturation; scale to the fleet
+        let rate = harness::sweep_rates(&ts, &cost, &fleet)[3] * fleet.replicas as f64;
+        let mut t = Table::new(
+            &format!(
+                "cross-model on a 4-replica fleet @0.9x — {}",
+                common::combo_label(ds, m)
+            ),
+            &["policy", "avg ms/tok", "p90 ms/tok", "p50 ttft ms", "reqs/replica"],
+        );
+        for kind in [PolicyKind::Fcfs, PolicyKind::Pars, PolicyKind::CrossModelPars] {
+            if !suite.contains(&kind) {
+                continue; // cross-model onto gpt4 itself is plain PARS
+            }
+            let arrivals = harness::poisson(&ts, rate, 600, 29);
+            let out =
+                harness::run_sharded(&ts, &arrivals, kind, &book, &cost, &fleet).expect("serve");
+            let per: Vec<String> =
+                out.per_replica.iter().map(|r| r.report.n_requests.to_string()).collect();
+            t.row(&[
+                kind.name().to_string(),
+                format!("{:.1}", out.merged.report.avg_per_token_ms),
+                format!("{:.1}", out.merged.report.p90_per_token_ms),
+                format!("{:.1}", out.merged.report.ttft.p50),
+                per.join("/"),
+            ]);
+        }
+        t.print();
+    }
+
     println!("\n(paper shape: Cross-Model PARS > Pointwise everywhere, ≈ Listwise, close to native PARS on Llama)");
 }

@@ -6,7 +6,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 use crate::config::{
-    Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, StealMode, SwapMode,
+    Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, RerankMode, StealMode,
+    SwapMode,
 };
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{Coordinator, EventSink, JsonlSink, PjrtScorer, Scorer};
@@ -61,11 +62,21 @@ COMMANDS:
                                       the pool is full)
                 --swap-bw-gbps <f>  host<->device swap bandwidth the sim
                                     cost model charges (default 16)
+                --rerank off|interval(ms)|on_token  continuous re-ranking:
+                                    refine predicted lengths from decode
+                                    progress, re-key the waiting queue and
+                                    pick preemption victims by the refreshed
+                                    estimates (inert under fcfs)
+                --score-noise <sigma>  multiplicative lognormal noise on
+                                    length-predicting admission keys — the
+                                    prediction-error robustness knob (0 = the
+                                    exact predictor scores)
                 --replica-caps <kv[:slots],...> per-replica capacity overrides
                                                 (`_` inherits the default)
                 --events <file>     stream lifecycle events (rejected/dispatched/
                                     admitted/first_token/boosted/stolen/preempted/
-                                    completed) as JSON Lines to <file>
+                                    resumed/rescored/completed) as JSON Lines
+                                    to <file>
                 --event-cap <n>     bounded in-memory event-log capacity for
                                     embedded sessions (default 16384)
                 (sim engine falls back to a synthetic corpus when no
@@ -125,6 +136,10 @@ fn load_config(args: &Args) -> Result<Config> {
         cfg.scheduler.swap = SwapMode::parse(s)?;
     }
     cfg.scheduler.swap_bw_gbps = args.f64_or("swap-bw-gbps", cfg.scheduler.swap_bw_gbps)?;
+    if let Some(r) = args.str_opt("rerank")? {
+        cfg.scheduler.rerank = RerankMode::parse(r)?;
+    }
+    cfg.scheduler.score_noise = args.f64_or("score-noise", cfg.scheduler.score_noise)?;
     if let Some(rc) = args.str_opt("replica-caps")? {
         cfg.scheduler.replica_caps = ReplicaCaps::parse_list(rc)?;
     }
@@ -228,7 +243,7 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}{}",
+                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
@@ -236,12 +251,22 @@ fn serve(args: &Args) -> Result<()> {
                 cfg.scheduler.steal.name(),
                 cfg.scheduler.preempt.name(),
                 cfg.scheduler.swap.name(),
+                cfg.scheduler.rerank.name(),
+                if cfg.scheduler.score_noise > 0.0 {
+                    format!("  score_noise={}", cfg.scheduler.score_noise)
+                } else {
+                    String::new()
+                },
                 if cfg.scheduler.heterogeneous() { "  caps=heterogeneous" } else { "" }
             );
             if book.scoring_ms_per_prompt > 0.0 {
                 println!("admission scoring: {:.3} ms/prompt", book.scoring_ms_per_prompt);
             }
             let mut events = open_event_sink(args)?;
+            let mut opts = harness::ServeOptions::new();
+            if let Some((_, sink)) = events.as_mut() {
+                opts = opts.sink(sink as &mut dyn EventSink);
+            }
             let out = harness::run_sharded_with(
                 &ts,
                 &arrivals,
@@ -249,7 +274,7 @@ fn serve(args: &Args) -> Result<()> {
                 &book,
                 &cost,
                 &cfg.scheduler,
-                events.as_mut().map(|(_, s)| s as &mut dyn EventSink),
+                opts,
             )?;
             close_event_sink(events)?;
             println!("{}", out.merged.report.one_line(cfg.policy.name()));
@@ -357,9 +382,9 @@ fn sweep(args: &Args) -> Result<()> {
     let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
 
     let mut csv = String::from(
-        "dataset,model,policy,replicas,dispatch,steal,preempt,swap,rate_req_s,rep,avg_ms_tok,\
-         p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,wasted_tokens,\
-         swapped_tokens,resumed_tokens\n",
+        "dataset,model,policy,replicas,dispatch,steal,preempt,swap,rerank,rate_req_s,rep,\
+         avg_ms_tok,p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,\
+         wasted_tokens,swapped_tokens,resumed_tokens\n",
     );
     for &kind in &suite {
         for &rate in &rates {
@@ -368,13 +393,14 @@ fn sweep(args: &Args) -> Result<()> {
                 let sc = &cfg.scheduler;
                 let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{}\n",
+                    "{dataset},{model},{},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{}\n",
                     kind.name().replace(' ', "_"),
                     cfg.scheduler.replicas,
                     cfg.scheduler.dispatch.name(),
                     cfg.scheduler.steal.name(),
                     cfg.scheduler.preempt.name(),
                     cfg.scheduler.swap.name(),
+                    cfg.scheduler.rerank.name(),
                     out.merged.report.avg_per_token_ms,
                     out.merged.report.p90_per_token_ms,
                     out.merged.report.per_token.p99,
@@ -538,6 +564,7 @@ fn replay(args: &Args) -> Result<()> {
             "span s",
             "occupancy",
             "boosts",
+            "rescores",
             "stolen in/out",
             "preempt rc/swap",
             "resumes",
@@ -554,6 +581,7 @@ fn replay(args: &Args) -> Result<()> {
             format!("{:.2}", r.span_ms() / 1e3),
             format!("{:.2}", r.occupancy()),
             r.boosts.to_string(),
+            r.rescores.to_string(),
             format!("{}/{}", r.stolen_in, r.stolen_out),
             format!("{}/{}", r.preempted_recompute, r.preempted_swap),
             r.resumes.to_string(),
@@ -668,6 +696,44 @@ mod tests {
             "occupancy {:.3} exceeds the single batch slot",
             r.occupancy()
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Flags shared by this test and the CI rerank smoke: noisy
+    /// predictor scores under the ranked pars policy, single slot near
+    /// saturation with preemption on.  Seed-deterministic, so if this
+    /// test sees `rescored` events the CI smoke on the same flags
+    /// cannot flake.
+    const RERANK_SMOKE_FLAGS: [&str; 19] = [
+        "serve", "--policy", "pars", "--max-batch", "1", "--rate", "6", "--n", "300",
+        "--preempt", "arrival", "--preempt-margin", "1", "--rerank", "interval(50)",
+        "--score-noise", "0.5", "--seed", "20260730",
+    ];
+
+    #[test]
+    fn serve_with_rerank_emits_rescored_events() {
+        let dir = std::env::temp_dir().join("pars_rerank_events_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rerank_ev.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut argv: Vec<&str> = RERANK_SMOKE_FLAGS.to_vec();
+        argv.extend(["--events", &path_s]);
+        dispatch(&args(&argv)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut rescored = 0u64;
+        for line in body.lines() {
+            let v = crate::util::json::parse(line).expect("every line is valid JSON");
+            if v.get("event").unwrap().as_str().unwrap() == "rescored" {
+                // every rescored line carries a positive finite estimate
+                let rem = v.get("remaining").unwrap().as_f64().unwrap();
+                assert!(rem.is_finite() && rem > 0.0, "bad remaining {rem}");
+                rescored += 1;
+            }
+        }
+        assert!(rescored > 0, "rerank=interval(50) must emit rescored events");
+        // replay consumes the same log and counts the rescore passes
+        let book = crate::coordinator::ReplayBook::from_jsonl(&body).unwrap();
+        assert_eq!(book.replicas.iter().map(|r| r.rescores).sum::<u64>(), rescored);
         std::fs::remove_file(&path).ok();
     }
 

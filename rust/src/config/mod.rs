@@ -103,6 +103,43 @@ impl DispatchKind {
     }
 }
 
+/// One accepted variant of a `--steal|--preempt|--swap|--rerank` style
+/// mode flag: either a bare keyword (with its aliases) or a parametric
+/// `word(n)` form that also accepts `word:n` and `word=n` and rejects
+/// anything whose argument is not a plain unsigned integer.
+enum ModeVariant<T> {
+    Bare(&'static [&'static str], T),
+    Param { word: &'static str, noun: &'static str, example: &'static str, make: fn(usize) -> T },
+}
+
+/// Shared parser behind every mode flag — the per-enum copies collapsed
+/// into one table-driven helper with uniform error messages: an
+/// unrecognised word reports `unknown <what> mode ... (<usage>)`, a
+/// malformed parameter reports `<what> <word> needs <noun>, e.g.
+/// <example>`.  Matching is case-insensitive; bare variants are tried
+/// before parametric prefixes.
+fn parse_mode<T: Copy>(what: &str, usage: &str, variants: &[ModeVariant<T>], s: &str) -> Result<T> {
+    let t = s.to_ascii_lowercase();
+    for v in variants {
+        match *v {
+            ModeVariant::Bare(words, out) => {
+                if words.contains(&t.as_str()) {
+                    return Ok(out);
+                }
+            }
+            ModeVariant::Param { word, noun, example, make } => {
+                let Some(rest) = t.strip_prefix(word) else { continue };
+                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
+                return match inner.trim().parse::<usize>() {
+                    Ok(n) => Ok(make(n)),
+                    Err(_) => bail!("{what} {word} needs {noun}, e.g. {example}: {s:?}"),
+                };
+            }
+        }
+    }
+    bail!("unknown {what} mode {s:?} ({usage})")
+}
+
 /// When idle replicas may pull queued work from overloaded siblings
 /// (cross-replica work stealing; corrects dispatch-time mis-routing the
 /// way post-admission rescheduling systems do).
@@ -120,23 +157,21 @@ pub enum StealMode {
 
 impl StealMode {
     pub fn parse(s: &str) -> Result<Self> {
-        let t = s.to_ascii_lowercase();
-        Ok(match t.as_str() {
-            "off" | "none" => StealMode::Off,
-            "idle" => StealMode::Idle,
-            other => {
-                let Some(rest) = other.strip_prefix("threshold") else {
-                    bail!("unknown steal mode {s:?} (off | idle | threshold(n))");
-                };
-                // accept threshold(n) / threshold:n / threshold=n, but
-                // reject anything that is not a plain integer in between
-                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
-                match inner.trim().parse::<usize>() {
-                    Ok(n) => StealMode::Threshold(n),
-                    Err(_) => bail!("steal threshold needs a count, e.g. threshold(4): {s:?}"),
-                }
-            }
-        })
+        parse_mode(
+            "steal",
+            "off | idle | threshold(n)",
+            &[
+                ModeVariant::Bare(&["off", "none"], StealMode::Off),
+                ModeVariant::Bare(&["idle"], StealMode::Idle),
+                ModeVariant::Param {
+                    word: "threshold",
+                    noun: "a count",
+                    example: "threshold(4)",
+                    make: StealMode::Threshold,
+                },
+            ],
+            s,
+        )
     }
 
     pub fn name(&self) -> String {
@@ -175,21 +210,21 @@ pub enum PreemptMode {
 
 impl PreemptMode {
     pub fn parse(s: &str) -> Result<Self> {
-        let t = s.to_ascii_lowercase();
-        Ok(match t.as_str() {
-            "off" | "none" => PreemptMode::Off,
-            "arrival" => PreemptMode::Arrival,
-            other => {
-                let Some(rest) = other.strip_prefix("pressure") else {
-                    bail!("unknown preempt mode {s:?} (off | arrival | pressure(n))");
-                };
-                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
-                match inner.trim().parse::<usize>() {
-                    Ok(n) => PreemptMode::Pressure(n),
-                    Err(_) => bail!("preempt pressure needs a depth, e.g. pressure(4): {s:?}"),
-                }
-            }
-        })
+        parse_mode(
+            "preempt",
+            "off | arrival | pressure(n)",
+            &[
+                ModeVariant::Bare(&["off", "none"], PreemptMode::Off),
+                ModeVariant::Bare(&["arrival"], PreemptMode::Arrival),
+                ModeVariant::Param {
+                    word: "pressure",
+                    noun: "a depth",
+                    example: "pressure(4)",
+                    make: PreemptMode::Pressure,
+                },
+            ],
+            s,
+        )
     }
 
     pub fn name(&self) -> String {
@@ -230,20 +265,20 @@ pub enum SwapMode {
 
 impl SwapMode {
     pub fn parse(s: &str) -> Result<Self> {
-        let t = s.to_ascii_lowercase();
-        Ok(match t.as_str() {
-            "off" | "none" => SwapMode::Off,
-            other => {
-                let Some(rest) = other.strip_prefix("host") else {
-                    bail!("unknown swap mode {s:?} (off | host(blocks))");
-                };
-                let inner = rest.trim_start_matches(['(', ':', '=']).trim_end_matches(')');
-                match inner.trim().parse::<usize>() {
-                    Ok(n) => SwapMode::Host(n),
-                    Err(_) => bail!("swap pool needs a block count, e.g. host(256): {s:?}"),
-                }
-            }
-        })
+        parse_mode(
+            "swap",
+            "off | host(blocks)",
+            &[
+                ModeVariant::Bare(&["off", "none"], SwapMode::Off),
+                ModeVariant::Param {
+                    word: "host",
+                    noun: "a block count",
+                    example: "host(256)",
+                    make: SwapMode::Host,
+                },
+            ],
+            s,
+        )
     }
 
     pub fn name(&self) -> String {
@@ -264,6 +299,66 @@ impl SwapMode {
     /// Representative modes for sweeps/tests.
     pub fn all() -> [SwapMode; 2] {
         [SwapMode::Off, SwapMode::Host(256)]
+    }
+}
+
+/// When the scheduler refreshes each job's predicted-remaining work
+/// from observed decode progress and re-keys the waiting queue under
+/// the refreshed estimates (continuous re-ranking — the iterative
+/// scheduling of ELIS / learning-to-rank serving, where decode
+/// progress is live evidence about remaining length).
+///
+/// With re-ranking on, preemption victims re-enter the queue under
+/// their refreshed remaining-work estimate instead of their
+/// admission-time score, the preemption victim scan ranks running jobs
+/// by refreshed estimates, and work stealing (which takes the
+/// lowest-priority queue entry) automatically sees the re-keyed order.
+/// Arrival, boost, starvation and suspension state survive every
+/// re-key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RerankMode {
+    /// Score once at admission, never refresh (the pre-rerank
+    /// behaviour, bit-for-bit).
+    Off,
+    /// Refresh estimates and re-key the waiting queue every `n` ms of
+    /// the replica clock (plus at every preemption, so a displaced job
+    /// is always re-queued under current evidence).
+    Interval(usize),
+    /// Refresh after every decode iteration (the per-token limit of
+    /// `interval`; highest fidelity, highest re-key churn).
+    OnToken,
+}
+
+impl RerankMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        parse_mode(
+            "rerank",
+            "off | interval(ms) | on_token",
+            &[
+                ModeVariant::Bare(&["off", "none"], RerankMode::Off),
+                ModeVariant::Bare(&["on_token", "on-token", "ontoken"], RerankMode::OnToken),
+                ModeVariant::Param {
+                    word: "interval",
+                    noun: "a period in ms",
+                    example: "interval(50)",
+                    make: RerankMode::Interval,
+                },
+            ],
+            s,
+        )
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            RerankMode::Off => "off".to_string(),
+            RerankMode::Interval(n) => format!("interval({n})"),
+            RerankMode::OnToken => "on_token".to_string(),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [RerankMode; 3] {
+        [RerankMode::Off, RerankMode::Interval(50), RerankMode::OnToken]
     }
 }
 
@@ -349,6 +444,16 @@ pub struct SchedulerConfig {
     /// Host↔device swap bandwidth (GB/s) the SimEngine cost model
     /// charges on suspend/resume (PJRT pays the real copy time).
     pub swap_bw_gbps: f64,
+    /// Continuous re-ranking: when length predictions are refreshed
+    /// from decode progress and the waiting queue re-keyed under them.
+    pub rerank: RerankMode,
+    /// Calibrated prediction-error injection (robustness grid): σ of
+    /// the multiplicative lognormal noise applied to every
+    /// length-predicting admission key (`key · exp(σ·z)`, `z` a
+    /// deterministic per-request standard normal).  0 draws nothing and
+    /// is bitwise identical to a noiseless run; FCFS keys (arrival
+    /// times, not length predictions) are never perturbed.
+    pub score_noise: f64,
     /// Capacity of the bounded in-memory event log a default
     /// [`ServeSession`] keeps (most recent events win; 0 keeps none).
     /// Sessions created with an explicit sink ignore it.
@@ -374,6 +479,8 @@ impl Default for SchedulerConfig {
             max_preemptions: 2,
             swap: SwapMode::Off,
             swap_bw_gbps: 16.0,
+            rerank: RerankMode::Off,
+            score_noise: 0.0,
             event_log_capacity: 16_384,
         }
     }
@@ -522,6 +629,12 @@ impl Config {
         if let Some(v) = doc.get_num("scheduler", "swap_bw_gbps") {
             c.scheduler.swap_bw_gbps = v;
         }
+        if let Some(v) = doc.get_str("scheduler", "rerank") {
+            c.scheduler.rerank = RerankMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_num("scheduler", "score_noise") {
+            c.scheduler.score_noise = v;
+        }
         if let Some(v) = doc.get_num("scheduler", "event_log_capacity") {
             if v < 0.0 || v.fract() != 0.0 {
                 bail!("scheduler.event_log_capacity must be a non-negative integer (got {v})");
@@ -575,6 +688,12 @@ impl Config {
             bail!(
                 "scheduler.swap_bw_gbps must be a positive finite bandwidth (got {})",
                 self.scheduler.swap_bw_gbps
+            );
+        }
+        if !self.scheduler.score_noise.is_finite() || self.scheduler.score_noise < 0.0 {
+            bail!(
+                "scheduler.score_noise must be a non-negative finite sigma (got {})",
+                self.scheduler.score_noise
             );
         }
         if self.scheduler.replica_caps.len() > self.scheduler.replicas {
@@ -875,6 +994,102 @@ mod tests {
         for m in SwapMode::all() {
             assert_eq!(SwapMode::parse(&m.name()).unwrap(), m);
         }
+    }
+
+    #[test]
+    fn parse_rerank_knobs() {
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            rerank = "interval(50)"
+            score_noise = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.rerank, RerankMode::Interval(50));
+        assert_eq!(c.scheduler.score_noise, 0.5);
+        // defaults: re-ranking off, no injected noise
+        let d = SchedulerConfig::default();
+        assert_eq!(d.rerank, RerankMode::Off);
+        assert_eq!(d.score_noise, 0.0);
+    }
+
+    #[test]
+    fn rerank_mode_parse_and_names() {
+        assert_eq!(RerankMode::parse("off").unwrap(), RerankMode::Off);
+        assert_eq!(RerankMode::parse("NONE").unwrap(), RerankMode::Off);
+        assert_eq!(RerankMode::parse("on_token").unwrap(), RerankMode::OnToken);
+        assert_eq!(RerankMode::parse("on-token").unwrap(), RerankMode::OnToken);
+        assert_eq!(RerankMode::parse("interval(50)").unwrap(), RerankMode::Interval(50));
+        assert_eq!(RerankMode::parse("interval:25").unwrap(), RerankMode::Interval(25));
+        assert_eq!(RerankMode::parse("interval=0").unwrap(), RerankMode::Interval(0));
+        assert!(RerankMode::parse("interval").is_err());
+        assert!(RerankMode::parse("interval(2.5)").is_err());
+        assert!(RerankMode::parse("interval(-3)").is_err());
+        assert!(RerankMode::parse("eager").is_err());
+        for m in RerankMode::all() {
+            assert_eq!(RerankMode::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_score_noise() {
+        assert!(Config::from_toml("[scheduler]\nscore_noise = -0.5").is_err());
+        assert!(Config::from_toml("[scheduler]\nscore_noise = 0").is_ok());
+        assert!(Config::from_toml("[scheduler]\nscore_noise = 1.5").is_ok());
+        assert!(Config::from_toml("[scheduler]\nrerank = \"sometimes\"").is_err());
+    }
+
+    /// Every accepted and rejected string the four per-enum parsers
+    /// handled before they were collapsed into [`parse_mode`] — the
+    /// shared helper must keep each of them byte-for-byte.
+    #[test]
+    fn parse_mode_helper_preserves_every_legacy_string() {
+        // accepted, per mode family
+        assert_eq!(StealMode::parse("off").unwrap(), StealMode::Off);
+        assert_eq!(StealMode::parse("none").unwrap(), StealMode::Off);
+        assert_eq!(StealMode::parse("idle").unwrap(), StealMode::Idle);
+        assert_eq!(StealMode::parse("threshold(7)").unwrap(), StealMode::Threshold(7));
+        assert_eq!(StealMode::parse("threshold:7").unwrap(), StealMode::Threshold(7));
+        assert_eq!(StealMode::parse("threshold=7").unwrap(), StealMode::Threshold(7));
+        assert_eq!(PreemptMode::parse("off").unwrap(), PreemptMode::Off);
+        assert_eq!(PreemptMode::parse("none").unwrap(), PreemptMode::Off);
+        assert_eq!(PreemptMode::parse("arrival").unwrap(), PreemptMode::Arrival);
+        assert_eq!(PreemptMode::parse("pressure(3)").unwrap(), PreemptMode::Pressure(3));
+        assert_eq!(PreemptMode::parse("pressure:3").unwrap(), PreemptMode::Pressure(3));
+        assert_eq!(PreemptMode::parse("pressure=3").unwrap(), PreemptMode::Pressure(3));
+        assert_eq!(SwapMode::parse("off").unwrap(), SwapMode::Off);
+        assert_eq!(SwapMode::parse("none").unwrap(), SwapMode::Off);
+        assert_eq!(SwapMode::parse("host(256)").unwrap(), SwapMode::Host(256));
+        assert_eq!(SwapMode::parse("host:256").unwrap(), SwapMode::Host(256));
+        assert_eq!(SwapMode::parse("host=0").unwrap(), SwapMode::Host(0));
+        // case-insensitivity survives the refactor
+        assert_eq!(StealMode::parse("IDLE").unwrap(), StealMode::Idle);
+        assert_eq!(PreemptMode::parse("ARRIVAL").unwrap(), PreemptMode::Arrival);
+        assert_eq!(SwapMode::parse("HOST(256)").unwrap(), SwapMode::Host(256));
+        assert_eq!(RerankMode::parse("ON_TOKEN").unwrap(), RerankMode::OnToken);
+        // rejected: bare parametric words, malformed counts, unknowns
+        for bad in ["threshold", "threshold(2.5)", "threshold(-3)", "threshold(1)(2)", "eager"] {
+            assert!(StealMode::parse(bad).is_err(), "steal must reject {bad:?}");
+        }
+        for bad in ["pressure", "pressure(2.5)", "pressure(-1)", "sometimes"] {
+            assert!(PreemptMode::parse(bad).is_err(), "preempt must reject {bad:?}");
+        }
+        for bad in ["host", "host(2.5)", "host(-3)", "disk(4)"] {
+            assert!(SwapMode::parse(bad).is_err(), "swap must reject {bad:?}");
+        }
+        for bad in ["interval", "interval(2.5)", "interval(-3)", "always"] {
+            assert!(RerankMode::parse(bad).is_err(), "rerank must reject {bad:?}");
+        }
+        // uniform error messages from the shared helper
+        let unknown = StealMode::parse("eager").unwrap_err().to_string();
+        assert!(unknown.starts_with("unknown steal mode"), "{unknown}");
+        let unknown = RerankMode::parse("always").unwrap_err().to_string();
+        assert!(unknown.starts_with("unknown rerank mode"), "{unknown}");
+        let malformed = PreemptMode::parse("pressure(x)").unwrap_err().to_string();
+        assert!(malformed.starts_with("preempt pressure needs"), "{malformed}");
+        let malformed = RerankMode::parse("interval(x)").unwrap_err().to_string();
+        assert!(malformed.starts_with("rerank interval needs"), "{malformed}");
     }
 
     #[test]

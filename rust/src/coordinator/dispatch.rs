@@ -70,6 +70,23 @@
 //!   (its KV lives on the victim replica's host pool) with the burned
 //!   progress carried on the `Stolen { wasted }` event, and every
 //!   conservation invariant holds (`tests/properties.rs`).
+//! * **Continuous re-ranking** (`[scheduler] rerank =
+//!   off|interval(ms)|on_token`) — admission scores once, so a
+//!   mispredicted-short long job keeps its wrong key forever: it
+//!   thrashes preemption until the anti-thrash cap, then blocks the
+//!   batch.  With re-ranking on, the [`ShrinkagePredictor`] folds each
+//!   running job's decode progress back into its estimate (a job that
+//!   outlives its prediction shrinks toward a conditional-tail
+//!   estimate), periodically re-keys the waiting queue in place
+//!   (arrival/boost/starvation state untouched), switches the
+//!   preemption victim scan and re-queue keys to refreshed
+//!   remaining-work, and reports every applied change as a `Rescored`
+//!   event.  Paired with the calibrated `--score-noise` knob this is
+//!   the prediction-error robustness axis: `fig_rerank` asserts
+//!   re-ranking recovers most of the oracle-SJF win under noisy
+//!   predictors, and `rerank = off` leaves the serve loop bitwise
+//!   untouched (pinned by `tests/sharded.rs`; FCFS keys are arrival
+//!   times, so re-ranking over FCFS is inert by construction).
 //!
 //! Since the session refactor the loop itself is **re-entrant**: the
 //! batch entry points (`serve` / `serve_stream`) are thin wrappers that
@@ -77,7 +94,7 @@
 //! makes — dispatch one arrival, steal, step the lagging replica — is a
 //! single [`ServeSession::tick`].  Lifecycle transitions (`Rejected` /
 //! `Dispatched` / `Admitted` / `FirstToken` / `Boosted` / `Stolen` /
-//! `Preempted` / `Completed`) are emitted through the session's
+//! `Preempted` / `Rescored` / `Completed`) are emitted through the session's
 //! [`EventSink`]; the wrappers use a [`NullSink`], so batch behaviour
 //! stays bitwise what the frozen reference loops in `tests/sharded.rs`
 //! pin.
@@ -86,8 +103,9 @@ use std::collections::{HashMap, VecDeque};
 
 use anyhow::Context;
 
-use crate::config::{DispatchKind, PreemptMode, SchedulerConfig, StealMode};
+use crate::config::{DispatchKind, PreemptMode, RerankMode, SchedulerConfig, StealMode};
 use crate::coordinator::events::{EventSink, NullSink, PreemptKind, ServeEvent, SessionCtx};
+use crate::coordinator::predictor::{Predictor, ShrinkagePredictor};
 use crate::coordinator::queue::{QueuedRequest, SuspendedEntry};
 use crate::coordinator::session::ServeSession;
 use crate::engine::kv_cache::BLOCK_TOKENS;
@@ -102,8 +120,10 @@ struct InFlight {
     admitted_ms: f64,
     first_token_ms: Option<f64>,
     boosted: bool,
-    /// Frozen policy key, kept so an eviction can re-queue the request
-    /// without re-scoring it (requests are scored once, at admission).
+    /// Priority key: frozen at admission (requests are scored once) so
+    /// an eviction can re-queue the request without re-scoring it.
+    /// With continuous re-ranking on, rescore passes refresh it to the
+    /// predictor's current remaining-work estimate.
     key: f64,
     /// Decode tokens generated so far (mirrors the engine's slot state;
     /// the preemption victim scan needs remaining = target − generated).
@@ -154,6 +174,9 @@ struct Replica<E: Engine> {
     peak_waiting: usize,
     t0: f64,
     makespan_ms: f64,
+    /// Engine-clock time of the last continuous re-ranking pass
+    /// (`rerank = interval(ms)` pacing; unused in the other modes).
+    last_rescore_ms: f64,
 }
 
 impl<E: Engine> Replica<E> {
@@ -183,6 +206,7 @@ impl<E: Engine> Replica<E> {
             peak_waiting: 0,
             t0,
             makespan_ms: t0,
+            last_rescore_ms: t0,
         }
     }
 
@@ -224,14 +248,15 @@ impl<E: Engine> Replica<E> {
     }
 
     /// One scheduling iteration: ingest due arrivals, re-apply the
-    /// starvation guard, top up the running batch in policy order, then
-    /// run one decode step (or hop the clock to the next arrival).
-    /// `idx` is this replica's fleet index; every lifecycle transition
-    /// is reported through `ctx` (a pure observer — the sink never
-    /// changes a decision).
+    /// starvation guard, run a continuous re-ranking pass when due, top
+    /// up the running batch in policy order, then run one decode step
+    /// (or hop the clock to the next arrival).  `idx` is this replica's
+    /// fleet index; every lifecycle transition is reported through
+    /// `ctx` (a pure observer — the sink never changes a decision).
     fn step(
         &mut self,
         sched: &SchedulerConfig,
+        predictor: &mut ShrinkagePredictor<'_>,
         idx: usize,
         ctx: &mut SessionCtx<'_>,
     ) -> Result<()> {
@@ -247,6 +272,21 @@ impl<E: Engine> Replica<E> {
         // 2. starvation guard
         for id in self.waiting.apply_starvation_guard(now) {
             ctx.emit(ServeEvent::Boosted { id, replica: idx, t_ms: now });
+        }
+
+        // 2b. continuous re-ranking: fold decode progress back into the
+        //     estimates and re-key queued work BEFORE admission, so this
+        //     step's admission order already sees the refreshed keys
+        if predictor.refines() {
+            let due = match sched.rerank {
+                RerankMode::Off => false,
+                RerankMode::OnToken => true,
+                RerankMode::Interval(ms) => now - self.last_rescore_ms >= ms as f64,
+            };
+            if due {
+                self.rescore(predictor, idx, now, ctx);
+                self.last_rescore_ms = now;
+            }
         }
 
         // 3. admission (continuous: any free slot; static: empty batch),
@@ -330,7 +370,7 @@ impl<E: Engine> Replica<E> {
                         },
                     );
                 }
-                if !self.try_preempt(sched, idx, ctx) {
+                if !self.try_preempt(sched, predictor, idx, ctx) {
                     break;
                 }
             }
@@ -370,6 +410,7 @@ impl<E: Engine> Replica<E> {
                     };
                     ctx.emit(ServeEvent::Completed { replica: idx, record: record.clone() });
                     self.recorder.push(record);
+                    predictor.forget(f.req.id);
                 }
             }
         } else if !self.waiting.is_empty() {
@@ -386,6 +427,48 @@ impl<E: Engine> Replica<E> {
             self.engine.advance_to(front.req.arrival_ms);
         }
         Ok(())
+    }
+
+    /// One continuous re-ranking pass: fold every running job's decode
+    /// progress into the predictor (slot order — deterministic), refresh
+    /// each running job's key to its remaining-work estimate, then
+    /// re-key the waiting queue under the refreshed estimates (an entry
+    /// with no decode evidence keeps its admission key; a suspended
+    /// entry's retained progress is credited, a recompute re-queue's is
+    /// not).  Each estimate that actually changed is reported as a
+    /// `Rescored` event.  Only called when the predictor refines
+    /// (`rerank != off` and a length-predicting policy) — `rerank =
+    /// off` never reaches this, keeping the serve loop bitwise what the
+    /// frozen reference loops pin.
+    fn rescore(
+        &mut self,
+        predictor: &mut ShrinkagePredictor<'_>,
+        idx: usize,
+        now: f64,
+        ctx: &mut SessionCtx<'_>,
+    ) {
+        let mut slots: Vec<usize> = self.running.keys().copied().collect();
+        slots.sort_unstable();
+        for slot in slots {
+            let f = self.running.get_mut(&slot).unwrap();
+            let rem = predictor.observe(f.req.id, f.generated);
+            if rem.total_cmp(&f.key) != std::cmp::Ordering::Equal {
+                f.key = rem;
+                ctx.emit(ServeEvent::Rescored {
+                    id: f.req.id,
+                    replica: idx,
+                    remaining: rem,
+                    t_ms: now,
+                });
+            }
+        }
+        let changed = self.waiting.rescore(|q| {
+            let kept = q.suspended.as_ref().map(|e| e.sus.generated).unwrap_or(0);
+            predictor.remaining(q.req.id, kept)
+        });
+        for (id, remaining) in changed {
+            ctx.emit(ServeEvent::Rescored { id, replica: idx, remaining, t_ms: now });
+        }
     }
 
     /// One score-aware preemption attempt: when the batch is full,
@@ -422,13 +505,21 @@ impl<E: Engine> Replica<E> {
     ///   effectively preemption-free: the victim always arrived first.)
     ///
     /// Lengths are the oracle draws standing in for predictor output —
-    /// the same substitution the dispatch load keys make (module doc).
-    /// `preempt_margin >= 1` (validated) keeps eviction KV-sound: the
-    /// candidate's full reservation always fits in the blocks the victim
-    /// frees, because cand_total < victim_remaining <= victim_total.
+    /// the same substitution the dispatch load keys make (module doc) —
+    /// unless continuous re-ranking is on, in which case both sides of
+    /// the margin check come from the [`ShrinkagePredictor`]: the
+    /// victim's refreshed remaining-work estimate versus the candidate's
+    /// (possibly refreshed, possibly noised) key, so victim selection
+    /// degrades honestly with predictor quality instead of peeking at
+    /// the oracle.  `preempt_margin >= 1` (validated) keeps eviction
+    /// KV-sound: the candidate's full reservation always fits in the
+    /// blocks the victim frees, because cand_total < victim_remaining
+    /// <= victim_total (the explicit block-fit check below covers the
+    /// estimated path, where that chain is only as good as the scores).
     fn try_preempt(
         &mut self,
         sched: &SchedulerConfig,
+        predictor: &mut ShrinkagePredictor<'_>,
         idx: usize,
         ctx: &mut SessionCtx<'_>,
     ) -> bool {
@@ -440,12 +531,13 @@ impl<E: Engine> Replica<E> {
         if !sched.continuous || self.engine.free_slots() > 0 || self.waiting.len() < min_queue {
             return false;
         }
+        let refine = predictor.refines();
         // victim scan: most remaining work wins, slot index breaks ties
         // (sorted scan — HashMap iteration order is not deterministic)
         let now = self.engine.now_ms();
         let mut slots: Vec<usize> = self.running.keys().copied().collect();
         slots.sort_unstable();
-        let mut victim: Option<(usize, u32)> = None;
+        let mut victim: Option<(usize, f64)> = None;
         for slot in slots {
             let f = &self.running[&slot];
             // skip boosted jobs, jobs at the anti-thrash cap, and jobs
@@ -459,7 +551,15 @@ impl<E: Engine> Replica<E> {
             {
                 continue;
             }
-            let remaining = f.req.target_len.saturating_sub(f.generated);
+            // remaining predicted work: the predictor's refreshed
+            // estimate (key units) with re-ranking on, the oracle draw
+            // otherwise (u32 → f64 is exact, so the off-path comparisons
+            // are bit-for-bit the pre-rerank integer scan)
+            let remaining = if refine {
+                predictor.observe(f.req.id, f.generated)
+            } else {
+                f.req.target_len.saturating_sub(f.generated) as f64
+            };
             let longer = match victim {
                 None => true,
                 Some((_, best)) => remaining > best,
@@ -474,8 +574,15 @@ impl<E: Engine> Replica<E> {
         let Some(cand) = self.waiting.pop() else {
             return false;
         };
-        let undercuts =
-            (cand.req.target_len.max(1) as f64) * sched.preempt_margin < remaining as f64;
+        // candidate work in the same units as `remaining` (floored at
+        // one token either way, so a zero/degenerate estimate cannot
+        // make the candidate look free)
+        let cand_work = if refine {
+            cand.key.max(1.0)
+        } else {
+            cand.req.target_len.max(1) as f64
+        };
+        let undercuts = cand_work * sched.preempt_margin < remaining;
         if !undercuts {
             self.waiting.unpop(cand);
             return false;
@@ -492,7 +599,14 @@ impl<E: Engine> Replica<E> {
             self.waiting.unpop(cand);
             return false;
         }
-        if !cand.pops_before(f.boosted, f.key, f.req.arrival_ms, f.req.id) {
+        // with re-ranking on the victim re-queues under its refreshed
+        // remaining-work estimate, so that is what the probe ranks
+        // against; probing with the kept-progress estimate is the
+        // conservative choice — a recompute re-queue only keys higher
+        // (outranking the candidate even less), so a pass here can
+        // never become thrash, only a refusal can be too cautious
+        let vic_key = if refine { remaining } else { f.key };
+        if !cand.pops_before(f.boosted, vic_key, f.req.arrival_ms, f.req.id) {
             // the re-queued victim would outrank the candidate and be
             // re-admitted immediately — pure thrash, skip (probed via
             // the Copy ordering fields; no request clone on this path,
@@ -527,12 +641,33 @@ impl<E: Engine> Replica<E> {
         self.preempted += 1;
         self.wasted_decode_tokens += wasted as u64;
         ctx.emit(ServeEvent::Preempted { id: f.req.id, replica: idx, wasted, mode, t_ms: now });
+        // with re-ranking on, the victim re-enters the queue under its
+        // refreshed remaining-work estimate — a swap suspension credits
+        // the retained progress, a recompute eviction does not (the
+        // work is gone but the high-water evidence survives, which is
+        // precisely what stops a mispredicted-short long job from
+        // thrashing admission forever); rerank = off re-queues under
+        // the frozen admission key, bitwise the pre-rerank path
+        let requeue_key = if refine {
+            let kept = if suspended.is_some() { f.generated } else { 0 };
+            predictor.remaining(f.req.id, kept).unwrap_or(f.key)
+        } else {
+            f.key
+        };
+        if refine && requeue_key.total_cmp(&f.key) != std::cmp::Ordering::Equal {
+            ctx.emit(ServeEvent::Rescored {
+                id: f.req.id,
+                replica: idx,
+                remaining: requeue_key,
+                t_ms: now,
+            });
+        }
         let total = (f.req.prompt_len + f.req.target_len) as u64;
         self.running_tokens = self.running_tokens.saturating_sub(total);
         self.queued_tokens += total;
         self.waiting.unpop(cand);
         self.waiting.push_scored(QueuedRequest {
-            key: f.key,
+            key: requeue_key,
             boosted: f.boosted,
             preemptions: f.preemptions + 1,
             suspended,
@@ -589,7 +724,12 @@ pub struct ShardedOutcome {
 /// cross-replica dispatch policy.
 pub struct ShardedCoordinator<'p, E: Engine> {
     replicas: Vec<Replica<E>>,
-    policy: &'p dyn Policy,
+    /// The online scoring surface wrapping the scheduling policy:
+    /// admission keys (score-once, optionally noised by
+    /// `--score-noise`) plus the decode-progress refinement continuous
+    /// re-ranking consumes.  Every key the loop uses flows through
+    /// this — `Policy::key` has no other call site in the loop.
+    predictor: ShrinkagePredictor<'p>,
     dispatch: DispatchKind,
     sched: SchedulerConfig,
     rr_cursor: usize,
@@ -608,13 +748,14 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
     ) -> Self {
         assert!(!engines.is_empty(), "sharded coordinator needs at least one replica");
         let starvation_ms = sched.starvation_ms;
+        let predictor = ShrinkagePredictor::new(policy, &sched);
         let replicas: Vec<Replica<E>> =
             engines.into_iter().map(|e| Replica::new(e, starvation_ms)).collect();
         let fleet_max_kv_blocks = replicas.iter().map(|r| r.kv_blocks).max().unwrap_or(1);
         let fleet_max_slots = replicas.iter().map(|r| r.slots).max().unwrap_or(1);
         ShardedCoordinator {
             replicas,
-            policy,
+            predictor,
             dispatch,
             sched,
             rr_cursor: 0,
@@ -880,12 +1021,12 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             ctx.emit(ServeEvent::Rejected { id: req.id, t_ms: decision_ms });
             return None;
         }
-        let key = self.policy.key(&req);
+        let key = self.predictor.score(&req);
         let idx = self.pick_replica(total);
         let r = &mut self.replicas[idx];
         r.dispatched += 1;
         r.queued_tokens += total as u64;
-        ctx.emit(ServeEvent::Dispatched { id: req.id, replica: idx, t_ms: decision_ms });
+        ctx.emit(ServeEvent::Dispatched { id: req.id, replica: idx, key, t_ms: decision_ms });
         r.inbox.push_back(QueuedRequest {
             req,
             key,
@@ -896,9 +1037,11 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         Some(idx)
     }
 
-    /// Run one scheduling iteration on replica `idx`.
+    /// Run one scheduling iteration on replica `idx` (disjoint field
+    /// borrows hand the replica both the config and the predictor).
     pub(crate) fn step_replica(&mut self, idx: usize, ctx: &mut SessionCtx<'_>) -> Result<()> {
-        self.replicas[idx].step(&self.sched, idx, ctx)
+        let ShardedCoordinator { replicas, predictor, sched, .. } = self;
+        replicas[idx].step(sched, predictor, idx, ctx)
     }
 
     /// Merge per-replica recorders into the fleet outcome + breakdowns.
@@ -1596,6 +1739,108 @@ mod tests {
             );
         }
         assert!(recs.iter().any(|r| r.boosted), "trace too gentle: nothing boosted");
+    }
+
+    fn rerank_sched(rerank: RerankMode) -> SchedulerConfig {
+        SchedulerConfig { rerank, ..preempt_sched(PreemptMode::Arrival) }
+    }
+
+    /// The score-once pathology continuous re-ranking exists to fix: a
+    /// long job whose admission score says "short".  Preemption's margin
+    /// check would fire, but the victim would re-queue under its frozen
+    /// (wrong, low) key, outrank every genuinely-short job and bounce
+    /// straight back — so the thrash check refuses every eviction and
+    /// the burst serves behind the full long job.
+    fn mispredicted_long_then_burst(n_short: u64) -> Vec<Request> {
+        let mut long = mk_req(0, 0.0, 1000);
+        long.score = 5.0; // predicted shorter than the 10-token shorts
+        let mut v = vec![long];
+        v.extend((1..=n_short).map(|i| mk_req(i, 40.0, 10)));
+        v
+    }
+
+    #[test]
+    fn rerank_recovers_from_a_mispredicted_long_job() {
+        let off =
+            run(&rerank_sched(RerankMode::Off), PolicyKind::Pars, mispredicted_long_then_burst(40), 4096);
+        assert_eq!(off.merged.report.n_requests, 41);
+        assert_eq!(
+            off.merged.preemptions, 0,
+            "score-once: the frozen low key must make every eviction look like thrash"
+        );
+        for rerank in [RerankMode::Interval(5), RerankMode::OnToken] {
+            let on =
+                run(&rerank_sched(rerank), PolicyKind::Pars, mispredicted_long_then_burst(40), 4096);
+            assert_eq!(on.merged.report.n_requests, 41, "{rerank:?}");
+            assert!(
+                on.merged.preemptions > 0,
+                "{rerank:?}: the refreshed estimate must unlock the eviction"
+            );
+            assert!(
+                on.merged.report.e2e.mean < off.merged.report.e2e.mean,
+                "{rerank:?} must strictly cut mean e2e: off={:.1} on={:.1}",
+                off.merged.report.e2e.mean,
+                on.merged.report.e2e.mean
+            );
+            assert!(
+                on.merged.report.ttft.p99 < off.merged.report.ttft.p99,
+                "{rerank:?} must strictly cut p99 TTFT: off={:.1} on={:.1}",
+                off.merged.report.ttft.p99,
+                on.merged.report.ttft.p99
+            );
+            // the long job was evicted and finished last, not first
+            let long = on.per_replica[0].records.iter().find(|r| r.id == 0).unwrap();
+            assert!(long.preemptions >= 1, "{rerank:?}");
+        }
+    }
+
+    #[test]
+    fn rerank_emits_rescored_events_only_when_on() {
+        use crate::coordinator::events::ServeEvent;
+        let run_events = |rerank: RerankMode| {
+            let s = rerank_sched(rerank);
+            let policy = make_policy(PolicyKind::Pars);
+            let mut coord = ShardedCoordinator::new(
+                engines(&s, 4096),
+                policy.as_ref(),
+                s.dispatch,
+                s.clone(),
+            );
+            let mut events: Vec<ServeEvent> = Vec::new();
+            let mut session = coord.session_with(&mut events);
+            for req in mispredicted_long_then_burst(10) {
+                session.submit(req);
+            }
+            session.finish().unwrap();
+            events.iter().filter(|e| matches!(e, ServeEvent::Rescored { .. })).count()
+        };
+        assert_eq!(run_events(RerankMode::Off), 0, "rerank=off must never rescore");
+        assert!(run_events(RerankMode::Interval(5)) > 0);
+        assert!(run_events(RerankMode::OnToken) > 0);
+    }
+
+    #[test]
+    fn rerank_over_fcfs_is_inert() {
+        // FCFS keys are arrival times — nothing to refine; every rerank
+        // mode must reproduce rerank=off to the last record
+        let off = run(
+            &rerank_sched(RerankMode::Off),
+            PolicyKind::Fcfs,
+            mispredicted_long_then_burst(20),
+            4096,
+        );
+        for rerank in [RerankMode::Interval(5), RerankMode::OnToken] {
+            let on =
+                run(&rerank_sched(rerank), PolicyKind::Fcfs, mispredicted_long_then_burst(20), 4096);
+            assert_eq!(on.merged.preemptions, 0, "{rerank:?}");
+            assert_eq!(on.merged.makespan_ms, off.merged.makespan_ms, "{rerank:?}");
+            assert_eq!(on.merged.report.e2e.mean, off.merged.report.e2e.mean, "{rerank:?}");
+            assert_eq!(
+                format!("{:?}", on.per_replica[0].records),
+                format!("{:?}", off.per_replica[0].records),
+                "{rerank:?}"
+            );
+        }
     }
 
     #[test]

@@ -61,16 +61,20 @@ impl PreemptKind {
 /// closes an admission round early (its `mode` says whether progress
 /// was preserved), `Stolen` moves a *queued* request between replicas
 /// (downgrading a suspended one to recompute — the `wasted` field
-/// carries the discarded progress), and `Boosted` marks the starvation
-/// guard firing — `tests/properties.rs` pins these conservation laws
-/// across the whole mode grid.
+/// carries the discarded progress), `Boosted` marks the starvation
+/// guard firing, and `Rescored` marks continuous re-ranking refreshing
+/// a queued request's remaining-work estimate (any number per request,
+/// never under `rerank = off`) — `tests/properties.rs` pins these
+/// conservation laws across the whole mode grid.
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
     /// No replica could ever hold the request (sequence budget or total
     /// KV capacity) — it never enters a queue.
     Rejected { id: u64, t_ms: f64 },
-    /// Routed to `replica`'s inbox by the dispatch policy.
-    Dispatched { id: u64, replica: usize, t_ms: f64 },
+    /// Routed to `replica`'s inbox by the dispatch policy.  `key` is the
+    /// admission-time priority (the predictor's score — a predicted
+    /// length for SJF-family policies, the arrival time under FCFS).
+    Dispatched { id: u64, replica: usize, key: f64, t_ms: f64 },
     /// Admitted into `replica`'s running batch (prefill done).
     Admitted { id: u64, replica: usize, t_ms: f64 },
     /// First decode token of the current admission round.
@@ -91,6 +95,11 @@ pub enum ServeEvent {
     /// with `restored` decode tokens of preserved progress (no
     /// re-prefill, decode continues where it left off).
     Resumed { id: u64, replica: usize, restored: u32, t_ms: f64 },
+    /// Continuous re-ranking refreshed the queued request's priority:
+    /// `remaining` is the predictor's new remaining-work estimate (key
+    /// units), already applied to the waiting queue's ordering.  Only
+    /// emitted when `rerank != off` and the estimate actually changed.
+    Rescored { id: u64, replica: usize, remaining: f64, t_ms: f64 },
     /// The request finished; `record` is exactly what the replica's
     /// recorder keeps (final-admission timestamps).
     Completed { replica: usize, record: RequestRecord },
@@ -107,7 +116,8 @@ impl ServeEvent {
             | ServeEvent::Boosted { id, .. }
             | ServeEvent::Stolen { id, .. }
             | ServeEvent::Preempted { id, .. }
-            | ServeEvent::Resumed { id, .. } => *id,
+            | ServeEvent::Resumed { id, .. }
+            | ServeEvent::Rescored { id, .. } => *id,
             ServeEvent::Completed { record, .. } => record.id,
         }
     }
@@ -123,6 +133,7 @@ impl ServeEvent {
             ServeEvent::Stolen { .. } => "stolen",
             ServeEvent::Preempted { .. } => "preempted",
             ServeEvent::Resumed { .. } => "resumed",
+            ServeEvent::Rescored { .. } => "rescored",
             ServeEvent::Completed { .. } => "completed",
         }
     }
@@ -137,7 +148,8 @@ impl ServeEvent {
             | ServeEvent::Boosted { t_ms, .. }
             | ServeEvent::Stolen { t_ms, .. }
             | ServeEvent::Preempted { t_ms, .. }
-            | ServeEvent::Resumed { t_ms, .. } => *t_ms,
+            | ServeEvent::Resumed { t_ms, .. }
+            | ServeEvent::Rescored { t_ms, .. } => *t_ms,
             ServeEvent::Completed { record, .. } => record.completed_ms,
         }
     }
@@ -151,8 +163,11 @@ impl ServeEvent {
         ];
         match self {
             ServeEvent::Rejected { .. } => {}
-            ServeEvent::Dispatched { replica, .. }
-            | ServeEvent::Admitted { replica, .. }
+            ServeEvent::Dispatched { replica, key, .. } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+                pairs.push(("key", Json::Num(*key)));
+            }
+            ServeEvent::Admitted { replica, .. }
             | ServeEvent::FirstToken { replica, .. }
             | ServeEvent::Boosted { replica, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
@@ -170,6 +185,10 @@ impl ServeEvent {
             ServeEvent::Resumed { replica, restored, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
                 pairs.push(("restored", Json::Num(*restored as f64)));
+            }
+            ServeEvent::Rescored { replica, remaining, .. } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+                pairs.push(("remaining", Json::Num(*remaining)));
             }
             ServeEvent::Completed { replica, record } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
@@ -328,6 +347,8 @@ pub struct ReplicaTimeline {
     pub resumes: u64,
     /// Decode tokens restored by those resumes.
     pub restored_tokens: u64,
+    /// Continuous re-ranking refreshes applied to this replica's queue.
+    pub rescores: u64,
     pub completed: u64,
     pub output_tokens: u64,
     /// First event time on this replica's clock (ms).
@@ -465,6 +486,11 @@ impl ReplayBook {
                 r.restored_tokens += *restored as u64;
                 r.observe(*t_ms);
             }
+            ServeEvent::Rescored { replica, t_ms, .. } => {
+                let r = self.replica(*replica);
+                r.rescores += 1;
+                r.observe(*t_ms);
+            }
             ServeEvent::Completed { replica, record } => {
                 let parked = self.parked_ms.remove(&record.id).unwrap_or(0.0);
                 let r = self.replica(*replica);
@@ -508,7 +534,12 @@ impl ReplayBook {
         };
         Ok(match kind.as_str() {
             "rejected" => ServeEvent::Rejected { id, t_ms },
-            "dispatched" => ServeEvent::Dispatched { id, replica: replica(v)?, t_ms },
+            "dispatched" => ServeEvent::Dispatched {
+                id,
+                replica: replica(v)?,
+                key: v.get("key")?.as_f64()?,
+                t_ms,
+            },
             "admitted" => ServeEvent::Admitted { id, replica: replica(v)?, t_ms },
             "first_token" => ServeEvent::FirstToken { id, replica: replica(v)?, t_ms },
             "boosted" => ServeEvent::Boosted { id, replica: replica(v)?, t_ms },
@@ -537,6 +568,12 @@ impl ReplayBook {
                 id,
                 replica: replica(v)?,
                 restored: v.get("restored")?.as_i64()? as u32,
+                t_ms,
+            },
+            "rescored" => ServeEvent::Rescored {
+                id,
+                replica: replica(v)?,
+                remaining: v.get("remaining")?.as_f64()?,
                 t_ms,
             },
             "completed" => {
@@ -571,29 +608,94 @@ pub(crate) struct SessionCtx<'a> {
 }
 
 impl SessionCtx<'_> {
+    /// The live bookkeeping a request carries across transitions:
+    /// `(remaining, preemptions, resumes)` from its current `Queued` /
+    /// `Running` status, or fresh zeros for any other state.
+    fn carried(&self, id: u64) -> (f64, u32, u32) {
+        match self.status.get(&id) {
+            Some(
+                RequestStatus::Queued { remaining, preemptions, resumes, .. }
+                | RequestStatus::Running { remaining, preemptions, resumes, .. },
+            ) => (*remaining, *preemptions, *resumes),
+            _ => (0.0, 0, 0),
+        }
+    }
+
     pub(crate) fn emit(&mut self, ev: ServeEvent) {
         let update = match &ev {
             ServeEvent::Rejected { id, .. } => Some((*id, RequestStatus::Rejected)),
-            ServeEvent::Dispatched { id, replica, .. } => {
-                Some((*id, RequestStatus::Queued { replica: *replica }))
-            }
+            ServeEvent::Dispatched { id, replica, key, .. } => Some((
+                *id,
+                RequestStatus::Queued {
+                    replica: *replica,
+                    remaining: *key,
+                    preemptions: 0,
+                    resumes: 0,
+                },
+            )),
             ServeEvent::Admitted { id, replica, .. } => {
-                Some((*id, RequestStatus::Running { replica: *replica }))
+                let (remaining, preemptions, resumes) = self.carried(*id);
+                Some((
+                    *id,
+                    RequestStatus::Running { replica: *replica, remaining, preemptions, resumes },
+                ))
             }
             // neither changes where the request sits
             ServeEvent::FirstToken { .. } | ServeEvent::Boosted { .. } => None,
             ServeEvent::Stolen { id, to, .. } => {
-                Some((*id, RequestStatus::Queued { replica: *to }))
+                let (remaining, preemptions, resumes) = self.carried(*id);
+                Some((
+                    *id,
+                    RequestStatus::Queued { replica: *to, remaining, preemptions, resumes },
+                ))
             }
             ServeEvent::Preempted { id, replica, .. } => {
-                Some((*id, RequestStatus::Queued { replica: *replica }))
+                let (remaining, preemptions, resumes) = self.carried(*id);
+                Some((
+                    *id,
+                    RequestStatus::Queued {
+                        replica: *replica,
+                        remaining,
+                        preemptions: preemptions + 1,
+                        resumes,
+                    },
+                ))
             }
             ServeEvent::Resumed { id, replica, .. } => {
-                Some((*id, RequestStatus::Running { replica: *replica }))
+                let (remaining, preemptions, resumes) = self.carried(*id);
+                Some((
+                    *id,
+                    RequestStatus::Running {
+                        replica: *replica,
+                        remaining,
+                        preemptions,
+                        resumes: resumes + 1,
+                    },
+                ))
             }
-            ServeEvent::Completed { record, .. } => {
-                Some((record.id, RequestStatus::Completed))
-            }
+            // refresh the live estimate in place, wherever the request sits
+            ServeEvent::Rescored { id, remaining, .. } => match self.status.get(id) {
+                Some(RequestStatus::Queued { replica, preemptions, resumes, .. }) => Some((
+                    *id,
+                    RequestStatus::Queued {
+                        replica: *replica,
+                        remaining: *remaining,
+                        preemptions: *preemptions,
+                        resumes: *resumes,
+                    },
+                )),
+                Some(RequestStatus::Running { replica, preemptions, resumes, .. }) => Some((
+                    *id,
+                    RequestStatus::Running {
+                        replica: *replica,
+                        remaining: *remaining,
+                        preemptions: *preemptions,
+                        resumes: *resumes,
+                    },
+                )),
+                _ => None,
+            },
+            ServeEvent::Completed { record, .. } => Some((record.id, RequestStatus::Completed)),
         };
         if let Some((id, st)) = update {
             self.status.insert(id, st);
@@ -608,7 +710,7 @@ mod tests {
     use crate::util::json;
 
     fn ev(id: u64) -> ServeEvent {
-        ServeEvent::Dispatched { id, replica: 1, t_ms: 2.5 }
+        ServeEvent::Dispatched { id, replica: 1, key: 4.0, t_ms: 2.5 }
     }
 
     #[test]
@@ -648,7 +750,8 @@ mod tests {
         });
         sink.emit(&ServeEvent::Resumed { id: 4, replica: 1, restored: 9, t_ms: 55.0 });
         sink.emit(&ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, t_ms: 60.0 });
-        assert_eq!(sink.written(), 5);
+        sink.emit(&ServeEvent::Rescored { id: 6, replica: 0, remaining: 12.5, t_ms: 70.0 });
+        assert_eq!(sink.written(), 6);
         let buf = String::from_utf8(sink.w.clone()).unwrap();
         for line in buf.lines() {
             let v = json::parse(line).unwrap();
@@ -668,6 +771,12 @@ mod tests {
         let stolen = json::parse(lines[4]).unwrap();
         assert_eq!(stolen.get("event").unwrap().as_str().unwrap(), "stolen");
         assert_eq!(stolen.get("wasted").unwrap().as_i64().unwrap(), 3);
+        let dispatched = json::parse(lines[0]).unwrap();
+        assert_eq!(dispatched.get("key").unwrap().as_f64().unwrap(), 4.0);
+        let rescored = json::parse(lines[5]).unwrap();
+        assert_eq!(rescored.get("event").unwrap().as_str().unwrap(), "rescored");
+        assert_eq!(rescored.get("remaining").unwrap().as_f64().unwrap(), 12.5);
+        assert_eq!(rescored.get("replica").unwrap().as_i64().unwrap(), 0);
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub use events::{
     ServeEvent,
 };
 pub use policy::Policy;
-pub use predictor::{PjrtScorer, Scorer};
+pub use predictor::{PjrtScorer, Predictor, Scorer, ShrinkagePredictor};
 pub use queue::{QueuedRequest, SuspendedEntry, WaitingQueue};
 pub use server::{Coordinator, ServeOutcome};
 pub use session::{RequestId, RequestStatus, ServeSession, Tick};

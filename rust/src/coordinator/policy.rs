@@ -15,11 +15,26 @@ use crate::config::PolicyKind;
 use crate::coordinator::Request;
 
 /// Priority assignment for waiting requests.
+///
+/// Keys feed the [`Predictor`] surface: admission asks the predictor
+/// (which wraps the policy) for a key exactly once per request, and —
+/// with continuous re-ranking on — the predictor refines that key from
+/// decode progress.  Policies themselves stay stateless.
+///
+/// [`Predictor`]: crate::coordinator::Predictor
 pub trait Policy {
     fn kind(&self) -> PolicyKind;
 
     /// The ordering key (lower = run earlier).
     fn key(&self, req: &Request) -> f64;
+
+    /// Whether the key is a length prediction (every SJF variant) as
+    /// opposed to an arrival time (FCFS).  Score-noise injection and
+    /// online refinement only apply to length-predicting keys —
+    /// perturbing or "refreshing" an arrival time is meaningless.
+    fn predicts_length(&self) -> bool {
+        true
+    }
 
     fn name(&self) -> &'static str {
         self.kind().name()
@@ -36,6 +51,10 @@ impl Policy for Fcfs {
 
     fn key(&self, req: &Request) -> f64 {
         req.arrival_ms
+    }
+
+    fn predicts_length(&self) -> bool {
+        false
     }
 }
 
@@ -117,6 +136,13 @@ mod tests {
     fn factory_covers_all_kinds() {
         for k in PolicyKind::all() {
             assert_eq!(make_policy(k).kind(), k);
+        }
+    }
+
+    #[test]
+    fn only_fcfs_keys_are_not_length_predictions() {
+        for k in PolicyKind::all() {
+            assert_eq!(make_policy(k).predicts_length(), k != PolicyKind::Fcfs);
         }
     }
 }

@@ -1,14 +1,27 @@
-//! Admission-path scoring.
+//! The scoring surface: offline batch scoring and the online predictor.
 //!
 //! [`PjrtScorer`] runs a scorer HLO (one per backbone; trained weights are
 //! a runtime input, so all 36 variants share three executables).  Scores
-//! are computed **once per request at admission** (DESIGN.md §decisions)
-//! and cached on the queue entry, keeping the scheduling hot loop free of
-//! model calls.
+//! are computed once per request **offline** (test-set batches) and ride
+//! in on `Request::score`, keeping the scheduling hot loop free of model
+//! calls.
+//!
+//! [`Predictor`] is the redesigned **online** surface the coordinator
+//! consumes: it owns both the admission-time key (`score`) and its
+//! refinement from decode progress (`observe`), so admission,
+//! continuous re-ranking, preemption victim selection and work stealing
+//! all read one coherent estimate instead of each re-deriving keys from
+//! `Policy::key` call sites.  [`ShrinkagePredictor`] is the
+//! deterministic default implementation.
+
+use std::collections::HashMap;
 
 use anyhow::Context as _;
 
+use crate::config::SchedulerConfig;
+use crate::coordinator::{Policy, Request};
 use crate::runtime::{ArtifactManifest, Executable, HostArg, Runtime};
+use crate::util::rng::Rng;
 use crate::Result;
 
 /// Anything that can map prompt tokens → expected-length score.
@@ -109,6 +122,170 @@ impl Scorer for PjrtScorer {
     }
 }
 
+/// The online scoring surface: one object owns a request's
+/// predicted-work estimate from admission to completion.
+///
+/// `score` is the score-once admission path (exactly what the frozen
+/// reference loops do); `observe` folds decode progress back into the
+/// estimate and is what continuous re-ranking, the preemption victim
+/// scan and the re-queue path consult.  Estimates are in **key units**:
+/// whatever `Policy::key` returns, interpreted as predicted decode
+/// work.  Enable re-ranking with scorers calibrated to token counts
+/// (the harness acceptance traces and `fig_rerank` use exactly that).
+pub trait Predictor {
+    fn name(&self) -> String;
+
+    /// Admission-time queue key for `req` — called exactly once per
+    /// request, when it is dispatched to a replica.
+    fn score(&mut self, req: &Request) -> f64;
+
+    /// Record that `id` has generated `tokens_so_far` decode tokens and
+    /// return its refreshed predicted-remaining work.  Evidence is
+    /// monotone: the high-water mark survives recompute evictions
+    /// (the work is discarded, the knowledge is not).
+    fn observe(&mut self, id: u64, tokens_so_far: u32) -> f64;
+
+    /// Refreshed remaining-work estimate for `id` assuming `kept`
+    /// decode tokens of retained progress (0 for a recompute re-queue,
+    /// the suspended `generated` count for a swap re-queue).  `None`
+    /// when no decode evidence has been observed — the admission key
+    /// stands.
+    fn remaining(&self, id: u64, kept: u32) -> Option<f64>;
+
+    /// Drop the bookkeeping for a request that left the system.
+    fn forget(&mut self, id: u64);
+}
+
+/// Pseudo-tokens of trust granted to the admission prior once decode
+/// outlives it: the prior's weight decays as `N0 / (N0 + overshoot)`.
+const SHRINK_PSEUDO_TOKENS: f64 = 16.0;
+
+/// Conditional-tail growth factor: a job that has outlived its
+/// prediction is expected to finish near this multiple of its observed
+/// progress (the conditional expectation under the heavy-tailed
+/// response-length distributions the score book is fit on).
+const TAIL_GROWTH: f64 = 2.0;
+
+/// Floor on a refreshed remaining estimate — keeps nearly-done jobs at
+/// a small positive key instead of 0/negative (NaN-safe under
+/// `total_cmp` either way, but a positive floor keeps "almost done"
+/// strictly ahead of nothing-left ties).
+const MIN_REMAINING: f64 = 0.5;
+
+/// Base seed of the per-request score-noise stream.  The realization is
+/// a pure function of the request id, so it is identical across runs,
+/// replica counts and dispatch orders — exactly what the bitwise
+/// determinism properties require.
+const NOISE_SEED: u64 = 0x5C0_0E11;
+
+/// The default [`Predictor`]: deterministic Bayesian shrinkage between
+/// the admission-time prior (the policy key, optionally perturbed by
+/// the calibrated `--score-noise` knob) and decode-progress evidence.
+///
+/// While a job is within its predicted length the prior stands
+/// untouched.  Once decode outlives the prediction, the estimate
+/// shrinks from the (falsified) prior toward the conditional-tail
+/// estimate `observed · TAIL_GROWTH`, with the prior granted
+/// [`SHRINK_PSEUDO_TOKENS`] pseudo-observations so the hand-off is
+/// smooth rather than a cliff.  Everything is a pure function of
+/// (policy key, request id, observed tokens) — no wall clock, no
+/// shared state — so re-ranked runs stay bitwise reproducible.
+pub struct ShrinkagePredictor<'p> {
+    policy: &'p dyn Policy,
+    /// σ of the multiplicative lognormal noise on length-predicting
+    /// admission keys; 0 draws nothing (bitwise noiseless).
+    noise_sigma: f64,
+    /// Per-request evidence is only tracked when re-ranking is on; with
+    /// `rerank = off` the book stays empty and `remaining` is `None`.
+    track: bool,
+    book: HashMap<u64, Estimate>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Estimate {
+    /// Admission-time predicted total work (key units, noise included).
+    prior: f64,
+    /// High-water mark of observed decode tokens.
+    observed: u32,
+}
+
+impl<'p> ShrinkagePredictor<'p> {
+    pub fn new(policy: &'p dyn Policy, sched: &SchedulerConfig) -> Self {
+        ShrinkagePredictor {
+            policy,
+            noise_sigma: sched.score_noise,
+            track: sched.rerank != crate::config::RerankMode::Off,
+            book: HashMap::new(),
+        }
+    }
+
+    /// Whether online refinement is live: re-ranking is on AND the
+    /// policy's keys are length predictions.  Refreshing an arrival
+    /// time is meaningless, so FCFS with `rerank` set behaves exactly
+    /// like `rerank = off` — the scheduling loop gates every rescore
+    /// pass and refreshed-victim scan on this.
+    pub fn refines(&self) -> bool {
+        self.track && self.policy.predicts_length()
+    }
+
+    /// Refreshed predicted-total work for an estimate (key units).
+    fn refreshed_total(e: Estimate) -> f64 {
+        let g = e.observed as f64;
+        if g <= e.prior {
+            return e.prior;
+        }
+        // the job outlived its prediction: shrink the (falsified,
+        // clamped-to-progress) prior toward the conditional tail
+        let w = SHRINK_PSEUDO_TOKENS / (SHRINK_PSEUDO_TOKENS + (g - e.prior));
+        w * g + (1.0 - w) * g * TAIL_GROWTH
+    }
+}
+
+impl Predictor for ShrinkagePredictor<'_> {
+    fn name(&self) -> String {
+        format!("shrinkage:{}", self.policy.name())
+    }
+
+    fn score(&mut self, req: &Request) -> f64 {
+        let base = self.policy.key(req);
+        let key = if self.noise_sigma > 0.0 && self.policy.predicts_length() {
+            // one independent stream per request id (stable under
+            // arrival order and replica count); multiplicative
+            // lognormal, so the perturbation is scale-free
+            let z = Rng::new(NOISE_SEED ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15)).normal();
+            base * (self.noise_sigma * z).exp()
+        } else {
+            base
+        };
+        if self.track && self.policy.predicts_length() {
+            self.book.insert(req.id, Estimate { prior: key, observed: 0 });
+        }
+        key
+    }
+
+    fn observe(&mut self, id: u64, tokens_so_far: u32) -> f64 {
+        let e = self
+            .book
+            .entry(id)
+            .or_insert(Estimate { prior: tokens_so_far as f64, observed: 0 });
+        e.observed = e.observed.max(tokens_so_far);
+        let e = *e;
+        (Self::refreshed_total(e) - tokens_so_far as f64).max(MIN_REMAINING)
+    }
+
+    fn remaining(&self, id: u64, kept: u32) -> Option<f64> {
+        let e = self.book.get(&id)?;
+        if e.observed == 0 {
+            return None; // no decode evidence — the admission key stands
+        }
+        Some((Self::refreshed_total(*e) - kept as f64).max(MIN_REMAINING))
+    }
+
+    fn forget(&mut self, id: u64) {
+        self.book.remove(&id);
+    }
+}
+
 /// Score a whole test set with a scorer (benches + admission precompute).
 pub fn score_testset(
     scorer: &mut dyn Scorer,
@@ -117,4 +294,106 @@ pub fn score_testset(
     seq_len: usize,
 ) -> Result<Vec<f32>> {
     scorer.score_batch(tokens, n_prompts, seq_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyKind, RerankMode};
+    use crate::coordinator::policy::{make_policy, Fcfs};
+
+    fn req(id: u64, score: f32) -> Request {
+        Request {
+            id,
+            tokens: vec![1, 2],
+            prompt_len: 2,
+            arrival_ms: 0.0,
+            target_len: 10,
+            oracle_len: 10,
+            score,
+        }
+    }
+
+    fn sched(rerank: RerankMode, score_noise: f64) -> SchedulerConfig {
+        SchedulerConfig { rerank, score_noise, ..Default::default() }
+    }
+
+    #[test]
+    fn zero_sigma_is_exactly_the_policy_key() {
+        let policy = make_policy(PolicyKind::Pars);
+        let mut p = ShrinkagePredictor::new(policy.as_ref(), &sched(RerankMode::Off, 0.0));
+        for i in 0..50 {
+            let r = req(i, i as f32 * 1.5 - 3.0);
+            assert_eq!(p.score(&r), policy.key(&r), "sigma 0 must not perturb keys");
+        }
+    }
+
+    #[test]
+    fn noise_is_a_stable_function_of_the_request_id() {
+        let policy = make_policy(PolicyKind::Pars);
+        let s = sched(RerankMode::Off, 0.5);
+        let mut a = ShrinkagePredictor::new(policy.as_ref(), &s);
+        let mut b = ShrinkagePredictor::new(policy.as_ref(), &s);
+        // same ids scored in different orders ⇒ same keys
+        let keys_a: Vec<f64> = (0..20).map(|i| a.score(&req(i, 40.0))).collect();
+        let mut keys_b: Vec<(u64, f64)> =
+            (0..20).rev().map(|i| (i, b.score(&req(i, 40.0)))).collect();
+        keys_b.sort_by_key(|&(id, _)| id);
+        for (i, &(_, kb)) in keys_b.iter().enumerate() {
+            assert_eq!(keys_a[i], kb);
+        }
+        // sigma > 0 actually perturbs at least some keys
+        assert!(keys_a.iter().any(|&k| k != 40.0));
+        // perturbation is scale-free in sign: positive keys stay positive
+        assert!(keys_a.iter().all(|&k| k > 0.0));
+    }
+
+    #[test]
+    fn fcfs_keys_are_never_noised() {
+        let policy = Fcfs;
+        let mut p = ShrinkagePredictor::new(&policy, &sched(RerankMode::OnToken, 2.0));
+        let r = req(7, 99.0);
+        assert_eq!(p.score(&r), r.arrival_ms);
+        // and FCFS never books evidence — arrival keys are not estimates
+        assert_eq!(p.remaining(7, 0), None);
+        assert!(!p.refines(), "rerank over FCFS must be inert");
+    }
+
+    #[test]
+    fn estimates_refresh_only_after_decode_outlives_the_prior() {
+        let policy = make_policy(PolicyKind::OracleSjf);
+        let mut p = ShrinkagePredictor::new(policy.as_ref(), &sched(RerankMode::OnToken, 0.0));
+        let mut r = req(1, 0.0);
+        r.oracle_len = 100;
+        assert_eq!(p.score(&r), 100.0);
+        // within the prediction: remaining = prior − progress
+        assert_eq!(p.observe(1, 40), 60.0);
+        assert_eq!(p.remaining(1, 40), Some(60.0));
+        // a recompute re-queue keeps the evidence but no progress
+        assert_eq!(p.remaining(1, 0), Some(100.0));
+        // outliving the prediction inflates the estimate...
+        let r150 = p.observe(1, 150);
+        assert!(r150 > 0.0);
+        let total150 = p.remaining(1, 0).unwrap();
+        assert!(total150 > 150.0, "outlived prior must inflate: {total150}");
+        // ...monotonically in observed progress
+        p.observe(1, 400);
+        let total400 = p.remaining(1, 0).unwrap();
+        assert!(total400 > total150, "{total400} vs {total150}");
+        // evidence is a high-water mark: observing less changes nothing
+        p.observe(1, 10);
+        assert_eq!(p.remaining(1, 0), Some(total400));
+        // forget drops the book entry
+        p.forget(1);
+        assert_eq!(p.remaining(1, 0), None);
+    }
+
+    #[test]
+    fn rerank_off_books_nothing() {
+        let policy = make_policy(PolicyKind::Pars);
+        let mut p = ShrinkagePredictor::new(policy.as_ref(), &sched(RerankMode::Off, 0.0));
+        assert!(!p.refines());
+        p.score(&req(3, 25.0));
+        assert_eq!(p.remaining(3, 0), None);
+    }
 }

@@ -196,6 +196,35 @@ impl WaitingQueue {
         })
     }
 
+    /// Continuous re-ranking: re-key every entry under refreshed
+    /// estimates, preserving request, arrival, boost, preemption and
+    /// suspension state — only `key` changes, so the starvation guard,
+    /// anti-thrash cap and resume path all see exactly the entry they
+    /// would have seen without the re-key.  `f` returns the refreshed
+    /// key for an entry or `None` to keep the current one.  Returns the
+    /// `(id, new_key)` pairs that actually changed (compared under
+    /// `total_cmp`, so a NaN→NaN "change" does not report), sorted by
+    /// id — a deterministic order for `Rescored` event emission.  O(n)
+    /// take/mutate/rebuild, same as the starvation guard.
+    pub fn rescore(&mut self, mut f: impl FnMut(&QueuedRequest) -> Option<f64>) -> Vec<(u64, f64)> {
+        if self.heap.is_empty() {
+            return Vec::new();
+        }
+        let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
+        let mut changed = Vec::new();
+        for q in &mut all {
+            if let Some(k) = f(q) {
+                if k.total_cmp(&q.key) != Ordering::Equal {
+                    q.key = k;
+                    changed.push((q.req.id, k));
+                }
+            }
+        }
+        self.heap = all.into();
+        changed.sort_by_key(|&(id, _)| id);
+        changed
+    }
+
     /// Remove and return the lowest-priority entry — the one that would
     /// pop LAST (longest-predicted under an SJF policy).  This is what a
     /// cross-replica steal takes from a victim queue: the remaining
@@ -404,6 +433,53 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn rescore_rekeys_in_place_and_preserves_all_other_state() {
+        let mut w = WaitingQueue::new(100.0);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, 10.0), &p);
+        w.push(req(2, 5.0, 20.0), &p);
+        w.push(req(3, 1.0, 30.0), &p);
+        w.apply_starvation_guard(200.0); // everyone waited > 100 ms ⇒ all boosted
+        let boosts_before = w.boosts;
+        // carry preemption state on one entry through a pop/requeue
+        let mut q = w.pop().unwrap();
+        q.preemptions = 2;
+        w.push_scored(q);
+        // invert the key order; entry 2 keeps its key (None)
+        let changed = w.rescore(|q| match q.req.id {
+            1 => Some(100.0),
+            3 => Some(1.0),
+            _ => None,
+        });
+        assert_eq!(changed, vec![(1, 100.0), (3, 1.0)], "changed set sorted by id");
+        // a second rescore to the same keys reports nothing
+        assert!(w.rescore(|q| if q.req.id == 1 { Some(100.0) } else { None }).is_empty());
+        assert_eq!(w.boosts, boosts_before, "rescore must not touch boost accounting");
+        let drained: Vec<QueuedRequest> = std::iter::from_fn(|| w.pop()).collect();
+        // all still boosted, so order is (key, arrival): 3 then 2 then 1
+        assert_eq!(drained.iter().map(|q| q.req.id).collect::<Vec<_>>(), vec![3, 2, 1]);
+        let one = drained.iter().find(|q| q.req.id == 1).unwrap();
+        assert_eq!(one.preemptions, 2, "preemption count survives the re-key");
+        assert!(one.boosted, "boost survives the re-key");
+        assert_eq!(one.req.arrival_ms, 0.0, "arrival survives the re-key");
+    }
+
+    #[test]
+    fn rescore_with_nan_keys_is_total_and_quiet() {
+        let mut w = WaitingQueue::new(1e9);
+        let p = ScoreSjf { label: PolicyKind::Pars };
+        w.push(req(1, 0.0, f32::NAN), &p);
+        w.push(req(2, 1.0, 5.0), &p);
+        // NaN → NaN is "unchanged" under total_cmp and must not report
+        assert!(w.rescore(|_| Some(f64::NAN)).iter().all(|&(id, _)| id != 1));
+        // NaN → finite does report and reorders (entry 2 stays NaN, quiet)
+        let changed = w.rescore(|q| Some(if q.req.id == 1 { 0.5 } else { f64::NAN }));
+        assert_eq!(changed, vec![(1, 0.5)]);
+        assert_eq!(w.pop().unwrap().req.id, 1);
+        assert_eq!(w.pop().unwrap().req.id, 2);
     }
 
     #[test]

@@ -39,8 +39,21 @@ use crate::Result;
 /// it); a resubmitted id simply overwrites the previous status entry.
 pub type RequestId = u64;
 
-/// Where a submitted request currently sits.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Where a submitted request currently sits.  The live variants carry
+/// the bookkeeping `poll` callers most often want — all of it derived
+/// from the event stream (never read back out of the scheduler), so
+/// the status map can never disagree with what a sink observed:
+///
+/// * `remaining` — the predictor's current remaining-work estimate in
+///   key units (a predicted token count for SJF-family policies, the
+///   arrival time under FCFS).  Starts as the admission-time priority
+///   key and is refreshed in place by `Rescored` events when
+///   continuous re-ranking is on.
+/// * `preemptions` — times this request has been evicted from a
+///   running batch so far (counts both recompute and swap evictions).
+/// * `resumes` — times a swap eviction was undone by restoring the
+///   request's progress from the host pool.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum RequestStatus {
     /// Never submitted through this session.
     Unknown,
@@ -50,9 +63,9 @@ pub enum RequestStatus {
     /// No replica can ever hold it — dropped at dispatch time.
     Rejected,
     /// Dispatched to `replica` (inbox or waiting queue).
-    Queued { replica: usize },
+    Queued { replica: usize, remaining: f64, preemptions: u32, resumes: u32 },
     /// In `replica`'s running batch.
-    Running { replica: usize },
+    Running { replica: usize, remaining: f64, preemptions: u32, resumes: u32 },
     /// Served; its record is in the outcome [`ServeSession::finish`]
     /// returns (and in the `Completed` event).
     Completed,

@@ -36,6 +36,15 @@ pub type SlotId = usize;
 pub struct SlotEvent {
     pub slot: SlotId,
     /// Total output tokens generated so far for this sequence.
+    ///
+    /// This is the engine's decode-progress surface: the scheduler
+    /// mirrors it per in-flight request after every step, and continuous
+    /// re-ranking (`[scheduler] rerank`) feeds it to
+    /// [`Predictor::observe`](crate::coordinator::Predictor::observe)
+    /// as the evidence that refines admission-time length predictions.
+    /// Within one batch residency it is monotone; across a recompute
+    /// eviction it restarts at 0 (the predictor keeps its own
+    /// high-water mark, so refined estimates never regress).
     pub generated: u32,
     /// True when the sequence just produced its final token.
     pub finished: bool,

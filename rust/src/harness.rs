@@ -173,15 +173,41 @@ pub fn run_sharded(
     cost: &CostModel,
     sched: &SchedulerConfig,
 ) -> Result<ShardedOutcome> {
-    run_sharded_with(ts, arrivals, kind, book, cost, sched, None)
+    run_sharded_with(ts, arrivals, kind, book, cost, sched, ServeOptions::new())
 }
 
-/// [`run_sharded`] with an optional lifecycle-event sink: the run is
-/// driven through a [`crate::coordinator::ServeSession`] and every
-/// `Rejected`/`Dispatched`/…/`Completed` transition is emitted into
-/// `sink` (e.g. the CLI's `--events out.jsonl` JSONL writer).  The sink
-/// is a pure observer — the outcome is bitwise identical to
-/// [`run_sharded`].
+/// Per-run options for [`run_sharded_with`] beyond the core
+/// (workload, policy, cost model, scheduler) tuple.  A builder, so new
+/// axes extend this struct instead of changing every call site:
+///
+/// ```ignore
+/// run_sharded_with(ts, arrivals, kind, book, cost, sched,
+///                  ServeOptions::new().sink(&mut jsonl))?;
+/// ```
+#[derive(Default)]
+pub struct ServeOptions<'a> {
+    sink: Option<&'a mut dyn EventSink>,
+}
+
+impl<'a> ServeOptions<'a> {
+    /// The defaults: no event sink — exactly [`run_sharded`].
+    pub fn new() -> Self {
+        ServeOptions::default()
+    }
+
+    /// Stream every lifecycle event
+    /// (`Rejected`/`Dispatched`/…/`Completed`) into `sink`, e.g. the
+    /// CLI's `--events out.jsonl` JSONL writer.  The sink is a pure
+    /// observer — the outcome is bitwise identical with or without it.
+    pub fn sink(mut self, sink: &'a mut dyn EventSink) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+}
+
+/// [`run_sharded`] with per-run [`ServeOptions`]: the run is driven
+/// through a [`crate::coordinator::ServeSession`] so an optional sink
+/// can observe every transition.
 pub fn run_sharded_with(
     ts: &TestSet,
     arrivals: &[Arrival],
@@ -189,7 +215,7 @@ pub fn run_sharded_with(
     book: &ScoreBook,
     cost: &CostModel,
     sched: &SchedulerConfig,
-    sink: Option<&mut dyn EventSink>,
+    opts: ServeOptions<'_>,
 ) -> Result<ShardedOutcome> {
     let scores = book.scores.get(kind.name()).map(|v| v.as_slice());
     let mut rng = Rng::new(0xA11CE);
@@ -206,7 +232,7 @@ pub fn run_sharded_with(
     let policy = make_policy(kind);
     let mut coord =
         ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
-    match sink {
+    match opts.sink {
         None => coord.serve(reqs),
         Some(sink) => {
             // submit() clamps + orders arrivals exactly like serve()
@@ -393,6 +419,49 @@ mod tests {
         // per-replica books agree however many evictions fired
         let per: usize = arr.per_replica.iter().map(|r| r.preempted).sum();
         assert_eq!(arr.merged.preemptions, per);
+    }
+
+    #[test]
+    fn serve_options_sink_observes_rerank() {
+        use crate::config::{PreemptMode, RerankMode};
+        use crate::coordinator::ServeEvent;
+        let ts = TestSet::synthetic("synthalpaca", "llama", 64, 5);
+        let book = ScoreBook::synthetic(&ts, &[PolicyKind::Pars], 5);
+        let cost = CostModel::default();
+        // single slot at 1.1x saturation, same recipe as the preemption
+        // plumbing test: decode progress accrues while work queues up
+        let sched0 = SchedulerConfig {
+            max_batch: 1,
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        };
+        let rate = sweep_rates(&ts, &cost, &sched0)[4];
+        let arrivals = poisson(&ts, rate, 120, 9);
+        let mk = |rerank: RerankMode| {
+            let mut events: Vec<ServeEvent> = Vec::new();
+            let sched = SchedulerConfig { rerank, ..sched0.clone() };
+            let out = run_sharded_with(
+                &ts,
+                &arrivals,
+                PolicyKind::Pars,
+                &book,
+                &cost,
+                &sched,
+                ServeOptions::new().sink(&mut events),
+            )
+            .unwrap();
+            let rescored = events
+                .iter()
+                .filter(|e| matches!(e, ServeEvent::Rescored { .. }))
+                .count();
+            (out, rescored)
+        };
+        let (off, off_rescored) = mk(RerankMode::Off);
+        let (on, on_rescored) = mk(RerankMode::OnToken);
+        assert_eq!(off.merged.report.n_requests, 120);
+        assert_eq!(on.merged.report.n_requests, 120);
+        assert_eq!(off_rescored, 0, "rerank=off must never rescore");
+        assert!(on_rescored > 0, "rerank=on_token must refine estimates as tokens land");
     }
 
     #[test]

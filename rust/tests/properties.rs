@@ -21,9 +21,15 @@
 //!   `resumed_tokens ≤ swapped_out_tokens` fleet-wide and per replica,
 //!   and `swap = off` (or `preempt = off`) keeps it at zero.
 //! * Determinism: two runs of the same trace under work stealing — and
-//!   under stealing + preemption + the host swap pool — produce
-//!   byte-identical per-replica record sequences (the lagging-clock
-//!   event order is pinned).
+//!   under stealing + preemption + the host swap pool + continuous
+//!   re-ranking with calibrated score noise — produce byte-identical
+//!   per-replica record sequences (the lagging-clock event order is
+//!   pinned, and both the noise draws and the refreshed estimates are
+//!   pure functions of the request ids and decode progress).
+//! * The `--score-noise` robustness grid: σ = 0 draws nothing (bitwise
+//!   the noiseless baseline), σ > 0 actually perturbs length-predicting
+//!   admission keys (visible in `Dispatched { key }` events) but never
+//!   FCFS keys, and every σ is two-run deterministic.
 //! * The anti-thrash guard caps per-request evictions at
 //!   `max_preemptions` exactly; with a cap of 0 preemption degenerates
 //!   to `preempt = off` record-for-record.
@@ -46,8 +52,8 @@
 //! `PROP_SEED=<seed> cargo test --release --test properties`.
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, SchedulerConfig, StealMode,
-    SwapMode,
+    CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, RerankMode, SchedulerConfig,
+    StealMode, SwapMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -241,6 +247,8 @@ fn run_fleet(
     steal: StealMode,
     preempt: PreemptMode,
     swap: SwapMode,
+    rerank: RerankMode,
+    score_noise: f64,
     replicas: usize,
     max_batch: usize,
     caps: &[ReplicaCaps],
@@ -254,6 +262,8 @@ fn run_fleet(
         steal,
         preempt,
         swap,
+        rerank,
+        score_noise,
         replica_caps: caps.to_vec(),
         ..Default::default()
     };
@@ -385,14 +395,23 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
                 for steal in StealMode::all() {
                     for preempt in PreemptMode::all() {
                         for swap in SwapMode::all() {
-                            let out = run_fleet(
-                                &trace, kind, dispatch, steal, preempt, swap, 3, 2, &[],
-                            );
-                            let label = format!(
-                                "seed {seed} case {case} \
-                                 {kind:?}/{dispatch:?}/{steal:?}/{preempt:?}/{swap:?}"
-                            );
-                            check(&out, steal, preempt, swap, &label);
+                            for rerank in RerankMode::all() {
+                                // re-ranked runs also take calibrated
+                                // score noise — the conservation laws
+                                // must hold under a noisy predictor too
+                                let noise =
+                                    if rerank == RerankMode::Off { 0.0 } else { 0.4 };
+                                let out = run_fleet(
+                                    &trace, kind, dispatch, steal, preempt, swap, rerank,
+                                    noise, 3, 2, &[],
+                                );
+                                let label = format!(
+                                    "seed {seed} case {case} \
+                                     {kind:?}/{dispatch:?}/{steal:?}/{preempt:?}/{swap:?}\
+                                     /{rerank:?}"
+                                );
+                                check(&out, steal, preempt, swap, &label);
+                            }
                         }
                     }
                 }
@@ -416,6 +435,8 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
                             steal,
                             preempt,
                             swap,
+                            RerankMode::OnToken,
+                            0.4,
                             3,
                             2,
                             &het,
@@ -442,6 +463,8 @@ fn run_fleet_session(
     steal: StealMode,
     preempt: PreemptMode,
     swap: SwapMode,
+    rerank: RerankMode,
+    score_noise: f64,
     replicas: usize,
     max_batch: usize,
 ) -> (ShardedOutcome, Vec<ServeEvent>) {
@@ -454,6 +477,8 @@ fn run_fleet_session(
         steal,
         preempt,
         swap,
+        rerank,
+        score_noise,
         ..Default::default()
     };
     let engines: Vec<SimEngine> = (0..replicas)
@@ -527,6 +552,21 @@ fn assert_events_conserved(
                 c.resumed += 1;
                 resumes += 1;
                 restored += *r as u64;
+            }
+            ServeEvent::Rescored { remaining, .. } => {
+                // estimates are only refreshed for live dispatched work,
+                // and the refreshed remaining is always a positive
+                // finite key (MIN_REMAINING floors it)
+                assert_eq!(
+                    c.dispatched, 1,
+                    "{label}: id {} rescored before dispatch",
+                    ev.id()
+                );
+                assert!(
+                    remaining.is_finite() && *remaining > 0.0,
+                    "{label}: id {} rescored to a bad remaining {remaining}",
+                    ev.id()
+                );
             }
             ServeEvent::Completed { .. } => c.completed += 1,
         }
@@ -603,27 +643,45 @@ fn event_log_is_conserved_across_the_mode_grid() {
                 for steal in StealMode::all() {
                     for preempt in PreemptMode::all() {
                         for swap in SwapMode::all() {
-                            let (out, events) = run_fleet_session(
-                                &trace, kind, dispatch, steal, preempt, swap, 3, 2,
-                            );
-                            let label = format!(
-                                "seed {seed} case {case} \
-                                 {kind:?}/{dispatch:?}/{steal:?}/{preempt:?}/{swap:?}"
-                            );
-                            assert_events_conserved(&trace, &events, &out, &label);
-                            // the session path serves exactly what the
-                            // batch path serves (same loop, observed)
-                            let batch = run_fleet(
-                                &trace, kind, dispatch, steal, preempt, swap, 3, 2, &[],
-                            );
-                            assert_eq!(
-                                out.merged.report.n_requests, batch.merged.report.n_requests,
-                                "{label}: session vs batch completion count"
-                            );
-                            assert_eq!(
-                                out.merged.makespan_ms, batch.merged.makespan_ms,
-                                "{label}: session vs batch makespan"
-                            );
+                            for rerank in [RerankMode::Off, RerankMode::OnToken] {
+                                let noise =
+                                    if rerank == RerankMode::Off { 0.0 } else { 0.3 };
+                                let (out, events) = run_fleet_session(
+                                    &trace, kind, dispatch, steal, preempt, swap, rerank,
+                                    noise, 3, 2,
+                                );
+                                let label = format!(
+                                    "seed {seed} case {case} \
+                                     {kind:?}/{dispatch:?}/{steal:?}/{preempt:?}/{swap:?}\
+                                     /{rerank:?}"
+                                );
+                                assert_events_conserved(&trace, &events, &out, &label);
+                                let rescored = events
+                                    .iter()
+                                    .filter(|e| matches!(e, ServeEvent::Rescored { .. }))
+                                    .count();
+                                if rerank == RerankMode::Off || kind == PolicyKind::Fcfs {
+                                    // off — and rerank over FCFS, whose
+                                    // keys are arrival times, not length
+                                    // estimates — must never rescore
+                                    assert_eq!(rescored, 0, "{label}: spurious Rescored");
+                                }
+                                // the session path serves exactly what the
+                                // batch path serves (same loop, observed)
+                                let batch = run_fleet(
+                                    &trace, kind, dispatch, steal, preempt, swap, rerank,
+                                    noise, 3, 2, &[],
+                                );
+                                assert_eq!(
+                                    out.merged.report.n_requests,
+                                    batch.merged.report.n_requests,
+                                    "{label}: session vs batch completion count"
+                                );
+                                assert_eq!(
+                                    out.merged.makespan_ms, batch.merged.makespan_ms,
+                                    "{label}: session vs batch makespan"
+                                );
+                            }
                         }
                     }
                 }
@@ -706,6 +764,8 @@ fn determinism_under_stealing_is_bitwise() {
                 StealMode::Idle,
                 PreemptMode::Off,
                 SwapMode::Off,
+                RerankMode::Off,
+                0.0,
                 4,
                 1,
                 &[],
@@ -734,39 +794,44 @@ fn determinism_under_preemption_is_bitwise() {
         let trace = gen_trace(&mut rng);
         for preempt in [PreemptMode::Arrival, PreemptMode::Pressure(2)] {
             for swap in SwapMode::all() {
-                let run = || -> Vec<String> {
-                    let out = run_fleet(
-                        &trace,
-                        PolicyKind::Pars,
-                        DispatchKind::LeastLoaded,
-                        StealMode::Idle,
-                        preempt,
-                        swap,
-                        4,
-                        2,
-                        &[],
+                for rerank in RerankMode::all() {
+                    let run = || -> Vec<String> {
+                        let out = run_fleet(
+                            &trace,
+                            PolicyKind::Pars,
+                            DispatchKind::LeastLoaded,
+                            StealMode::Idle,
+                            preempt,
+                            swap,
+                            rerank,
+                            if rerank == RerankMode::Off { 0.0 } else { 0.35 },
+                            4,
+                            2,
+                            &[],
+                        );
+                        out.per_replica
+                            .iter()
+                            .map(|r| {
+                                format!(
+                                    "{:?} p={} w={} s={} r={} n={}",
+                                    r.records,
+                                    r.preempted,
+                                    r.wasted_decode_tokens,
+                                    r.swapped_out_tokens,
+                                    r.resumed_tokens,
+                                    r.resumes
+                                )
+                            })
+                            .collect()
+                    };
+                    let (a, b) = (run(), run());
+                    assert_eq!(
+                        a, b,
+                        "seed {seed} case {case} {preempt:?}/{swap:?}/{rerank:?}: \
+                         identical runs diverged — eviction, swap and rescore order \
+                         must be deterministic"
                     );
-                    out.per_replica
-                        .iter()
-                        .map(|r| {
-                            format!(
-                                "{:?} p={} w={} s={} r={} n={}",
-                                r.records,
-                                r.preempted,
-                                r.wasted_decode_tokens,
-                                r.swapped_out_tokens,
-                                r.resumed_tokens,
-                                r.resumes
-                            )
-                        })
-                        .collect()
-                };
-                let (a, b) = (run(), run());
-                assert_eq!(
-                    a, b,
-                    "seed {seed} case {case} {preempt:?}/{swap:?}: identical runs \
-                     diverged — eviction and swap order must be deterministic"
-                );
+                }
             }
         }
     }
@@ -789,6 +854,8 @@ fn replay_roundtrips_an_event_capture_through_jsonl() {
             StealMode::Idle,
             PreemptMode::Arrival,
             SwapMode::Host(256),
+            RerankMode::Interval(20),
+            0.3,
             3,
             2,
         );
@@ -888,6 +955,100 @@ fn anti_thrash_cap_zero_degenerates_to_preempt_off() {
         assert_eq!(
             off_sig, capped_sig,
             "seed {seed} case {case}: cap 0 must be record-for-record identical to off"
+        );
+    }
+}
+
+#[test]
+fn score_noise_grid_is_deterministic_and_sigma_zero_is_noiseless() {
+    // the `--score-noise` robustness knob, swept: σ = 0 must take the
+    // exact noiseless code path (bitwise-identical records AND admission
+    // keys), σ > 0 must actually perturb length-predicting keys (visible
+    // in `Dispatched { key }`) while never touching FCFS ordering, and
+    // every σ must be a pure function of the trace — two identical runs
+    // bitwise equal, since the lognormal draw is keyed off request ids
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0x5195);
+    for case in 0..3 {
+        let trace = gen_trace(&mut rng);
+        // preempt off ⇒ exactly one Dispatched per admitted id, so keys
+        // index cleanly by id
+        let run = |kind: PolicyKind, sigma: f64| -> (Vec<String>, Vec<(u64, f64)>) {
+            let (out, events) = run_fleet_session(
+                &trace,
+                kind,
+                DispatchKind::Ranked,
+                StealMode::Idle,
+                PreemptMode::Off,
+                SwapMode::Off,
+                RerankMode::Off,
+                sigma,
+                3,
+                2,
+            );
+            let mut keys: Vec<(u64, f64)> = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    ServeEvent::Dispatched { id, key, .. } => Some((*id, *key)),
+                    _ => None,
+                })
+                .collect();
+            keys.sort_by(|a, b| a.0.cmp(&b.0));
+            let sig = out.per_replica.iter().map(|r| format!("{:?}", r.records)).collect();
+            (sig, keys)
+        };
+
+        let (base_sig, base_keys) = run(PolicyKind::Pars, 0.0);
+        for sigma in [0.0, 0.1, 0.5, 1.0] {
+            let (a_sig, a_keys) = run(PolicyKind::Pars, sigma);
+            let (b_sig, b_keys) = run(PolicyKind::Pars, sigma);
+            assert_eq!(
+                (&a_sig, &a_keys),
+                (&b_sig, &b_keys),
+                "seed {seed} case {case} sigma {sigma}: noise must be a pure \
+                 function of the trace — identical runs diverged"
+            );
+            for (id, key) in &a_keys {
+                assert!(
+                    key.is_finite(),
+                    "seed {seed} case {case} sigma {sigma}: id {id} got a bad noised key {key}"
+                );
+            }
+        }
+        assert!(!base_keys.is_empty(), "seed {seed} case {case}: no dispatches captured");
+        let (again_sig, again_keys) = run(PolicyKind::Pars, 0.0);
+        assert_eq!(
+            (&base_sig, &base_keys),
+            (&again_sig, &again_keys),
+            "seed {seed} case {case}: sigma 0 must be bitwise the noiseless baseline"
+        );
+
+        // σ > 0 genuinely perturbs ranked admission keys: the lognormal
+        // multiplier exp(σ·z) hits 1.0 only at z = 0, measure zero
+        let (_, noisy_keys) = run(PolicyKind::Pars, 0.5);
+        assert_eq!(
+            noisy_keys.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            base_keys.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+            "seed {seed} case {case}: noise must only reorder, never drop, dispatches"
+        );
+        let perturbed = noisy_keys
+            .iter()
+            .zip(base_keys.iter())
+            .filter(|((_, nk), (_, bk))| nk != bk)
+            .count();
+        assert!(
+            perturbed > 0,
+            "seed {seed} case {case}: sigma 0.5 left every ranked key untouched"
+        );
+
+        // FCFS keys are arrival times, not length predictions: the knob
+        // must be completely inert there at any σ
+        let (f0_sig, f0_keys) = run(PolicyKind::Fcfs, 0.0);
+        let (f1_sig, f1_keys) = run(PolicyKind::Fcfs, 1.0);
+        assert_eq!(
+            (&f0_sig, &f0_keys),
+            (&f1_sig, &f1_keys),
+            "seed {seed} case {case}: score noise leaked into FCFS arrival keys"
         );
     }
 }

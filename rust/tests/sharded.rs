@@ -10,7 +10,8 @@
 use std::collections::{HashMap, VecDeque};
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode, SwapMode,
+    CostModel, DispatchKind, PolicyKind, PreemptMode, RerankMode, SchedulerConfig, StealMode,
+    SwapMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -620,6 +621,102 @@ fn swap_host_zero_equals_swap_off_under_preemption_every_dispatch() {
                 "{dispatch:?} replica {}: host(0) drifted from swap=off",
                 z.replica
             );
+        }
+    }
+}
+
+/// PR 6 pin, N=4: with `rerank = off` and `score_noise = 0` the whole
+/// continuous re-ranking wiring (predictor bookings, the rescore pass,
+/// refreshed victim keys) must be completely inert — every dispatch
+/// kind, record-for-record vs the frozen PR 1 loop.  FCFS additionally
+/// runs with a non-zero sigma: arrival keys are never length
+/// predictions, so the noise knob must not even be consulted there.
+#[test]
+fn rerank_off_n4_pins_to_reference_loop_every_dispatch() {
+    for dispatch in DispatchKind::all() {
+        for (kind, sigma) in
+            [(PolicyKind::Fcfs, 0.0), (PolicyKind::Fcfs, 0.7), (PolicyKind::OracleSjf, 0.0)]
+        {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                steal: StealMode::Off,
+                preempt: PreemptMode::Off,
+                rerank: RerankMode::Off,
+                score_noise: sigma,
+                ..Default::default()
+            };
+            assert_sharded_pinned_sched(&sched, kind);
+        }
+    }
+}
+
+/// PR 6 pin, N=1: same inertness against the pre-refactor single-engine
+/// loop — dispatch is trivial at N=1, but the inner step loop (where
+/// the rescore pass would run) is exactly what is pinned.
+#[test]
+fn rerank_off_n1_equals_legacy_every_dispatch() {
+    for dispatch in DispatchKind::all() {
+        for (kind, sigma) in
+            [(PolicyKind::Fcfs, 0.0), (PolicyKind::Fcfs, 0.7), (PolicyKind::OracleSjf, 0.0)]
+        {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                dispatch,
+                rerank: RerankMode::Off,
+                score_noise: sigma,
+                ..Default::default()
+            };
+            assert_identical(&sched, kind);
+        }
+    }
+}
+
+/// FCFS arrival keys cannot be "refined": turning re-ranking ON under
+/// FCFS must change nothing, even with preemption live — the predictor
+/// reports `refines() == false` and the whole rescore/refresh surface
+/// stays dark (mirrors `fcfs_keys_are_never_noised` at the unit level).
+#[test]
+fn rerank_with_fcfs_is_inert_under_preemption() {
+    for dispatch in DispatchKind::all() {
+        let mk = |rerank: RerankMode| {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                preempt: PreemptMode::Arrival,
+                rerank,
+                score_noise: 0.9,
+                ..Default::default()
+            };
+            let engines: Vec<SimEngine> = (0..sched.replicas)
+                .map(|_| SimEngine::new(CostModel::default(), &sched, 4096))
+                .collect();
+            let policy = make_policy(PolicyKind::Fcfs);
+            let mut coord =
+                ShardedCoordinator::new(engines, policy.as_ref(), dispatch, sched.clone());
+            coord.serve(workload()).unwrap()
+        };
+        let off = mk(RerankMode::Off);
+        for rerank in [RerankMode::Interval(25), RerankMode::OnToken] {
+            let on = mk(rerank);
+            assert_eq!(on.merged.preemptions, off.merged.preemptions, "{dispatch:?}");
+            for (a, b) in on.per_replica.iter().zip(off.per_replica.iter()) {
+                assert_eq!(
+                    format!("{:?}", a.records),
+                    format!("{:?}", b.records),
+                    "{dispatch:?} replica {}: rerank={} drifted FCFS",
+                    a.replica,
+                    rerank.name()
+                );
+            }
         }
     }
 }
