@@ -1,0 +1,140 @@
+//! §Scale bench: the indexed decision loop at trace scale.
+//!
+//! Schedules a large ranked + steal + preempt + swap + rerank trace
+//! (default 1,000,000 requests; `PARS_BENCH_N` overrides — the CI smoke
+//! keeps it small) through the re-entrant session, counting every
+//! decision the loop makes, and asserts the per-decision and wall-clock
+//! budgets that make million-request traces tractable: the decision
+//! loop is indexed end to end (next-event heap, dispatch load index,
+//! ordered waiting-queue index, batched event sink), so one decision
+//! costs microseconds regardless of queue depth.
+//!
+//! Runs on a fresh checkout (trace synthesised inline, no artifacts).
+
+use pars_serve::config::{
+    CostModel, DispatchKind, PolicyKind, PreemptMode, RerankMode, SchedulerConfig, StealMode,
+    SwapMode,
+};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::{Request, ShardedCoordinator, Tick};
+use pars_serve::engine::SimEngine;
+use pars_serve::util::bench::Table;
+
+/// Budget for one decision of the indexed loop, end to end (a dispatch,
+/// a steal, or one replica step including its decode bookkeeping), in
+/// release.  Roughly 10x headroom over a warm laptop so CI never
+/// flakes, while still catching an accidental O(n)-per-decision
+/// regression by orders of magnitude at the full trace size.
+const PER_DECISION_BUDGET_US: f64 = 15.0;
+
+/// Bursty near-saturation mix: four arrivals every 16 ms (~250 req/s
+/// against a ~325 req/s fleet), one long job in 16 — enough sustained
+/// pressure to keep ranked dispatch, stealing, preemption, host swap
+/// and continuous re-ranking all firing, while the waiting queues stay
+/// bounded so the run finishes in seconds.
+fn trace(n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| {
+            let target = if i % 16 == 0 { 120 } else { 6 + (i % 11) as u32 };
+            Request {
+                id: i,
+                tokens: vec![1, 3, 5, 7, 2],
+                prompt_len: 5,
+                arrival_ms: (i / 4) as f64 * 16.0,
+                target_len: target,
+                oracle_len: target,
+                score: target as f32,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let n: usize = std::env::var("PARS_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let s = SchedulerConfig {
+        max_batch: 8,
+        max_kv_tokens: 1 << 16,
+        replicas: 4,
+        dispatch: DispatchKind::Ranked,
+        steal: StealMode::Idle,
+        preempt: PreemptMode::Arrival,
+        swap: SwapMode::Host(64),
+        rerank: RerankMode::Interval(50),
+        score_noise: 0.3,
+        ..Default::default()
+    };
+    let policy = make_policy(PolicyKind::Pars);
+    let engines: Vec<SimEngine> = (0..s.replicas)
+        .map(|i| SimEngine::new(CostModel::default(), &s.for_replica(i), 4096))
+        .collect();
+    let mut c = ShardedCoordinator::new(engines, policy.as_ref(), s.dispatch, s.clone());
+
+    let reqs = trace(n);
+    let t0 = std::time::Instant::now();
+    let mut session = c.session();
+    for r in reqs {
+        session.submit(r);
+    }
+    let submit_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut decisions: u64 = 0;
+    loop {
+        match session.tick().expect("tick") {
+            Tick::Idle => break,
+            _ => decisions += 1,
+        }
+    }
+    let out = session.finish().expect("finish");
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let served: usize = out.per_replica.iter().map(|r| r.records.len()).sum();
+    assert_eq!(
+        served + out.merged.rejected,
+        n,
+        "conservation: every request must complete or be rejected"
+    );
+    let per_decision_us = wall_ms * 1e3 / decisions.max(1) as f64;
+    assert!(
+        per_decision_us < PER_DECISION_BUDGET_US,
+        "per-decision overhead {per_decision_us:.2} µs blew the {PER_DECISION_BUDGET_US} µs \
+         budget over {decisions} decisions"
+    );
+    let wall_budget_ms = 2_000.0 + decisions as f64 * PER_DECISION_BUDGET_US / 1e3;
+    assert!(
+        wall_ms < wall_budget_ms,
+        "wall clock {:.1} s blew the {:.1} s budget for {decisions} decisions",
+        wall_ms / 1e3,
+        wall_budget_ms / 1e3
+    );
+    if n >= 5_000 {
+        assert!(
+            out.merged.preemptions > 0,
+            "the scale trace never exercised preemption — the axis stack is not under load"
+        );
+    }
+
+    let stolen: usize = out.per_replica.iter().map(|r| r.stolen_in).sum();
+    let mut t = Table::new(
+        &format!("indexed decision loop at scale ({n} requests, full axis stack)"),
+        &["metric", "value"],
+    );
+    t.row(&["decisions".into(), decisions.to_string()]);
+    t.row(&["submit (ms)".into(), format!("{submit_ms:.1}")]);
+    t.row(&["wall (s)".into(), format!("{:.2}", wall_ms / 1e3)]);
+    t.row(&["per decision (µs)".into(), format!("{per_decision_us:.3}")]);
+    t.row(&[
+        "decisions / s".into(),
+        format!("{:.0}", decisions as f64 / (wall_ms / 1e3).max(1e-9)),
+    ]);
+    t.row(&["completed".into(), served.to_string()]);
+    t.row(&["rejected".into(), out.merged.rejected.to_string()]);
+    t.row(&["preemptions".into(), out.merged.preemptions.to_string()]);
+    t.row(&["stolen".into(), stolen.to_string()]);
+    t.row(&["boosts".into(), out.merged.boosts.to_string()]);
+    t.row(&["resumes".into(), out.merged.resumes.to_string()]);
+    t.row(&["peak waiting".into(), out.merged.peak_waiting.to_string()]);
+    t.row(&["makespan (sim s)".into(), format!("{:.1}", out.merged.makespan_ms / 1e3)]);
+    t.print();
+}

@@ -1,12 +1,21 @@
 //! §Perf micro-benchmarks over the request-path hot spots:
 //! admission scoring (the paper's "minimal overhead" claim), waiting-queue
 //! operations, the decode-loop bookkeeping, and the eval kernels.
+//!
+//! The indexed waiting queue's fast paths are pinned, not just benched:
+//! a counting allocator asserts the starvation-guard no-op and the
+//! rescore no-change pass allocate nothing at all — those two run every
+//! scheduling step of every replica, so a stray `Vec` there is a
+//! million-allocation regression on a million-request trace.
 
 mod common;
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use pars_serve::config::{CostModel, PolicyKind, SchedulerConfig};
 use pars_serve::coordinator::policy::make_policy;
-use pars_serve::coordinator::{PjrtScorer, Request, Scorer, WaitingQueue};
+use pars_serve::coordinator::{PjrtScorer, QueuedRequest, Request, Scorer, WaitingQueue};
 use pars_serve::engine::SimEngine;
 use pars_serve::eval::kendall_tau_b;
 use pars_serve::metrics::Histogram;
@@ -14,6 +23,55 @@ use pars_serve::runtime::{ArtifactManifest, Runtime};
 use pars_serve::util::bench::{black_box, Harness};
 use pars_serve::util::rng::Rng;
 use pars_serve::workload::TestSet;
+
+/// System allocator with an allocation counter — the zero-allocation
+/// asserts below bracket their fast-path calls with it.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// A deep queue of live entries (distinct keys with collisions, no
+/// boosts due under a huge starvation threshold).
+fn deep_queue(n: u64) -> WaitingQueue {
+    let mut w = WaitingQueue::new(1e12);
+    for i in 0..n {
+        w.push_scored(QueuedRequest {
+            key: (i % 97) as f64 + 0.5,
+            boosted: false,
+            preemptions: 0,
+            suspended: None,
+            req: Request {
+                id: i,
+                tokens: vec![1],
+                prompt_len: 1,
+                arrival_ms: i as f64,
+                target_len: 5,
+                oracle_len: 5,
+                score: 0.0,
+            },
+        });
+    }
+    w
+}
 
 fn main() {
     let mut h = Harness::with_budget("micro", 200, 800);
@@ -48,6 +106,28 @@ fn main() {
         }
         black_box(n)
     });
+
+    // indexed-queue hot ops on a deep queue: steal + bounce-back, the
+    // guard's O(1) pre-check and the rescore no-change pass must all
+    // stay flat in the queue depth
+    let mut w = deep_queue(4096);
+    h.bench("waiting_queue/steal_unpop_4096", || {
+        let q = w.steal_lowest_priority().expect("deep queue is never empty");
+        w.unpop(q);
+        black_box(w.len())
+    });
+    h.bench("waiting_queue/guard_noop_4096", || {
+        black_box(w.apply_starvation_guard(0.0).len())
+    });
+    h.bench("waiting_queue/rescore_nochange_4096", || {
+        black_box(w.rescore(|q| Some(q.key)).len())
+    });
+    // pinned, not just timed: neither fast path may allocate at all
+    let before = ALLOCS.load(Ordering::Relaxed);
+    assert!(w.apply_starvation_guard(0.0).is_empty(), "nothing is due under a 1e12 threshold");
+    assert!(w.rescore(|q| Some(q.key)).is_empty(), "identity rescore changes nothing");
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(allocs, 0, "guard no-op / rescore no-change must be allocation-free");
 
     // histogram record (per-token-latency tracking)
     h.bench("histogram/record_10k", || {

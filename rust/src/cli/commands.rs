@@ -548,6 +548,18 @@ fn replay(args: &Args) -> Result<()> {
         .with_context(|| format!("reading event log {path}"))?;
     let book = crate::coordinator::ReplayBook::from_jsonl(&src)
         .with_context(|| format!("replaying event log {path}"))?;
+    // a capture that lost its opening events (a bounded in-memory
+    // event log overflowed before it was dumped) would silently
+    // under-count every timeline — refuse it instead of summarising
+    // a partial run as if it were the whole story
+    if book.orphans > 0 {
+        bail!(
+            "event log {path} is truncated: {} event(s) reference requests with no \
+             dispatched/rejected entry (a bounded event log dropped their beginnings — \
+             raise --event-cap or capture with `serve --events`)",
+            book.orphans
+        );
+    }
     println!(
         "replay: {} events, {} replicas, {} rejected",
         book.events,
@@ -749,6 +761,21 @@ mod tests {
             dispatch(&args(&["replay", "--events", &path_s])).is_err(),
             "a corrupted log must fail loudly, not be half-summarised"
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn replay_refuses_a_truncated_capture() {
+        let dir = std::env::temp_dir().join("pars_replay_truncated_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("truncated.jsonl");
+        // an admitted event whose dispatched line was dropped by a
+        // bounded event log — replay must refuse, not half-summarise
+        std::fs::write(&path, "{\"event\":\"admitted\",\"id\":7,\"replica\":0,\"t_ms\":1.0}\n")
+            .unwrap();
+        let path_s = path.to_str().unwrap().to_string();
+        let err = dispatch(&args(&["replay", "--events", &path_s])).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "unexpected error: {err:#}");
         std::fs::remove_file(&path).ok();
     }
 

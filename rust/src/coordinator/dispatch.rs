@@ -98,8 +98,19 @@
 //! [`EventSink`]; the wrappers use a [`NullSink`], so batch behaviour
 //! stays bitwise what the frozen reference loops in `tests/sharded.rs`
 //! pin.
+//!
+//! The decision loop is **indexed**: the lagging-clock pick and the
+//! dispatch argmin are O(1) peeks of incrementally maintained
+//! [`KeyedMinHeap`]s (re-derived by `refresh` after every replica
+//! mutation), the work-stealing pre-check reads a cached idle count,
+//! the fleet-wide reject test is a single comparison against the
+//! fleet-max KV budget, and the per-replica running set is slot-ordered
+//! so rescore/victim scans iterate without collect + sort.  Indexing is
+//! a pure optimisation — debug audits assert each index answers exactly
+//! what the linear scan it replaced would, and `tests/sharded.rs` pins
+//! the serve loop record-for-record.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Context;
 
@@ -107,13 +118,19 @@ use crate::config::{DispatchKind, PreemptMode, RerankMode, SchedulerConfig, Stea
 use crate::coordinator::events::{EventSink, NullSink, PreemptKind, ServeEvent, SessionCtx};
 use crate::coordinator::predictor::{Predictor, ShrinkagePredictor};
 use crate::coordinator::queue::{QueuedRequest, SuspendedEntry};
-use crate::coordinator::session::ServeSession;
-use crate::engine::kv_cache::BLOCK_TOKENS;
 use crate::coordinator::server::ServeOutcome;
+use crate::coordinator::session::ServeSession;
 use crate::coordinator::{Policy, Request, WaitingQueue};
+use crate::engine::kv_cache::BLOCK_TOKENS;
 use crate::engine::Engine;
 use crate::metrics::{Recorder, RequestRecord};
+use crate::util::index::{KeyedMinHeap, TotalF64};
 use crate::Result;
+
+/// Incrementally maintained dispatch load key, widened to one uniform
+/// tuple so a single [`KeyedMinHeap`] serves both indexed dispatch
+/// kinds (least-loaded and ranked).
+type LoadKey = (u128, u128, u128);
 
 struct InFlight {
     req: Request,
@@ -140,7 +157,10 @@ struct Replica<E: Engine> {
     /// arrival-ordered).
     inbox: VecDeque<QueuedRequest>,
     waiting: WaitingQueue,
-    running: HashMap<usize, InFlight>,
+    /// Slot-keyed running batch.  Ordered by slot so the rescore and
+    /// preemption-victim scans iterate deterministically in place —
+    /// no per-decision collect + sort.
+    running: BTreeMap<usize, InFlight>,
     recorder: Recorder,
     /// Requests routed to this replica.
     dispatched: usize,
@@ -188,7 +208,7 @@ impl<E: Engine> Replica<E> {
             engine,
             inbox: VecDeque::new(),
             waiting: WaitingQueue::new(starvation_ms),
-            running: HashMap::new(),
+            running: BTreeMap::new(),
             recorder: Recorder::default(),
             dispatched: 0,
             stolen_in: 0,
@@ -447,10 +467,9 @@ impl<E: Engine> Replica<E> {
         now: f64,
         ctx: &mut SessionCtx<'_>,
     ) {
-        let mut slots: Vec<usize> = self.running.keys().copied().collect();
-        slots.sort_unstable();
-        for slot in slots {
-            let f = self.running.get_mut(&slot).unwrap();
+        // slot-ordered iteration (BTreeMap) — the same deterministic
+        // order the old collect + sort produced, with no allocation
+        for f in self.running.values_mut() {
             let rem = predictor.observe(f.req.id, f.generated);
             if rem.total_cmp(&f.key) != std::cmp::Ordering::Equal {
                 f.key = rem;
@@ -533,13 +552,10 @@ impl<E: Engine> Replica<E> {
         }
         let refine = predictor.refines();
         // victim scan: most remaining work wins, slot index breaks ties
-        // (sorted scan — HashMap iteration order is not deterministic)
+        // (BTreeMap iterates in slot order — deterministic, no collect)
         let now = self.engine.now_ms();
-        let mut slots: Vec<usize> = self.running.keys().copied().collect();
-        slots.sort_unstable();
         let mut victim: Option<(usize, f64)> = None;
-        for slot in slots {
-            let f = &self.running[&slot];
+        for (&slot, f) in self.running.iter() {
             // skip boosted jobs, jobs at the anti-thrash cap, and jobs
             // already past the starvation threshold: evicting the latter
             // re-queues an entry the guard boosts on the very next step,
@@ -737,6 +753,24 @@ pub struct ShardedCoordinator<'p, E: Engine> {
     fleet_max_kv_blocks: usize,
     /// Largest per-replica batch-slot count — queue-depth normalisation.
     fleet_max_slots: usize,
+    /// Next-event index: engine clocks of replicas with work, so the
+    /// lagging-replica pick is an O(1) peek instead of an O(R) scan per
+    /// decision.  Maintained by [`Self::refresh`] after every replica
+    /// mutation; a debug audit pins the peek to the scan it replaced.
+    next_heap: KeyedMinHeap<TotalF64>,
+    /// Dispatch load index (least-loaded / ranked keys; idle under
+    /// round-robin).  Same maintenance discipline as `next_heap`.
+    load_heap: KeyedMinHeap<LoadKey>,
+    /// Per-replica "fully idle with a free batch slot" flags plus their
+    /// population count — the work-stealing pre-check reads the count
+    /// instead of scanning the fleet every decision.
+    idle_free: Vec<bool>,
+    idle_free_count: usize,
+    /// Every replica shares one KV budget, so `can_ever_hold` is
+    /// uniform across the fleet and the load index needs no per-request
+    /// eligibility filter.  Heterogeneous fleets keep the linear
+    /// eligibility-filtered scan (they are small by construction).
+    kv_homogeneous: bool,
 }
 
 impl<'p, E: Engine> ShardedCoordinator<'p, E> {
@@ -753,7 +787,9 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             engines.into_iter().map(|e| Replica::new(e, starvation_ms)).collect();
         let fleet_max_kv_blocks = replicas.iter().map(|r| r.kv_blocks).max().unwrap_or(1);
         let fleet_max_slots = replicas.iter().map(|r| r.slots).max().unwrap_or(1);
-        ShardedCoordinator {
+        let kv_homogeneous = replicas.iter().all(|r| r.kv_blocks == fleet_max_kv_blocks);
+        let n = replicas.len();
+        let mut coord = ShardedCoordinator {
             replicas,
             predictor,
             dispatch,
@@ -761,6 +797,51 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             rr_cursor: 0,
             fleet_max_kv_blocks,
             fleet_max_slots,
+            next_heap: KeyedMinHeap::new(n),
+            load_heap: KeyedMinHeap::new(n),
+            idle_free: vec![false; n],
+            idle_free_count: 0,
+            kv_homogeneous,
+        };
+        for i in 0..n {
+            coord.refresh(i);
+        }
+        coord
+    }
+
+    /// Re-derive replica `idx`'s index entries from its current state.
+    /// Called after every mutation of a replica — dispatch, step, both
+    /// sides of a steal — so the heaps and the idle cache always answer
+    /// what a fresh fleet scan would.
+    fn refresh(&mut self, idx: usize) {
+        let r = &self.replicas[idx];
+        if r.has_work() {
+            self.next_heap.set(idx, TotalF64(r.engine.now_ms()));
+        } else {
+            self.next_heap.remove(idx);
+        }
+        let idle_free = !r.has_work() && r.engine.free_slots() > 0;
+        if idle_free != self.idle_free[idx] {
+            self.idle_free[idx] = idle_free;
+            if idle_free {
+                self.idle_free_count += 1;
+            } else {
+                self.idle_free_count -= 1;
+            }
+        }
+        match self.dispatch {
+            DispatchKind::RoundRobin => {}
+            DispatchKind::LeastLoaded => {
+                let (scaled, in_system, kv_used) = r.load_key(self.fleet_max_kv_blocks);
+                self.load_heap.set(idx, (scaled, in_system as u128, kv_used as u128));
+            }
+            DispatchKind::Ranked => {
+                let depth = r.queue_len() as u128 * self.fleet_max_slots as u128
+                    / r.slots.max(1) as u128;
+                let tokens = r.queued_tokens as u128 * self.fleet_max_kv_blocks as u128
+                    / r.kv_blocks.max(1) as u128;
+                self.load_heap.set(idx, (depth, tokens, 0));
+            }
         }
     }
 
@@ -816,9 +897,25 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                     .find(|&i| self.replicas[i].can_ever_hold(total_tokens))
                     .unwrap_or(start)
             }
+            // Both indexed kinds: in a homogeneous fleet the eligibility
+            // filter is uniform (the caller already rejected requests
+            // nobody can hold), so the winner is an O(1) peek of the
+            // load index — heap ties go to the lowest slot, exactly the
+            // first-minimum the linear scan keeps.  Heterogeneous fleets
+            // fall back to the eligibility-filtered scan.
             DispatchKind::LeastLoaded => {
                 let max_kv = self.fleet_max_kv_blocks;
-                self.argmin_eligible(total_tokens, |r| r.load_key(max_kv))
+                if self.kv_homogeneous {
+                    let i = self.load_heap.peek().map_or(0, |(i, _)| i);
+                    debug_assert_eq!(
+                        i,
+                        self.argmin_eligible(total_tokens, |r| r.load_key(max_kv)),
+                        "load index drifted from the least-loaded scan"
+                    );
+                    i
+                } else {
+                    self.argmin_eligible(total_tokens, |r| r.load_key(max_kv))
+                }
             }
             // Emptiest waiting queue relative to drain rate (queue depth
             // scaled by `fleet_max_slots / own_slots`; raw depth in a
@@ -826,12 +923,29 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             // shortest-predicted-first within the replica.
             DispatchKind::Ranked => {
                 let (max_kv, max_slots) = (self.fleet_max_kv_blocks, self.fleet_max_slots);
-                self.argmin_eligible(total_tokens, |r| {
-                    (
-                        r.queue_len() as u128 * max_slots as u128 / r.slots.max(1) as u128,
-                        r.queued_tokens as u128 * max_kv as u128 / r.kv_blocks.max(1) as u128,
-                    )
-                })
+                if self.kv_homogeneous {
+                    let i = self.load_heap.peek().map_or(0, |(i, _)| i);
+                    debug_assert_eq!(
+                        i,
+                        self.argmin_eligible(total_tokens, |r| {
+                            (
+                                r.queue_len() as u128 * max_slots as u128
+                                    / r.slots.max(1) as u128,
+                                r.queued_tokens as u128 * max_kv as u128
+                                    / r.kv_blocks.max(1) as u128,
+                            )
+                        }),
+                        "load index drifted from the ranked scan"
+                    );
+                    i
+                } else {
+                    self.argmin_eligible(total_tokens, |r| {
+                        (
+                            r.queue_len() as u128 * max_slots as u128 / r.slots.max(1) as u128,
+                            r.queued_tokens as u128 * max_kv as u128 / r.kv_blocks.max(1) as u128,
+                        )
+                    })
+                }
             }
         }
     }
@@ -860,9 +974,15 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         if self.replicas.len() < 2 {
             return false;
         }
-        // cheap pre-check keeps the serve loop O(replicas) when nobody
-        // is idle (the common case)
-        if !self.replicas.iter().any(|r| !r.has_work() && r.engine.free_slots() > 0) {
+        // cheap pre-check keeps the serve loop O(1) when nobody is idle
+        // (the common case): the idle-with-a-free-slot population is
+        // maintained incrementally by `refresh`
+        debug_assert_eq!(
+            self.idle_free_count > 0,
+            self.replicas.iter().any(|r| !r.has_work() && r.engine.free_slots() > 0),
+            "idle-replica cache drifted from the fleet scan"
+        );
+        if self.idle_free_count == 0 {
             return false;
         }
         // deepest waiting queue over the threshold among busy replicas;
@@ -927,6 +1047,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             t_ms: t.engine.now_ms(),
         });
         t.waiting.push_scored(q);
+        self.refresh(victim);
+        self.refresh(thief);
         true
     }
 
@@ -988,14 +1110,23 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         self.sched.event_log_capacity
     }
 
-    /// The replica that would step next (lagging clock; tie → index).
+    /// The replica that would step next (lagging clock; tie → index) —
+    /// an O(1) peek of the next-event index, pinned by a debug audit to
+    /// the `min_by` fleet scan it replaced.
     pub(crate) fn next_step(&self) -> Option<(f64, usize)> {
-        self.replicas
-            .iter()
-            .enumerate()
-            .filter(|(_, r)| r.has_work())
-            .map(|(i, r)| (r.engine.now_ms(), i))
-            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+        let got = self.next_heap.peek().map(|(i, k)| (k.0, i));
+        debug_assert_eq!(
+            got.map(|(t, i)| (t.to_bits(), i)),
+            self.replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.has_work())
+                .map(|(i, r)| (r.engine.now_ms(), i))
+                .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+                .map(|(t, i)| (t.to_bits(), i)),
+            "next-event index drifted from the lagging-clock scan"
+        );
+        got
     }
 
     /// Route one due arrival: score it once, pick a replica, enqueue it
@@ -1014,10 +1145,16 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         let total = req.prompt_len + req.target_len;
         // can never fit every replica's sequence budget, or larger than
         // every replica's entire KV budget — reject up front instead of
-        // deadlocking whichever replica it would land on
-        if total as usize > fleet_max_seq
-            || !self.replicas.iter().any(|r| r.can_ever_hold(total))
-        {
+        // deadlocking whichever replica it would land on.  Testing the
+        // block need against the fleet maximum is exactly the old
+        // `any(can_ever_hold)` scan, in O(1) per decision.
+        let needed_blocks = (total.max(1) as usize).div_ceil(BLOCK_TOKENS);
+        debug_assert_eq!(
+            needed_blocks > self.fleet_max_kv_blocks,
+            !self.replicas.iter().any(|r| r.can_ever_hold(total)),
+            "fleet-max block check must match the eligibility scan"
+        );
+        if total as usize > fleet_max_seq || needed_blocks > self.fleet_max_kv_blocks {
             ctx.emit(ServeEvent::Rejected { id: req.id, t_ms: decision_ms });
             return None;
         }
@@ -1034,14 +1171,18 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             preemptions: 0,
             suspended: None,
         });
+        self.refresh(idx);
         Some(idx)
     }
 
     /// Run one scheduling iteration on replica `idx` (disjoint field
-    /// borrows hand the replica both the config and the predictor).
+    /// borrows hand the replica both the config and the predictor),
+    /// then re-derive its index entries.
     pub(crate) fn step_replica(&mut self, idx: usize, ctx: &mut SessionCtx<'_>) -> Result<()> {
         let ShardedCoordinator { replicas, predictor, sched, .. } = self;
-        replicas[idx].step(sched, predictor, idx, ctx)
+        let res = replicas[idx].step(sched, predictor, idx, ctx);
+        self.refresh(idx);
+        res
     }
 
     /// Merge per-replica recorders into the fleet outcome + breakdowns.

@@ -21,7 +21,8 @@
 //!
 //! [`ServeSession`]: crate::coordinator::ServeSession
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fmt::Write as _;
 use std::io::Write;
 
 use crate::coordinator::session::RequestStatus;
@@ -197,12 +198,98 @@ impl ServeEvent {
         }
         Json::obj(pairs)
     }
+
+    /// Append the JSONL encoding of this event to `out` — byte-for-byte
+    /// what `to_json().to_string()` produces (`tests` pin the match),
+    /// without building the intermediate `Json` tree.  This is the
+    /// [`JsonlSink`] hot path: at millions of events, the per-emit
+    /// `BTreeMap` + `String` churn of the tree writer dominates observer
+    /// cost.  Fields are emitted in the alphabetical key order the
+    /// `BTreeMap`-backed tree writer sorts into.
+    pub fn write_json(&self, out: &mut String) {
+        out.push_str("{\"event\":\"");
+        out.push_str(self.kind());
+        out.push('"');
+        let num = |out: &mut String, key: &str, x: f64| {
+            out.push_str(",\"");
+            out.push_str(key);
+            out.push_str("\":");
+            // same rendering rule as the tree writer's `Json::Num`
+            if x.fract() == 0.0 && x.abs() < 2f64.powi(53) {
+                let _ = write!(out, "{}", x as i64);
+            } else {
+                let _ = write!(out, "{x}");
+            }
+        };
+        match self {
+            ServeEvent::Rejected { id, t_ms } => {
+                num(out, "id", *id as f64);
+                num(out, "t_ms", *t_ms);
+            }
+            ServeEvent::Dispatched { id, replica, key, t_ms } => {
+                num(out, "id", *id as f64);
+                num(out, "key", *key);
+                num(out, "replica", *replica as f64);
+                num(out, "t_ms", *t_ms);
+            }
+            ServeEvent::Admitted { id, replica, t_ms }
+            | ServeEvent::FirstToken { id, replica, t_ms }
+            | ServeEvent::Boosted { id, replica, t_ms } => {
+                num(out, "id", *id as f64);
+                num(out, "replica", *replica as f64);
+                num(out, "t_ms", *t_ms);
+            }
+            ServeEvent::Stolen { id, from, to, wasted, t_ms } => {
+                num(out, "from", *from as f64);
+                num(out, "id", *id as f64);
+                num(out, "t_ms", *t_ms);
+                num(out, "to", *to as f64);
+                num(out, "wasted", *wasted as f64);
+            }
+            ServeEvent::Preempted { id, replica, wasted, mode, t_ms } => {
+                num(out, "id", *id as f64);
+                out.push_str(",\"mode\":\"");
+                out.push_str(mode.name());
+                out.push('"');
+                num(out, "replica", *replica as f64);
+                num(out, "t_ms", *t_ms);
+                num(out, "wasted", *wasted as f64);
+            }
+            ServeEvent::Resumed { id, replica, restored, t_ms } => {
+                num(out, "id", *id as f64);
+                num(out, "replica", *replica as f64);
+                num(out, "restored", *restored as f64);
+                num(out, "t_ms", *t_ms);
+            }
+            ServeEvent::Rescored { id, replica, remaining, t_ms } => {
+                num(out, "id", *id as f64);
+                num(out, "remaining", *remaining);
+                num(out, "replica", *replica as f64);
+                num(out, "t_ms", *t_ms);
+            }
+            ServeEvent::Completed { replica, record } => {
+                num(out, "id", record.id as f64);
+                out.push_str(",\"record\":");
+                // once per request lifetime, so the tree detour is fine
+                record.to_json().write_to(out);
+                num(out, "replica", *replica as f64);
+                num(out, "t_ms", record.completed_ms);
+            }
+        }
+        out.push('}');
+    }
 }
 
 /// Where lifecycle events go.  Implementations must be pure observers —
 /// the serving loop's behaviour is pinned independent of the sink.
 pub trait EventSink {
     fn emit(&mut self, ev: &ServeEvent);
+
+    /// Push any buffered events through to the backing store.  Batched
+    /// sinks ([`JsonlSink`]) amortize per-event cost by buffering;
+    /// the session layer calls this at run boundaries so a capture is
+    /// complete before anyone reads it.  Unbuffered sinks need nothing.
+    fn flush(&mut self) {}
 }
 
 /// Drops every event (zero-overhead default for the batch wrappers).
@@ -259,6 +346,13 @@ impl EventLog {
     pub fn dropped(&self) -> u64 {
         self.dropped
     }
+
+    /// True when the capacity bound has evicted events (`seen > len`) —
+    /// the retained window is a partial view and any replay over it
+    /// must say so rather than report counters from a truncated stream.
+    pub fn truncated(&self) -> bool {
+        self.dropped > 0
+    }
 }
 
 impl EventSink for EventLog {
@@ -276,28 +370,60 @@ impl EventSink for EventLog {
     }
 }
 
+/// Line-buffer high-water mark: emitted lines accumulate in one reused
+/// `String` and move to the writer in ~32 KiB batches, so per-event
+/// observer cost is an append, not an allocation plus a write call.
+const JSONL_BATCH_BYTES: usize = 32 * 1024;
+
 /// Streams events as JSON Lines to any writer (`serve --events` wraps a
-/// buffered file).  `emit` cannot fail, so the first I/O error is
-/// latched and surfaced by [`JsonlSink::finish`]; later events are
-/// discarded once the writer is broken.
+/// buffered file).  Emitted lines are batched ([`JSONL_BATCH_BYTES`])
+/// and drained on overflow, on [`EventSink::flush`] and at
+/// [`JsonlSink::finish`].  `emit` cannot fail, so the first I/O error
+/// is latched and surfaced by `finish` (`serve --events` turns it into
+/// a hard error — a full disk must not yield exit 0 and a silently
+/// truncated log); later events are discarded once the writer is
+/// broken.
 pub struct JsonlSink<W: Write> {
     w: W,
+    /// Formatted-but-undrained lines (reused across batches).
+    buf: String,
+    /// Events sitting in `buf`.
+    pending: u64,
     written: u64,
     err: Option<std::io::Error>,
 }
 
 impl<W: Write> JsonlSink<W> {
     pub fn new(w: W) -> JsonlSink<W> {
-        JsonlSink { w, written: 0, err: None }
+        JsonlSink { w, buf: String::new(), pending: 0, written: 0, err: None }
     }
 
-    /// Events successfully written so far.
+    /// Events handed to the writer so far (advances when a batch
+    /// drains, not per emit).
     pub fn written(&self) -> u64 {
         self.written
     }
 
-    /// Flush and close, reporting the event count or the first error.
+    /// Move the buffered batch into the writer, latching the first
+    /// error; a broken writer drops the batch.
+    fn drain(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        if self.err.is_none() {
+            match self.w.write_all(self.buf.as_bytes()) {
+                Ok(()) => self.written += self.pending,
+                Err(e) => self.err = Some(e),
+            }
+        }
+        self.buf.clear();
+        self.pending = 0;
+    }
+
+    /// Drain, flush and close, reporting the event count or the first
+    /// latched error.
     pub fn finish(mut self) -> std::io::Result<u64> {
+        self.drain();
         if let Some(e) = self.err.take() {
             return Err(e);
         }
@@ -311,9 +437,20 @@ impl<W: Write> EventSink for JsonlSink<W> {
         if self.err.is_some() {
             return;
         }
-        match writeln!(self.w, "{}", ev.to_json().to_string()) {
-            Ok(()) => self.written += 1,
-            Err(e) => self.err = Some(e),
+        ev.write_json(&mut self.buf);
+        self.buf.push('\n');
+        self.pending += 1;
+        if self.buf.len() >= JSONL_BATCH_BYTES {
+            self.drain();
+        }
+    }
+
+    fn flush(&mut self) {
+        self.drain();
+        if self.err.is_none() {
+            if let Err(e) = self.w.flush() {
+                self.err = Some(e);
+            }
         }
     }
 }
@@ -398,6 +535,14 @@ pub struct ReplayBook {
     pub rejected: u64,
     /// Events consumed (JSONL lines parsed).
     pub events: u64,
+    /// Events whose request never entered the stream through a
+    /// `Dispatched` or `Rejected` — the signature of a capture whose
+    /// bounded [`EventLog`] window dropped its prefix (`seen > len`).
+    /// A complete capture has none; `pallas replay` refuses a book with
+    /// orphans instead of reporting counters from a partial window.
+    pub orphans: u64,
+    /// Ids whose entry-point event (`Dispatched`/`Rejected`) was seen.
+    entered: HashSet<u64>,
     /// Suspend timestamp of requests currently parked in a host pool
     /// (cleared by `Resumed`, a steal downgrade, or a fresh admission).
     park_started: HashMap<u64, f64>,
@@ -426,6 +571,16 @@ impl ReplayBook {
     /// identically).
     pub fn push(&mut self, ev: &ServeEvent) {
         self.events += 1;
+        match ev {
+            ServeEvent::Rejected { id, .. } | ServeEvent::Dispatched { id, .. } => {
+                self.entered.insert(*id);
+            }
+            _ => {
+                if !self.entered.contains(&ev.id()) {
+                    self.orphans += 1;
+                }
+            }
+        }
         match ev {
             ServeEvent::Rejected { .. } => self.rejected += 1,
             ServeEvent::Dispatched { replica, t_ms, .. } => {
@@ -734,6 +889,7 @@ mod tests {
     fn jsonl_sink_writes_parseable_lines() {
         let mut sink = JsonlSink::new(Vec::<u8>::new());
         sink.emit(&ev(7));
+        assert_eq!(sink.written(), 0, "emits batch in the line buffer until a drain");
         sink.emit(&ServeEvent::Preempted {
             id: 3,
             replica: 0,
@@ -751,6 +907,7 @@ mod tests {
         sink.emit(&ServeEvent::Resumed { id: 4, replica: 1, restored: 9, t_ms: 55.0 });
         sink.emit(&ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, t_ms: 60.0 });
         sink.emit(&ServeEvent::Rescored { id: 6, replica: 0, remaining: 12.5, t_ms: 70.0 });
+        sink.flush();
         assert_eq!(sink.written(), 6);
         let buf = String::from_utf8(sink.w.clone()).unwrap();
         for line in buf.lines() {
@@ -800,5 +957,118 @@ mod tests {
         assert!(rec.get("boosted").unwrap().as_bool().unwrap());
         // the whole line roundtrips through the parser
         assert!(json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn write_json_matches_the_tree_writer_on_every_variant() {
+        // the hot-path serializer must stay byte-for-byte identical to
+        // to_json().to_string() — integer-valued floats, fractional
+        // keys, and NaN timestamps included
+        let record = RequestRecord {
+            id: 5,
+            arrival_ms: 1.25,
+            admitted_ms: 2.0,
+            first_token_ms: 3.5,
+            completed_ms: 4.0,
+            prompt_len: 6,
+            output_len: 7,
+            boosted: true,
+            preemptions: 1,
+        };
+        let events = [
+            ServeEvent::Rejected { id: 1, t_ms: 0.5 },
+            ServeEvent::Rejected { id: u64::MAX >> 12, t_ms: f64::NAN },
+            ServeEvent::Dispatched { id: 2, replica: 3, key: 41.75, t_ms: 10.0 },
+            ServeEvent::Dispatched { id: 2, replica: 0, key: f64::INFINITY, t_ms: -0.0 },
+            ServeEvent::Admitted { id: 3, replica: 1, t_ms: 11.0 },
+            ServeEvent::FirstToken { id: 3, replica: 1, t_ms: 12.125 },
+            ServeEvent::Boosted { id: 4, replica: 2, t_ms: 13.0 },
+            ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, t_ms: 60.0 },
+            ServeEvent::Preempted {
+                id: 6,
+                replica: 0,
+                wasted: 11,
+                mode: PreemptKind::Recompute,
+                t_ms: 40.0,
+            },
+            ServeEvent::Preempted {
+                id: 6,
+                replica: 0,
+                wasted: 0,
+                mode: PreemptKind::Swap,
+                t_ms: 41.5,
+            },
+            ServeEvent::Resumed { id: 6, replica: 1, restored: 9, t_ms: 55.0 },
+            ServeEvent::Rescored { id: 7, replica: 0, remaining: 12.5, t_ms: 70.0 },
+            ServeEvent::Completed { replica: 2, record },
+        ];
+        for ev in &events {
+            let mut fast = String::new();
+            ev.write_json(&mut fast);
+            assert_eq!(fast, ev.to_json().to_string(), "drift on {:?}", ev.kind());
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_drains_when_the_batch_fills() {
+        let mut sink = JsonlSink::new(Vec::<u8>::new());
+        let mut n = 0u64;
+        while sink.written() == 0 {
+            sink.emit(&ev(n));
+            n += 1;
+            assert!(n < 10_000, "batch high-water mark never tripped");
+        }
+        assert!(!sink.w.is_empty(), "overflow must push the batch to the writer");
+        assert!(sink.written() <= n);
+        let total = sink.finish().unwrap();
+        assert_eq!(total, n, "finish must account for every emitted event");
+    }
+
+    /// A writer that fails every write (closed pipe / full disk stand-in).
+    struct FailingWriter;
+
+    impl std::io::Write for FailingWriter {
+        fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::other("disk full"))
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn jsonl_sink_surfaces_a_latched_writer_error() {
+        let mut sink = JsonlSink::new(FailingWriter);
+        sink.emit(&ev(1));
+        sink.flush(); // first drain hits the broken writer and latches
+        sink.emit(&ev(2)); // discarded: the writer is known broken
+        sink.flush();
+        assert_eq!(sink.written(), 0);
+        let err = sink.finish().expect_err("finish must surface the latched io error");
+        assert!(err.to_string().contains("disk full"), "got {err}");
+    }
+
+    #[test]
+    fn event_log_reports_truncation() {
+        let mut log = EventLog::bounded(2);
+        log.emit(&ev(0));
+        log.emit(&ev(1));
+        assert!(!log.truncated());
+        log.emit(&ev(2));
+        assert!(log.truncated(), "seen > len must read as a partial window");
+    }
+
+    #[test]
+    fn replay_book_counts_orphans_from_a_truncated_capture() {
+        let mut book = ReplayBook::default();
+        book.push(&ev(1)); // Dispatched: id 1 enters
+        book.push(&ServeEvent::Admitted { id: 1, replica: 1, t_ms: 3.0 });
+        book.push(&ServeEvent::Rejected { id: 2, t_ms: 4.0 });
+        assert_eq!(book.orphans, 0, "a complete capture has no orphans");
+        // id 9 was never dispatched — its prefix fell out of a bounded window
+        book.push(&ServeEvent::Admitted { id: 9, replica: 0, t_ms: 5.0 });
+        book.push(&ServeEvent::FirstToken { id: 9, replica: 0, t_ms: 6.0 });
+        assert_eq!(book.orphans, 2);
+        assert_eq!(book.events, 5);
     }
 }

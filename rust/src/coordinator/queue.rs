@@ -1,16 +1,24 @@
 //! Waiting-queue bookkeeping + the starvation guard (paper §III-B).
 //!
-//! A binary heap keyed by (boosted, policy key, arrival, id): boosted
+//! An ordered index keyed by (boosted, policy key, arrival, id): boosted
 //! requests always outrank un-boosted ones, ties fall back to FCFS order,
-//! and the final id tiebreak makes ordering total and deterministic.
-//! The guard promotes any request whose wait exceeds the threshold
-//! (default 2 minutes), bounding worst-case queueing delay under SJF.
+//! and the final id tiebreak (plus an insertion sequence number for
+//! fully-identical entries) makes ordering total and deterministic.
+//! `pop`, `unpop` and `steal_lowest_priority` are all O(log n) — the
+//! steal is just the other end of the same index — and a secondary
+//! arrival-ordered index over the un-boosted entries gives the
+//! starvation guard a true O(1) no-op pre-check and an O(boosted)
+//! firing path, instead of the full-heap scans and rebuilds the old
+//! binary heap needed.  The guard promotes any request whose wait
+//! exceeds the threshold (default 2 minutes), bounding worst-case
+//! queueing delay under SJF.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::BTreeMap;
 
 use crate::coordinator::{Policy, Request};
 use crate::engine::Suspended;
+use crate::util::index::TotalF64;
 
 /// The suspended-state bundle a swap-mode preemption victim carries
 /// through the waiting queue: its engine [`Suspended`] handle (KV pages
@@ -88,9 +96,11 @@ impl PartialOrd for QueuedRequest {
 
 impl Ord for QueuedRequest {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for min-ordering.  Float fields
-        // compare via total_cmp so NaN keys or arrival times yield a
-        // consistent total order instead of collapsing entries together.
+        // Inverted so the greatest entry pops first (min-ordering under
+        // `cmp_key`), matching the BinaryHeap this queue grew out of.
+        // Float fields compare via total_cmp so NaN keys or arrival
+        // times yield a consistent total order instead of collapsing
+        // entries together.
         let a = self.cmp_key();
         let b = other.cmp_key();
         b.0.cmp(&a.0)
@@ -100,9 +110,36 @@ impl Ord for QueuedRequest {
     }
 }
 
+/// Index key: `cmp_key` under total order, plus an insertion sequence
+/// number so entries that tie on every `cmp_key` field (same id, key
+/// and arrival bits) still get distinct index slots.  Tie order among
+/// such twins is unobservable — their pop signatures are identical.
+type EntryKey = (bool, TotalF64, TotalF64, u64, u64);
+
+/// Arrival-index key for un-boosted entries: guard-sanitized arrival
+/// first, then the insertion sequence number for uniqueness.
+type ArrivalKey = (TotalF64, u64);
+
+/// Arrival ordering for the guard index.  NaN arrivals can never cross
+/// the starvation threshold (`now - NaN > s` is false), so they are
+/// mapped to the canonical positive NaN, which `total_cmp` sorts after
+/// every number — a raw `-NaN` would sort *first* and break both the
+/// ascending early-stop walk and the O(1) oldest-arrival read.
+fn guard_arrival(a: f64) -> TotalF64 {
+    TotalF64(if a.is_nan() { f64::NAN } else { a })
+}
+
 /// The waiting queue W.
 pub struct WaitingQueue {
-    heap: BinaryHeap<QueuedRequest>,
+    /// Every queued entry, ordered by ([`EntryKey`]) pop priority:
+    /// `pop` is `pop_first`, `steal_lowest_priority` is `pop_last`.
+    entries: BTreeMap<EntryKey, QueuedRequest>,
+    /// The un-boosted entries ordered by arrival — the starvation
+    /// guard's index.  Its first entry IS the oldest un-boosted
+    /// arrival, so the guard's no-op pre-check is a single lookup.
+    arrivals: BTreeMap<ArrivalKey, EntryKey>,
+    /// Monotone insertion counter (tiebreak for identical entries).
+    seq: u64,
     starvation_ms: f64,
     /// Count of requests ever boosted (reported in serving outcomes).
     pub boosts: usize,
@@ -110,21 +147,45 @@ pub struct WaitingQueue {
 
 impl WaitingQueue {
     pub fn new(starvation_ms: f64) -> WaitingQueue {
-        WaitingQueue { heap: BinaryHeap::new(), starvation_ms, boosts: 0 }
+        WaitingQueue {
+            entries: BTreeMap::new(),
+            arrivals: BTreeMap::new(),
+            seq: 0,
+            starvation_ms,
+            boosts: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.entries.is_empty()
+    }
+
+    /// Insert `q` into both indexes under a fresh sequence number.
+    fn link(&mut self, seq: u64, q: QueuedRequest) {
+        let ek = (!q.boosted, TotalF64(q.key), TotalF64(q.req.arrival_ms), q.req.id, seq);
+        if !q.boosted {
+            self.arrivals.insert((guard_arrival(q.req.arrival_ms), seq), ek);
+        }
+        self.entries.insert(ek, q);
+    }
+
+    /// Remove the entry at `ek` from both indexes.
+    fn unlink(&mut self, ek: &EntryKey) -> QueuedRequest {
+        let q = self.entries.remove(ek).expect("indexed entry must exist");
+        if !q.boosted {
+            self.arrivals.remove(&(guard_arrival((ek.2).0), ek.4));
+        }
+        q
     }
 
     /// Enqueue with the policy's key.
     pub fn push(&mut self, req: Request, policy: &dyn Policy) {
         let key = policy.key(&req);
-        self.heap.push(QueuedRequest {
+        self.push_scored(QueuedRequest {
             req,
             key,
             boosted: false,
@@ -140,60 +201,66 @@ impl WaitingQueue {
     /// first arrival, not from eviction), its score key, its boost and
     /// its preemption count.
     pub fn push_scored(&mut self, q: QueuedRequest) {
-        self.heap.push(q);
+        let seq = self.seq;
+        self.seq += 1;
+        self.link(seq, q);
     }
 
-    /// Pop the highest-priority request.
+    /// Pop the highest-priority request.  O(log n).
     pub fn pop(&mut self) -> Option<QueuedRequest> {
-        self.heap.pop()
+        let (ek, q) = self.entries.pop_first()?;
+        if !q.boosted {
+            self.arrivals.remove(&(guard_arrival((ek.2).0), ek.4));
+        }
+        Some(q)
     }
 
     /// Put back a request that could not be admitted (keeps its boost).
     pub fn unpop(&mut self, q: QueuedRequest) {
-        self.heap.push(q);
+        self.push_scored(q);
     }
 
     /// Starvation guard: promote requests waiting longer than the
-    /// threshold.  O(n) re-heap, but runs only when something actually
-    /// crosses the threshold (checked O(1) against the oldest arrival).
-    /// Returns the ids boosted by *this* call (empty in the common case,
-    /// so no allocation) — the session layer turns them into `Boosted`
-    /// lifecycle events.
+    /// threshold.  The no-op pre-check really is O(1) now — the arrival
+    /// index's first entry is the oldest un-boosted arrival — and a
+    /// firing guard walks only the overdue prefix of that index
+    /// (`now - arrival` is non-increasing in arrival, so the first
+    /// non-overdue entry ends the walk; NaN arrivals sort last and are
+    /// never overdue).  Returns the ids boosted by *this* call, oldest
+    /// arrival first (empty in the common case, so no allocation) — the
+    /// session layer turns them into `Boosted` lifecycle events.
     pub fn apply_starvation_guard(&mut self, now_ms: f64) -> Vec<u64> {
-        if self.heap.is_empty() {
-            return Vec::new();
-        }
-        let needs = self
-            .heap
-            .iter()
-            .any(|q| !q.boosted && now_ms - q.req.arrival_ms > self.starvation_ms);
-        if !needs {
+        let s = self.starvation_ms;
+        let due = move |a: f64| now_ms - a > s;
+        if !self.arrivals.first_key_value().is_some_and(|(_, ek)| due((ek.2).0)) {
             return Vec::new();
         }
         let mut newly = Vec::new();
-        let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
-        for q in &mut all {
-            if !q.boosted && now_ms - q.req.arrival_ms > self.starvation_ms {
-                q.boosted = true;
-                self.boosts += 1;
-                newly.push(q.req.id);
+        while let Some((&ak, &ek)) = self.arrivals.first_key_value() {
+            if !due((ek.2).0) {
+                break;
             }
+            self.arrivals.remove(&ak);
+            let mut q = self.entries.remove(&ek).expect("indexed entry must exist");
+            q.boosted = true;
+            self.boosts += 1;
+            newly.push(q.req.id);
+            // boosted entries leave the arrival index for good (a boost
+            // never recurs) and re-enter the main index in the boosted
+            // band, same seq
+            self.entries.insert((false, ek.1, ek.2, ek.3, ek.4), q);
         }
-        self.heap = all.into();
         newly
     }
 
     /// Oldest un-boosted arrival (None if empty or everything is already
     /// boosted) — guard scheduling aid: boosted entries can never cross
     /// the starvation threshold again, so only un-boosted ones matter for
-    /// the guard's next deadline.
+    /// the guard's next deadline.  O(1) off the arrival index (when only
+    /// NaN arrivals remain, that NaN is reported, matching the old
+    /// NaN-ignoring fold).
     pub fn oldest_arrival(&self) -> Option<f64> {
-        self.heap.iter().filter(|q| !q.boosted).map(|q| q.req.arrival_ms).fold(None, |acc, x| {
-            Some(match acc {
-                None => x,
-                Some(a) => a.min(x),
-            })
-        })
+        self.arrivals.first_key_value().map(|(_, ek)| (ek.2).0)
     }
 
     /// Continuous re-ranking: re-key every entry under refreshed
@@ -204,49 +271,41 @@ impl WaitingQueue {
     /// key for an entry or `None` to keep the current one.  Returns the
     /// `(id, new_key)` pairs that actually changed (compared under
     /// `total_cmp`, so a NaN→NaN "change" does not report), sorted by
-    /// id — a deterministic order for `Rescored` event emission.  O(n)
-    /// take/mutate/rebuild, same as the starvation guard.
+    /// id — a deterministic order for `Rescored` event emission.  One
+    /// pass to collect the changes, then O(log n) per changed entry to
+    /// re-key it in place; when nothing changes, nothing is allocated
+    /// and the indexes are untouched.
     pub fn rescore(&mut self, mut f: impl FnMut(&QueuedRequest) -> Option<f64>) -> Vec<(u64, f64)> {
-        if self.heap.is_empty() {
-            return Vec::new();
-        }
-        let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
-        let mut changed = Vec::new();
-        for q in &mut all {
+        let mut changed: Vec<(EntryKey, f64)> = Vec::new();
+        for (ek, q) in self.entries.iter() {
             if let Some(k) = f(q) {
                 if k.total_cmp(&q.key) != Ordering::Equal {
-                    q.key = k;
-                    changed.push((q.req.id, k));
+                    changed.push((*ek, k));
                 }
             }
         }
-        self.heap = all.into();
-        changed.sort_by_key(|&(id, _)| id);
-        changed
+        let mut report: Vec<(u64, f64)> = Vec::with_capacity(changed.len());
+        for (ek, k) in changed {
+            let mut q = self.unlink(&ek);
+            q.key = k;
+            report.push((q.req.id, k));
+            self.link(ek.4, q); // a re-key is not a re-queue: keep the seq
+        }
+        report.sort_by_key(|&(id, _)| id);
+        report
     }
 
     /// Remove and return the lowest-priority entry — the one that would
     /// pop LAST (longest-predicted under an SJF policy).  This is what a
     /// cross-replica steal takes from a victim queue: the remaining
-    /// entries keep their exact pop order, and the entry keeps its boost.
-    /// O(n) heap rebuild, but stealing only happens when a sibling
-    /// replica idles, so it is off the per-iteration hot path.
+    /// entries keep their exact pop order, and the entry keeps its
+    /// boost.  O(log n) — the steal target is simply the other end of
+    /// the pop index.
     pub fn steal_lowest_priority(&mut self) -> Option<QueuedRequest> {
-        if self.heap.is_empty() {
-            return None;
+        let (ek, q) = self.entries.pop_last()?;
+        if !q.boosted {
+            self.arrivals.remove(&(guard_arrival((ek.2).0), ek.4));
         }
-        let mut all: Vec<QueuedRequest> = std::mem::take(&mut self.heap).into_vec();
-        // `Ord` is inverted for min-ordering (greatest = pops first), so
-        // the steal target is the minimum; ties keep the first index,
-        // which is deterministic because the order is total.
-        let worst = all
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| a.cmp(b))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        let q = all.swap_remove(worst);
-        self.heap = all.into();
         Some(q)
     }
 }
@@ -256,6 +315,7 @@ mod tests {
     use super::*;
     use crate::config::PolicyKind;
     use crate::coordinator::policy::{Fcfs, ScoreSjf};
+    use crate::util::rng::Rng;
 
     fn req(id: u64, arrival: f64, score: f32) -> Request {
         Request {
@@ -492,5 +552,147 @@ mod tests {
         assert!(q.boosted);
         w.unpop(q);
         assert!(w.pop().unwrap().boosted);
+    }
+
+    // -----------------------------------------------------------------
+    // Brute-force differential model (regression for the indexed
+    // rewrite and the old "checked O(1)" guard doc/code drift)
+    // -----------------------------------------------------------------
+
+    fn sig(q: &QueuedRequest) -> (u64, u64, u64, bool) {
+        (q.req.id, q.key.to_bits(), q.req.arrival_ms.to_bits(), q.boosted)
+    }
+
+    /// Reference pop: the greatest entry under `Ord` (what the old
+    /// BinaryHeap returned).  Ties are signature-identical, so which
+    /// twin goes first is unobservable.
+    fn model_pop(model: &mut Vec<QueuedRequest>) -> Option<QueuedRequest> {
+        let i = model.iter().enumerate().max_by(|(_, a), (_, b)| a.cmp(b)).map(|(i, _)| i)?;
+        Some(model.remove(i))
+    }
+
+    /// Reference steal: the least entry under `Ord` (pops last).
+    fn model_steal(model: &mut Vec<QueuedRequest>) -> Option<QueuedRequest> {
+        let i = model.iter().enumerate().min_by(|(_, a), (_, b)| a.cmp(b)).map(|(i, _)| i)?;
+        Some(model.remove(i))
+    }
+
+    #[test]
+    fn guard_and_queue_ops_match_a_brute_force_model_across_interleavings() {
+        // drive random push_scored/pop/unpop/steal/rescore/guard
+        // interleavings (NaN arrivals and colliding ids included)
+        // against a linear-scan model of the pre-index semantics; the
+        // boost set, the `boosts` counter, the returned ids and every
+        // removed entry's signature must agree call by call, and the
+        // final drain orders must coincide
+        let mut rng = Rng::new(0xB005);
+        for case in 0..40 {
+            let threshold = 50.0 + rng.below(200) as f64;
+            let mut w = WaitingQueue::new(threshold);
+            let mut model: Vec<QueuedRequest> = Vec::new();
+            let mut model_boosts = 0usize;
+            let mut now = 0.0;
+            for step in 0..120 {
+                now += rng.f64() * 30.0;
+                match rng.below(6) {
+                    0 | 1 => {
+                        let arrival =
+                            if rng.below(10) == 0 { f64::NAN } else { now - rng.f64() * 60.0 };
+                        let q = QueuedRequest {
+                            req: req(rng.below(32) as u64, arrival, 0.0),
+                            key: rng.f64() * 10.0,
+                            boosted: false,
+                            preemptions: 0,
+                            suspended: None,
+                        };
+                        model.push(q.clone());
+                        w.push_scored(q);
+                    }
+                    2 => {
+                        let got = w.pop();
+                        let want = model_pop(&mut model);
+                        assert_eq!(
+                            got.as_ref().map(sig),
+                            want.as_ref().map(sig),
+                            "case {case} step {step}: pop drifted from the model"
+                        );
+                        // half the pops bounce back (failed admission)
+                        if let (Some(q), Some(m)) = (got, want) {
+                            if rng.below(2) == 0 {
+                                w.unpop(q);
+                                model.push(m);
+                            }
+                        }
+                    }
+                    3 => {
+                        let got = w.steal_lowest_priority();
+                        let want = model_steal(&mut model);
+                        assert_eq!(
+                            got.as_ref().map(sig),
+                            want.as_ref().map(sig),
+                            "case {case} step {step}: steal drifted from the model"
+                        );
+                    }
+                    _ => {
+                        // refreshed key depends only on the id, so twin
+                        // entries report identical (id, key) pairs
+                        let f = |q: &QueuedRequest| {
+                            (q.req.id % 3 == 0).then_some((q.req.id % 7) as f64 + 0.25)
+                        };
+                        let got = w.rescore(f);
+                        let mut want: Vec<(u64, f64)> = Vec::new();
+                        for q in model.iter_mut() {
+                            if let Some(k) = f(q) {
+                                if k.total_cmp(&q.key) != Ordering::Equal {
+                                    q.key = k;
+                                    want.push((q.req.id, k));
+                                }
+                            }
+                        }
+                        want.sort_by_key(|&(id, _)| id);
+                        assert_eq!(
+                            got, want,
+                            "case {case} step {step}: rescore drifted from the model"
+                        );
+                    }
+                }
+                // the guard runs every iteration, like the serve loop
+                let mut newly = w.apply_starvation_guard(now);
+                let mut expect: Vec<u64> = Vec::new();
+                for q in model.iter_mut() {
+                    if !q.boosted && now - q.req.arrival_ms > threshold {
+                        q.boosted = true;
+                        model_boosts += 1;
+                        expect.push(q.req.id);
+                    }
+                }
+                newly.sort_unstable();
+                expect.sort_unstable();
+                assert_eq!(
+                    newly, expect,
+                    "case {case} step {step}: guard boosted the wrong set"
+                );
+                assert_eq!(w.boosts, model_boosts, "case {case} step {step}: boosts counter");
+                assert_eq!(
+                    w.oldest_arrival().map(f64::to_bits),
+                    model
+                        .iter()
+                        .filter(|q| !q.boosted && !q.req.arrival_ms.is_nan())
+                        .map(|q| q.req.arrival_ms)
+                        .min_by(f64::total_cmp)
+                        .or_else(|| {
+                            model.iter().find(|q| !q.boosted).map(|q| q.req.arrival_ms)
+                        })
+                        .map(f64::to_bits),
+                    "case {case} step {step}: oldest_arrival"
+                );
+                assert_eq!(w.len(), model.len(), "case {case} step {step}: length");
+            }
+            // final drain must coincide entry for entry
+            let drained: Vec<_> = std::iter::from_fn(|| w.pop()).map(|q| sig(&q)).collect();
+            let expect: Vec<_> =
+                std::iter::from_fn(|| model_pop(&mut model)).map(|q| sig(&q)).collect();
+            assert_eq!(drained, expect, "case {case}: final drain order drifted");
+        }
     }
 }

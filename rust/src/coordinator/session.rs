@@ -263,9 +263,16 @@ impl<'c, 'p, E: Engine> ServeSession<'c, 'p, E> {
 
     /// Drain every remaining decision and return the merged outcome —
     /// exactly what the batch `serve` would have returned for the same
-    /// submissions.
+    /// submissions.  The event sink is flushed, so a batched sink (e.g.
+    /// the buffered JSONL writer) has everything emitted so far on disk
+    /// when this returns; write errors stay latched in the sink until
+    /// its own `finish` surfaces them.
     pub fn finish(mut self) -> Result<ShardedOutcome> {
         while self.tick()? != Tick::Idle {}
+        match &mut self.sink {
+            SinkSlot::Owned(log) => log.flush(),
+            SinkSlot::Borrowed(s) => s.flush(),
+        }
         Ok(self.coord.collect(self.rejected))
     }
 }

@@ -1,0 +1,250 @@
+//! Ordered-index primitives for the scheduling hot path.
+//!
+//! * [`TotalF64`] — an `f64` ordered by IEEE-754 `total_cmp`, so float
+//!   keys (NaN included) can live inside `BTreeMap` keys and heap
+//!   entries with a total, deterministic order.
+//! * [`KeyedMinHeap`] — a slot-indexed binary min-heap with O(log n)
+//!   `set`/`remove` and O(1) `peek`, for incrementally maintained
+//!   per-replica keys (next event time, load) replacing the O(n)
+//!   `min_by` scans the decision loop used to run per tick.
+
+use std::cmp::Ordering;
+
+/// `f64` under `total_cmp`: a total order (`-NaN < -inf < … < +inf <
+/// +NaN`) suitable for `Ord`-keyed containers.  Equality is bit-level
+/// (per `total_cmp`), so `-0.0 != 0.0` and `NaN == NaN` for the same
+/// bit pattern — exactly the tie semantics the scheduling order needs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TotalF64(pub f64);
+
+impl PartialEq for TotalF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for TotalF64 {}
+
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Sentinel for "slot not in the heap".
+const ABSENT: usize = usize::MAX;
+
+/// A binary min-heap over a fixed set of slots `0..n`, each carrying at
+/// most one key.  `set` inserts or re-keys a slot in O(log n), `remove`
+/// drops it, `peek` returns the minimum `(slot, key)` in O(1).  Ties on
+/// the key go to the lowest slot index — the same winner an
+/// `Iterator::min_by_key` linear scan (which keeps the first minimum)
+/// would pick, so a heap lookup can replace such a scan bit-for-bit.
+pub struct KeyedMinHeap<K> {
+    /// Heap-ordered slot ids.
+    heap: Vec<usize>,
+    /// slot → position in `heap` (`ABSENT` when not enrolled).
+    pos: Vec<usize>,
+    /// slot → current key.
+    keys: Vec<Option<K>>,
+}
+
+impl<K: Ord> KeyedMinHeap<K> {
+    pub fn new(slots: usize) -> KeyedMinHeap<K> {
+        KeyedMinHeap {
+            heap: Vec::with_capacity(slots),
+            pos: vec![ABSENT; slots],
+            keys: (0..slots).map(|_| None).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn contains(&self, slot: usize) -> bool {
+        self.pos[slot] != ABSENT
+    }
+
+    /// The minimum `(slot, key)` under `(key, slot)` order.
+    pub fn peek(&self) -> Option<(usize, &K)> {
+        let slot = *self.heap.first()?;
+        Some((slot, self.keys[slot].as_ref().expect("enrolled slot has a key")))
+    }
+
+    /// Insert `slot` with `key`, or re-key it if already enrolled.
+    pub fn set(&mut self, slot: usize, key: K) {
+        self.keys[slot] = Some(key);
+        if self.pos[slot] == ABSENT {
+            self.pos[slot] = self.heap.len();
+            self.heap.push(slot);
+            self.sift_up(self.heap.len() - 1);
+        } else {
+            // the new key may rank either way — restore from its spot
+            let i = self.sift_up(self.pos[slot]);
+            self.sift_down(i);
+        }
+    }
+
+    /// Drop `slot` from the heap (no-op when not enrolled).
+    pub fn remove(&mut self, slot: usize) {
+        let i = self.pos[slot];
+        if i == ABSENT {
+            return;
+        }
+        self.keys[slot] = None;
+        self.pos[slot] = ABSENT;
+        let last = self.heap.len() - 1;
+        if i != last {
+            self.heap.swap(i, last);
+            self.pos[self.heap[i]] = i;
+            self.heap.pop();
+            let j = self.sift_up(i);
+            self.sift_down(j);
+        } else {
+            self.heap.pop();
+        }
+    }
+
+    /// `(key, slot)` comparison between two heap positions.
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (sa, sb) = (self.heap[a], self.heap[b]);
+        let (ka, kb) = (
+            self.keys[sa].as_ref().expect("enrolled slot has a key"),
+            self.keys[sb].as_ref().expect("enrolled slot has a key"),
+        );
+        match ka.cmp(kb) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => sa < sb,
+        }
+    }
+
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a]] = a;
+        self.pos[self.heap[b]] = b;
+    }
+
+    fn sift_up(&mut self, mut i: usize) -> usize {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if !self.less(i, parent) {
+                break;
+            }
+            self.swap(i, parent);
+            i = parent;
+        }
+        i
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut best = i;
+            if l < self.heap.len() && self.less(l, best) {
+                best = l;
+            }
+            if r < self.heap.len() && self.less(r, best) {
+                best = r;
+            }
+            if best == i {
+                break;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn total_f64_orders_nan_and_signed_zero() {
+        let mut v = vec![
+            TotalF64(f64::NAN),
+            TotalF64(1.0),
+            TotalF64(-0.0),
+            TotalF64(f64::NEG_INFINITY),
+            TotalF64(0.0),
+            TotalF64(-3.5),
+        ];
+        v.sort();
+        let bits: Vec<u64> = v.iter().map(|t| t.0.to_bits()).collect();
+        let want: Vec<u64> = [f64::NEG_INFINITY, -3.5, -0.0, 0.0, 1.0, f64::NAN]
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert_eq!(bits, want);
+        assert_eq!(TotalF64(f64::NAN), TotalF64(f64::NAN));
+        assert_ne!(TotalF64(-0.0), TotalF64(0.0));
+    }
+
+    /// Linear-scan reference for the heap minimum: first minimum under
+    /// `(key, slot)` — the `min_by_key` winner the heap must reproduce.
+    fn linear_min<K: Ord + Copy>(keys: &[Option<K>]) -> Option<(usize, K)> {
+        keys.iter()
+            .enumerate()
+            .filter_map(|(slot, k)| k.map(|k| (slot, k)))
+            .min_by(|a, b| a.1.cmp(&b.1).then(a.0.cmp(&b.0)))
+    }
+
+    #[test]
+    fn heap_tracks_a_linear_scan_under_random_updates() {
+        let mut rng = Rng::new(0x1DE7);
+        for _ in 0..50 {
+            let slots = 1 + rng.below(12);
+            let mut heap: KeyedMinHeap<(u64, u64)> = KeyedMinHeap::new(slots);
+            let mut model: Vec<Option<(u64, u64)>> = vec![None; slots];
+            for _ in 0..200 {
+                let slot = rng.below(slots);
+                if rng.below(4) == 0 {
+                    heap.remove(slot);
+                    model[slot] = None;
+                } else {
+                    // coarse keys force ties, exercising the slot tiebreak
+                    let key = (rng.below(4) as u64, rng.below(3) as u64);
+                    heap.set(slot, key);
+                    model[slot] = Some(key);
+                }
+                let want = linear_min(&model);
+                let got = heap.peek().map(|(s, k)| (s, *k));
+                assert_eq!(got, want, "heap/model divergence over {slots} slots");
+                assert_eq!(heap.len(), model.iter().flatten().count());
+                for (s, k) in model.iter().enumerate() {
+                    assert_eq!(heap.contains(s), k.is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heap_basics() {
+        let mut h: KeyedMinHeap<u32> = KeyedMinHeap::new(3);
+        assert!(h.is_empty());
+        assert!(h.peek().is_none());
+        h.set(2, 10);
+        h.set(0, 10); // tie → lowest slot wins
+        assert_eq!(h.peek(), Some((0, &10)));
+        h.set(0, 99); // re-key downward in priority
+        assert_eq!(h.peek(), Some((2, &10)));
+        h.remove(2);
+        h.remove(2); // double-remove is a no-op
+        assert_eq!(h.peek(), Some((0, &99)));
+        h.remove(0);
+        assert!(h.is_empty());
+    }
+}

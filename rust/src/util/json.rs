@@ -118,6 +118,13 @@ impl Json {
         out
     }
 
+    /// Append the encoding to an existing buffer — the allocation-free
+    /// variant of [`Json::to_string`] for hot paths that reuse one
+    /// buffer across many values (e.g. the batched JSONL event sink).
+    pub fn write_to(&self, out: &mut String) {
+        self.write(out);
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

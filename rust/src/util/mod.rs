@@ -6,6 +6,7 @@
 //! implemented here from scratch (DESIGN.md §System inventory).
 
 pub mod bench;
+pub mod index;
 pub mod json;
 pub mod prop;
 pub mod rng;

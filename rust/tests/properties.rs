@@ -10,6 +10,11 @@
 //! * `unpop` is order-neutral: popping entries and putting them back
 //!   never changes the remaining pop sequence.
 //! * The starvation guard boosts exactly the over-threshold set.
+//! * The indexed queue (ordered B-tree index replacing the binary
+//!   heap) is differentially pinned: on random op traces — NaN keys
+//!   and arrivals, colliding ids, boosts, steals — pop/steal results,
+//!   guard boost sets and the final drain match a flat brute-force
+//!   model entry for entry.
 //! * Metamorphic conservation: for random traces × every `DispatchKind`
 //!   × `PolicyKind` × steal mode × preempt mode × swap mode, every
 //!   request is served exactly once or rejected (no id duplicated or
@@ -207,6 +212,98 @@ fn prop_guard_boosts_exactly_the_overdue_set() {
             popped.len() == entries.len()
                 && w.boosts == n_over
                 && popped.iter().all(|q| q.boosted == (*now - q.req.arrival_ms > *threshold))
+        },
+    );
+}
+
+#[test]
+fn prop_indexed_queue_matches_a_flat_model_under_random_ops() {
+    // differential pin for the ordered-index queue: random interleaved
+    // push / pop / steal / guard traces against a flat Vec using the
+    // entry `Ord` directly (the old binary heap's order).  Equal keys
+    // carry identical signatures, so tie-order permutations are
+    // unobservable and plain equality is the right comparison.
+    check_with(
+        prop_seed(),
+        150,
+        |rng| {
+            let threshold = rng.f64() * 400.0 + 1.0;
+            let ops: Vec<(usize, f64, f64, u64, f64)> = (0..60)
+                .map(|_| {
+                    let key = match rng.below(6) {
+                        0 => f64::NAN,
+                        1 => -rng.f64() * 10.0,
+                        _ => rng.f64() * 100.0,
+                    };
+                    let arrival =
+                        if rng.below(8) == 0 { f64::NAN } else { rng.f64() * 800.0 };
+                    (rng.below(8), key, arrival, rng.below(64) as u64, rng.f64() * 1200.0)
+                })
+                .collect();
+            (threshold, ops)
+        },
+        |case| {
+            let (threshold, ops) = case;
+            let mut w = WaitingQueue::new(*threshold);
+            let mut model: Vec<QueuedRequest> = Vec::new();
+            let mut boosts = 0usize;
+            let sig = |q: &QueuedRequest| {
+                (q.req.id, q.key.to_bits(), q.req.arrival_ms.to_bits(), q.boosted)
+            };
+            for &(op, key, arrival, id, now) in ops {
+                match op {
+                    0..=3 => {
+                        w.push_scored(mk_queued(key, arrival, id));
+                        model.push(mk_queued(key, arrival, id));
+                    }
+                    4 | 5 => {
+                        let got = w.pop();
+                        let at = model
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.cmp(b.1))
+                            .map(|(i, _)| i);
+                        let want = at.map(|i| model.remove(i));
+                        if got.as_ref().map(&sig) != want.as_ref().map(&sig) {
+                            return false;
+                        }
+                    }
+                    6 => {
+                        let got = w.steal_lowest_priority();
+                        let at = model
+                            .iter()
+                            .enumerate()
+                            .min_by(|a, b| a.1.cmp(b.1))
+                            .map(|(i, _)| i);
+                        let want = at.map(|i| model.remove(i));
+                        if got.as_ref().map(&sig) != want.as_ref().map(&sig) {
+                            return false;
+                        }
+                    }
+                    _ => {
+                        let mut got = w.apply_starvation_guard(now);
+                        let mut want = Vec::new();
+                        for q in model.iter_mut() {
+                            // NaN arrivals never boost (NaN > thr is false)
+                            if !q.boosted && now - q.req.arrival_ms > *threshold {
+                                q.boosted = true;
+                                boosts += 1;
+                                want.push(q.req.id);
+                            }
+                        }
+                        got.sort_unstable();
+                        want.sort_unstable();
+                        if got != want || w.boosts != boosts {
+                            return false;
+                        }
+                    }
+                }
+                if w.len() != model.len() {
+                    return false;
+                }
+            }
+            model.sort_by(|a, b| b.cmp(a));
+            drain_sig(&mut w) == model.iter().map(&sig).collect::<Vec<_>>()
         },
     );
 }
