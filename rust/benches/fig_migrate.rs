@@ -1,0 +1,168 @@
+//! Host-page migration bench: the PR 8 park-then-steal trace (a
+//! 600-token job grabs replica 0's only slot, a stream of shorts lands
+//! behind it, the job is preempted into the host pool and the idle
+//! sibling steals it) run twice per bandwidth point — once on a fleet
+//! whose thief owns a real host pool (the steal migrates the parked
+//! pages, lossless) and once against the discard-downgrade baseline
+//! (the thief's pool holds zero blocks, so every steal of a parked
+//! entry burns its progress and recomputes, the pre-migration
+//! behaviour).
+//!
+//! Expected shape: migration must **strictly reduce
+//! `wasted_decode_tokens`** versus the discard baseline — to zero on
+//! this trace, since every preemption parks and every steal migrates —
+//! while holding or improving mean e2e latency (the transfer is
+//! bandwidth-priced on both replicas' clocks but costs a fraction of a
+//! millisecond; the recompute it replaces re-prefills and re-decodes
+//! hundreds of tokens).  Swept across `swap_bw_gbps` to show the win
+//! is not an artifact of one link speed.
+//!
+//! Runs on a fresh checkout — the trace is synthesised inline, no
+//! artifacts needed.  `PARS_BENCH_N` overrides the short-job count (CI
+//! smoke uses a tiny value to catch bit-rot without burning minutes).
+
+use pars_serve::config::{
+    CostModel, DispatchKind, PolicyKind, PreemptMode, SchedulerConfig, StealMode, SwapMode,
+};
+use pars_serve::coordinator::policy::make_policy;
+use pars_serve::coordinator::ShardedCoordinator;
+use pars_serve::engine::SimEngine;
+use pars_serve::harness::park_then_steal;
+use pars_serve::util::bench::Table;
+
+const POOL_BLOCKS: usize = 1 << 12;
+
+struct Row {
+    e2e_mean: f64,
+    makespan_ms: f64,
+    preemptions: usize,
+    stolen: usize,
+    wasted: u64,
+    swapped: u64,
+    resumed: u64,
+    migrated: u64,
+}
+
+/// Two single-slot replicas, ranked dispatch, idle stealing, arrival
+/// preemption.  `thief_pool` sizes replica 1's host pool: `POOL_BLOCKS`
+/// is the migration fleet, `0` the discard-downgrade baseline (a steal
+/// of a parked entry finds no room and burns the progress — swap
+/// behaviour is engine-side, so the asymmetric fleet needs no knob).
+fn run(thief_pool: usize, bw_gbps: f64, n_short: usize) -> Row {
+    let sched = SchedulerConfig {
+        max_batch: 1,
+        max_kv_tokens: 1 << 20,
+        replicas: 2,
+        dispatch: DispatchKind::Ranked,
+        steal: StealMode::Idle,
+        preempt: PreemptMode::Arrival,
+        swap: SwapMode::Host(POOL_BLOCKS),
+        swap_bw_gbps: bw_gbps,
+        ..Default::default()
+    };
+    let mut thief_sched = sched.clone();
+    thief_sched.swap = SwapMode::Host(thief_pool);
+    let engines = vec![
+        SimEngine::new(CostModel::default(), &sched.for_replica(0), 4096),
+        SimEngine::new(CostModel::default(), &thief_sched.for_replica(1), 4096),
+    ];
+    let policy = make_policy(PolicyKind::Pars);
+    let mut coord =
+        ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
+    let out = coord.serve(park_then_steal(n_short)).expect("serve");
+    assert_eq!(out.merged.report.n_requests, n_short + 1, "lost requests");
+    Row {
+        e2e_mean: out.merged.report.e2e.mean,
+        makespan_ms: out.merged.makespan_ms,
+        preemptions: out.merged.preemptions,
+        stolen: out.per_replica.iter().map(|r| r.stolen_in).sum(),
+        wasted: out.merged.wasted_decode_tokens,
+        swapped: out.merged.swapped_out_tokens,
+        resumed: out.merged.resumed_tokens,
+        migrated: out.merged.migrated_tokens,
+    }
+}
+
+fn main() {
+    let n_short: usize =
+        std::env::var("PARS_BENCH_N").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    println!(
+        "fig_migrate: 1×600-token job at t=0 on replica 0, {n_short}×8-token jobs from\n\
+         t=200, two single-slot replicas, ranked dispatch, steal=idle, preempt=arrival —\n\
+         host-page migration vs the discard-downgrade baseline (thief pool = 0)"
+    );
+
+    let mut t = Table::new(
+        "migrated steals vs discard-downgraded steals on the park-then-steal trace",
+        &[
+            "steal of parked",
+            "bw GB/s",
+            "mean e2e ms",
+            "makespan s",
+            "evictions",
+            "steals",
+            "wasted tok",
+            "swapped tok",
+            "resumed tok",
+            "migrated tok",
+        ],
+    );
+    for bw in [1.0, 4.0, 16.0, 64.0] {
+        let migrate = run(POOL_BLOCKS, bw, n_short);
+        let discard = run(0, bw, n_short);
+        for (name, row) in [("migrate", &migrate), ("discard", &discard)] {
+            t.row(&[
+                name.to_string(),
+                format!("{bw:.0}"),
+                format!("{:.0}", row.e2e_mean),
+                format!("{:.2}", row.makespan_ms / 1e3),
+                row.preemptions.to_string(),
+                row.stolen.to_string(),
+                row.wasted.to_string(),
+                row.swapped.to_string(),
+                row.resumed.to_string(),
+                row.migrated.to_string(),
+            ]);
+        }
+
+        // the PR acceptance criterion, asserted at every bandwidth
+        // point: migration strictly cuts wasted decode tokens vs the
+        // discard baseline while holding or improving mean e2e
+        assert!(migrate.preemptions > 0, "bw {bw}: the long job was never preempted");
+        assert!(migrate.stolen > 0, "bw {bw}: the parked job was never stolen");
+        assert!(migrate.migrated > 0, "bw {bw}: the steal never migrated pages");
+        assert!(migrate.resumed > 0, "bw {bw}: migrated progress never resumed");
+        assert_eq!(
+            migrate.wasted, 0,
+            "bw {bw}: every preemption parks and every steal migrates — nothing may burn"
+        );
+        assert!(discard.stolen > 0, "bw {bw}: the baseline never stole");
+        assert!(
+            discard.wasted > 0,
+            "bw {bw}: the discard baseline must burn the stolen job's progress"
+        );
+        assert_eq!(discard.migrated, 0, "bw {bw}: a zero-block thief pool cannot import");
+        assert!(
+            migrate.wasted < discard.wasted,
+            "bw {bw}: migration must strictly cut waste: migrate={} discard={}",
+            migrate.wasted,
+            discard.wasted
+        );
+        assert!(
+            migrate.e2e_mean <= discard.e2e_mean,
+            "bw {bw}: migration must hold or improve mean e2e: migrate={:.1} discard={:.1}",
+            migrate.e2e_mean,
+            discard.e2e_mean
+        );
+        assert!(migrate.resumed <= migrate.swapped, "bw {bw}: resume books exceed swap-out");
+    }
+    t.print();
+
+    println!(
+        "\n(expected: with a real thief pool the stolen job's parked pages ride along —\n\
+         wasted stays zero at every link speed and mean e2e improves because the resume\n\
+         skips the re-prefill and the re-decode; the discard rows burn the same progress\n\
+         a PR 7 steal downgrade would, and the gap is the whole migration win — the\n\
+         transfer itself costs well under a millisecond even at 1 GB/s)"
+    );
+}

@@ -7,7 +7,7 @@ use anyhow::{bail, Context, Result};
 use crate::cli::Args;
 use crate::config::{
     Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, RerankMode, StealMode,
-    SwapMode,
+    SwapEvictMode, SwapMode, SwapPricingMode,
 };
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{Coordinator, EventSink, JsonlSink, PjrtScorer, Scorer};
@@ -62,6 +62,12 @@ COMMANDS:
                                       the pool is full)
                 --swap-bw-gbps <f>  host<->device swap bandwidth the sim
                                     cost model charges (default 16)
+                --swap-pricing off|transfer  price suspendable evictions at
+                                    their swap transfer cost in the preempt
+                                    probe instead of full recompute
+                --swap-evict off|rank  under host-pool pressure, discard the
+                                    lowest-ranked parked entry to admit a
+                                    better one (off: recompute fallback)
                 --rerank off|interval(ms)|on_token  continuous re-ranking:
                                     refine predicted lengths from decode
                                     progress, re-key the waiting queue and
@@ -136,6 +142,12 @@ fn load_config(args: &Args) -> Result<Config> {
         cfg.scheduler.swap = SwapMode::parse(s)?;
     }
     cfg.scheduler.swap_bw_gbps = args.f64_or("swap-bw-gbps", cfg.scheduler.swap_bw_gbps)?;
+    if let Some(s) = args.str_opt("swap-pricing")? {
+        cfg.scheduler.swap_pricing = SwapPricingMode::parse(s)?;
+    }
+    if let Some(s) = args.str_opt("swap-evict")? {
+        cfg.scheduler.swap_evict = SwapEvictMode::parse(s)?;
+    }
     if let Some(r) = args.str_opt("rerank")? {
         cfg.scheduler.rerank = RerankMode::parse(r)?;
     }
@@ -243,7 +255,7 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}",
+                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}{}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
@@ -252,6 +264,16 @@ fn serve(args: &Args) -> Result<()> {
                 cfg.scheduler.preempt.name(),
                 cfg.scheduler.swap.name(),
                 cfg.scheduler.rerank.name(),
+                if cfg.scheduler.swap_pricing != SwapPricingMode::Off {
+                    format!("  swap_pricing={}", cfg.scheduler.swap_pricing.name())
+                } else {
+                    String::new()
+                },
+                if cfg.scheduler.swap_evict != SwapEvictMode::Off {
+                    format!("  swap_evict={}", cfg.scheduler.swap_evict.name())
+                } else {
+                    String::new()
+                },
                 if cfg.scheduler.score_noise > 0.0 {
                     format!("  score_noise={}", cfg.scheduler.score_noise)
                 } else {
@@ -295,10 +317,11 @@ fn serve(args: &Args) -> Result<()> {
                     0.0
                 };
                 println!(
-                    "swap: swapped_out_tokens={}  resumed_tokens={}  resumes={}  \
-                     mean_restore_delay={:.1} ms",
+                    "swap: swapped_out_tokens={}  resumed_tokens={}  migrated_tokens={}  \
+                     resumes={}  mean_restore_delay={:.1} ms",
                     out.merged.swapped_out_tokens,
                     out.merged.resumed_tokens,
+                    out.merged.migrated_tokens,
                     out.merged.resumes,
                     mean_restore
                 );
@@ -307,14 +330,15 @@ fn serve(args: &Args) -> Result<()> {
                 for rep in &out.per_replica {
                     println!(
                         "{}  dispatched={}  stolen_in={}  stolen_out={}  preempted={}  \
-                         swapped_out={}  resumed={}",
+                         swapped_out={}  resumed={}  migrated_in={}",
                         rep.report.one_line(&format!("  replica {}", rep.replica)),
                         rep.dispatched,
                         rep.stolen_in,
                         rep.stolen_out,
                         rep.preempted,
                         rep.swapped_out_tokens,
-                        rep.resumed_tokens
+                        rep.resumed_tokens,
+                        rep.migrated_tokens
                     );
                 }
             }
@@ -382,9 +406,10 @@ fn sweep(args: &Args) -> Result<()> {
     let rates = harness::sweep_rates(&ts, &cost, &cfg.scheduler);
 
     let mut csv = String::from(
-        "dataset,model,policy,replicas,dispatch,steal,preempt,swap,rerank,rate_req_s,rep,\
+        "dataset,model,policy,replicas,dispatch,steal,preempt,swap,swap_pricing,swap_evict,\
+         rerank,rate_req_s,rep,\
          avg_ms_tok,p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,\
-         wasted_tokens,swapped_tokens,resumed_tokens\n",
+         wasted_tokens,swapped_tokens,resumed_tokens,migrated_tokens\n",
     );
     for &kind in &suite {
         for &rate in &rates {
@@ -393,13 +418,15 @@ fn sweep(args: &Args) -> Result<()> {
                 let sc = &cfg.scheduler;
                 let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{}\n",
+                    "{dataset},{model},{},{},{},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{},{}\n",
                     kind.name().replace(' ', "_"),
                     cfg.scheduler.replicas,
                     cfg.scheduler.dispatch.name(),
                     cfg.scheduler.steal.name(),
                     cfg.scheduler.preempt.name(),
                     cfg.scheduler.swap.name(),
+                    cfg.scheduler.swap_pricing.name(),
+                    cfg.scheduler.swap_evict.name(),
                     cfg.scheduler.rerank.name(),
                     out.merged.report.avg_per_token_ms,
                     out.merged.report.p90_per_token_ms,
@@ -410,7 +437,8 @@ fn sweep(args: &Args) -> Result<()> {
                     out.merged.preemptions,
                     out.merged.wasted_decode_tokens,
                     out.merged.swapped_out_tokens,
-                    out.merged.resumed_tokens
+                    out.merged.resumed_tokens,
+                    out.merged.migrated_tokens
                 ));
             }
         }
@@ -561,10 +589,11 @@ fn replay(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "replay: {} events, {} replicas, {} rejected",
+        "replay: {} events, {} replicas, {} rejected, {} per-id time regression(s)",
         book.events,
         book.replicas.len(),
-        book.rejected
+        book.rejected,
+        book.time_regressions
     );
     let mut t = Table::new(
         &format!("per-replica timelines ({path})"),
@@ -581,6 +610,7 @@ fn replay(args: &Args) -> Result<()> {
             "preempt rc/swap",
             "resumes",
             "restored tok",
+            "migrated tok",
             "wasted tok",
         ],
     );
@@ -598,6 +628,7 @@ fn replay(args: &Args) -> Result<()> {
             format!("{}/{}", r.preempted_recompute, r.preempted_swap),
             r.resumes.to_string(),
             r.restored_tokens.to_string(),
+            r.migrated_tokens.to_string(),
             r.wasted_tokens.to_string(),
         ]);
     }
@@ -708,6 +739,57 @@ mod tests {
             "occupancy {:.3} exceeds the single batch slot",
             r.occupancy()
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Flags shared by this test and the CI migrate smoke: two
+    /// single-slot replicas under ranked dispatch with stealing,
+    /// preemption and per-replica host pools all on — the full PR 8
+    /// page-economy surface.  Every `stolen` event must carry the
+    /// `migrated` field, price its outcome one way only (pages moved
+    /// XOR progress burned), and sum to the replay books.  The run is
+    /// seed-deterministic, so whatever this test observes the CI smoke
+    /// on the same flags observes too.
+    const MIGRATE_SMOKE_FLAGS: [&str; 23] = [
+        "serve", "--policy", "oracle", "--replicas", "2", "--dispatch", "ranked",
+        "--max-batch", "1", "--rate", "12", "--n", "500", "--steal", "idle", "--preempt",
+        "arrival", "--preempt-margin", "1", "--swap", "host:256", "--seed", "20260730",
+    ];
+
+    #[test]
+    fn serve_under_steal_and_swap_reports_migration_in_stolen_events() {
+        let dir = std::env::temp_dir().join("pars_migrate_events_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("migrate_ev.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut argv: Vec<&str> = MIGRATE_SMOKE_FLAGS.to_vec();
+        argv.extend(["--events", &path_s]);
+        dispatch(&args(&argv)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let (mut stolen, mut migrated) = (0u64, 0u64);
+        for line in body.lines() {
+            let v = crate::util::json::parse(line).expect("every line is valid JSON");
+            if v.get("event").unwrap().as_str().unwrap() == "stolen" {
+                stolen += 1;
+                let m = v.get("migrated").unwrap().as_f64().unwrap();
+                let w = v.get("wasted").unwrap().as_f64().unwrap();
+                assert!(
+                    m == 0.0 || w == 0.0,
+                    "a steal both migrated pages and burned progress"
+                );
+                migrated += m as u64;
+            }
+        }
+        assert!(stolen > 0, "two near-saturated replicas never stole work");
+        let book = crate::coordinator::ReplayBook::from_jsonl(&body).unwrap();
+        assert_eq!(
+            book.replicas.iter().map(|r| r.migrated_tokens).sum::<u64>(),
+            migrated,
+            "replay books disagree with the stolen-event migrated sums"
+        );
+        // the replay subcommand renders the same capture, migrated
+        // column included
+        dispatch(&args(&["replay", "--events", &path_s])).unwrap();
         std::fs::remove_file(&path).ok();
     }
 

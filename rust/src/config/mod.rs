@@ -302,6 +302,99 @@ impl SwapMode {
     }
 }
 
+/// How the preemption margin probe prices an eviction (swap-aware
+/// preemption pricing).
+///
+/// With `Off`, every eviction is priced as a full recompute: the
+/// candidate's predicted work times `preempt_margin` must undercut the
+/// victim's remaining work (the pre-pricing behaviour, bit-for-bit).
+/// With `Transfer`, an eviction the host pool can absorb is priced at
+/// its actual cost — the suspend + resume block transfer at
+/// `swap_bw_gbps`, converted to decode-token equivalents
+/// ([`Engine::swap_price_tokens`](crate::engine::Engine::swap_price_tokens))
+/// — so the ranked policy preempts more aggressively exactly when
+/// preempting is nearly free.  Recompute evictions keep the margin
+/// pricing either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapPricingMode {
+    /// Price every eviction as a full recompute (margin pricing only).
+    Off,
+    /// Price suspendable evictions at their swap transfer cost.
+    Transfer,
+}
+
+impl SwapPricingMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        parse_mode(
+            "swap_pricing",
+            "off | transfer",
+            &[
+                ModeVariant::Bare(&["off", "none"], SwapPricingMode::Off),
+                ModeVariant::Bare(&["transfer"], SwapPricingMode::Transfer),
+            ],
+            s,
+        )
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SwapPricingMode::Off => "off".to_string(),
+            SwapPricingMode::Transfer => "transfer".to_string(),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [SwapPricingMode; 2] {
+        [SwapPricingMode::Off, SwapPricingMode::Transfer]
+    }
+}
+
+/// Host-pool pressure policy: what happens when an eviction wants to
+/// suspend but the host pool lacks room.
+///
+/// With `Off`, the eviction falls back to recompute (the pre-pressure
+/// behaviour, bit-for-bit).  With `Rank`, the replica first discards
+/// the lowest-ranked suspended entry in its own waiting queue — the
+/// parked job that would pop last anyway — to make room for a
+/// better-ranked victim's pages; if that still does not free enough
+/// blocks, the recompute fallback fires as before.  The discarded
+/// entry's progress is booked as wasted work, exactly like a steal
+/// downgrade.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwapEvictMode {
+    /// Never discard parked pages; full pools fall back to recompute.
+    Off,
+    /// Discard the lowest-ranked suspended waiting entry to admit a
+    /// better one.
+    Rank,
+}
+
+impl SwapEvictMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        parse_mode(
+            "swap_evict",
+            "off | rank",
+            &[
+                ModeVariant::Bare(&["off", "none"], SwapEvictMode::Off),
+                ModeVariant::Bare(&["rank"], SwapEvictMode::Rank),
+            ],
+            s,
+        )
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            SwapEvictMode::Off => "off".to_string(),
+            SwapEvictMode::Rank => "rank".to_string(),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [SwapEvictMode; 2] {
+        [SwapEvictMode::Off, SwapEvictMode::Rank]
+    }
+}
+
 /// When the scheduler refreshes each job's predicted-remaining work
 /// from observed decode progress and re-keys the waiting queue under
 /// the refreshed estimates (continuous re-ranking — the iterative
@@ -444,6 +537,14 @@ pub struct SchedulerConfig {
     /// Host↔device swap bandwidth (GB/s) the SimEngine cost model
     /// charges on suspend/resume (PJRT pays the real copy time).
     pub swap_bw_gbps: f64,
+    /// Swap-aware preemption pricing: price suspendable evictions at
+    /// their transfer cost instead of full recompute (`off` keeps the
+    /// margin-only probe, bit-for-bit).
+    pub swap_pricing: SwapPricingMode,
+    /// Host-pool pressure policy: discard the lowest-ranked suspended
+    /// waiting entry to admit a better one (`off` keeps the plain
+    /// recompute fallback, bit-for-bit).
+    pub swap_evict: SwapEvictMode,
     /// Continuous re-ranking: when length predictions are refreshed
     /// from decode progress and the waiting queue re-keyed under them.
     pub rerank: RerankMode,
@@ -479,6 +580,8 @@ impl Default for SchedulerConfig {
             max_preemptions: 2,
             swap: SwapMode::Off,
             swap_bw_gbps: 16.0,
+            swap_pricing: SwapPricingMode::Off,
+            swap_evict: SwapEvictMode::Off,
             rerank: RerankMode::Off,
             score_noise: 0.0,
             event_log_capacity: 16_384,
@@ -628,6 +731,12 @@ impl Config {
         }
         if let Some(v) = doc.get_num("scheduler", "swap_bw_gbps") {
             c.scheduler.swap_bw_gbps = v;
+        }
+        if let Some(v) = doc.get_str("scheduler", "swap_pricing") {
+            c.scheduler.swap_pricing = SwapPricingMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("scheduler", "swap_evict") {
+            c.scheduler.swap_evict = SwapEvictMode::parse(v)?;
         }
         if let Some(v) = doc.get_str("scheduler", "rerank") {
             c.scheduler.rerank = RerankMode::parse(v)?;
@@ -993,6 +1102,47 @@ mod tests {
         assert!(SwapMode::parse("disk(4)").is_err());
         for m in SwapMode::all() {
             assert_eq!(SwapMode::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn parse_swap_economy_knobs() {
+        let c = Config::from_toml(
+            r#"
+            [scheduler]
+            swap = "host(512)"
+            swap_pricing = "transfer"
+            swap_evict = "rank"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.scheduler.swap_pricing, SwapPricingMode::Transfer);
+        assert_eq!(c.scheduler.swap_evict, SwapEvictMode::Rank);
+        // defaults: both pressure/pricing policies off
+        let d = SchedulerConfig::default();
+        assert_eq!(d.swap_pricing, SwapPricingMode::Off);
+        assert_eq!(d.swap_evict, SwapEvictMode::Off);
+        assert!(Config::from_toml("[scheduler]\nswap_pricing = \"recompute\"").is_err());
+        assert!(Config::from_toml("[scheduler]\nswap_evict = \"fifo\"").is_err());
+    }
+
+    #[test]
+    fn swap_pricing_and_evict_mode_parse_and_names() {
+        assert_eq!(SwapPricingMode::parse("off").unwrap(), SwapPricingMode::Off);
+        assert_eq!(SwapPricingMode::parse("none").unwrap(), SwapPricingMode::Off);
+        assert_eq!(SwapPricingMode::parse("TRANSFER").unwrap(), SwapPricingMode::Transfer);
+        assert!(SwapPricingMode::parse("transfer(2)").is_err());
+        assert!(SwapPricingMode::parse("free").is_err());
+        for m in SwapPricingMode::all() {
+            assert_eq!(SwapPricingMode::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(SwapEvictMode::parse("off").unwrap(), SwapEvictMode::Off);
+        assert_eq!(SwapEvictMode::parse("none").unwrap(), SwapEvictMode::Off);
+        assert_eq!(SwapEvictMode::parse("RANK").unwrap(), SwapEvictMode::Rank);
+        assert!(SwapEvictMode::parse("rank(3)").is_err());
+        assert!(SwapEvictMode::parse("lru").is_err());
+        for m in SwapEvictMode::all() {
+            assert_eq!(SwapEvictMode::parse(&m.name()).unwrap(), m);
         }
     }
 

@@ -66,10 +66,22 @@
 //!   boosted jobs are never evicted at all.  `preempt = off` (and
 //!   `swap = off` under it) leaves the serve loop untouched (pinned
 //!   record-for-record by `tests/sharded.rs`), and preemption composes
-//!   with stealing — a stolen *suspended* job downgrades to recompute
-//!   (its KV lives on the victim replica's host pool) with the burned
-//!   progress carried on the `Stolen { wasted }` event, and every
-//!   conservation invariant holds (`tests/properties.rs`).
+//!   with stealing: a stolen *suspended* job migrates its parked pages
+//!   into the thief's host pool when it has room (bandwidth-charged on
+//!   both engine clocks, progress intact, reported as
+//!   `Stolen { migrated }`) and only downgrades to recompute when the
+//!   import would not fit, the burned progress carried on
+//!   `Stolen { wasted }` — and every conservation invariant holds
+//!   (`tests/properties.rs`).  Two knobs tune the page economy further,
+//!   both default-off and pinned like every other axis:
+//!   `swap_pricing = transfer` prices the eviction the margin probe
+//!   weighs at its swap round-trip cost (converted to decode-step
+//!   units by [`Engine::swap_price_tokens`]) instead of full recompute
+//!   whenever the victim could suspend, so the ranked policy preempts
+//!   more aggressively while the pool has room; `swap_evict = rank`
+//!   lets a suspension blocked only on host-pool room discard the
+//!   worst-ranked parked entry's pages (that entry downgrades to a
+//!   recompute re-queue) so a better-ranked victim parks instead.
 //! * **Continuous re-ranking** (`[scheduler] rerank =
 //!   off|interval(ms)|on_token`) — admission scores once, so a
 //!   mispredicted-short long job keeps its wrong key forever: it
@@ -114,7 +126,10 @@ use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::Context;
 
-use crate::config::{DispatchKind, PreemptMode, RerankMode, SchedulerConfig, StealMode};
+use crate::config::{
+    DispatchKind, PreemptMode, RerankMode, SchedulerConfig, StealMode, SwapEvictMode,
+    SwapPricingMode,
+};
 use crate::coordinator::events::{EventSink, NullSink, PreemptKind, ServeEvent, SessionCtx};
 use crate::coordinator::predictor::{Predictor, ShrinkagePredictor};
 use crate::coordinator::queue::{QueuedRequest, SuspendedEntry};
@@ -131,6 +146,17 @@ use crate::Result;
 /// tuple so a single [`KeyedMinHeap`] serves both indexed dispatch
 /// kinds (least-loaded and ranked).
 type LoadKey = (u128, u128, u128);
+
+/// The one reservation rounding rule: every token-book charge, KV fit
+/// probe and block computation prices a request at `prompt + target`,
+/// floored at one token.  Admission, preemption, stealing and dispatch
+/// all go through here — two sites rounding differently is how a
+/// zero-length request once desynced the steal probe from the load keys
+/// it was charged under (the engine block managers floor the same way,
+/// so the books and the pools always agree).
+fn reserve_tokens(req: &Request) -> u32 {
+    (req.prompt_len + req.target_len).max(1)
+}
 
 struct InFlight {
     req: Request,
@@ -178,6 +204,9 @@ struct Replica<E: Engine> {
     swapped_out_tokens: u64,
     /// Decode tokens restored by resumes (≤ `swapped_out_tokens`).
     resumed_tokens: u64,
+    /// Decode tokens whose parked pages migrated INTO this replica's
+    /// host pool on steals (the thief side of a lossless steal).
+    migrated_tokens: u64,
     /// Suspended jobs swapped back into the batch.
     resumes: usize,
     /// Total suspend→resume delay across those resumes (ms).
@@ -217,6 +246,7 @@ impl<E: Engine> Replica<E> {
             wasted_decode_tokens: 0,
             swapped_out_tokens: 0,
             resumed_tokens: 0,
+            migrated_tokens: 0,
             resumes: 0,
             restore_delay_ms: 0.0,
             queued_tokens: 0,
@@ -320,7 +350,7 @@ impl<E: Engine> Replica<E> {
             loop {
                 while self.engine.free_slots() > 0 && !self.waiting.is_empty() {
                     let mut q = self.waiting.pop().unwrap();
-                    let total = q.req.prompt_len + q.req.target_len;
+                    let total = reserve_tokens(&q.req);
                     // a suspended entry re-enters by swapping its pages
                     // back (same device reservation the fit checks
                     // guard) instead of re-prefilling
@@ -415,7 +445,7 @@ impl<E: Engine> Replica<E> {
                     let f = self.running.remove(&ev.slot).unwrap();
                     self.engine.release(ev.slot);
                     self.makespan_ms = now;
-                    let total = (f.req.prompt_len + f.req.target_len) as u64;
+                    let total = reserve_tokens(&f.req) as u64;
                     self.running_tokens = self.running_tokens.saturating_sub(total);
                     let record = RequestRecord {
                         id: f.req.id,
@@ -437,7 +467,7 @@ impl<E: Engine> Replica<E> {
             // nothing running and head-of-queue cannot be admitted —
             // a request larger than the whole KV budget would spin here
             let q = self.waiting.pop().unwrap();
-            let total = q.req.prompt_len + q.req.target_len;
+            let total = reserve_tokens(&q.req);
             anyhow::bail!(
                 "deadlock: request {} ({} tokens) exceeds idle-replica KV budget",
                 q.req.id,
@@ -598,7 +628,23 @@ impl<E: Engine> Replica<E> {
         } else {
             cand.req.target_len.max(1) as f64
         };
-        let undercuts = cand_work * sched.preempt_margin < remaining;
+        // Swap-aware pricing (`swap_pricing = transfer`): the recompute
+        // probe above prices every eviction as if the victim's progress
+        // burns, but a victim whose pages fit the host pool only costs a
+        // suspend+resume round trip.  `Engine::swap_price_tokens` quotes
+        // that transfer in decode-step units, so the probe can add it to
+        // the candidate's work and compare in one currency — no margin
+        // multiplier, the cost is explicit.  OR-ed with the recompute
+        // probe, so `transfer` preempts at-least-as-often as `off`
+        // (`None` ⇒ the victim cannot suspend ⇒ recompute pricing
+        // stands; `off` skips the engine call entirely and stays
+        // bit-for-bit the frozen path).
+        let undercuts = cand_work * sched.preempt_margin < remaining
+            || (sched.swap_pricing == SwapPricingMode::Transfer
+                && self
+                    .engine
+                    .swap_price_tokens(slot)
+                    .is_some_and(|price| cand_work + price < remaining));
         if !undercuts {
             self.waiting.unpop(cand);
             return false;
@@ -608,8 +654,8 @@ impl<E: Engine> Replica<E> {
         // reservation has to fit the blocks the victim frees plus the
         // current headroom (the margin bounds target lengths, but a
         // prompt-heavy candidate can still outweigh the victim)
-        let total_c = (cand.req.prompt_len + cand.req.target_len).max(1) as usize;
-        let total_v = (f.req.prompt_len + f.req.target_len).max(1) as usize;
+        let total_c = reserve_tokens(&cand.req) as usize;
+        let total_v = reserve_tokens(&f.req) as usize;
         let free = self.kv_blocks.saturating_sub(self.engine.kv_blocks_used());
         if total_c.div_ceil(BLOCK_TOKENS) > free + total_v.div_ceil(BLOCK_TOKENS) {
             self.waiting.unpop(cand);
@@ -631,6 +677,48 @@ impl<E: Engine> Replica<E> {
             return false;
         }
         let f = self.running.remove(&slot).unwrap();
+        // pool-pressure policy (`swap_evict = rank`): when the victim
+        // cannot park only because the host pool is full, the worst-
+        // ranked parked entry in the waiting queue gives up its pages —
+        // but never an entry that would still outrank the victim's
+        // re-queued form (burning a better job's progress to park a
+        // worse one would invert the policy order) and never one at the
+        // anti-thrash cap (capped entries are immune to further
+        // progress loss, same as in the victim scan).  Each discard
+        // downgrades that entry to a recompute re-queue — the request
+        // is never lost, only its parked progress, booked as waste and
+        // reported as its own recompute `Preempted` so replay and the
+        // conservation audits see every burned token.
+        if sched.swap_evict == SwapEvictMode::Rank {
+            while !self.engine.can_suspend(slot) {
+                let Some(mut worst) = self
+                    .waiting
+                    .steal_worst_suspended(|q| q.preemptions < sched.max_preemptions)
+                else {
+                    break;
+                };
+                if worst.pops_before(f.boosted, vic_key, f.req.arrival_ms, f.req.id) {
+                    // the worst eligible parked entry still outranks the
+                    // victim's re-queue, so every parked entry does
+                    self.waiting.unpop(worst);
+                    break;
+                }
+                let entry =
+                    worst.suspended.take().expect("steal_worst_suspended returns parked entries");
+                let burned = self.engine.discard_suspended(entry.sus);
+                self.preempted += 1;
+                self.wasted_decode_tokens += burned as u64;
+                worst.preemptions += 1;
+                ctx.emit(ServeEvent::Preempted {
+                    id: worst.req.id,
+                    replica: idx,
+                    wasted: burned,
+                    mode: PreemptKind::Recompute,
+                    t_ms: now,
+                });
+                self.waiting.push_scored(worst);
+            }
+        }
         // per-eviction mode selection: park the victim's pages in the
         // host pool when they fit (progress preserved, nothing wasted),
         // recompute fallback otherwise — never silently lossy, the
@@ -678,7 +766,7 @@ impl<E: Engine> Replica<E> {
                 t_ms: now,
             });
         }
-        let total = (f.req.prompt_len + f.req.target_len) as u64;
+        let total = reserve_tokens(&f.req) as u64;
         self.running_tokens = self.running_tokens.saturating_sub(total);
         self.queued_tokens += total;
         self.waiting.unpop(cand);
@@ -713,8 +801,13 @@ pub struct ReplicaOutcome {
     pub wasted_decode_tokens: u64,
     /// Decode tokens preserved by swap-mode suspensions.
     pub swapped_out_tokens: u64,
-    /// Decode tokens restored by resumes (≤ `swapped_out_tokens`).
+    /// Decode tokens restored by resumes (≤ `swapped_out_tokens` +
+    /// `migrated_tokens`: a resume draws on locally parked pages or on
+    /// pages a steal migrated in).
     pub resumed_tokens: u64,
+    /// Decode tokens whose parked pages migrated INTO this replica's
+    /// host pool on steals (the thief side of a lossless steal).
+    pub migrated_tokens: u64,
     /// Suspended jobs swapped back into this replica's batch.
     pub resumes: usize,
     /// Total suspend→resume delay across those resumes (ms).
@@ -1011,7 +1104,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         // thief: lowest-indexed idle replica that can actually hold the
         // stolen entry — a small idle replica must not shield a larger
         // idle sibling from doing the rescue
-        let total = q.req.prompt_len + q.req.target_len;
+        let total = reserve_tokens(&q.req);
         let thief = self.replicas.iter().position(|r| {
             !r.has_work() && r.engine.free_slots() > 0 && r.engine.kv_headroom_for(total)
         });
@@ -1021,29 +1114,60 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             self.replicas[victim].waiting.unpop(q);
             return false;
         };
-        let v = &mut self.replicas[victim];
-        // a suspended entry's KV pages live in the VICTIM's host pool;
-        // the thief cannot reach them, so the steal downgrades the job
-        // to recompute: the parked progress is discarded here and
-        // carried on the Stolen event as wasted work
+        // the hand-off cannot predate the state it moves: lift the idle
+        // thief's clock to the arrival — and, for a suspended entry, to
+        // the suspension time too, so the steal can never be stamped
+        // before the very park it carries (the replay monotonicity
+        // audit flags exactly that inversion)
+        let lift_ms = q
+            .suspended
+            .as_ref()
+            .map_or(q.req.arrival_ms, |e| q.req.arrival_ms.max(e.suspended_ms));
+        self.replicas[thief].engine.advance_to(lift_ms);
+        // a suspended entry's KV pages live in the VICTIM's host pool.
+        // When the thief's pool has room, migrate them: export detaches
+        // the pages from the victim's pool, import re-registers them in
+        // the thief's, both sides paying the transfer on their own
+        // engine clock — the steal is lossless and `migrated` reports
+        // the preserved progress.  When the thief's pool cannot hold
+        // them, fall back to the downgrade: parked progress is
+        // discarded here and carried on the Stolen event as wasted work.
         let mut wasted = 0u32;
-        if let Some(entry) = q.suspended.take() {
-            wasted = v.engine.discard_suspended(entry.sus);
-            v.wasted_decode_tokens += wasted as u64;
+        let mut migrated = 0u32;
+        if let Some(mut entry) = q.suspended.take() {
+            let fits = self.replicas[victim]
+                .engine
+                .suspended_tokens(&entry.sus)
+                .is_some_and(|tk| self.replicas[thief].engine.can_accept_suspended(tk));
+            if fits {
+                migrated = entry.sus.generated;
+                let m = self.replicas[victim]
+                    .engine
+                    .export_suspended(entry.sus)
+                    .expect("suspended_tokens saw a live parked sequence");
+                entry.sus = self.replicas[thief]
+                    .engine
+                    .import_suspended(m)
+                    .expect("can_accept_suspended guaranteed host-pool room");
+                q.suspended = Some(entry);
+                self.replicas[thief].migrated_tokens += migrated as u64;
+            } else {
+                wasted = self.replicas[victim].engine.discard_suspended(entry.sus);
+                self.replicas[victim].wasted_decode_tokens += wasted as u64;
+            }
         }
+        let v = &mut self.replicas[victim];
         v.queued_tokens = v.queued_tokens.saturating_sub(total as u64);
         v.stolen_out += 1;
         let t = &mut self.replicas[thief];
         t.queued_tokens += total as u64;
         t.stolen_in += 1;
-        // the hand-off cannot predate the request's existence: lift the
-        // idle thief's clock to the arrival before it runs stolen work
-        t.engine.advance_to(q.req.arrival_ms);
         ctx.emit(ServeEvent::Stolen {
             id: q.req.id,
             from: victim,
             to: thief,
             wasted,
+            migrated,
             t_ms: t.engine.now_ms(),
         });
         t.waiting.push_scored(q);
@@ -1142,13 +1266,13 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         decision_ms: f64,
         ctx: &mut SessionCtx<'_>,
     ) -> Option<usize> {
-        let total = req.prompt_len + req.target_len;
+        let total = reserve_tokens(&req);
         // can never fit every replica's sequence budget, or larger than
         // every replica's entire KV budget — reject up front instead of
         // deadlocking whichever replica it would land on.  Testing the
         // block need against the fleet maximum is exactly the old
         // `any(can_ever_hold)` scan, in O(1) per decision.
-        let needed_blocks = (total.max(1) as usize).div_ceil(BLOCK_TOKENS);
+        let needed_blocks = (total as usize).div_ceil(BLOCK_TOKENS);
         debug_assert_eq!(
             needed_blocks > self.fleet_max_kv_blocks,
             !self.replicas.iter().any(|r| r.can_ever_hold(total)),
@@ -1195,6 +1319,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         let mut wasted_decode_tokens = 0u64;
         let mut swapped_out_tokens = 0u64;
         let mut resumed_tokens = 0u64;
+        let mut migrated_tokens = 0u64;
         let mut resumes = 0usize;
         let mut restore_delay_ms = 0.0f64;
         let mut peak_waiting = 0usize;
@@ -1214,6 +1339,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 wasted_decode_tokens: r.wasted_decode_tokens,
                 swapped_out_tokens: r.swapped_out_tokens,
                 resumed_tokens: r.resumed_tokens,
+                migrated_tokens: r.migrated_tokens,
                 resumes: r.resumes,
                 restore_delay_ms: r.restore_delay_ms,
                 boosts: r.waiting.boosts,
@@ -1225,6 +1351,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             wasted_decode_tokens += r.wasted_decode_tokens;
             swapped_out_tokens += r.swapped_out_tokens;
             resumed_tokens += r.resumed_tokens;
+            migrated_tokens += r.migrated_tokens;
             resumes += r.resumes;
             restore_delay_ms += r.restore_delay_ms;
             peak_waiting = peak_waiting.max(r.peak_waiting);
@@ -1243,6 +1370,7 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 wasted_decode_tokens,
                 swapped_out_tokens,
                 resumed_tokens,
+                migrated_tokens,
                 resumes,
                 restore_delay_ms,
             },
@@ -1996,6 +2124,214 @@ mod tests {
         assert!(
             four * 2.0 < one,
             "4 replicas should at least halve the makespan: 1×={one:.0} 4×={four:.0}"
+        );
+    }
+
+    // The migration acceptance trace — shared with `fig_migrate`, same
+    // rationale as `long_job_then_burst` above.
+    use crate::harness::park_then_steal;
+
+    fn migrate_sched() -> SchedulerConfig {
+        use crate::config::SwapMode;
+        SchedulerConfig {
+            max_batch: 1,
+            max_kv_tokens: 1 << 20,
+            replicas: 2,
+            dispatch: DispatchKind::Ranked,
+            steal: StealMode::Idle,
+            preempt: PreemptMode::Arrival,
+            swap: SwapMode::Host(1 << 12),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stolen_suspended_jobs_migrate_between_host_pools() {
+        // the long job parks ~90 tokens on replica 0, the idle sibling
+        // steals the parked entry, and the pages must MOVE — nothing
+        // discarded, the steal reported as `migrated`, the job resumed
+        // from its preserved progress on the thief
+        let out = run(&migrate_sched(), PolicyKind::Pars, park_then_steal(12), 4096);
+        assert_eq!(out.merged.report.n_requests, 13);
+        assert!(out.merged.preemptions > 0, "the long job was never parked");
+        assert!(out.merged.swapped_out_tokens > 0);
+        assert!(out.merged.migrated_tokens > 0, "the parked entry was never migrated");
+        assert_eq!(
+            out.merged.migrated_tokens,
+            out.per_replica.iter().map(|r| r.migrated_tokens).sum::<u64>(),
+            "merged and per-replica migration books disagree"
+        );
+        assert_eq!(out.merged.wasted_decode_tokens, 0, "a migrating steal must be lossless");
+        assert!(out.per_replica[1].stolen_in >= 1, "the idle sibling never stole");
+        assert!(out.per_replica[1].migrated_tokens > 0, "pages never landed in the thief's pool");
+        assert!(out.merged.resumes > 0, "the migrated job must resume from its pages");
+        let long =
+            out.per_replica.iter().flat_map(|r| r.records.iter()).find(|r| r.id == 0).unwrap();
+        assert!(long.preemptions >= 1);
+    }
+
+    #[test]
+    fn a_poolless_thief_downgrades_the_steal_to_recompute() {
+        // same trace, but the thief's host pool holds zero blocks: the
+        // import is refused cleanly and the old discard fallback fires —
+        // parked progress burns and is booked as waste, never migrated
+        let s = migrate_sched();
+        let mut s1 = s.clone();
+        s1.swap = crate::config::SwapMode::Host(0);
+        let engines = vec![
+            SimEngine::new(CostModel::default(), &s.for_replica(0), 4096),
+            SimEngine::new(CostModel::default(), &s1.for_replica(1), 4096),
+        ];
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines, policy.as_ref(), s.dispatch, s.clone());
+        let out = coord.serve(park_then_steal(12)).unwrap();
+        assert_eq!(out.merged.report.n_requests, 13, "downgrade must not lose the request");
+        assert!(out.per_replica[1].stolen_in >= 1, "the steal itself must still happen");
+        assert_eq!(out.merged.migrated_tokens, 0, "a zero-block pool cannot accept pages");
+        assert!(
+            out.merged.wasted_decode_tokens > 0,
+            "the discard fallback must book the burned progress"
+        );
+    }
+
+    #[test]
+    fn swap_pricing_transfer_unlocks_cheap_preemptions() {
+        use crate::config::{SwapMode, SwapPricingMode};
+        // 160-token job, then a 100-token arrival at t=100: remaining
+        // work is ~117, so the recompute probe refuses (100 × margin 2
+        // ≥ 117) — but the victim's pages fit the host pool and the
+        // swap round trip costs well under a decode token, so transfer
+        // pricing admits the shorter job immediately
+        let reqs = || vec![mk_req(0, 0.0, 160), mk_req(1, 100.0, 100)];
+        let mut s = preempt_sched(PreemptMode::Arrival);
+        s.swap = SwapMode::Host(1 << 12);
+        let off = run(&s, PolicyKind::Pars, reqs(), 4096);
+        assert_eq!(off.merged.preemptions, 0, "recompute pricing must refuse this margin");
+        let mut st = s.clone();
+        st.swap_pricing = SwapPricingMode::Transfer;
+        let on = run(&st, PolicyKind::Pars, reqs(), 4096);
+        assert_eq!(on.merged.report.n_requests, 2);
+        assert_eq!(on.merged.preemptions, 1, "transfer pricing must unlock the eviction");
+        assert!(on.merged.swapped_out_tokens > 0, "the unlocked eviction must be a swap");
+        assert_eq!(on.merged.wasted_decode_tokens, 0);
+        let e2e = |out: &ShardedOutcome, id: u64| {
+            let r = out.per_replica[0].records.iter().find(|r| r.id == id).unwrap();
+            r.completed_ms - r.arrival_ms
+        };
+        assert!(
+            e2e(&on, 1) < e2e(&off, 1),
+            "the short job must finish sooner under transfer pricing: off={:.1} on={:.1}",
+            e2e(&off, 1),
+            e2e(&on, 1)
+        );
+    }
+
+    #[test]
+    fn swap_pricing_transfer_without_a_pool_is_inert() {
+        use crate::config::SwapPricingMode;
+        // swap = off ⇒ no victim can ever suspend ⇒ swap_price_tokens
+        // is always None and transfer pricing reproduces off exactly
+        let reqs = || vec![mk_req(0, 0.0, 160), mk_req(1, 100.0, 100)];
+        let off = run(&preempt_sched(PreemptMode::Arrival), PolicyKind::Pars, reqs(), 4096);
+        let mut st = preempt_sched(PreemptMode::Arrival);
+        st.swap_pricing = SwapPricingMode::Transfer;
+        let on = run(&st, PolicyKind::Pars, reqs(), 4096);
+        assert_eq!(on.merged.preemptions, 0);
+        assert_eq!(on.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(on.merged.report.e2e.mean, off.merged.report.e2e.mean);
+    }
+
+    #[test]
+    fn swap_evict_rank_discards_the_worst_parked_entry() {
+        use crate::config::{SwapEvictMode, SwapMode};
+        // a two-block host pool holds exactly the first parked victim:
+        // when the 200-token job is evicted for the 30-token arrival,
+        // `off` must downgrade it to recompute (pool full), while
+        // `rank` discards the worst-ranked parked entry (the 1000-token
+        // job, which re-queues as recompute) so the better victim parks
+        let reqs = || vec![mk_req(0, 0.0, 1000), mk_req(1, 50.0, 200), mk_req(2, 100.0, 30)];
+        let mut s = preempt_sched(PreemptMode::Arrival);
+        s.swap = SwapMode::Host(2);
+        let off = run(&s, PolicyKind::Pars, reqs(), 4096);
+        let mut sr = s.clone();
+        sr.swap_evict = SwapEvictMode::Rank;
+        let rank = run(&sr, PolicyKind::Pars, reqs(), 4096);
+        for out in [&off, &rank] {
+            assert_eq!(out.merged.report.n_requests, 3);
+            assert!(out.merged.wasted_decode_tokens > 0);
+        }
+        let preempts = |out: &ShardedOutcome, id: u64| {
+            out.per_replica[0].records.iter().find(|r| r.id == id).unwrap().preemptions
+        };
+        // off: the long job parks once and sits; the mid job burns
+        assert_eq!(preempts(&off, 0), 1);
+        assert_eq!(preempts(&off, 1), 1);
+        // rank: the long job additionally gives up its pages (a second
+        // preemption on its record) so the mid job parks instead
+        assert_eq!(preempts(&rank, 0), 2, "the worst parked entry must be discarded");
+        assert_eq!(preempts(&rank, 1), 1);
+        assert_eq!(rank.merged.preemptions, off.merged.preemptions + 1);
+        assert!(
+            rank.merged.swapped_out_tokens > off.merged.swapped_out_tokens,
+            "rank must let the better victim park: off={} rank={}",
+            off.merged.swapped_out_tokens,
+            rank.merged.swapped_out_tokens
+        );
+        // with a pool that never fills, the pressure loop is never
+        // entered and rank reproduces off exactly
+        let mut big_off = s.clone();
+        big_off.swap = SwapMode::Host(1 << 12);
+        let mut big_rank = big_off.clone();
+        big_rank.swap_evict = SwapEvictMode::Rank;
+        let a = run(&big_off, PolicyKind::Pars, reqs(), 4096);
+        let b = run(&big_rank, PolicyKind::Pars, reqs(), 4096);
+        assert_eq!(a.merged.preemptions, b.merged.preemptions);
+        assert_eq!(a.merged.makespan_ms, b.merged.makespan_ms);
+        assert_eq!(a.merged.report.e2e.mean, b.merged.report.e2e.mean);
+    }
+
+    #[test]
+    fn zero_length_requests_cannot_desync_the_load_books() {
+        // prompt 0 / target 0 prices at the `reserve_tokens` floor of
+        // one token everywhere — dispatch charge, admission, steal
+        // re-charges — so the indexed load keys stay consistent (the
+        // debug audits in pick_replica/try_steal/next_step panic on any
+        // drift) and the degenerate request still serves its floored
+        // single token
+        let mut s = sched(2, 1, DispatchKind::Ranked);
+        s.steal = StealMode::Idle;
+        let reqs = || -> Vec<Request> {
+            (0..10u64)
+                .map(|i| {
+                    let mut r = mk_req(i, i as f64 * 3.0, 6);
+                    if i % 2 == 0 {
+                        r.tokens = Vec::new();
+                        r.prompt_len = 0;
+                        r.target_len = 0;
+                        r.oracle_len = 0;
+                        r.score = 0.0;
+                    }
+                    r
+                })
+                .collect()
+        };
+        let out = run(&s, PolicyKind::OracleSjf, reqs(), 4096);
+        assert_eq!(out.merged.report.n_requests, 10);
+        let zeros: Vec<u32> = out
+            .per_replica
+            .iter()
+            .flat_map(|r| r.records.iter())
+            .filter(|r| r.id % 2 == 0)
+            .map(|r| r.output_len)
+            .collect();
+        assert_eq!(zeros.len(), 5);
+        assert!(zeros.iter().all(|&l| l == 1), "zero-target jobs must serve the floor token");
+        // and the rounding cannot perturb determinism
+        let again = run(&s, PolicyKind::OracleSjf, reqs(), 4096);
+        assert_eq!(
+            format!("{:?}", out.per_replica.iter().map(|r| &r.records).collect::<Vec<_>>()),
+            format!("{:?}", again.per_replica.iter().map(|r| &r.records).collect::<Vec<_>>()),
         );
     }
 }

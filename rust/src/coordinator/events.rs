@@ -61,8 +61,11 @@ impl PreemptKind {
 /// `Admitted` **or** one `Resumed`, and a final `Completed`; `Preempted`
 /// closes an admission round early (its `mode` says whether progress
 /// was preserved), `Stolen` moves a *queued* request between replicas
-/// (downgrading a suspended one to recompute — the `wasted` field
-/// carries the discarded progress), `Boosted` marks the starvation
+/// (a suspended one migrates its parked pages into the thief's host
+/// pool when it has room — `migrated` carries the preserved progress
+/// — and downgrades to recompute otherwise, `wasted` carrying the
+/// discarded progress; at most one of the two is non-zero), `Boosted`
+/// marks the starvation
 /// guard firing, and `Rescored` marks continuous re-ranking refreshing
 /// a queued request's remaining-work estimate (any number per request,
 /// never under `rerank = off`) — `tests/properties.rs` pins these
@@ -83,10 +86,13 @@ pub enum ServeEvent {
     /// Starvation guard promoted the queued request.
     Boosted { id: u64, replica: usize, t_ms: f64 },
     /// An idle replica pulled the queued request from a busy sibling.
-    /// `wasted` is 0 unless the entry was suspended: its KV lives on the
-    /// victim's host pool, so the steal downgrades it to recompute and
-    /// discards that many decode tokens.
-    Stolen { id: u64, from: usize, to: usize, wasted: u32, t_ms: f64 },
+    /// Both extra fields are 0 unless the entry was suspended (its KV
+    /// lives on the victim's host pool): when the thief's host pool has
+    /// room the parked pages migrate there and `migrated` reports the
+    /// preserved decode tokens; otherwise the steal downgrades the entry
+    /// to recompute and `wasted` reports the discarded ones.  At most
+    /// one of the two is non-zero.
+    Stolen { id: u64, from: usize, to: usize, wasted: u32, migrated: u32, t_ms: f64 },
     /// Score-aware preemption vacated the running request's slot.
     /// `mode` says how: `Recompute` discarded `wasted` decode tokens;
     /// `Swap` parked the KV pages host-side with progress intact
@@ -173,10 +179,11 @@ impl ServeEvent {
             | ServeEvent::Boosted { replica, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
             }
-            ServeEvent::Stolen { from, to, wasted, .. } => {
+            ServeEvent::Stolen { from, to, wasted, migrated, .. } => {
                 pairs.push(("from", Json::Num(*from as f64)));
                 pairs.push(("to", Json::Num(*to as f64)));
                 pairs.push(("wasted", Json::Num(*wasted as f64)));
+                pairs.push(("migrated", Json::Num(*migrated as f64)));
             }
             ServeEvent::Preempted { replica, wasted, mode, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
@@ -239,9 +246,10 @@ impl ServeEvent {
                 num(out, "replica", *replica as f64);
                 num(out, "t_ms", *t_ms);
             }
-            ServeEvent::Stolen { id, from, to, wasted, t_ms } => {
+            ServeEvent::Stolen { id, from, to, wasted, migrated, t_ms } => {
                 num(out, "from", *from as f64);
                 num(out, "id", *id as f64);
+                num(out, "migrated", *migrated as f64);
                 num(out, "t_ms", *t_ms);
                 num(out, "to", *to as f64);
                 num(out, "wasted", *wasted as f64);
@@ -481,6 +489,9 @@ pub struct ReplicaTimeline {
     /// Decode tokens discarded (recompute `wasted` + steal downgrades
     /// charged to the replica the pages lived on).
     pub wasted_tokens: u64,
+    /// Decode tokens whose parked pages migrated INTO this replica's
+    /// host pool on steals (the thief side of a lossless steal).
+    pub migrated_tokens: u64,
     pub resumes: u64,
     /// Decode tokens restored by those resumes.
     pub restored_tokens: u64,
@@ -541,8 +552,18 @@ pub struct ReplayBook {
     /// A complete capture has none; `pallas replay` refuses a book with
     /// orphans instead of reporting counters from a partial window.
     pub orphans: u64,
+    /// Events whose timestamp runs backwards within their request's
+    /// lifecycle (per-id monotonicity audit).  A sound capture has none:
+    /// every transition a request makes is stamped at or after its
+    /// previous one — a regression means the producer stamped a hand-off
+    /// with a clock that predates state the event depends on (the PR 7
+    /// steal lifted an idle thief only to the arrival time, so stealing
+    /// a suspended entry emitted `Stolen` before its own suspension).
+    pub time_regressions: u64,
     /// Ids whose entry-point event (`Dispatched`/`Rejected`) was seen.
     entered: HashSet<u64>,
+    /// High-water event timestamp per request id (monotonicity audit).
+    last_event_ms: HashMap<u64, f64>,
     /// Suspend timestamp of requests currently parked in a host pool
     /// (cleared by `Resumed`, a steal downgrade, or a fresh admission).
     park_started: HashMap<u64, f64>,
@@ -571,6 +592,18 @@ impl ReplayBook {
     /// identically).
     pub fn push(&mut self, ev: &ServeEvent) {
         self.events += 1;
+        // per-id monotonicity audit: compare against the id's high-water
+        // timestamp (NaN stamps are unordered and skipped, so a noisy
+        // capture cannot mask or fabricate regressions)
+        let t = ev.t_ms();
+        if !t.is_nan() {
+            let last = self.last_event_ms.entry(ev.id()).or_insert(f64::NEG_INFINITY);
+            if t < *last {
+                self.time_regressions += 1;
+            } else {
+                *last = t;
+            }
+        }
         match ev {
             ServeEvent::Rejected { id, .. } | ServeEvent::Dispatched { id, .. } => {
                 self.entered.insert(*id);
@@ -607,17 +640,21 @@ impl ReplayBook {
                 r.boosts += 1;
                 r.observe(*t_ms);
             }
-            ServeEvent::Stolen { id, from, to, wasted, t_ms, .. } => {
-                // a stolen suspended entry was downgraded: its park is
-                // over (the pages were discarded) and its next entry
-                // will be a fresh admission
-                self.park_started.remove(id);
+            ServeEvent::Stolen { id, from, to, wasted, migrated, t_ms, .. } => {
+                // a migrated steal keeps the park alive (the pages moved
+                // to the thief's host pool and will resume there); only
+                // a downgrade ends it — the pages were discarded and the
+                // next entry will be a fresh admission
+                if *migrated == 0 {
+                    self.park_started.remove(id);
+                }
                 let v = self.replica(*from);
                 v.stolen_out += 1;
                 v.wasted_tokens += *wasted as u64;
                 v.observe(*t_ms);
                 let t = self.replica(*to);
                 t.stolen_in += 1;
+                t.migrated_tokens += *migrated as u64;
                 t.observe(*t_ms);
             }
             ServeEvent::Preempted { id, replica, wasted, mode, t_ms, .. } => {
@@ -703,6 +740,9 @@ impl ReplayBook {
                 from: v.get("from")?.as_i64()? as usize,
                 to: v.get("to")?.as_i64()? as usize,
                 wasted: v.get("wasted")?.as_i64()? as u32,
+                // absent in pre-migration captures — those steals always
+                // downgraded, so 0 is exact, not a guess
+                migrated: v.get("migrated").and_then(|m| m.as_i64()).unwrap_or(0) as u32,
                 t_ms,
             },
             "preempted" => {
@@ -905,7 +945,7 @@ mod tests {
             t_ms: 41.0,
         });
         sink.emit(&ServeEvent::Resumed { id: 4, replica: 1, restored: 9, t_ms: 55.0 });
-        sink.emit(&ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, t_ms: 60.0 });
+        sink.emit(&ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, migrated: 0, t_ms: 60.0 });
         sink.emit(&ServeEvent::Rescored { id: 6, replica: 0, remaining: 12.5, t_ms: 70.0 });
         sink.flush();
         assert_eq!(sink.written(), 6);
@@ -983,7 +1023,8 @@ mod tests {
             ServeEvent::Admitted { id: 3, replica: 1, t_ms: 11.0 },
             ServeEvent::FirstToken { id: 3, replica: 1, t_ms: 12.125 },
             ServeEvent::Boosted { id: 4, replica: 2, t_ms: 13.0 },
-            ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, t_ms: 60.0 },
+            ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, migrated: 0, t_ms: 60.0 },
+            ServeEvent::Stolen { id: 5, from: 0, to: 2, wasted: 0, migrated: 17, t_ms: 61.5 },
             ServeEvent::Preempted {
                 id: 6,
                 replica: 0,
@@ -1056,6 +1097,99 @@ mod tests {
         assert!(!log.truncated());
         log.emit(&ev(2));
         assert!(log.truncated(), "seen > len must read as a partial window");
+    }
+
+    #[test]
+    fn stolen_without_a_migrated_field_decodes_as_a_downgrade() {
+        // pre-migration captures have no `migrated` key; those steals
+        // always discarded the park, so decoding them as migrated = 0
+        // replays exactly what that serve run did
+        let book = ReplayBook::from_jsonl(concat!(
+            "{\"event\":\"dispatched\",\"id\":5,\"key\":4,\"replica\":1,\"t_ms\":1}\n",
+            "{\"event\":\"stolen\",\"from\":1,\"id\":5,\"t_ms\":60,\"to\":0,\"wasted\":3}\n",
+        ))
+        .unwrap();
+        assert_eq!(book.replicas[1].wasted_tokens, 3);
+        assert_eq!(book.replicas[0].migrated_tokens, 0);
+        assert_eq!(book.orphans, 0);
+    }
+
+    #[test]
+    fn migrated_steal_keeps_the_park_alive_for_occupancy() {
+        // a lossless steal moves the park, it does not end it: the
+        // suspended span must still be excluded from busy_slot_ms when
+        // the job later resumes on the thief and completes there
+        let mut book = ReplayBook::default();
+        book.push(&ServeEvent::Dispatched { id: 1, replica: 0, key: 4.0, t_ms: 0.0 });
+        book.push(&ServeEvent::Admitted { id: 1, replica: 0, t_ms: 0.0 });
+        book.push(&ServeEvent::Preempted {
+            id: 1,
+            replica: 0,
+            wasted: 0,
+            mode: PreemptKind::Swap,
+            t_ms: 10.0,
+        });
+        book.push(&ServeEvent::Stolen {
+            id: 1,
+            from: 0,
+            to: 1,
+            wasted: 0,
+            migrated: 6,
+            t_ms: 20.0,
+        });
+        book.push(&ServeEvent::Resumed { id: 1, replica: 1, restored: 6, t_ms: 30.0 });
+        book.push(&ServeEvent::Completed {
+            replica: 1,
+            record: RequestRecord {
+                id: 1,
+                arrival_ms: 0.0,
+                admitted_ms: 0.0,
+                first_token_ms: 5.0,
+                completed_ms: 40.0,
+                prompt_len: 4,
+                output_len: 10,
+                boosted: false,
+                preemptions: 1,
+            },
+        });
+        assert_eq!(book.replicas[1].migrated_tokens, 6);
+        assert_eq!(book.replicas[0].wasted_tokens, 0, "a lossless steal wastes nothing");
+        // 40 ms admission→completion minus the 20 ms parked (10..30)
+        assert_eq!(book.replicas[1].busy_slot_ms, 20.0);
+        assert_eq!(book.time_regressions, 0, "a sound chain has no clock regressions");
+    }
+
+    #[test]
+    fn replay_book_flags_per_id_time_regressions() {
+        // the PR 7 steal inversion: a suspended entry stolen off a busy
+        // victim was stamped with the thief's arrival-lifted clock, so
+        // Stolen could precede the very suspension it carries
+        let mut book = ReplayBook::default();
+        book.push(&ServeEvent::Dispatched { id: 1, replica: 0, key: 4.0, t_ms: 0.0 });
+        book.push(&ServeEvent::Admitted { id: 1, replica: 0, t_ms: 1.0 });
+        book.push(&ServeEvent::Preempted {
+            id: 1,
+            replica: 0,
+            wasted: 0,
+            mode: PreemptKind::Swap,
+            t_ms: 100.0,
+        });
+        assert_eq!(book.time_regressions, 0);
+        book.push(&ServeEvent::Stolen {
+            id: 1,
+            from: 0,
+            to: 1,
+            wasted: 7,
+            migrated: 0,
+            t_ms: 50.0, // before its own suspension — the inversion
+        });
+        assert_eq!(book.time_regressions, 1);
+        // a different id at an earlier time is NOT a regression
+        book.push(&ServeEvent::Dispatched { id: 2, replica: 1, key: 1.0, t_ms: 10.0 });
+        assert_eq!(book.time_regressions, 1);
+        // the high-water mark survives the regression: 99 < 100 still counts
+        book.push(&ServeEvent::Admitted { id: 1, replica: 1, t_ms: 99.0 });
+        assert_eq!(book.time_regressions, 2);
     }
 
     #[test]

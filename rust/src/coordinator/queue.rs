@@ -308,6 +308,24 @@ impl WaitingQueue {
         }
         Some(q)
     }
+
+    /// Remove and return the lowest-priority entry whose KV pages are
+    /// parked in the host swap pool (`suspended` is `Some`) and that
+    /// passes `eligible` — the pool-pressure discard target
+    /// (`swap_evict = rank`): when a better-ranked victim cannot be
+    /// suspended only because the host pool is full, the worst parked
+    /// entry gives up its pages (the caller's filter keeps
+    /// anti-thrash-capped entries immune).  Walks the pop index from
+    /// the tail (the first hit IS the worst eligible parked entry),
+    /// then unlinks it in O(log n); returns `None` when nothing queued
+    /// qualifies.
+    pub fn steal_worst_suspended(
+        &mut self,
+        mut eligible: impl FnMut(&QueuedRequest) -> bool,
+    ) -> Option<QueuedRequest> {
+        let ek = *self.entries.iter().rev().find(|(_, q)| q.suspended.is_some() && eligible(q))?.0;
+        Some(self.unlink(&ek))
+    }
 }
 
 #[cfg(test)]
@@ -418,6 +436,51 @@ mod tests {
         let stolen = w.steal_lowest_priority().unwrap();
         assert_eq!(stolen.req.id, 2);
         assert!(w.pop().unwrap().boosted);
+    }
+
+    #[test]
+    fn steal_worst_suspended_takes_the_worst_parked_entry_only() {
+        use crate::engine::{SuspendPayload, Suspended};
+        let parked = |kv: u64| {
+            Some(SuspendedEntry {
+                sus: Suspended {
+                    generated: 4,
+                    target_len: 10,
+                    kv,
+                    payload: SuspendPayload::Sim,
+                },
+                admitted_ms: 1.0,
+                first_token_ms: Some(2.0),
+                suspended_ms: 3.0,
+            })
+        };
+        let mut w = WaitingQueue::new(1e9);
+        let mk = |id: u64, key: f64, suspended| QueuedRequest {
+            req: req(id, 0.0, key as f32),
+            key,
+            boosted: false,
+            preemptions: 0,
+            suspended,
+        };
+        w.push_scored(mk(1, 5.0, None));
+        w.push_scored(mk(2, 90.0, None)); // worst overall, but not parked
+        w.push_scored(mk(3, 40.0, parked(7)));
+        w.push_scored(mk(4, 10.0, parked(8)));
+        assert!(
+            w.steal_worst_suspended(|_| false).is_none(),
+            "an all-rejecting filter finds nothing"
+        );
+        let got = w.steal_worst_suspended(|q| q.req.id != 3).unwrap();
+        assert_eq!(got.req.id, 4, "the filter must skip ineligible parked entries");
+        w.push_scored(got);
+        let got = w.steal_worst_suspended(|_| true).unwrap();
+        assert_eq!(got.req.id, 3, "must take the WORST parked entry, skipping id 2");
+        assert_eq!(got.suspended.as_ref().unwrap().sus.kv, 7);
+        let got = w.steal_worst_suspended(|_| true).unwrap();
+        assert_eq!(got.req.id, 4, "next-worst parked entry follows");
+        assert!(w.steal_worst_suspended(|_| true).is_none(), "nothing parked remains");
+        let ids: Vec<u64> = std::iter::from_fn(|| w.pop()).map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![1, 2], "un-parked entries keep their exact pop order");
     }
 
     #[test]

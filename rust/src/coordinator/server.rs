@@ -48,6 +48,9 @@ pub struct ServeOutcome {
     /// `swapped_out_tokens` — the gap is steal-downgraded progress plus
     /// anything still parked when the run ended).
     pub resumed_tokens: u64,
+    /// Decode tokens whose parked pages moved between replicas' host
+    /// pools on steals instead of being discarded (fleet total).
+    pub migrated_tokens: u64,
     /// Suspended jobs swapped back into a running batch (fleet total).
     pub resumes: usize,
     /// Total suspend→resume delay summed over `resumes` (ms) — how long

@@ -251,6 +251,53 @@ impl KvBlockManager {
         }
     }
 
+    /// Can a suspended sequence of `tokens` content tokens arriving from
+    /// a sibling manager be parked in THIS manager's host pool right now?
+    pub fn can_import_suspended(&self, tokens: usize) -> bool {
+        Self::blocks_for(tokens.max(1)) <= self.host_free.len()
+    }
+
+    /// Cross-manager migration, sending side: drop a suspended sequence
+    /// from this manager, returning its host blocks to the pool.
+    /// Returns `(content_tokens, reserved_blocks)` — exactly what the
+    /// importing manager needs to re-register the sequence.  Errors on
+    /// an unknown handle or a resident sequence (its pages are device
+    /// pages; migration moves host pages only).
+    pub fn export_suspended(&mut self, h: SeqHandle) -> Result<(usize, usize)> {
+        match self.seqs.get(&h) {
+            None => bail!("unknown sequence handle {h}"),
+            Some(seq) if !seq.on_host => {
+                bail!("sequence {h} is resident; only suspended pages can migrate")
+            }
+            Some(_) => {}
+        }
+        let seq = self.seqs.remove(&h).unwrap();
+        self.host_free.extend(seq.blocks);
+        Ok((seq.tokens, seq.reserved_blocks))
+    }
+
+    /// Cross-manager migration, receiving side: park `tokens` content
+    /// tokens (with a `reserved_blocks`-block device reservation for
+    /// resume to re-claim) in this manager's host pool under a fresh
+    /// handle.  The per-pool conservation invariants hold on both sides
+    /// of a migration: the victim's `export_suspended` frees exactly the
+    /// blocks this claim takes — pages move, they are never minted.
+    pub fn import_suspended(&mut self, tokens: usize, reserved_blocks: usize) -> Result<SeqHandle> {
+        let tokens = tokens.max(1);
+        let content = Self::blocks_for(tokens);
+        if content > self.host_free.len() {
+            bail!(
+                "host swap pool exhausted on import: need {content} blocks, {} free",
+                self.host_free.len()
+            );
+        }
+        let blocks: Vec<usize> = (0..content).map(|_| self.host_free.pop().unwrap()).collect();
+        let h = self.next_handle;
+        self.next_handle += 1;
+        self.seqs.insert(h, SeqAlloc { blocks, tokens, reserved_blocks, on_host: true });
+        Ok(h)
+    }
+
     pub fn seq_tokens(&self, h: SeqHandle) -> Option<usize> {
         self.seqs.get(&h).map(|s| s.tokens)
     }
@@ -438,6 +485,40 @@ mod tests {
         }
         assert_eq!(b.host_blocks_total(), 0);
         assert_eq!(b.suspended_seqs(), 0);
+    }
+
+    #[test]
+    fn migration_moves_host_pages_between_managers_without_minting() {
+        let mut v = KvBlockManager::with_host_pool(1024, 8); // victim
+        let mut t = KvBlockManager::with_host_pool(1024, 4); // thief
+        let h = v.admit_reserved(20, 100).unwrap(); // 7-block reservation, 2 content
+        v.suspend(h).unwrap();
+        assert_eq!(v.host_blocks_used(), 2);
+        assert!(t.can_import_suspended(20));
+        let (tokens, reserved) = v.export_suspended(h).unwrap();
+        assert_eq!((tokens, reserved), (20, 7));
+        assert_eq!(v.host_blocks_used(), 0, "victim pages freed on export");
+        assert_eq!(v.active_seqs(), 0);
+        let h2 = t.import_suspended(tokens, reserved).unwrap();
+        assert_eq!(t.host_blocks_used(), 2, "thief pages claimed on import");
+        assert!(t.is_suspended(h2));
+        // resume on the thief re-claims the full original reservation
+        assert!(t.can_resume(h2));
+        assert_eq!(t.resume(h2).unwrap(), 2);
+        assert_eq!(t.blocks_used(), 7, "the migrated reservation survives intact");
+        assert_eq!(t.seq_tokens(h2), Some(20), "progress survives the migration");
+        // refusals: the exported handle is gone, resident pages cannot
+        // migrate, and an import past the pool bound fails cleanly
+        assert!(v.export_suspended(h).is_err());
+        let resident = v.admit(16).unwrap();
+        assert!(v.export_suspended(resident).is_err());
+        assert!(!t.can_import_suspended(5 * BLOCK_TOKENS));
+        assert!(t.import_suspended(5 * BLOCK_TOKENS, 5).is_err());
+        assert_eq!(
+            t.host_blocks_used() + t.host_blocks_free(),
+            t.host_blocks_total(),
+            "a refused import must not leak host blocks"
+        );
     }
 
     /// The two-pool satellite property: random admit / append / suspend /

@@ -72,7 +72,11 @@ pub struct EngineCaps {
 /// handle indexes that engine's block manager, and for the PJRT backend
 /// the payload carries the staged KV rows and sampler state.  Handing
 /// it to another engine fails loudly (`resume` reports an unknown
-/// handle) — never silently.
+/// handle) — never silently.  The one sanctioned way to move a
+/// suspension between engines is the migration pair
+/// [`Engine::export_suspended`] / [`Engine::import_suspended`], which
+/// re-registers the pages in the receiving engine's host pool under a
+/// fresh handle.
 #[derive(Clone, Debug)]
 pub struct Suspended {
     /// Decode tokens generated before suspension (preserved progress —
@@ -96,6 +100,22 @@ pub(crate) enum SuspendPayload {
     /// PJRT stages the slot's physical KV rows in a host buffer, plus
     /// the sampler chain state (current token and write position).
     Pjrt { rows: Vec<f32>, cur_token: i32, pos: i32 },
+}
+
+/// A suspended sequence in flight between two replicas' host pools
+/// (cross-replica migration): [`Engine::export_suspended`] detaches the
+/// pages from the sending engine and reports the block-manager facts the
+/// receiving engine needs to re-register them.
+#[derive(Debug)]
+pub struct MigratedSeq {
+    /// The suspended sequence, detached from the exporting engine (its
+    /// old handle is dead there; [`Engine::import_suspended`] mints a
+    /// fresh one).
+    pub sus: Suspended,
+    /// Content tokens parked in the host pool (prompt + generated).
+    pub tokens: usize,
+    /// Device blocks the reservation spans (what resume must re-claim).
+    pub reserved_blocks: usize,
 }
 
 /// The contract between coordinator and execution backend.
@@ -159,8 +179,43 @@ pub trait Engine {
     /// pages.  Returns the discarded decode tokens (the progress that
     /// just became wasted work) — the downgrade path for suspended jobs
     /// that can no longer be resumed here, e.g. after a cross-replica
-    /// steal moved the request away from the pool holding its KV.
+    /// steal moved the request away from the pool holding its KV and
+    /// the thief's pool had no room to migrate the pages into.
     fn discard_suspended(&mut self, s: Suspended) -> u32;
+
+    /// Content tokens a suspended sequence parks in this engine's host
+    /// pool (prompt + generated decode tokens) — the size a
+    /// cross-replica migration must find room for on the receiving
+    /// side.  `None` for a handle this engine does not own or a
+    /// sequence that is not suspended.
+    fn suspended_tokens(&self, s: &Suspended) -> Option<usize>;
+
+    /// Cross-replica migration, receiving side: can this engine's host
+    /// pool park `tokens` migrated content tokens right now?  Always
+    /// false with `swap = off` (zero-block pool).
+    fn can_accept_suspended(&self, tokens: usize) -> bool;
+
+    /// Cross-replica migration, sending side: detach a suspended
+    /// sequence from this engine — its host pages return to this pool,
+    /// the outbound transfer is charged on this engine's clock, and
+    /// nothing is discarded: the progress travels in the returned
+    /// [`MigratedSeq`].  Errors on a foreign or resident handle.
+    fn export_suspended(&mut self, s: Suspended) -> Result<MigratedSeq>;
+
+    /// Cross-replica migration, receiving side: register a sibling's
+    /// exported sequence in this engine's host pool under a fresh
+    /// handle, charging the inbound transfer on this engine's clock.
+    /// Callers check [`Engine::can_accept_suspended`] first and fall
+    /// back to the discard downgrade when the pool lacks room — like
+    /// suspension itself, migration never silently degrades.
+    fn import_suspended(&mut self, m: MigratedSeq) -> Result<Suspended>;
+
+    /// Swap-aware eviction price for the preemption margin probe: the
+    /// cost of displacing `slot` through the suspend/resume path right
+    /// now (both transfers), expressed in decode-token equivalents
+    /// under this engine's cost model.  `None` when the slot cannot
+    /// suspend — recompute pricing applies.
+    fn swap_price_tokens(&self, slot: SlotId) -> Option<f64>;
 
     fn active_slots(&self) -> usize;
 
@@ -230,6 +285,26 @@ impl<E: Engine + ?Sized> Engine for &mut E {
 
     fn discard_suspended(&mut self, s: Suspended) -> u32 {
         (**self).discard_suspended(s)
+    }
+
+    fn suspended_tokens(&self, s: &Suspended) -> Option<usize> {
+        (**self).suspended_tokens(s)
+    }
+
+    fn can_accept_suspended(&self, tokens: usize) -> bool {
+        (**self).can_accept_suspended(tokens)
+    }
+
+    fn export_suspended(&mut self, s: Suspended) -> Result<MigratedSeq> {
+        (**self).export_suspended(s)
+    }
+
+    fn import_suspended(&mut self, m: MigratedSeq) -> Result<Suspended> {
+        (**self).import_suspended(m)
+    }
+
+    fn swap_price_tokens(&self, slot: SlotId) -> Option<f64> {
+        (**self).swap_price_tokens(slot)
     }
 
     fn active_slots(&self) -> usize {

@@ -22,7 +22,9 @@ use std::time::Instant;
 use anyhow::{bail, Context};
 
 use super::sampler::{sample, SamplerConfig};
-use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId, SuspendPayload, Suspended};
+use super::{
+    Engine, EngineCaps, KvBlockManager, MigratedSeq, SlotEvent, SlotId, SuspendPayload, Suspended,
+};
 use crate::engine::kv_cache::SeqHandle;
 use crate::runtime::{ArtifactManifest, Executable, HostArg, Runtime};
 use crate::util::rng::Rng;
@@ -337,6 +339,43 @@ impl Engine for PjrtEngine {
     fn discard_suspended(&mut self, s: Suspended) -> u32 {
         self.kv_mgr.release(s.kv);
         s.generated
+    }
+
+    fn suspended_tokens(&self, s: &Suspended) -> Option<usize> {
+        if self.kv_mgr.is_suspended(s.kv) {
+            self.kv_mgr.seq_tokens(s.kv)
+        } else {
+            None
+        }
+    }
+
+    fn can_accept_suspended(&self, tokens: usize) -> bool {
+        self.kv_mgr.can_import_suspended(tokens)
+    }
+
+    fn export_suspended(&mut self, s: Suspended) -> Result<MigratedSeq> {
+        // the physical rows already travel in the payload's host buffer
+        // (staged at suspend time), so the export is pure block-manager
+        // bookkeeping on this backend — any real wall-clock cost of the
+        // inter-process copy is paid by the receiving side
+        let (tokens, reserved_blocks) = self.kv_mgr.export_suspended(s.kv)?;
+        Ok(MigratedSeq { sus: s, tokens, reserved_blocks })
+    }
+
+    fn import_suspended(&mut self, m: MigratedSeq) -> Result<Suspended> {
+        let SuspendPayload::Pjrt { .. } = &m.sus.payload else {
+            bail!("suspension was produced by a different engine backend");
+        };
+        let kv = self.kv_mgr.import_suspended(m.tokens, m.reserved_blocks)?;
+        Ok(Suspended { kv, ..m.sus })
+    }
+
+    fn swap_price_tokens(&self, slot: SlotId) -> Option<f64> {
+        // the staged-row memcpy runs at memory bandwidth while one
+        // decode token costs a full interpret-mode forward pass, so the
+        // transfer is effectively free relative to decode on this
+        // backend — price it at zero whenever suspension is possible
+        self.can_suspend(slot).then_some(0.0)
     }
 
     fn active_slots(&self) -> usize {

@@ -18,7 +18,9 @@
 use anyhow::bail;
 
 use super::pjrt::{PICO_HEADS, PICO_HEAD_DIM, PICO_LAYERS};
-use super::{Engine, EngineCaps, KvBlockManager, SlotEvent, SlotId, SuspendPayload, Suspended};
+use super::{
+    Engine, EngineCaps, KvBlockManager, MigratedSeq, SlotEvent, SlotId, SuspendPayload, Suspended,
+};
 use crate::config::{CostModel, SchedulerConfig};
 use crate::engine::kv_cache::{SeqHandle, BLOCK_TOKENS};
 use crate::Result;
@@ -184,6 +186,44 @@ impl Engine for SimEngine {
     fn discard_suspended(&mut self, s: Suspended) -> u32 {
         self.kv.release(s.kv);
         s.generated
+    }
+
+    fn suspended_tokens(&self, s: &Suspended) -> Option<usize> {
+        if self.kv.is_suspended(s.kv) {
+            self.kv.seq_tokens(s.kv)
+        } else {
+            None
+        }
+    }
+
+    fn can_accept_suspended(&self, tokens: usize) -> bool {
+        self.kv.can_import_suspended(tokens)
+    }
+
+    fn export_suspended(&mut self, s: Suspended) -> Result<MigratedSeq> {
+        let (tokens, reserved_blocks) = self.kv.export_suspended(s.kv)?;
+        let blocks = tokens.max(1).div_ceil(BLOCK_TOKENS);
+        self.now_ms += blocks as f64 * self.swap_ms_per_block;
+        Ok(MigratedSeq { sus: s, tokens, reserved_blocks })
+    }
+
+    fn import_suspended(&mut self, m: MigratedSeq) -> Result<Suspended> {
+        let kv = self.kv.import_suspended(m.tokens, m.reserved_blocks)?;
+        let blocks = m.tokens.max(1).div_ceil(BLOCK_TOKENS);
+        self.now_ms += blocks as f64 * self.swap_ms_per_block;
+        Ok(Suspended { kv, ..m.sus })
+    }
+
+    fn swap_price_tokens(&self, slot: SlotId) -> Option<f64> {
+        let s = self.slots.get(slot).and_then(Option::as_ref)?;
+        if !self.kv.can_suspend(s.kv) {
+            return None;
+        }
+        // suspend + eventual resume both move the content blocks; a
+        // single-sequence decode step is the token-equivalence unit
+        let blocks = self.kv.seq_tokens(s.kv)?.div_ceil(BLOCK_TOKENS);
+        let per_token_ms = self.cost.decode_base_ms + self.cost.decode_per_seq_ms;
+        Some(2.0 * blocks as f64 * self.swap_ms_per_block / per_token_ms.max(1e-9))
     }
 
     fn active_slots(&self) -> usize {
@@ -377,6 +417,67 @@ mod tests {
         assert!(!e.can_suspend(long), "60 content tokens exceed the 2-block pool");
         assert!(e.can_suspend(short), "short job's content fits");
         assert_eq!(e.evict(long), 20, "the fallback is still a plain recompute evict");
+    }
+
+    #[test]
+    fn migration_charges_both_clocks_and_resumes_on_the_thief() {
+        use crate::config::SwapMode;
+        let sched = SchedulerConfig {
+            max_batch: 2,
+            max_kv_tokens: 4096,
+            swap: SwapMode::Host(64),
+            ..Default::default()
+        };
+        let mut victim = SimEngine::new(CostModel::default(), &sched, 160);
+        let mut thief = SimEngine::new(CostModel::default(), &sched, 160);
+        let slot = victim.prefill(&[1, 10, 2], 50).unwrap();
+        for _ in 0..7 {
+            victim.decode_step().unwrap();
+        }
+        assert!(victim.swap_price_tokens(slot).is_some_and(|p| p > 0.0));
+        let sus = victim.suspend(slot).unwrap();
+        let tokens = victim.suspended_tokens(&sus).unwrap();
+        assert_eq!(tokens, 10, "3 prompt + 7 generated content tokens");
+        assert!(thief.can_accept_suspended(tokens));
+        let (v0, t0) = (victim.now_ms(), thief.now_ms());
+        let m = victim.export_suspended(sus).unwrap();
+        assert!(victim.now_ms() > v0, "export must charge the victim clock");
+        assert_eq!(victim.kv().host_blocks_used(), 0, "victim pages freed");
+        let sus = thief.import_suspended(m).unwrap();
+        assert!(thief.now_ms() > t0, "import must charge the thief clock");
+        assert!(thief.kv().host_blocks_used() > 0, "pages parked on the thief");
+        assert!(victim.suspended_tokens(&sus).is_none(), "handle is foreign to the victim now");
+        // the thief resumes it and decode continues at token 8
+        assert!(thief.can_resume(&sus));
+        let slot2 = thief.resume(sus).unwrap();
+        let ev = thief.decode_step().unwrap();
+        assert_eq!(ev.iter().find(|x| x.slot == slot2).unwrap().generated, 8);
+    }
+
+    #[test]
+    fn swap_price_is_none_without_a_pool_and_scales_with_bandwidth() {
+        use crate::config::SwapMode;
+        let mut e = engine(); // default sched: swap = off
+        let slot = e.prefill(&[1, 10, 2], 50).unwrap();
+        assert!(e.swap_price_tokens(slot).is_none(), "no pool ⇒ recompute pricing");
+        assert!(e.swap_price_tokens(3).is_none(), "empty slot has no price");
+        let mk = |bw: f64| SchedulerConfig {
+            max_batch: 2,
+            max_kv_tokens: 4096,
+            swap: SwapMode::Host(64),
+            swap_bw_gbps: bw,
+            ..Default::default()
+        };
+        let run = |bw: f64| {
+            let sched = mk(bw);
+            let mut e = SimEngine::new(CostModel::default(), &sched, 160);
+            let slot = e.prefill(&[1, 10, 2], 50).unwrap();
+            e.swap_price_tokens(slot).unwrap()
+        };
+        let fast = run(16.0);
+        let slow = run(0.25);
+        assert!(fast > 0.0 && slow > fast, "a slower link must price eviction higher");
+        assert!((slow / fast - 64.0).abs() < 1e-6, "price is linear in 1/bandwidth");
     }
 
     #[test]

@@ -336,6 +336,36 @@ pub fn long_job_then_burst(n_short: usize) -> Vec<Request> {
     v
 }
 
+/// The host-page migration acceptance trace: one 600-token job at t=0,
+/// then `n_short` 8-token jobs from t=200 at a gentle 15 ms spacing.
+/// On a two-replica single-slot ranked fleet with `steal = idle`,
+/// `preempt = arrival` and `swap = host(...)`, the first short lands on
+/// replica 0 (ranked ties go to the lowest index), parks the long job
+/// with ~90 decode tokens of progress, and the idle sibling immediately
+/// steals the parked entry — the exact moment the thief's host pool
+/// decides between migrating those pages and discarding them.  Shared
+/// by the migration tests in `coordinator::dispatch` and
+/// `benches/fig_migrate.rs`, so "migration strictly cuts waste vs the
+/// discard downgrade" is always judged on the same trace.  The burst
+/// starts well before `starvation_ms` (300 ms) so the long job is still
+/// evictable when it matters.
+pub fn park_then_steal(n_short: usize) -> Vec<Request> {
+    fn req(id: u64, arrival_ms: f64, target: u32) -> Request {
+        Request {
+            id,
+            tokens: vec![1, 7, 19, 31, 2],
+            prompt_len: 5,
+            arrival_ms,
+            target_len: target,
+            oracle_len: target,
+            score: target as f32,
+        }
+    }
+    let mut v = vec![req(0, 0.0, 600)];
+    v.extend((1..=n_short as u64).map(|i| req(i, 200.0 + (i - 1) as f64 * 15.0, 8)));
+    v
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

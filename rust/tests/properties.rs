@@ -23,8 +23,20 @@
 //!   or accounted as waste (`tokens_generated = Σ output + Σ
 //!   discarded`, where discards are recompute evictions plus
 //!   steal-downgraded suspensions).  The swap economy balances:
-//!   `resumed_tokens ≤ swapped_out_tokens` fleet-wide and per replica,
-//!   and `swap = off` (or `preempt = off`) keeps it at zero.
+//!   `resumed_tokens ≤ swapped_out_tokens` fleet-wide, per replica a
+//!   resume draws only on locally parked or steal-migrated-in pages
+//!   (`resumed ≤ swapped_out + migrated`), the migration books sum
+//!   across replicas to the merged total, and `swap = off` (or
+//!   `preempt = off`, or `steal = off` for migration) keeps the
+//!   respective counters at zero.
+//! * The page-economy knobs (`swap_pricing = transfer`, `swap_evict =
+//!   rank`) crossed against starved and outsized host pools: the event
+//!   chains still conserve (a pool-pressure discard consumes the
+//!   pending resume of the suspension it burns), device and host pools
+//!   drain to zero when the fleet drains (migration moves pages, never
+//!   mints or leaks them), every combination is two-run bitwise
+//!   deterministic, and an outsized pool pins `swap_evict = rank`
+//!   record-for-record to `off`.
 //! * Determinism: two runs of the same trace under work stealing — and
 //!   under stealing + preemption + the host swap pool + continuous
 //!   re-ranking with calibrated score noise — produce byte-identical
@@ -42,12 +54,15 @@
 //!   dispatch × steal × preempt × swap grid, every dispatched id's
 //!   event chain is exactly one `Dispatched`, one entry — `Admitted`
 //!   (fresh prefill, followed by a `FirstToken`) or `Resumed` (swap
-//!   pages back, no new first token) — per round (= preemptions + 1),
-//!   and one final `Completed`; `Preempted` events sum to
+//!   pages back, no new first token) — per round (= preemptions −
+//!   pool-pressure discards + 1: burning a parked entry's pages
+//!   consumes the resume its suspension was owed), and one final
+//!   `Completed`; `Preempted` events sum to
 //!   `ServeOutcome::preemptions` (waste included — `Stolen { wasted }`
-//!   carries the steal-downgrade share), `Resumed` to `resumes` /
-//!   `resumed_tokens`, `Boosted` to `boosts`, `Stolen` to the
-//!   per-replica transfer books, and `Rejected` to `rejected`.
+//!   carries the steal-downgrade share, `Stolen { migrated }` sums to
+//!   `migrated_tokens`), `Resumed` to `resumes` / `resumed_tokens`,
+//!   `Boosted` to `boosts`, `Stolen` to the per-replica transfer
+//!   books, and `Rejected` to `rejected`.
 //!   Submitting mid-run (two interleaved sessions' worth of arrivals)
 //!   loses no ids.  The `pallas replay` reconstruction round-trips an
 //!   event capture through its JSONL encoding without drifting from
@@ -58,7 +73,7 @@
 
 use pars_serve::config::{
     CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, RerankMode, SchedulerConfig,
-    StealMode, SwapMode,
+    StealMode, SwapEvictMode, SwapMode, SwapPricingMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -477,12 +492,22 @@ fn metamorphic_conservation_across_policy_dispatch_and_steal() {
                 assert_eq!(swapped, 0, "{label}: nothing may be swapped out");
                 assert_eq!(resumes, 0, "{label}: nothing may resume");
             }
-            // per-replica: a resume can only restore what a suspension
-            // parked on the SAME replica (suspensions never migrate)
+            // host-page migration books: merged is the replica sum, and
+            // pages can only move when a steal finds a parked entry —
+            // no stealing (or nothing parked) means nothing migrates
+            let migrated: u64 = out.per_replica.iter().map(|r| r.migrated_tokens).sum();
+            assert_eq!(out.merged.migrated_tokens, migrated, "{label}: migration books");
+            if steal == StealMode::Off || swap == SwapMode::Off || preempt == PreemptMode::Off
+            {
+                assert_eq!(migrated, 0, "{label}: nothing may migrate");
+            }
+            // per-replica: a resume can only restore what was parked in
+            // the SAME replica's host pool — by its own suspensions or
+            // by pages a steal migrated in from a sibling
             for rep in &out.per_replica {
                 assert!(
-                    rep.resumed_tokens <= rep.swapped_out_tokens,
-                    "{label} replica {}: restored more than it parked",
+                    rep.resumed_tokens <= rep.swapped_out_tokens + rep.migrated_tokens,
+                    "{label} replica {}: restored more than it parked or imported",
                     rep.replica
                 );
             }
@@ -611,24 +636,64 @@ fn assert_events_conserved(
         preempted_swap: u64,
         resumed: u64,
         completed: u64,
+        /// Parked in a host pool right now (suspended in some waiting
+        /// queue, possibly migrated to a sibling by a steal).
+        parked: bool,
+        /// Pool-pressure discards (`swap_evict = rank`): a recompute
+        /// `Preempted` that burned this chain's PARKED pages.  Unlike a
+        /// running-victim eviction it consumes the pending resume of an
+        /// earlier swap suspension, so the re-entry law subtracts it.
+        parked_discards: u64,
     }
     let mut chains: std::collections::HashMap<u64, Chain> = std::collections::HashMap::new();
     let (mut boosted, mut stolen, mut wasted) = (0usize, 0usize, 0u64);
     let (mut swap_preempts, mut resumes, mut restored) = (0u64, 0u64, 0u64);
+    let mut migrated = 0u64;
     for ev in events {
         let c = chains.entry(ev.id()).or_default();
         assert_eq!(c.completed, 0, "{label}: id {} has events after Completed", ev.id());
         match ev {
             ServeEvent::Rejected { .. } => c.rejected += 1,
             ServeEvent::Dispatched { .. } => c.dispatched += 1,
-            ServeEvent::Admitted { .. } => c.admitted += 1,
+            ServeEvent::Admitted { .. } => {
+                c.admitted += 1;
+                c.parked = false;
+            }
             ServeEvent::FirstToken { .. } => c.first_token += 1,
             ServeEvent::Boosted { .. } => boosted += 1,
-            ServeEvent::Stolen { wasted: w, .. } => {
+            ServeEvent::Stolen { wasted: w, migrated: m, .. } => {
                 stolen += 1;
-                // a stolen suspended entry downgrades to recompute —
-                // the burned progress rides on the steal event
+                // a stolen suspended entry either migrates its parked
+                // pages into the thief's host pool (lossless) or
+                // downgrades to recompute — the burned progress rides
+                // on the steal event, and never both at once
+                assert!(
+                    *w == 0 || *m == 0,
+                    "{label}: id {} steal both migrated {m} and wasted {w}",
+                    ev.id()
+                );
                 wasted += *w as u64;
+                migrated += *m as u64;
+                if *m > 0 {
+                    assert!(
+                        c.parked,
+                        "{label}: id {} migrated pages without being parked",
+                        ev.id()
+                    );
+                }
+                if *w > 0 {
+                    assert!(
+                        c.parked,
+                        "{label}: id {} burned parked pages without being parked",
+                        ev.id()
+                    );
+                    c.parked = false;
+                }
+                // wasted == migrated == 0 is ambiguous (a plain steal,
+                // or a zero-progress parked entry moving either way), so
+                // the parked flag is deliberately left as-is: a
+                // zero-progress downgrade re-enters via Admitted, which
+                // clears it before it can be misread
             }
             ServeEvent::Preempted { wasted: w, mode, .. } => {
                 c.preempted += 1;
@@ -641,14 +706,21 @@ fn assert_events_conserved(
                             *w, 0,
                             "{label}: a swap suspension must not waste tokens"
                         );
+                        c.parked = true;
                     }
-                    PreemptKind::Recompute => {}
+                    PreemptKind::Recompute => {
+                        if c.parked {
+                            c.parked_discards += 1;
+                            c.parked = false;
+                        }
+                    }
                 }
             }
             ServeEvent::Resumed { restored: r, .. } => {
                 c.resumed += 1;
                 resumes += 1;
                 restored += *r as u64;
+                c.parked = false;
             }
             ServeEvent::Rescored { remaining, .. } => {
                 // estimates are only refreshed for live dispatched work,
@@ -688,9 +760,11 @@ fn assert_events_conserved(
         assert_eq!(c.completed, 1, "{label}: id {} completed {} times", r.id, c.completed);
         assert_eq!(
             c.admitted + c.resumed,
-            c.preempted + 1,
+            c.preempted - c.parked_discards + 1,
             "{label}: id {} needs one (re-)entry — admission or resume — per \
-             preemption plus the initial admission",
+             preemption plus the initial admission (a pool-pressure discard \
+             consumes the pending resume of the suspension it burned, so it \
+             adds a Preempted without adding a re-entry of its own)",
             r.id
         );
         assert!(
@@ -722,6 +796,10 @@ fn assert_events_conserved(
     assert_eq!(
         restored, out.merged.resumed_tokens,
         "{label}: Resumed token sums vs outcome"
+    );
+    assert_eq!(
+        migrated, out.merged.migrated_tokens,
+        "{label}: Stolen migrated sums vs outcome"
     );
     assert!(
         resumes <= swap_preempts,
@@ -777,6 +855,142 @@ fn event_log_is_conserved_across_the_mode_grid() {
                                 assert_eq!(
                                     out.merged.makespan_ms, batch.merged.makespan_ms,
                                     "{label}: session vs batch makespan"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn page_economy_knobs_hold_the_conservation_laws() {
+    // the PR-8 page-economy axes — transfer-cost preemption pricing,
+    // rank-ordered pool-pressure eviction, and (ungated) host-page
+    // migration on steals — crossed against the event-conservation
+    // laws, fleet page accounting, and two-run bitwise determinism.
+    // Host(8) is a deliberately starved pool (a handful of parked
+    // entries fill it) so the pressure loop and the migration-refusal
+    // downgrade both actually fire; Host(4096) outsizes every trace,
+    // so `swap_evict = rank` must be bit-for-bit inert there.
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0x9A6E);
+    for case in 0..2 {
+        let trace = gen_trace(&mut rng);
+        for pool in [8usize, 4096] {
+            for pricing in SwapPricingMode::all() {
+                // signature of the `swap_evict = off` run at this
+                // pricing, for the outsized-pool inertness pin below
+                let mut off_sig: Option<String> = None;
+                for evict in SwapEvictMode::all() {
+                    let label = format!(
+                        "seed {seed} case {case} pool {pool} {pricing:?}/{evict:?}"
+                    );
+                    let run = || {
+                        let sched = SchedulerConfig {
+                            max_batch: 2,
+                            max_kv_tokens: 8192,
+                            starvation_ms: 300.0,
+                            replicas: 3,
+                            dispatch: DispatchKind::Ranked,
+                            steal: StealMode::Idle,
+                            preempt: PreemptMode::Arrival,
+                            swap: SwapMode::Host(pool),
+                            swap_pricing: pricing,
+                            swap_evict: evict,
+                            ..Default::default()
+                        };
+                        let engines: Vec<SimEngine> = (0..3)
+                            .map(|i| {
+                                SimEngine::new(
+                                    CostModel::default(),
+                                    &sched.for_replica(i),
+                                    TRACE_MAX_SEQ,
+                                )
+                            })
+                            .collect();
+                        let policy = make_policy(PolicyKind::Pars);
+                        let mut coord = ShardedCoordinator::new(
+                            engines,
+                            policy.as_ref(),
+                            sched.dispatch,
+                            sched,
+                        );
+                        let mut events: Vec<ServeEvent> = Vec::new();
+                        let out = {
+                            let mut session = coord.session_with(&mut events);
+                            for r in trace.to_vec() {
+                                session.submit(r);
+                            }
+                            session.finish().unwrap()
+                        };
+                        // fleet page conservation: once the fleet drains,
+                        // every device block and every parked host page
+                        // has been released — migration MOVES pages
+                        // between pools, it never mints or leaks them
+                        for i in 0..3 {
+                            let kv = coord.engine(i).kv();
+                            assert_eq!(
+                                kv.blocks_used(),
+                                0,
+                                "{label} replica {i}: device blocks leaked"
+                            );
+                            assert_eq!(
+                                kv.host_blocks_used(),
+                                0,
+                                "{label} replica {i}: host pages leaked"
+                            );
+                        }
+                        (out, events)
+                    };
+                    let (out, events) = run();
+                    assert_events_conserved(&trace, &events, &out, &label);
+                    // fleet swap economy still balances under pressure
+                    // discards and migration: what resumes was parked
+                    let swapped: u64 =
+                        out.per_replica.iter().map(|r| r.swapped_out_tokens).sum();
+                    assert!(
+                        out.merged.resumed_tokens <= swapped,
+                        "{label}: fleet resumed more than it ever parked"
+                    );
+                    // two-run bitwise determinism: the pressure-discard
+                    // pick, the pricing probe and the migration path are
+                    // all pure functions of the trace
+                    let (out2, events2) = run();
+                    let sig = |o: &ShardedOutcome, ev: &[ServeEvent]| {
+                        let recs: Vec<String> = o
+                            .per_replica
+                            .iter()
+                            .map(|r| {
+                                format!(
+                                    "{:?} p={} w={} s={} r={} m={}",
+                                    r.records,
+                                    r.preempted,
+                                    r.wasted_decode_tokens,
+                                    r.swapped_out_tokens,
+                                    r.resumed_tokens,
+                                    r.migrated_tokens
+                                )
+                            })
+                            .collect();
+                        format!("{recs:?} events={ev:?}")
+                    };
+                    let (a, b) = (sig(&out, &events), sig(&out2, &events2));
+                    assert_eq!(a, b, "{label}: identical runs diverged");
+                    match evict {
+                        SwapEvictMode::Off => off_sig = Some(a),
+                        SwapEvictMode::Rank => {
+                            if pool == 4096 {
+                                // an outsized pool never hits pool
+                                // pressure, so the rank-eviction knob
+                                // must be record-for-record inert
+                                assert_eq!(
+                                    off_sig.as_deref(),
+                                    Some(a.as_str()),
+                                    "{label}: swap_evict=rank acted without \
+                                     pool pressure"
                                 );
                             }
                         }

@@ -11,7 +11,7 @@ use std::collections::{HashMap, VecDeque};
 
 use pars_serve::config::{
     CostModel, DispatchKind, PolicyKind, PreemptMode, RerankMode, SchedulerConfig, StealMode,
-    SwapMode,
+    SwapEvictMode, SwapMode, SwapPricingMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -461,6 +461,7 @@ fn assert_sharded_pinned_sched(sched: &SchedulerConfig, kind: PolicyKind) {
     assert_eq!(out.merged.rejected, want_rejected, "{kind:?}/{dispatch:?} rejected");
     assert_eq!(out.merged.preemptions, 0, "{kind:?}/{dispatch:?} preempt=off evicted work");
     assert_eq!(out.merged.wasted_decode_tokens, 0, "{kind:?}/{dispatch:?} wasted tokens");
+    assert_eq!(out.merged.migrated_tokens, 0, "{kind:?}/{dispatch:?} steal=off migrated pages");
     for (i, rep) in out.per_replica.iter().enumerate() {
         assert_eq!(
             rep.dispatched, want_dispatched[i],
@@ -620,6 +621,83 @@ fn swap_host_zero_equals_swap_off_under_preemption_every_dispatch() {
                 format!("{:?}", o.records),
                 "{dispatch:?} replica {}: host(0) drifted from swap=off",
                 z.replica
+            );
+        }
+    }
+}
+
+/// PR 8 pin: the page-economy knobs (`swap_pricing`, `swap_evict`)
+/// live entirely inside the preemption path — with `preempt = off`
+/// they must be completely inert even at their most aggressive
+/// settings and with a live host pool, every dispatch kind,
+/// record-for-record vs the frozen PR 1 loop.
+#[test]
+fn page_economy_knobs_with_preempt_off_pin_to_reference_loop() {
+    for dispatch in DispatchKind::all() {
+        for kind in [PolicyKind::Fcfs, PolicyKind::OracleSjf] {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                steal: StealMode::Off,
+                preempt: PreemptMode::Off,
+                swap: SwapMode::Host(64),
+                swap_pricing: SwapPricingMode::Transfer,
+                swap_evict: SwapEvictMode::Rank,
+                ..Default::default()
+            };
+            assert_sharded_pinned_sched(&sched, kind);
+        }
+    }
+}
+
+/// PR 8 pin: without a host pool (`swap = off`) the transfer-pricing
+/// probe never gets a quote (`swap_price_tokens` is `None` for every
+/// victim) and the pressure loop never finds a parked entry — both
+/// knobs at their most aggressive settings must be record-for-record
+/// identical to `off`/`off` with stealing and preemption live.
+#[test]
+fn page_economy_knobs_without_a_pool_pin_to_their_off_runs() {
+    for dispatch in DispatchKind::all() {
+        let mk = |pricing: SwapPricingMode, evict: SwapEvictMode| {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                steal: StealMode::Idle,
+                preempt: PreemptMode::Arrival,
+                swap: SwapMode::Off,
+                swap_pricing: pricing,
+                swap_evict: evict,
+                ..Default::default()
+            };
+            let engines: Vec<SimEngine> = (0..sched.replicas)
+                .map(|_| SimEngine::new(CostModel::default(), &sched, 4096))
+                .collect();
+            let policy = make_policy(PolicyKind::OracleSjf);
+            let mut coord =
+                ShardedCoordinator::new(engines, policy.as_ref(), dispatch, sched.clone());
+            coord.serve(workload()).unwrap()
+        };
+        let off = mk(SwapPricingMode::Off, SwapEvictMode::Off);
+        let on = mk(SwapPricingMode::Transfer, SwapEvictMode::Rank);
+        assert_eq!(on.merged.preemptions, off.merged.preemptions, "{dispatch:?}");
+        assert_eq!(
+            on.merged.wasted_decode_tokens, off.merged.wasted_decode_tokens,
+            "{dispatch:?}"
+        );
+        assert_eq!(on.merged.migrated_tokens, 0, "{dispatch:?}: no pool, no pages to move");
+        assert_eq!(off.merged.migrated_tokens, 0, "{dispatch:?}: no pool, no pages to move");
+        for (a, b) in on.per_replica.iter().zip(off.per_replica.iter()) {
+            assert_eq!(
+                format!("{:?}", a.records),
+                format!("{:?}", b.records),
+                "{dispatch:?} replica {}: aggressive knobs drifted a pool-less run",
+                a.replica
             );
         }
     }
