@@ -6,12 +6,15 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 use crate::config::{
-    Config, CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, RerankMode, StealMode,
-    SwapEvictMode, SwapMode, SwapPricingMode,
+    AdmissionMode, Config, CostModel, DispatchKind, PolicyKind, PoolPenaltyMode, PreemptMode,
+    ReplicaCaps, RerankMode, StealMode, SwapEvictMode, SwapMode, SwapPricingMode, TenantClass,
 };
 use crate::coordinator::policy::make_policy;
-use crate::coordinator::{Coordinator, EventSink, JsonlSink, PjrtScorer, Scorer};
-use crate::engine::{Engine, PjrtEngine};
+use crate::coordinator::{
+    effective_tenants, produce, serve_feed, Coordinator, EventSink, JsonlSink, NullSink,
+    PjrtScorer, Scorer, ShardedCoordinator,
+};
+use crate::engine::{Engine, PjrtEngine, SimEngine};
 use crate::eval::kendall_tau_b;
 use crate::harness;
 use crate::runtime::{ArtifactManifest, Runtime};
@@ -23,6 +26,7 @@ use crate::workload::{Arrival, TestSet};
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "serve" => serve(args),
+        "server" => server(args),
         "sweep" => sweep(args),
         "predict" => predict(args),
         "calibrate" => calibrate(args),
@@ -68,6 +72,9 @@ COMMANDS:
                 --swap-evict off|rank  under host-pool pressure, discard the
                                     lowest-ranked parked entry to admit a
                                     better one (off: recompute fallback)
+                --pool-penalty off|occupancy  charge host-pool occupancy on
+                                    dispatch/steal load keys so routing leans
+                                    away from replicas whose pool is full
                 --rerank off|interval(ms)|on_token  continuous re-ranking:
                                     refine predicted lengths from decode
                                     progress, re-key the waiting queue and
@@ -87,6 +94,24 @@ COMMANDS:
                                     embedded sessions (default 16384)
                 (sim engine falls back to a synthetic corpus when no
                  artifacts are present, so it runs on a fresh checkout)
+  server        real-time mode: N producer threads generate per-tenant
+                open-loop streams behind the ingress admission front-end,
+                which validates, quota-checks and sheds BEFORE the
+                coordinator sees the work
+                --producers <k>     producer threads (default 2)
+                --admission off|shed(depth)|slo   the shielding policy
+                                    (shed bounds the fleet backlog at
+                                    2*depth; slo defends each tenant's
+                                    TTFT target from observed TTFT)
+                --tenants name:priority:slo_ms:quota[:weight],...
+                                    tenant classes (priority 0 is highest
+                                    and never shed indiscriminately;
+                                    quota 0 = unlimited in-flight)
+                --defer-ms <f>      over-quota retry delay (default 50)
+                plus serve's --rate/--n/--policy/--replicas/--dispatch/
+                --steal/--preempt/--swap/--events/--seed flags
+                (--admission off --producers 1 reproduces `serve`
+                 record-for-record)
   sweep         arrival-rate x policy sweep, CSV to stdout or --csv <file>
                 --dataset ... --model ... --n <requests> --reps <k>
                 --replicas <k> --dispatch ... --steal ... --preempt ...
@@ -99,8 +124,10 @@ COMMANDS:
   gen-workload  summarise an arrival trace (--rate / --burst / --n)
   replay        reconstruct per-replica timelines from an --events JSONL
                 capture: occupancy, preemption (by mode), resume and
-                steal summaries per replica
-                --events <file>     the JSONL log a serve run wrote
+                steal summaries per replica, plus the ingress books
+                (rejections by reason, per-tenant summaries) when the
+                capture came from `pallas server`
+                --events <file>     the JSONL log a serve/server run wrote
   info          print artifact manifest summary
   help          this message
 
@@ -148,6 +175,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(s) = args.str_opt("swap-evict")? {
         cfg.scheduler.swap_evict = SwapEvictMode::parse(s)?;
     }
+    if let Some(s) = args.str_opt("pool-penalty")? {
+        cfg.scheduler.pool_penalty = PoolPenaltyMode::parse(s)?;
+    }
     if let Some(r) = args.str_opt("rerank")? {
         cfg.scheduler.rerank = RerankMode::parse(r)?;
     }
@@ -157,6 +187,14 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     cfg.scheduler.event_log_capacity =
         args.usize_or("event-cap", cfg.scheduler.event_log_capacity)?;
+    if let Some(a) = args.str_opt("admission")? {
+        cfg.ingress.admission = AdmissionMode::parse(a)?;
+    }
+    cfg.ingress.producers = args.usize_or("producers", cfg.ingress.producers)?;
+    cfg.ingress.defer_ms = args.f64_or("defer-ms", cfg.ingress.defer_ms)?;
+    if let Some(t) = args.str_opt("tenants")? {
+        cfg.ingress.tenants = TenantClass::parse_list(t)?;
+    }
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.validate()?;
     Ok(cfg)
@@ -255,7 +293,7 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}{}{}",
+                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}{}{}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
@@ -271,6 +309,11 @@ fn serve(args: &Args) -> Result<()> {
                 },
                 if cfg.scheduler.swap_evict != SwapEvictMode::Off {
                     format!("  swap_evict={}", cfg.scheduler.swap_evict.name())
+                } else {
+                    String::new()
+                },
+                if cfg.scheduler.pool_penalty != PoolPenaltyMode::Off {
+                    format!("  pool_penalty={}", cfg.scheduler.pool_penalty.name())
                 } else {
                     String::new()
                 },
@@ -389,6 +432,113 @@ fn serve(args: &Args) -> Result<()> {
         }
         other => bail!("unknown engine {other:?} (sim|pjrt)"),
     }
+    Ok(())
+}
+
+/// Real-time serving: N producer threads generate per-tenant open-loop
+/// streams, [`produce`] merges them deterministically, and the ingress
+/// admission front-end judges every arrival (validation / quota /
+/// shed-under-pressure) so the coordinator only ever sees admissible
+/// work.  `--admission off --producers 1` is record-for-record the
+/// `serve` path (the ingress house rule).
+fn server(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let dataset = args.str_or("dataset", "synthalpaca")?;
+    let model = args.str_or("model", "llama")?;
+    let n = args.usize_or("n", 500)?;
+    let cost = harness::load_cost_model(&cfg.artifacts_dir);
+    let (ts, book) = load_ts_book(&cfg, &dataset, &model, &[cfg.policy])?;
+    let rate = args.f64_or("rate", harness::sweep_rates(&ts, &cost, &cfg.scheduler)[2])?;
+    let tenants = effective_tenants(&cfg.ingress);
+    let specs = harness::ingress_specs(&cfg.ingress, rate, n, cfg.seed);
+    println!(
+        "ingress: {dataset}/{model}  n={n}  offered={rate:.2} req/s  policy={}  \
+         admission={}  producers={}  tenants={}  replicas={}  dispatch={}",
+        cfg.policy.name(),
+        cfg.ingress.admission.name(),
+        cfg.ingress.producers,
+        tenants.len(),
+        cfg.scheduler.replicas,
+        cfg.scheduler.dispatch.name()
+    );
+    let scores = book.scores.get(cfg.policy.name()).map(|v| v.as_slice());
+    let feed = produce(&cfg.ingress, specs, |spec| harness::ingress_stream(&ts, scores, spec))?;
+    let max_seq = feed
+        .iter()
+        .map(|(_, r)| (r.prompt_len + r.target_len) as usize)
+        .max()
+        .unwrap_or(0)
+        .max(64);
+    let engines: Vec<SimEngine> = (0..cfg.scheduler.replicas.max(1))
+        .map(|i| SimEngine::new(cost.clone(), &cfg.scheduler.for_replica(i), max_seq))
+        .collect();
+    let policy = make_policy(cfg.policy);
+    let mut coord = ShardedCoordinator::new(
+        engines,
+        policy.as_ref(),
+        cfg.scheduler.dispatch,
+        cfg.scheduler.clone(),
+    );
+    let mut events = open_event_sink(args)?;
+    let out = match events.as_mut() {
+        Some((_, sink)) => {
+            serve_feed(&mut coord, &cfg.ingress, feed, sink as &mut dyn EventSink)?
+        }
+        None => serve_feed(&mut coord, &cfg.ingress, feed, &mut NullSink)?,
+    };
+    close_event_sink(events)?;
+    println!("{}", out.outcome.merged.report.one_line(cfg.policy.name()));
+    println!(
+        "admission: admitted={}  deferred={}  rejected={} (validation={} quota={} shed={})  \
+         peak_backlog={}  makespan={:.1}s",
+        out.admitted,
+        out.deferred,
+        out.rejected(),
+        out.rejected_by_reason[0],
+        out.rejected_by_reason[1],
+        out.rejected_by_reason[2],
+        out.peak_backlog,
+        out.outcome.merged.makespan_ms / 1e3
+    );
+    let mut t = Table::new(
+        "per-tenant ingress summary",
+        &[
+            "tenant",
+            "prio",
+            "quota",
+            "slo ms",
+            "offered",
+            "admitted",
+            "deferred",
+            "rej v/q/s",
+            "ttft p50",
+            "ttft p99",
+            "thru tok/s",
+        ],
+    );
+    for s in &out.tenants {
+        t.row(&[
+            s.class.name.clone(),
+            s.class.priority.to_string(),
+            if s.class.quota == 0 { "-".into() } else { s.class.quota.to_string() },
+            if s.class.slo_ttft_ms > 0.0 {
+                format!("{:.0}", s.class.slo_ttft_ms)
+            } else {
+                "-".into()
+            },
+            s.offered.to_string(),
+            s.admitted.to_string(),
+            s.deferred.to_string(),
+            format!(
+                "{}/{}/{}",
+                s.rejected_by_reason[0], s.rejected_by_reason[1], s.rejected_by_reason[2]
+            ),
+            format!("{:.1}", s.report.ttft.p50),
+            format!("{:.1}", s.report.ttft.p99),
+            format!("{:.1}", s.report.throughput_tok_s),
+        ]);
+    }
+    t.print();
     Ok(())
 }
 
@@ -595,6 +745,34 @@ fn replay(args: &Args) -> Result<()> {
         book.rejected,
         book.time_regressions
     );
+    // ingress books: rejections split by reason, plus per-tenant rows
+    // when the capture came from an ingress (`pallas server`) run
+    if book.rejected > 0 || book.deferred > 0 {
+        println!(
+            "ingress: rejected validation={}  quota={}  shed={}  deferred={}",
+            book.rejected_by_reason[0],
+            book.rejected_by_reason[1],
+            book.rejected_by_reason[2],
+            book.deferred
+        );
+    }
+    if !book.tenants.is_empty() {
+        let mut tt = Table::new(
+            "per-tenant ingress books",
+            &["tenant", "validation", "quota", "shed", "rejected", "deferred"],
+        );
+        for (name, tb) in &book.tenants {
+            tt.row(&[
+                name.clone(),
+                tb.rejected_by_reason[0].to_string(),
+                tb.rejected_by_reason[1].to_string(),
+                tb.rejected_by_reason[2].to_string(),
+                tb.rejected().to_string(),
+                tb.deferred.to_string(),
+            ]);
+        }
+        tt.print();
+    }
     let mut t = Table::new(
         &format!("per-replica timelines ({path})"),
         &[
@@ -883,5 +1061,72 @@ mod tests {
             assert!(kinds.contains(want), "missing {want} events: {kinds:?}");
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Flags shared by this test and the CI server smoke: a single slot
+    /// offered ~5x its capacity through two tenant classes (free is
+    /// quota-capped at 4 in flight), shed(8) bounding the backlog.  The
+    /// run is seed-deterministic, so if this test sees tenant-tagged
+    /// `rejected` events the CI smoke on the same flags cannot flake.
+    const SERVER_SMOKE_FLAGS: [&str; 17] = [
+        "server", "--policy", "pars", "--max-batch", "1", "--rate", "30", "--n", "200",
+        "--admission", "shed(8)", "--producers", "2", "--tenants",
+        "gold:0:250:0:1,free:2:2000:4:3", "--seed", "20260730",
+    ];
+
+    #[test]
+    fn server_sheds_under_pressure_and_replay_reads_the_ingress_books() {
+        let dir = std::env::temp_dir().join("pars_server_events_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("server_ev.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut argv: Vec<&str> = SERVER_SMOKE_FLAGS.to_vec();
+        argv.extend(["--events", &path_s]);
+        dispatch(&args(&argv)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut rejected = 0u64;
+        for line in body.lines() {
+            let v = crate::util::json::parse(line).expect("every line is valid JSON");
+            if v.get("event").unwrap().as_str().unwrap() == "rejected" {
+                rejected += 1;
+                // every ingress rejection declares its reason and tenant
+                let reason = v.get("reason").unwrap().as_str().unwrap().to_string();
+                assert!(
+                    ["validation", "quota", "shed"].contains(&reason.as_str()),
+                    "bad reason {reason:?}"
+                );
+                let tenant = v.get("tenant").unwrap().as_str().unwrap().to_string();
+                assert!(tenant == "gold" || tenant == "free", "bad tenant {tenant:?}");
+            }
+        }
+        assert!(rejected > 0, "a 5x-capacity shed(8) run never rejected at ingress");
+        // the replay subcommand consumes the same capture, ingress
+        // books included, and those books balance
+        dispatch(&args(&["replay", "--events", &path_s])).unwrap();
+        let book = crate::coordinator::ReplayBook::from_jsonl(&body).unwrap();
+        assert_eq!(book.rejected, rejected);
+        let per_tenant: u64 = book
+            .tenants
+            .values()
+            .map(crate::coordinator::TenantBook::rejected)
+            .sum();
+        assert_eq!(per_tenant, rejected, "every ingress rejection is tenant-tagged");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn server_rejects_invalid_tenant_and_slo_configs_loudly() {
+        // malformed --tenants entry: parse_list refuses
+        assert!(dispatch(&args(&["server", "--tenants", "gold"])).is_err());
+        // fractional quota: parse_list refuses
+        assert!(dispatch(&args(&["server", "--tenants", "gold:0:250:1.5"])).is_err());
+        // admission = slo needs a positive TTFT target: validate refuses
+        let err = dispatch(&args(&[
+            "server", "--admission", "slo", "--tenants", "gold:0:0:0",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("slo"), "unexpected error: {err:#}");
+        // producer threads must exist
+        assert!(dispatch(&args(&["server", "--producers", "0"])).is_err());
     }
 }

@@ -455,6 +455,205 @@ impl RerankMode {
     }
 }
 
+/// Whether the dispatch/steal routing key reads host swap-pool
+/// saturation (the PR 8 follow-on: the fleet-wide page economy told the
+/// *preemptor* what a swap costs; this tells the *router* when a
+/// replica's pool is too full to absorb another preemption).
+///
+/// With `Off`, routing ignores the host pool entirely (the pre-penalty
+/// behaviour, bit-for-bit).  With `Occupancy`, a replica's load key is
+/// inflated in proportion to how full its host pool is, so admissible
+/// work routes around replicas whose swap pool is saturated — those are
+/// exactly the replicas where the next preemption degrades to a lossy
+/// recompute.  Replicas with no pool (`swap = off`) contribute zero
+/// penalty, which keeps the knob inert unless swapping is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolPenaltyMode {
+    /// Routing is host-pool-oblivious (the pre-penalty behaviour).
+    Off,
+    /// Inflate a replica's routing load key by its host-pool occupancy.
+    Occupancy,
+}
+
+impl PoolPenaltyMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        parse_mode(
+            "pool_penalty",
+            "off | occupancy",
+            &[
+                ModeVariant::Bare(&["off", "none"], PoolPenaltyMode::Off),
+                ModeVariant::Bare(&["occupancy"], PoolPenaltyMode::Occupancy),
+            ],
+            s,
+        )
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PoolPenaltyMode::Off => "off".to_string(),
+            PoolPenaltyMode::Occupancy => "occupancy".to_string(),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [PoolPenaltyMode; 2] {
+        [PoolPenaltyMode::Off, PoolPenaltyMode::Occupancy]
+    }
+}
+
+/// Admission policy of the ingress tier — what the shielding front-end
+/// does with an arrival *before* the coordinator sees it.
+///
+/// With `Off`, every producer submission passes straight through to the
+/// session (the pre-ingress behaviour: single-producer runs are
+/// bit-for-bit the plain `ServeSession` loop).  With `Shed(depth)`, the
+/// controller bounds the fleet backlog: past `depth` waiting requests
+/// it sheds predicted-long work, and past `2·depth` it sheds
+/// indiscriminately — the queue can never grow without bound.  With
+/// `Slo`, the controller watches the fleet's observed TTFT against each
+/// tenant's SLO target and starts shedding predicted-long work when the
+/// target is threatened (half the budget), everything when it is blown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Pass-through: the coordinator sees every submission.
+    Off,
+    /// Bound the fleet backlog at `depth` waiting requests (shed
+    /// predicted-long past `depth`, everything past `2·depth`).
+    Shed(usize),
+    /// Shed against per-tenant TTFT SLO targets.
+    Slo,
+}
+
+impl AdmissionMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        parse_mode(
+            "admission",
+            "off | shed(depth) | slo",
+            &[
+                ModeVariant::Bare(&["off", "none"], AdmissionMode::Off),
+                ModeVariant::Bare(&["slo"], AdmissionMode::Slo),
+                ModeVariant::Param {
+                    word: "shed",
+                    noun: "a queue depth",
+                    example: "shed(64)",
+                    make: AdmissionMode::Shed,
+                },
+            ],
+            s,
+        )
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AdmissionMode::Off => "off".to_string(),
+            AdmissionMode::Shed(n) => format!("shed({n})"),
+            AdmissionMode::Slo => "slo".to_string(),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [AdmissionMode; 3] {
+        [AdmissionMode::Off, AdmissionMode::Shed(64), AdmissionMode::Slo]
+    }
+}
+
+/// One tenant class the ingress tier admits under (`[[ingress.tenant]]`
+/// in TOML, one `name:priority:slo_ms:quota[:weight]` entry per tenant
+/// on the `--tenants` CLI flag).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantClass {
+    /// Class name (the `tenant` field on ingress events).
+    pub name: String,
+    /// Scheduling priority; 0 is highest.  Priority-0 tenants are never
+    /// shed indiscriminately — under terminal pressure they still only
+    /// lose predicted-long work.
+    pub priority: u32,
+    /// TTFT target (ms) the `slo` admission mode defends for this class.
+    pub slo_ttft_ms: f64,
+    /// Max in-flight (submitted, not yet terminal) requests; 0 = unlimited.
+    pub quota: usize,
+    /// Share of the generated open-loop offered load (relative weight).
+    pub weight: f64,
+}
+
+impl TenantClass {
+    /// A tenant with neutral defaults: priority 1, no SLO, no quota,
+    /// unit load share.
+    pub fn named(name: &str) -> TenantClass {
+        TenantClass {
+            name: name.to_string(),
+            priority: 1,
+            slo_ttft_ms: 0.0,
+            quota: 0,
+            weight: 1.0,
+        }
+    }
+
+    /// Parse a `--tenants` list: comma-separated entries, each
+    /// `name:priority:slo_ms:quota[:weight]`.  Example:
+    /// `gold:0:250:0,free:2:2000:64:4`.
+    pub fn parse_list(s: &str) -> Result<Vec<TenantClass>> {
+        s.split(',')
+            .map(|entry| {
+                let parts: Vec<&str> = entry.split(':').map(str::trim).collect();
+                if !(4..=5).contains(&parts.len()) || parts[0].is_empty() {
+                    bail!(
+                        "tenant entry {entry:?} must be name:priority:slo_ms:quota[:weight], \
+                         e.g. gold:0:250:0"
+                    );
+                }
+                let field = |i: usize, what: &str| -> Result<f64> {
+                    parts[i].parse::<f64>().map_err(|_| {
+                        anyhow::anyhow!("tenant {:?}: bad {what} {:?}", parts[0], parts[i])
+                    })
+                };
+                let priority = field(1, "priority")?;
+                let quota = field(3, "quota")?;
+                if priority < 0.0 || priority.fract() != 0.0 {
+                    bail!("tenant {:?}: priority must be a non-negative integer", parts[0]);
+                }
+                if quota < 0.0 || quota.fract() != 0.0 {
+                    bail!("tenant {:?}: quota must be a non-negative integer", parts[0]);
+                }
+                Ok(TenantClass {
+                    name: parts[0].to_string(),
+                    priority: priority as u32,
+                    slo_ttft_ms: field(2, "slo_ms")?,
+                    quota: quota as usize,
+                    weight: if parts.len() == 5 { field(4, "weight")? } else { 1.0 },
+                })
+            })
+            .collect()
+    }
+}
+
+/// Ingress-tier knobs (`[ingress]` in TOML; the `pallas server`
+/// subcommand's admission front-end).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IngressConfig {
+    /// Admission policy the shielding front-end runs.
+    pub admission: AdmissionMode,
+    /// Producer threads feeding live arrivals (`util::threadpool`).
+    pub producers: usize,
+    /// How far an over-quota arrival is deferred before its retry is
+    /// re-judged (ms).
+    pub defer_ms: f64,
+    /// Tenant classes (`[[ingress.tenant]]`); empty = one implicit
+    /// default class.
+    pub tenants: Vec<TenantClass>,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            admission: AdmissionMode::Off,
+            producers: 2,
+            defer_ms: 50.0,
+            tenants: Vec::new(),
+        }
+    }
+}
+
 /// Per-replica capacity override for heterogeneous fleets.  `None`
 /// fields inherit the fleet-wide `SchedulerConfig` defaults.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -545,6 +744,10 @@ pub struct SchedulerConfig {
     /// waiting entry to admit a better one (`off` keeps the plain
     /// recompute fallback, bit-for-bit).
     pub swap_evict: SwapEvictMode,
+    /// Pool-saturation-aware routing: whether the dispatch/steal load
+    /// key is inflated by host swap-pool occupancy (`off` keeps routing
+    /// pool-oblivious, bit-for-bit).
+    pub pool_penalty: PoolPenaltyMode,
     /// Continuous re-ranking: when length predictions are refreshed
     /// from decode progress and the waiting queue re-keyed under them.
     pub rerank: RerankMode,
@@ -582,6 +785,7 @@ impl Default for SchedulerConfig {
             swap_bw_gbps: 16.0,
             swap_pricing: SwapPricingMode::Off,
             swap_evict: SwapEvictMode::Off,
+            pool_penalty: PoolPenaltyMode::Off,
             rerank: RerankMode::Off,
             score_noise: 0.0,
             event_log_capacity: 16_384,
@@ -650,6 +854,7 @@ impl Default for CostModel {
 pub struct Config {
     pub artifacts_dir: PathBuf,
     pub scheduler: SchedulerConfig,
+    pub ingress: IngressConfig,
     pub cost: CostModel,
     pub policy: PolicyKind,
     pub seed: u64,
@@ -660,6 +865,7 @@ impl Default for Config {
         Config {
             artifacts_dir: PathBuf::from("artifacts"),
             scheduler: SchedulerConfig::default(),
+            ingress: IngressConfig::default(),
             cost: CostModel::default(),
             policy: PolicyKind::Pars,
             seed: 0,
@@ -738,6 +944,9 @@ impl Config {
         if let Some(v) = doc.get_str("scheduler", "swap_evict") {
             c.scheduler.swap_evict = SwapEvictMode::parse(v)?;
         }
+        if let Some(v) = doc.get_str("scheduler", "pool_penalty") {
+            c.scheduler.pool_penalty = PoolPenaltyMode::parse(v)?;
+        }
         if let Some(v) = doc.get_str("scheduler", "rerank") {
             c.scheduler.rerank = RerankMode::parse(v)?;
         }
@@ -756,6 +965,49 @@ impl Config {
                 max_batch: doc.get_num(&sect, "max_batch").map(|v| v as usize),
                 max_kv_tokens: doc.get_num(&sect, "max_kv_tokens").map(|v| v as usize),
             });
+        }
+        if let Some(v) = doc.get_str("ingress", "admission") {
+            c.ingress.admission = AdmissionMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_num("ingress", "producers") {
+            if v < 1.0 || v.fract() != 0.0 {
+                bail!("ingress.producers must be a positive integer (got {v})");
+            }
+            c.ingress.producers = v as usize;
+        }
+        if let Some(v) = doc.get_num("ingress", "defer_ms") {
+            c.ingress.defer_ms = v;
+        }
+        for i in 0..doc.array_len("ingress.tenant") {
+            let sect = format!("ingress.tenant.{i}");
+            let name = doc
+                .get_str(&sect, "name")
+                .with_context(|| format!("[[ingress.tenant]] entry {i} needs a name"))?
+                .to_string();
+            let mut t = TenantClass::named(&name);
+            if let Some(v) = doc.get_num(&sect, "priority") {
+                // a bare `as u32` would saturate -1 to 0 — which silently
+                // PROMOTES the tenant to the highest class; reject instead
+                if v < 0.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+                    bail!("ingress.tenant {name:?}: priority must be a non-negative integer (got {v})");
+                }
+                t.priority = v as u32;
+            }
+            if let Some(v) = doc.get_num(&sect, "slo_ttft_ms") {
+                t.slo_ttft_ms = v;
+            }
+            if let Some(v) = doc.get_num(&sect, "quota") {
+                // -1 would saturate to 0 — which silently LIFTS the quota
+                // the operator just set; reject negatives and fractions
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("ingress.tenant {name:?}: quota must be a non-negative integer (got {v})");
+                }
+                t.quota = v as usize;
+            }
+            if let Some(v) = doc.get_num(&sect, "weight") {
+                t.weight = v;
+            }
+            c.ingress.tenants.push(t);
         }
         if let Some(v) = doc.get_num("cost", "decode_base_ms") {
             c.cost.decode_base_ms = v;
@@ -826,6 +1078,44 @@ impl Config {
             || self.cost.prefill_per_token_ms < 0.0
         {
             bail!("cost model constants must be non-negative");
+        }
+        if self.ingress.producers == 0 {
+            bail!("ingress.producers must be > 0");
+        }
+        if !self.ingress.defer_ms.is_finite() || self.ingress.defer_ms < 0.0 {
+            bail!(
+                "ingress.defer_ms must be a non-negative finite delay (got {})",
+                self.ingress.defer_ms
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        for t in &self.ingress.tenants {
+            if t.name.is_empty() {
+                bail!("ingress.tenant: name must be non-empty");
+            }
+            if !seen.insert(t.name.as_str()) {
+                bail!("ingress.tenant {:?} defined twice", t.name);
+            }
+            if !t.slo_ttft_ms.is_finite() || t.slo_ttft_ms < 0.0 {
+                bail!(
+                    "ingress.tenant {:?}: slo_ttft_ms must be a non-negative finite target (got {})",
+                    t.name,
+                    t.slo_ttft_ms
+                );
+            }
+            if !t.weight.is_finite() || t.weight <= 0.0 {
+                bail!(
+                    "ingress.tenant {:?}: weight must be a positive finite share (got {})",
+                    t.name,
+                    t.weight
+                );
+            }
+            if self.ingress.admission == AdmissionMode::Slo && t.slo_ttft_ms == 0.0 {
+                bail!(
+                    "ingress.tenant {:?}: admission = slo needs a positive slo_ttft_ms target",
+                    t.name
+                );
+            }
         }
         Ok(())
     }
@@ -1240,6 +1530,124 @@ mod tests {
         assert!(malformed.starts_with("preempt pressure needs"), "{malformed}");
         let malformed = RerankMode::parse("interval(x)").unwrap_err().to_string();
         assert!(malformed.starts_with("rerank interval needs"), "{malformed}");
+    }
+
+    #[test]
+    fn parse_ingress_knobs() {
+        let c = Config::from_toml(
+            r#"
+            [ingress]
+            admission = "shed(64)"
+            producers = 4
+            defer_ms = 25.0
+            [[ingress.tenant]]
+            name = "gold"
+            priority = 0
+            slo_ttft_ms = 250.0
+            [[ingress.tenant]]
+            name = "free"
+            priority = 2
+            slo_ttft_ms = 2000.0
+            quota = 64
+            weight = 4.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.ingress.admission, AdmissionMode::Shed(64));
+        assert_eq!(c.ingress.producers, 4);
+        assert_eq!(c.ingress.defer_ms, 25.0);
+        assert_eq!(c.ingress.tenants.len(), 2);
+        assert_eq!(c.ingress.tenants[0].name, "gold");
+        assert_eq!(c.ingress.tenants[0].priority, 0);
+        assert_eq!(c.ingress.tenants[0].quota, 0, "quota defaults to unlimited");
+        assert_eq!(c.ingress.tenants[0].weight, 1.0);
+        assert_eq!(c.ingress.tenants[1].quota, 64);
+        assert_eq!(c.ingress.tenants[1].weight, 4.0);
+        // defaults: admission off, 2 producers, no tenants
+        let d = IngressConfig::default();
+        assert_eq!(d.admission, AdmissionMode::Off);
+        assert_eq!(d.producers, 2);
+        assert!(d.tenants.is_empty());
+    }
+
+    #[test]
+    fn admission_mode_parse_and_names() {
+        assert_eq!(AdmissionMode::parse("off").unwrap(), AdmissionMode::Off);
+        assert_eq!(AdmissionMode::parse("NONE").unwrap(), AdmissionMode::Off);
+        assert_eq!(AdmissionMode::parse("SLO").unwrap(), AdmissionMode::Slo);
+        assert_eq!(AdmissionMode::parse("shed(16)").unwrap(), AdmissionMode::Shed(16));
+        assert_eq!(AdmissionMode::parse("shed:16").unwrap(), AdmissionMode::Shed(16));
+        assert_eq!(AdmissionMode::parse("shed=16").unwrap(), AdmissionMode::Shed(16));
+        assert!(AdmissionMode::parse("shed").is_err());
+        assert!(AdmissionMode::parse("shed(2.5)").is_err());
+        assert!(AdmissionMode::parse("shed(-1)").is_err());
+        assert!(AdmissionMode::parse("drop").is_err());
+        for m in AdmissionMode::all() {
+            assert_eq!(AdmissionMode::parse(&m.name()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_ingress_config() {
+        // a negative quota would saturate to 0 = unlimited — the exact
+        // opposite of what the operator asked for; it must fail loudly
+        assert!(Config::from_toml("[[ingress.tenant]]\nname = \"t\"\nquota = -1").is_err());
+        assert!(Config::from_toml("[[ingress.tenant]]\nname = \"t\"\nquota = 2.5").is_err());
+        assert!(Config::from_toml("[[ingress.tenant]]\nname = \"t\"\npriority = -1").is_err());
+        // a tenant table without a name is meaningless
+        assert!(Config::from_toml("[[ingress.tenant]]\nquota = 4").is_err());
+        // duplicate tenant names would split one class's books
+        assert!(Config::from_toml(
+            "[[ingress.tenant]]\nname = \"t\"\n[[ingress.tenant]]\nname = \"t\""
+        )
+        .is_err());
+        // slo admission needs a target to defend
+        assert!(Config::from_toml(
+            "[ingress]\nadmission = \"slo\"\n[[ingress.tenant]]\nname = \"t\""
+        )
+        .is_err());
+        assert!(Config::from_toml(
+            "[ingress]\nadmission = \"slo\"\n[[ingress.tenant]]\nname = \"t\"\nslo_ttft_ms = 250"
+        )
+        .is_ok());
+        assert!(Config::from_toml("[ingress]\nproducers = 0").is_err());
+        assert!(Config::from_toml("[ingress]\nproducers = 1.5").is_err());
+        assert!(Config::from_toml("[ingress]\ndefer_ms = -5").is_err());
+        assert!(Config::from_toml("[ingress]\nadmission = \"sometimes\"").is_err());
+        assert!(Config::from_toml("[[ingress.tenant]]\nname = \"t\"\nweight = 0").is_err());
+        assert!(Config::from_toml("[[ingress.tenant]]\nname = \"t\"\nslo_ttft_ms = -1").is_err());
+    }
+
+    #[test]
+    fn tenant_cli_list() {
+        let ts = TenantClass::parse_list("gold:0:250:0,free:2:2000:64:4").unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "gold");
+        assert_eq!(ts[0].priority, 0);
+        assert_eq!(ts[0].slo_ttft_ms, 250.0);
+        assert_eq!(ts[0].quota, 0);
+        assert_eq!(ts[0].weight, 1.0);
+        assert_eq!(ts[1].name, "free");
+        assert_eq!(ts[1].quota, 64);
+        assert_eq!(ts[1].weight, 4.0);
+        assert!(TenantClass::parse_list("gold").is_err());
+        assert!(TenantClass::parse_list("gold:0").is_err());
+        assert!(TenantClass::parse_list(":0:250:0").is_err());
+        assert!(TenantClass::parse_list("gold:x:250:0").is_err());
+        assert!(TenantClass::parse_list("gold:0:250:-1").is_err());
+        assert!(TenantClass::parse_list("gold:0.5:250:0").is_err());
+    }
+
+    #[test]
+    fn parse_pool_penalty_knob() {
+        let c = Config::from_toml("[scheduler]\npool_penalty = \"occupancy\"").unwrap();
+        assert_eq!(c.scheduler.pool_penalty, PoolPenaltyMode::Occupancy);
+        assert_eq!(SchedulerConfig::default().pool_penalty, PoolPenaltyMode::Off);
+        assert!(Config::from_toml("[scheduler]\npool_penalty = \"sometimes\"").is_err());
+        for m in PoolPenaltyMode::all() {
+            assert_eq!(PoolPenaltyMode::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(PoolPenaltyMode::parse("NONE").unwrap(), PoolPenaltyMode::Off);
     }
 
     #[test]

@@ -127,10 +127,12 @@ use std::collections::{BTreeMap, VecDeque};
 use anyhow::Context;
 
 use crate::config::{
-    DispatchKind, PreemptMode, RerankMode, SchedulerConfig, StealMode, SwapEvictMode,
-    SwapPricingMode,
+    DispatchKind, PoolPenaltyMode, PreemptMode, RerankMode, SchedulerConfig, StealMode,
+    SwapEvictMode, SwapPricingMode,
 };
-use crate::coordinator::events::{EventSink, NullSink, PreemptKind, ServeEvent, SessionCtx};
+use crate::coordinator::events::{
+    EventSink, NullSink, PreemptKind, RejectReason, ServeEvent, SessionCtx,
+};
 use crate::coordinator::predictor::{Predictor, ShrinkagePredictor};
 use crate::coordinator::queue::{QueuedRequest, SuspendedEntry};
 use crate::coordinator::server::ServeOutcome;
@@ -276,16 +278,54 @@ impl<E: Engine> Replica<E> {
         self.queued_tokens + self.running_tokens
     }
 
+    /// Extra token demand the pool-occupancy routing penalty charges:
+    /// every used host-pool block prices as `BLOCK_TOKENS` tokens of
+    /// hidden load — parked pages are work that WILL come back, and a
+    /// saturating pool means the replica's next preemption degrades to
+    /// a lossy recompute.  `host_blocks_used` is zero whenever the pool
+    /// is zero-sized, so with `swap = off` (or the knob off) the charge
+    /// is exactly 0 and every routing key stays bit-for-bit.
+    fn pool_charge_tokens(&self, pool_penalty: PoolPenaltyMode) -> u128 {
+        match pool_penalty {
+            PoolPenaltyMode::Off => 0,
+            PoolPenaltyMode::Occupancy => {
+                self.engine.host_blocks_used() as u128 * BLOCK_TOKENS as u128
+            }
+        }
+    }
+
     /// Dispatch load key — capacity-normalised KV/slot occupancy:
-    /// reserved + queued token demand scaled by `fleet_max_kv_blocks /
+    /// reserved + queued token demand (plus the pool-occupancy charge
+    /// when that penalty is on) scaled by `fleet_max_kv_blocks /
     /// own_kv_blocks` (a replica with twice the KV budget counts as half
     /// as loaded per token; in a homogeneous fleet the ratio is 1 and the
     /// key is the raw token count, bit-for-bit), then in-system request
     /// count, then physically allocated KV blocks.
-    fn load_key(&self, fleet_max_kv_blocks: usize) -> (u128, usize, usize) {
-        let scaled = self.in_system_tokens() as u128 * fleet_max_kv_blocks as u128
-            / self.kv_blocks.max(1) as u128;
+    fn load_key(
+        &self,
+        fleet_max_kv_blocks: usize,
+        pool_penalty: PoolPenaltyMode,
+    ) -> (u128, usize, usize) {
+        let demand = self.in_system_tokens() as u128 + self.pool_charge_tokens(pool_penalty);
+        let scaled = demand * fleet_max_kv_blocks as u128 / self.kv_blocks.max(1) as u128;
         (scaled, self.in_system(), self.engine.kv_blocks_used())
+    }
+
+    /// Ranked-dispatch routing key: queue depth scaled by the replica's
+    /// drain rate, then queued token demand (pool-occupancy charge
+    /// folded in exactly as in [`Self::load_key`]).  One definition
+    /// serves the incremental index, the debug audit and the
+    /// heterogeneous fallback, so the three can never drift.
+    fn ranked_key(
+        &self,
+        fleet_max_kv_blocks: usize,
+        fleet_max_slots: usize,
+        pool_penalty: PoolPenaltyMode,
+    ) -> (u128, u128) {
+        let depth = self.queue_len() as u128 * fleet_max_slots as u128 / self.slots.max(1) as u128;
+        let demand = self.queued_tokens as u128 + self.pool_charge_tokens(pool_penalty);
+        let tokens = demand * fleet_max_kv_blocks as u128 / self.kv_blocks.max(1) as u128;
+        (depth, tokens)
     }
 
     /// Whether this replica's *total* KV budget can ever hold a sequence
@@ -925,14 +965,16 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         match self.dispatch {
             DispatchKind::RoundRobin => {}
             DispatchKind::LeastLoaded => {
-                let (scaled, in_system, kv_used) = r.load_key(self.fleet_max_kv_blocks);
+                let (scaled, in_system, kv_used) =
+                    r.load_key(self.fleet_max_kv_blocks, self.sched.pool_penalty);
                 self.load_heap.set(idx, (scaled, in_system as u128, kv_used as u128));
             }
             DispatchKind::Ranked => {
-                let depth = r.queue_len() as u128 * self.fleet_max_slots as u128
-                    / r.slots.max(1) as u128;
-                let tokens = r.queued_tokens as u128 * self.fleet_max_kv_blocks as u128
-                    / r.kv_blocks.max(1) as u128;
+                let (depth, tokens) = r.ranked_key(
+                    self.fleet_max_kv_blocks,
+                    self.fleet_max_slots,
+                    self.sched.pool_penalty,
+                );
                 self.load_heap.set(idx, (depth, tokens, 0));
             }
         }
@@ -998,16 +1040,17 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             // fall back to the eligibility-filtered scan.
             DispatchKind::LeastLoaded => {
                 let max_kv = self.fleet_max_kv_blocks;
+                let pp = self.sched.pool_penalty;
                 if self.kv_homogeneous {
                     let i = self.load_heap.peek().map_or(0, |(i, _)| i);
                     debug_assert_eq!(
                         i,
-                        self.argmin_eligible(total_tokens, |r| r.load_key(max_kv)),
+                        self.argmin_eligible(total_tokens, |r| r.load_key(max_kv, pp)),
                         "load index drifted from the least-loaded scan"
                     );
                     i
                 } else {
-                    self.argmin_eligible(total_tokens, |r| r.load_key(max_kv))
+                    self.argmin_eligible(total_tokens, |r| r.load_key(max_kv, pp))
                 }
             }
             // Emptiest waiting queue relative to drain rate (queue depth
@@ -1016,28 +1059,19 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             // shortest-predicted-first within the replica.
             DispatchKind::Ranked => {
                 let (max_kv, max_slots) = (self.fleet_max_kv_blocks, self.fleet_max_slots);
+                let pp = self.sched.pool_penalty;
                 if self.kv_homogeneous {
                     let i = self.load_heap.peek().map_or(0, |(i, _)| i);
                     debug_assert_eq!(
                         i,
                         self.argmin_eligible(total_tokens, |r| {
-                            (
-                                r.queue_len() as u128 * max_slots as u128
-                                    / r.slots.max(1) as u128,
-                                r.queued_tokens as u128 * max_kv as u128
-                                    / r.kv_blocks.max(1) as u128,
-                            )
+                            r.ranked_key(max_kv, max_slots, pp)
                         }),
                         "load index drifted from the ranked scan"
                     );
                     i
                 } else {
-                    self.argmin_eligible(total_tokens, |r| {
-                        (
-                            r.queue_len() as u128 * max_slots as u128 / r.slots.max(1) as u128,
-                            r.queued_tokens as u128 * max_kv as u128 / r.kv_blocks.max(1) as u128,
-                        )
-                    })
+                    self.argmin_eligible(total_tokens, |r| r.ranked_key(max_kv, max_slots, pp))
                 }
             }
         }
@@ -1103,11 +1137,26 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         };
         // thief: lowest-indexed idle replica that can actually hold the
         // stolen entry — a small idle replica must not shield a larger
-        // idle sibling from doing the rescue
+        // idle sibling from doing the rescue.  With the pool-occupancy
+        // penalty on, eligible thieves are ranked by host-pool usage
+        // first (the emptiest pool has the most room to accept migrated
+        // pages losslessly); every pool empty — swap = off, or nothing
+        // parked — ties back to the lowest index, bit-for-bit the
+        // penalty-off pick.
         let total = reserve_tokens(&q.req);
-        let thief = self.replicas.iter().position(|r| {
+        let eligible = |r: &Replica<E>| {
             !r.has_work() && r.engine.free_slots() > 0 && r.engine.kv_headroom_for(total)
-        });
+        };
+        let thief = match self.sched.pool_penalty {
+            PoolPenaltyMode::Off => self.replicas.iter().position(eligible),
+            PoolPenaltyMode::Occupancy => self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| eligible(r))
+                .min_by_key(|&(i, r)| (r.engine.host_blocks_used(), i))
+                .map(|(i, _)| i),
+        };
         let Some(thief) = thief else {
             // no idle replica can hold even this one — put it back
             // untouched (suspended state included)
@@ -1229,6 +1278,31 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         self.replicas.iter().map(|r| r.engine.caps().max_seq).min().unwrap_or(0)
     }
 
+    /// Whether ANY replica could ever hold `req` — exactly the
+    /// validation test [`Self::dispatch_one`] applies before routing.
+    /// The ingress admission controller uses it to refuse impossible
+    /// work at the front door (`Rejected { reason: validation }`)
+    /// instead of letting it travel to the dispatch reject path.
+    pub(crate) fn fleet_admissible(&self, req: &Request) -> bool {
+        let total = reserve_tokens(req) as usize;
+        total <= self.fleet_min_max_seq()
+            && total.div_ceil(BLOCK_TOKENS) <= self.fleet_max_kv_blocks
+    }
+
+    /// Score a request through the session predictor without touching
+    /// dispatch state.  Scoring is deterministic per id (score-once,
+    /// noise seeded by the id), so the ingress tier's admission score
+    /// and the key dispatch later admits under are the same number.
+    pub(crate) fn score_request(&mut self, req: &Request) -> f64 {
+        self.predictor.score(req)
+    }
+
+    /// Requests sitting in replica queues (inbox + waiting; running
+    /// excluded) — the fleet backlog the shed admission mode bounds.
+    pub(crate) fn fleet_backlog(&self) -> usize {
+        self.replicas.iter().map(|r| r.queue_len()).sum()
+    }
+
     /// Event-log capacity a default session uses.
     pub(crate) fn event_log_capacity(&self) -> usize {
         self.sched.event_log_capacity
@@ -1279,7 +1353,12 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             "fleet-max block check must match the eligibility scan"
         );
         if total as usize > fleet_max_seq || needed_blocks > self.fleet_max_kv_blocks {
-            ctx.emit(ServeEvent::Rejected { id: req.id, t_ms: decision_ms });
+            ctx.emit(ServeEvent::Rejected {
+                id: req.id,
+                reason: RejectReason::Validation,
+                tenant: None,
+                t_ms: decision_ms,
+            });
             return None;
         }
         let key = self.predictor.score(&req);

@@ -21,7 +21,7 @@
 //!
 //! [`ServeSession`]: crate::coordinator::ServeSession
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::fmt::Write as _;
 use std::io::Write;
 
@@ -50,6 +50,48 @@ impl PreemptKind {
     }
 }
 
+/// Why a request was refused.  `Validation` is the pre-ingress
+/// rejection (and the ingress tier's own admissibility check); `Quota`
+/// and `Shed` only ever come from the ingress admission controller, so
+/// a replica never sees a request rejected for either.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// No replica could ever hold the request (sequence budget or total
+    /// KV capacity).
+    Validation,
+    /// The tenant's in-flight quota was exhausted, and the deferred
+    /// retry found it still exhausted.
+    Quota,
+    /// The admission controller shed the request under pressure
+    /// (backlog depth or a threatened TTFT SLO).
+    Shed,
+}
+
+impl RejectReason {
+    /// Stable lowercase tag (the `reason` field of the JSONL encoding).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::Validation => "validation",
+            RejectReason::Quota => "quota",
+            RejectReason::Shed => "shed",
+        }
+    }
+
+    /// Stable index into per-reason count arrays (replay books).
+    pub fn index(&self) -> usize {
+        match self {
+            RejectReason::Validation => 0,
+            RejectReason::Quota => 1,
+            RejectReason::Shed => 2,
+        }
+    }
+
+    /// Every reason, in [`RejectReason::index`] order.
+    pub fn all() -> [RejectReason; 3] {
+        [RejectReason::Validation, RejectReason::Quota, RejectReason::Shed]
+    }
+}
+
 /// One lifecycle transition, stamped with the engine-clock time the
 /// decision was made at: `Dispatched`/`Rejected` carry the fleet's
 /// lagging clock at the dispatch decision (the arrival time itself when
@@ -72,9 +114,19 @@ impl PreemptKind {
 /// conservation laws across the whole mode grid.
 #[derive(Clone, Debug)]
 pub enum ServeEvent {
-    /// No replica could ever hold the request (sequence budget or total
-    /// KV capacity) — it never enters a queue.
-    Rejected { id: u64, t_ms: f64 },
+    /// The request was refused before it reached any replica's queue —
+    /// `reason` says by whom: `validation` (no replica could ever hold
+    /// it; emitted by dispatch, or by the ingress tier pre-screening the
+    /// same check), `quota` / `shed` (the ingress admission controller;
+    /// those never reach a replica).  `tenant` is the ingress tenant
+    /// class, `None` outside the ingress tier.
+    Rejected { id: u64, reason: RejectReason, tenant: Option<String>, t_ms: f64 },
+    /// The ingress tier parked an over-quota arrival instead of
+    /// rejecting it: the request re-enters admission at `until_ms` and
+    /// is judged again with fresh state (admitted if the quota freed up,
+    /// `Rejected { reason: quota }` if not).  Only emitted by the
+    /// ingress tier, always before any `Dispatched` for the id.
+    Deferred { id: u64, until_ms: f64, tenant: Option<String>, t_ms: f64 },
     /// Routed to `replica`'s inbox by the dispatch policy.  `key` is the
     /// admission-time priority (the predictor's score — a predicted
     /// length for SJF-family policies, the arrival time under FCFS).
@@ -117,6 +169,7 @@ impl ServeEvent {
     pub fn id(&self) -> u64 {
         match self {
             ServeEvent::Rejected { id, .. }
+            | ServeEvent::Deferred { id, .. }
             | ServeEvent::Dispatched { id, .. }
             | ServeEvent::Admitted { id, .. }
             | ServeEvent::FirstToken { id, .. }
@@ -133,6 +186,7 @@ impl ServeEvent {
     pub fn kind(&self) -> &'static str {
         match self {
             ServeEvent::Rejected { .. } => "rejected",
+            ServeEvent::Deferred { .. } => "deferred",
             ServeEvent::Dispatched { .. } => "dispatched",
             ServeEvent::Admitted { .. } => "admitted",
             ServeEvent::FirstToken { .. } => "first_token",
@@ -149,6 +203,7 @@ impl ServeEvent {
     pub fn t_ms(&self) -> f64 {
         match self {
             ServeEvent::Rejected { t_ms, .. }
+            | ServeEvent::Deferred { t_ms, .. }
             | ServeEvent::Dispatched { t_ms, .. }
             | ServeEvent::Admitted { t_ms, .. }
             | ServeEvent::FirstToken { t_ms, .. }
@@ -169,7 +224,18 @@ impl ServeEvent {
             ("t_ms", Json::Num(self.t_ms())),
         ];
         match self {
-            ServeEvent::Rejected { .. } => {}
+            ServeEvent::Rejected { reason, tenant, .. } => {
+                pairs.push(("reason", Json::Str(reason.name().to_string())));
+                if let Some(t) = tenant {
+                    pairs.push(("tenant", Json::Str(t.clone())));
+                }
+            }
+            ServeEvent::Deferred { until_ms, tenant, .. } => {
+                pairs.push(("until_ms", Json::Num(*until_ms)));
+                if let Some(t) = tenant {
+                    pairs.push(("tenant", Json::Str(t.clone())));
+                }
+            }
             ServeEvent::Dispatched { replica, key, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
                 pairs.push(("key", Json::Num(*key)));
@@ -228,10 +294,30 @@ impl ServeEvent {
                 let _ = write!(out, "{x}");
             }
         };
+        // escapes exactly like the tree writer's `Json::Str` (ingress
+        // events are not the hot path, so the tree detour is fine)
+        let text = |out: &mut String, key: &str, s: &str| {
+            out.push_str(",\"");
+            out.push_str(key);
+            out.push_str("\":");
+            Json::Str(s.to_string()).write_to(out);
+        };
         match self {
-            ServeEvent::Rejected { id, t_ms } => {
+            ServeEvent::Rejected { id, reason, tenant, t_ms } => {
+                num(out, "id", *id as f64);
+                text(out, "reason", reason.name());
+                num(out, "t_ms", *t_ms);
+                if let Some(t) = tenant {
+                    text(out, "tenant", t);
+                }
+            }
+            ServeEvent::Deferred { id, until_ms, tenant, t_ms } => {
                 num(out, "id", *id as f64);
                 num(out, "t_ms", *t_ms);
+                if let Some(t) = tenant {
+                    text(out, "tenant", t);
+                }
+                num(out, "until_ms", *until_ms);
             }
             ServeEvent::Dispatched { id, replica, key, t_ms } => {
                 num(out, "id", *id as f64);
@@ -539,11 +625,36 @@ impl ReplicaTimeline {
     }
 }
 
+/// Per-tenant ingress books reconstructed from the `tenant` field of
+/// `Rejected`/`Deferred` events — what the `pallas replay` per-tenant
+/// summary table prints.  Tenant-tagged rejections also count in the
+/// fleet-wide books, so per-tenant rows always sum to the fleet totals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantBook {
+    /// Rejections, by [`RejectReason::index`].
+    pub rejected_by_reason: [u64; 3],
+    pub deferred: u64,
+}
+
+impl TenantBook {
+    /// Total rejections across every reason.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_by_reason.iter().sum()
+    }
+}
+
 /// A whole run reconstructed from its lifecycle event stream.
 #[derive(Clone, Debug, Default)]
 pub struct ReplayBook {
     pub replicas: Vec<ReplicaTimeline>,
     pub rejected: u64,
+    /// Rejections, by [`RejectReason::index`] (sums to `rejected`).
+    pub rejected_by_reason: [u64; 3],
+    /// Ingress deferrals (over-quota arrivals parked for a retry).
+    pub deferred: u64,
+    /// Per-tenant ingress books, keyed by tenant class name (only
+    /// tenant-tagged events land here; ordered for stable printing).
+    pub tenants: BTreeMap<String, TenantBook>,
     /// Events consumed (JSONL lines parsed).
     pub events: u64,
     /// Events whose request never entered the stream through a
@@ -605,7 +716,9 @@ impl ReplayBook {
             }
         }
         match ev {
-            ServeEvent::Rejected { id, .. } | ServeEvent::Dispatched { id, .. } => {
+            ServeEvent::Rejected { id, .. }
+            | ServeEvent::Deferred { id, .. }
+            | ServeEvent::Dispatched { id, .. } => {
                 self.entered.insert(*id);
             }
             _ => {
@@ -615,7 +728,20 @@ impl ReplayBook {
             }
         }
         match ev {
-            ServeEvent::Rejected { .. } => self.rejected += 1,
+            ServeEvent::Rejected { reason, tenant, .. } => {
+                self.rejected += 1;
+                self.rejected_by_reason[reason.index()] += 1;
+                if let Some(t) = tenant {
+                    self.tenants.entry(t.clone()).or_default().rejected_by_reason
+                        [reason.index()] += 1;
+                }
+            }
+            ServeEvent::Deferred { tenant, .. } => {
+                self.deferred += 1;
+                if let Some(t) = tenant {
+                    self.tenants.entry(t.clone()).or_default().deferred += 1;
+                }
+            }
             ServeEvent::Dispatched { replica, t_ms, .. } => {
                 let r = self.replica(*replica);
                 r.dispatched += 1;
@@ -724,8 +850,33 @@ impl ReplayBook {
         let replica = |v: &Json| -> anyhow::Result<usize> {
             Ok(v.get("replica")?.as_i64()? as usize)
         };
+        let tenant = |v: &Json| -> Option<String> {
+            v.opt("tenant").and_then(|t| t.as_str().ok()).map(str::to_string)
+        };
         Ok(match kind.as_str() {
-            "rejected" => ServeEvent::Rejected { id, t_ms },
+            "rejected" => ServeEvent::Rejected {
+                id,
+                // absent in pre-ingress captures — every rejection back
+                // then was the dispatch validation check, so the default
+                // is exact, not a guess
+                reason: match v.opt("reason") {
+                    None => RejectReason::Validation,
+                    Some(r) => match r.as_str()? {
+                        "validation" => RejectReason::Validation,
+                        "quota" => RejectReason::Quota,
+                        "shed" => RejectReason::Shed,
+                        other => bail!("unknown rejection reason {other:?}"),
+                    },
+                },
+                tenant: tenant(v),
+                t_ms,
+            },
+            "deferred" => ServeEvent::Deferred {
+                id,
+                until_ms: v.get("until_ms")?.as_f64()?,
+                tenant: tenant(v),
+                t_ms,
+            },
             "dispatched" => ServeEvent::Dispatched {
                 id,
                 replica: replica(v)?,
@@ -819,6 +970,9 @@ impl SessionCtx<'_> {
     pub(crate) fn emit(&mut self, ev: ServeEvent) {
         let update = match &ev {
             ServeEvent::Rejected { id, .. } => Some((*id, RequestStatus::Rejected)),
+            // still pending at the ingress tier — it will come back as
+            // either a Dispatched or a quota Rejected
+            ServeEvent::Deferred { .. } => None,
             ServeEvent::Dispatched { id, replica, key, .. } => Some((
                 *id,
                 RequestStatus::Queued {
@@ -1016,8 +1170,32 @@ mod tests {
             preemptions: 1,
         };
         let events = [
-            ServeEvent::Rejected { id: 1, t_ms: 0.5 },
-            ServeEvent::Rejected { id: u64::MAX >> 12, t_ms: f64::NAN },
+            ServeEvent::Rejected {
+                id: 1,
+                reason: RejectReason::Validation,
+                tenant: None,
+                t_ms: 0.5,
+            },
+            ServeEvent::Rejected {
+                id: u64::MAX >> 12,
+                reason: RejectReason::Shed,
+                tenant: None,
+                t_ms: f64::NAN,
+            },
+            ServeEvent::Rejected {
+                id: 8,
+                reason: RejectReason::Quota,
+                // escaping-hostile tenant name: both writers must agree
+                tenant: Some("acme \"west\"\n".to_string()),
+                t_ms: 1.25,
+            },
+            ServeEvent::Deferred { id: 9, until_ms: 75.5, tenant: None, t_ms: 25.5 },
+            ServeEvent::Deferred {
+                id: 9,
+                until_ms: 100.0,
+                tenant: Some("gold".to_string()),
+                t_ms: 50.0,
+            },
             ServeEvent::Dispatched { id: 2, replica: 3, key: 41.75, t_ms: 10.0 },
             ServeEvent::Dispatched { id: 2, replica: 0, key: f64::INFINITY, t_ms: -0.0 },
             ServeEvent::Admitted { id: 3, replica: 1, t_ms: 11.0 },
@@ -1193,11 +1371,84 @@ mod tests {
     }
 
     #[test]
+    fn rejected_without_a_reason_decodes_as_validation() {
+        // pre-ingress captures have no `reason` key; every rejection
+        // back then was the dispatch validation check, so decoding them
+        // as validation replays exactly what that serve run did
+        let book = ReplayBook::from_jsonl(concat!(
+            "{\"event\":\"rejected\",\"id\":3,\"t_ms\":2}\n",
+            "{\"event\":\"rejected\",\"id\":4,\"reason\":\"quota\",\"t_ms\":3,\"tenant\":\"free\"}\n",
+            "{\"event\":\"rejected\",\"id\":5,\"reason\":\"shed\",\"t_ms\":4,\"tenant\":\"free\"}\n",
+        ))
+        .unwrap();
+        assert_eq!(book.rejected, 3);
+        assert_eq!(book.rejected_by_reason, [1, 1, 1]);
+        assert_eq!(book.tenants["free"].rejected_by_reason, [0, 1, 1]);
+        assert_eq!(book.tenants["free"].rejected(), 2);
+        // unknown reasons fail loudly rather than miscounting
+        assert!(ReplayBook::from_jsonl(
+            "{\"event\":\"rejected\",\"id\":1,\"reason\":\"vibes\",\"t_ms\":0}\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn deferred_enters_the_stream_and_books_per_tenant() {
+        // a Deferred is an entry-point event: the retry's later Rejected
+        // or Dispatched must not read as an orphan, and the deferral
+        // books per tenant
+        let mut book = ReplayBook::default();
+        book.push(&ServeEvent::Deferred {
+            id: 7,
+            until_ms: 50.0,
+            tenant: Some("free".to_string()),
+            t_ms: 10.0,
+        });
+        book.push(&ServeEvent::Rejected {
+            id: 7,
+            reason: RejectReason::Quota,
+            tenant: Some("free".to_string()),
+            t_ms: 50.0,
+        });
+        assert_eq!(book.orphans, 0, "a deferred id has entered the stream");
+        assert_eq!(book.deferred, 1);
+        assert_eq!(book.tenants["free"].deferred, 1);
+        assert_eq!(book.tenants["free"].rejected_by_reason[RejectReason::Quota.index()], 1);
+        assert_eq!(book.time_regressions, 0);
+        // per-tenant books sum to the fleet totals
+        let fleet: u64 = book.tenants.values().map(TenantBook::rejected).sum();
+        assert_eq!(fleet, book.rejected);
+    }
+
+    #[test]
+    fn deferred_roundtrips_through_jsonl() {
+        let ev = ServeEvent::Deferred {
+            id: 7,
+            until_ms: 50.5,
+            tenant: Some("free".to_string()),
+            t_ms: 10.0,
+        };
+        let mut line = String::new();
+        ev.write_json(&mut line);
+        let book = ReplayBook::from_jsonl(&line).unwrap();
+        assert_eq!(book.deferred, 1);
+        assert_eq!(book.tenants["free"].deferred, 1);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("until_ms").unwrap().as_f64().unwrap(), 50.5);
+        assert_eq!(v.get("tenant").unwrap().as_str().unwrap(), "free");
+    }
+
+    #[test]
     fn replay_book_counts_orphans_from_a_truncated_capture() {
         let mut book = ReplayBook::default();
         book.push(&ev(1)); // Dispatched: id 1 enters
         book.push(&ServeEvent::Admitted { id: 1, replica: 1, t_ms: 3.0 });
-        book.push(&ServeEvent::Rejected { id: 2, t_ms: 4.0 });
+        book.push(&ServeEvent::Rejected {
+            id: 2,
+            reason: RejectReason::Validation,
+            tenant: None,
+            t_ms: 4.0,
+        });
         assert_eq!(book.orphans, 0, "a complete capture has no orphans");
         // id 9 was never dispatched — its prefix fell out of a bounded window
         book.push(&ServeEvent::Admitted { id: 9, replica: 0, t_ms: 5.0 });

@@ -1,0 +1,836 @@
+//! The real-time ingress tier: multi-producer serving behind a
+//! shielding admission front-end.
+//!
+//! The batch entry points and the raw [`ServeSession`] trust their
+//! caller: every submitted request reaches the coordinator, however
+//! hopeless.  A live deployment cannot afford that — producers are
+//! open-loop, tenants are mutually untrusted, and an overloaded fleet
+//! serves *everyone's* p99 badly.  The ingress tier owns the session
+//! and puts an admission controller between the producers and the
+//! coordinator, so the coordinator only ever sees admissible work:
+//!
+//! ```text
+//!   producer threads (util::threadpool, one open-loop stream each)
+//!        │  deterministic merge: (arrival, tenant priority, tenant)
+//!        ▼
+//!   admission controller ── validation ──► Rejected{validation}
+//!        │                  quota ───────► Deferred{until} → Rejected{quota}
+//!        │                  pressure ────► Rejected{shed}
+//!        ▼ admit
+//!   ServeSession (submit / run_until / finish)  ──►  events + outcome
+//! ```
+//!
+//! Admission decisions (`[ingress] admission`, [`AdmissionMode`]):
+//!
+//! * **validation** — [`ServeSession::fleet_admissible`], the same test
+//!   dispatch applies, asked up front so impossible work is refused at
+//!   the front door and never travels through a replica queue.
+//! * **quota** — each [`TenantClass`] caps in-flight (submitted, not
+//!   yet terminal) requests.  The first over-quota arrival is parked
+//!   (`Deferred { until_ms }`, `until = now + defer_ms`) and re-judged
+//!   once with fresh state; still over quota ⇒ `Rejected { quota }`.
+//! * **pressure** — `shed(depth)` bounds the fleet backlog: past
+//!   `depth` waiting requests it sheds predicted-long work (the
+//!   predictor's score, the SAME deterministic number dispatch will
+//!   key on, against the running mean of admitted scores), past
+//!   `2·depth` everything; `slo` watches the observed TTFT EWMA
+//!   against each tenant's target — threatened (half the budget) sheds
+//!   predicted-long, blown sheds everything.  Priority-0 tenants are
+//!   never shed indiscriminately: under terminal pressure they still
+//!   only lose predicted-long work.
+//!
+//! With `admission = off` and a single producer the tier is a pure
+//! pass-through — `tests/sharded.rs` pins it record-for-record to the
+//! plain session loop, and `tests/properties.rs` extends the
+//! conservation + bitwise-determinism grid across the admission axis
+//! (every submitted id terminal exactly once, quota/shed rejections
+//! never reach a replica, per-tenant books sum to the fleet totals).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::rc::Rc;
+
+use crate::config::{AdmissionMode, IngressConfig, TenantClass};
+use crate::coordinator::dispatch::{ShardedCoordinator, ShardedOutcome};
+use crate::coordinator::events::{EventSink, RejectReason, ServeEvent};
+use crate::coordinator::session::ServeSession;
+use crate::coordinator::Request;
+use crate::engine::Engine;
+use crate::metrics::{LatencyReport, Recorder, RequestRecord};
+use crate::util::threadpool::try_scope_map;
+use crate::Result;
+
+/// One producer thread's work order: an open-loop request stream for
+/// one tenant class at a target rate.  The generator closure handed to
+/// [`produce`] materialises it (prompt synthesis, testset sampling...)
+/// on the thread pool; request ids are re-stamped after the merge, so
+/// generators only need locally consistent ids.
+#[derive(Clone, Debug)]
+pub struct ProducerSpec {
+    /// Producer index (also the conventional seed offset).
+    pub producer: usize,
+    /// Index into the effective tenant list (see [`effective_tenants`]).
+    pub tenant: usize,
+    /// Target open-loop offered rate for this stream (req/s).
+    pub rate_per_s: f64,
+    /// Requests this producer offers.
+    pub n: usize,
+    /// Stream seed (arrival jitter + prompt choice).
+    pub seed: u64,
+}
+
+/// The tenant classes an ingress run admits under: the configured
+/// `[[ingress.tenant]]` list, or one implicit neutral `default` class
+/// when none are configured.
+pub fn effective_tenants(cfg: &IngressConfig) -> Vec<TenantClass> {
+    if cfg.tenants.is_empty() {
+        vec![TenantClass::named("default")]
+    } else {
+        cfg.tenants.clone()
+    }
+}
+
+/// Run every producer on the thread pool ([`try_scope_map`], so a
+/// panicking producer surfaces as a clean error) and merge the streams
+/// deterministically: by arrival time, then tenant priority (0 first),
+/// then tenant index, with producer order breaking full ties.  Ids are
+/// re-stamped to the merged order, so they are unique fleet-wide and
+/// independent of which thread generated what — two runs over the same
+/// specs produce the identical feed.
+pub fn produce<F>(
+    cfg: &IngressConfig,
+    specs: Vec<ProducerSpec>,
+    make: F,
+) -> Result<Vec<(usize, Request)>>
+where
+    F: Fn(&ProducerSpec) -> Vec<Request> + Sync,
+{
+    let tenants = effective_tenants(cfg);
+    for s in &specs {
+        if s.tenant >= tenants.len() {
+            anyhow::bail!(
+                "producer {} names tenant index {} but only {} classes are configured",
+                s.producer,
+                s.tenant,
+                tenants.len()
+            );
+        }
+    }
+    let batches: Vec<(usize, Vec<Request>)> =
+        try_scope_map(cfg.producers, specs, |spec| (spec.tenant, make(&spec)))?;
+    let mut feed: Vec<(usize, Request)> = Vec::new();
+    for (tenant, reqs) in batches {
+        feed.extend(reqs.into_iter().map(|r| (tenant, r)));
+    }
+    feed.sort_by(|a, b| {
+        a.1.arrival_ms
+            .total_cmp(&b.1.arrival_ms)
+            .then(tenants[a.0].priority.cmp(&tenants[b.0].priority))
+            .then(a.0.cmp(&b.0))
+    });
+    for (i, (_, r)) in feed.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Ok(feed)
+}
+
+/// Live signals the admission controller steers by, fed by the
+/// [`TeeSink`] observing the session's own event stream (never read
+/// back out of the scheduler, so the controller sees exactly what a
+/// JSONL capture would).
+#[derive(Default)]
+pub struct IngressStats {
+    /// Arrival time per in-flight id — consumed by the first
+    /// `FirstToken` to turn the event's clock into a TTFT sample.
+    arrival_of: HashMap<u64, f64>,
+    /// Ids that went terminal (completed, or rejected at dispatch)
+    /// since the tier last drained — releases quota.
+    terminal: Vec<u64>,
+    /// EWMA of observed TTFT (ms) — the `slo` mode's control signal.
+    pub ewma_ttft_ms: f64,
+    /// TTFT samples folded into the EWMA so far.
+    pub ttft_samples: usize,
+    /// Requests observed completing.
+    pub completed: usize,
+}
+
+impl IngressStats {
+    /// EWMA smoothing: ~5 samples of memory, enough to ride out one
+    /// odd request without going blind to a building queue.
+    const ALPHA: f64 = 0.2;
+
+    fn note_submitted(&mut self, id: u64, arrival_ms: f64) {
+        self.arrival_of.insert(id, arrival_ms);
+    }
+
+    fn observe(&mut self, ev: &ServeEvent) {
+        match ev {
+            ServeEvent::FirstToken { id, t_ms, .. } => {
+                // first token EVER for this id (a recompute re-admission
+                // emits another FirstToken; the user saw tokens at the
+                // first one, so only it is a TTFT sample)
+                if let Some(arrival) = self.arrival_of.remove(id) {
+                    let ttft = t_ms - arrival;
+                    self.ttft_samples += 1;
+                    if self.ttft_samples == 1 {
+                        self.ewma_ttft_ms = ttft;
+                    } else {
+                        self.ewma_ttft_ms += Self::ALPHA * (ttft - self.ewma_ttft_ms);
+                    }
+                }
+            }
+            ServeEvent::Completed { record, .. } => {
+                self.completed += 1;
+                self.terminal.push(record.id);
+            }
+            // dispatch-time validation rejection of an admitted request
+            // (admission = off lets those through) is terminal too; the
+            // tier ignores ids it never submitted
+            ServeEvent::Rejected { id, .. } => self.terminal.push(*id),
+            _ => {}
+        }
+    }
+
+    fn take_terminal(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.terminal)
+    }
+}
+
+/// An [`EventSink`] tee: updates the shared [`IngressStats`] from every
+/// event, then forwards it untouched to the caller's sink.  A pure
+/// observer — the serving loop's behaviour is pinned independent of it.
+pub struct TeeSink<'s> {
+    inner: &'s mut dyn EventSink,
+    stats: Rc<RefCell<IngressStats>>,
+}
+
+impl<'s> TeeSink<'s> {
+    pub fn new(inner: &'s mut dyn EventSink, stats: Rc<RefCell<IngressStats>>) -> Self {
+        TeeSink { inner, stats }
+    }
+}
+
+impl EventSink for TeeSink<'_> {
+    fn emit(&mut self, ev: &ServeEvent) {
+        self.stats.borrow_mut().observe(ev);
+        self.inner.emit(ev);
+    }
+
+    fn flush(&mut self) {
+        self.inner.flush();
+    }
+}
+
+/// Per-tenant slice of an ingress run.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub class: TenantClass,
+    /// Fresh arrivals offered by this tenant's producers.
+    pub offered: usize,
+    pub admitted: usize,
+    /// Over-quota arrivals parked for one retry.
+    pub deferred: usize,
+    /// Rejections by [`RejectReason::index`] order
+    /// (validation / quota / shed).
+    pub rejected_by_reason: [usize; 3],
+    /// Latency over this tenant's completed requests (same wall clock
+    /// as the fleet report, so per-tenant throughputs sum coherently).
+    pub report: LatencyReport,
+}
+
+impl TenantSummary {
+    pub fn rejected(&self) -> usize {
+        self.rejected_by_reason.iter().sum()
+    }
+}
+
+/// Outcome of an ingress run: the usual fleet outcome plus the
+/// admission books, fleet-wide and per tenant.
+#[derive(Clone, Debug)]
+pub struct IngressOutcome {
+    /// What [`ServeSession::finish`] returned (ingress rejections count
+    /// toward its `rejected` total).
+    pub outcome: ShardedOutcome,
+    pub admitted: usize,
+    /// Fleet-wide rejections by [`RejectReason::index`] order.
+    pub rejected_by_reason: [usize; 3],
+    pub deferred: usize,
+    /// Largest backlog (replica queues + undispatched submissions)
+    /// observed right after any admit — the bound `shed(depth)` holds.
+    pub peak_backlog: usize,
+    pub tenants: Vec<TenantSummary>,
+}
+
+impl IngressOutcome {
+    pub fn rejected(&self) -> usize {
+        self.rejected_by_reason.iter().sum()
+    }
+}
+
+/// What the admission controller decided for one arrival.
+enum Verdict {
+    Admit,
+    Defer(f64),
+    Reject(RejectReason),
+}
+
+/// The shielding front-end: owns the [`ServeSession`] and feeds it only
+/// admissible work.  Drive with [`IngressTier::run`] (a merged feed of
+/// `(tenant, request)` pairs) and close with [`IngressTier::finish`];
+/// [`serve_feed`] / [`serve_live`] wrap the whole dance.
+pub struct IngressTier<'c, 'p, E: Engine> {
+    session: ServeSession<'c, 'p, E>,
+    admission: AdmissionMode,
+    defer_ms: f64,
+    tenants: Vec<TenantClass>,
+    stats: Rc<RefCell<IngressStats>>,
+    /// Tenant index per admitted id (outcome grouping).
+    tenant_of: HashMap<u64, usize>,
+    /// Admitted ids not yet terminal (quota accounting).
+    live: HashSet<u64>,
+    in_flight: Vec<usize>,
+    /// Parked over-quota arrivals, ordered by retry time.
+    deferred: VecDeque<(f64, usize, Request)>,
+    /// Running mean of admitted scores — the predicted-long threshold.
+    mean_score: f64,
+    scored: usize,
+    offered: Vec<usize>,
+    admitted: Vec<usize>,
+    deferred_n: Vec<usize>,
+    rejected_by_reason: Vec<[usize; 3]>,
+    peak_backlog: usize,
+}
+
+impl<'c, 'p, E: Engine> IngressTier<'c, 'p, E> {
+    /// Wrap a session (created over a [`TeeSink`] sharing `stats`) in
+    /// the admission front-end configured by `cfg`.
+    pub fn new(
+        session: ServeSession<'c, 'p, E>,
+        cfg: &IngressConfig,
+        stats: Rc<RefCell<IngressStats>>,
+    ) -> Self {
+        let tenants = effective_tenants(cfg);
+        let n = tenants.len();
+        IngressTier {
+            session,
+            admission: cfg.admission,
+            defer_ms: cfg.defer_ms,
+            tenants,
+            stats,
+            tenant_of: HashMap::new(),
+            live: HashSet::new(),
+            in_flight: vec![0; n],
+            deferred: VecDeque::new(),
+            mean_score: 0.0,
+            scored: 0,
+            offered: vec![0; n],
+            admitted: vec![0; n],
+            deferred_n: vec![0; n],
+            rejected_by_reason: vec![[0; 3]; n],
+            peak_backlog: 0,
+        }
+    }
+
+    /// Execute every fleet decision scheduled strictly before `t_ms`,
+    /// so an admission judged at `t_ms` sees the system state of that
+    /// moment.  Strict: decisions AT the arrival time stay pending, and
+    /// the session orders them dispatch-before-step exactly like the
+    /// batch loop — which is what keeps `admission = off` bitwise equal
+    /// to the plain session.
+    fn drain_before(&mut self, t_ms: f64) -> Result<()> {
+        while let Some(d) = self.session.next_decision_ms() {
+            if d.is_nan() || d >= t_ms {
+                break;
+            }
+            self.session.tick()?;
+        }
+        Ok(())
+    }
+
+    /// Release quota held by ids that went terminal since last checked.
+    fn drain_terminal(&mut self) {
+        for id in self.stats.borrow_mut().take_terminal() {
+            if self.live.remove(&id) {
+                let t = self.tenant_of[&id];
+                self.in_flight[t] -= 1;
+            }
+        }
+    }
+
+    fn verdict(&mut self, tenant: usize, req: &Request, now: f64, retry: bool) -> Verdict {
+        if self.admission == AdmissionMode::Off {
+            return Verdict::Admit;
+        }
+        if !self.session.fleet_admissible(req) {
+            return Verdict::Reject(RejectReason::Validation);
+        }
+        let class = &self.tenants[tenant];
+        if class.quota > 0 && self.in_flight[tenant] >= class.quota {
+            return if retry {
+                Verdict::Reject(RejectReason::Quota)
+            } else {
+                Verdict::Defer(now + self.defer_ms)
+            };
+        }
+        let (blown, threatened) = match self.admission {
+            AdmissionMode::Off => unreachable!("handled above"),
+            AdmissionMode::Shed(depth) => {
+                let backlog = self.session.backlog();
+                (backlog >= 2 * depth, backlog >= depth)
+            }
+            AdmissionMode::Slo => {
+                let st = self.stats.borrow();
+                if class.slo_ttft_ms <= 0.0 || st.ttft_samples == 0 {
+                    (false, false)
+                } else {
+                    (
+                        st.ewma_ttft_ms > class.slo_ttft_ms,
+                        st.ewma_ttft_ms > 0.5 * class.slo_ttft_ms,
+                    )
+                }
+            }
+        };
+        // priority 0 is never shed indiscriminately: terminal pressure
+        // degrades to the threatened treatment (predicted-long only)
+        if blown && class.priority != 0 {
+            return Verdict::Reject(RejectReason::Shed);
+        }
+        if blown || threatened {
+            let score = self.session.score(req);
+            if self.scored > 0 && score >= self.mean_score {
+                return Verdict::Reject(RejectReason::Shed);
+            }
+        }
+        Verdict::Admit
+    }
+
+    /// Judge one arrival at clock `now` and act on the verdict.
+    fn judge(&mut self, tenant: usize, req: Request, now: f64, retry: bool) {
+        self.drain_terminal();
+        if !retry {
+            self.offered[tenant] += 1;
+        }
+        match self.verdict(tenant, &req, now, retry) {
+            Verdict::Admit => {
+                if self.admission != AdmissionMode::Off {
+                    let score = self.session.score(&req);
+                    self.scored += 1;
+                    self.mean_score += (score - self.mean_score) / self.scored as f64;
+                }
+                self.admitted[tenant] += 1;
+                self.in_flight[tenant] += 1;
+                self.live.insert(req.id);
+                self.tenant_of.insert(req.id, tenant);
+                self.stats.borrow_mut().note_submitted(req.id, req.arrival_ms);
+                self.session.submit(req);
+                self.peak_backlog = self.peak_backlog.max(self.session.backlog());
+            }
+            Verdict::Defer(until_ms) => {
+                self.deferred_n[tenant] += 1;
+                self.session.emit_ingress(ServeEvent::Deferred {
+                    id: req.id,
+                    until_ms,
+                    tenant: Some(self.tenants[tenant].name.clone()),
+                    t_ms: now,
+                });
+                let at = self.deferred.partition_point(|d| d.0.total_cmp(&until_ms).is_le());
+                self.deferred.insert(at, (until_ms, tenant, req));
+            }
+            Verdict::Reject(reason) => {
+                self.rejected_by_reason[tenant][reason.index()] += 1;
+                self.session.emit_ingress(ServeEvent::Rejected {
+                    id: req.id,
+                    reason,
+                    tenant: Some(self.tenants[tenant].name.clone()),
+                    t_ms: now,
+                });
+            }
+        }
+    }
+
+    /// Drive the merged feed through admission: arrivals and deferred
+    /// retries are processed in clock order (ties go to the retry — it
+    /// arrived first), each judged against the fleet state of its own
+    /// moment.  The feed is (re-)sorted by arrival, stable, so a
+    /// pre-merged feed keeps its producer order on ties.
+    pub fn run(&mut self, mut feed: Vec<(usize, Request)>) -> Result<()> {
+        for (tenant, req) in &mut feed {
+            if *tenant >= self.tenants.len() {
+                anyhow::bail!(
+                    "feed names tenant index {tenant} but only {} classes are configured",
+                    self.tenants.len()
+                );
+            }
+            // same contract as ServeSession::submit
+            if !req.arrival_ms.is_finite() {
+                req.arrival_ms = 0.0;
+            }
+        }
+        feed.sort_by(|a, b| a.1.arrival_ms.total_cmp(&b.1.arrival_ms));
+        let mut feed = VecDeque::from(feed);
+        loop {
+            let next_retry = self.deferred.front().map(|d| d.0);
+            let next_fresh = feed.front().map(|f| f.1.arrival_ms);
+            let (now, from_retry) = match (next_retry, next_fresh) {
+                (None, None) => break,
+                (Some(r), None) => (r, true),
+                (None, Some(f)) => (f, false),
+                (Some(r), Some(f)) => {
+                    if r.total_cmp(&f).is_le() {
+                        (r, true)
+                    } else {
+                        (f, false)
+                    }
+                }
+            };
+            self.drain_before(now)?;
+            if from_retry {
+                let (_, tenant, req) = self.deferred.pop_front().unwrap();
+                self.judge(tenant, req, now, true);
+            } else {
+                let (tenant, req) = feed.pop_front().unwrap();
+                self.judge(tenant, req, now, false);
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain the session and assemble the per-tenant books.
+    pub fn finish(self) -> Result<IngressOutcome> {
+        let IngressTier {
+            session,
+            tenants,
+            tenant_of,
+            offered,
+            admitted,
+            deferred_n,
+            rejected_by_reason,
+            peak_backlog,
+            ..
+        } = self;
+        let outcome = session.finish()?;
+        let wall_ms = outcome.merged.report.wall_ms;
+        let records: Vec<&RequestRecord> =
+            outcome.per_replica.iter().flat_map(|r| r.records.iter()).collect();
+        let reports = Recorder::report_groups(&records, tenants.len(), wall_ms, |r| {
+            tenant_of.get(&r.id).copied().unwrap_or(0)
+        });
+        let summaries: Vec<TenantSummary> = tenants
+            .into_iter()
+            .zip(reports)
+            .enumerate()
+            .map(|(i, (class, report))| TenantSummary {
+                class,
+                offered: offered[i],
+                admitted: admitted[i],
+                deferred: deferred_n[i],
+                rejected_by_reason: rejected_by_reason[i],
+                report,
+            })
+            .collect();
+        let mut by_reason = [0usize; 3];
+        for t in &summaries {
+            for (acc, n) in by_reason.iter_mut().zip(t.rejected_by_reason) {
+                *acc += n;
+            }
+        }
+        Ok(IngressOutcome {
+            outcome,
+            admitted: summaries.iter().map(|t| t.admitted).sum(),
+            rejected_by_reason: by_reason,
+            deferred: summaries.iter().map(|t| t.deferred).sum(),
+            peak_backlog,
+            tenants: summaries,
+        })
+    }
+}
+
+/// Run a pre-merged `(tenant, request)` feed through the ingress tier
+/// over `coord`, streaming every lifecycle event (including the ingress
+/// tier's own `Rejected`/`Deferred`) into `sink`.
+pub fn serve_feed<'p, E: Engine>(
+    coord: &mut ShardedCoordinator<'p, E>,
+    cfg: &IngressConfig,
+    feed: Vec<(usize, Request)>,
+    sink: &mut dyn EventSink,
+) -> Result<IngressOutcome> {
+    let stats = Rc::new(RefCell::new(IngressStats::default()));
+    let mut tee = TeeSink::new(sink, Rc::clone(&stats));
+    let session = coord.session_with(&mut tee);
+    let mut tier = IngressTier::new(session, cfg, stats);
+    tier.run(feed)?;
+    tier.finish()
+}
+
+/// The full live-serving dance: generate every producer's stream on the
+/// thread pool, merge deterministically, and serve the merged feed
+/// through the admission front-end.
+pub fn serve_live<'p, E: Engine, F>(
+    coord: &mut ShardedCoordinator<'p, E>,
+    cfg: &IngressConfig,
+    specs: Vec<ProducerSpec>,
+    make: F,
+    sink: &mut dyn EventSink,
+) -> Result<IngressOutcome>
+where
+    F: Fn(&ProducerSpec) -> Vec<Request> + Sync,
+{
+    let feed = produce(cfg, specs, make)?;
+    serve_feed(coord, cfg, feed, sink)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig};
+    use crate::coordinator::policy::make_policy;
+    use crate::engine::SimEngine;
+
+    fn mk_req(id: u64, arrival: f64, target: u32) -> Request {
+        Request {
+            id,
+            tokens: vec![1, 10, 20, 32, 2],
+            prompt_len: 5,
+            arrival_ms: arrival,
+            target_len: target,
+            oracle_len: target,
+            score: target as f32,
+        }
+    }
+
+    fn sched(replicas: usize, max_batch: usize) -> SchedulerConfig {
+        SchedulerConfig {
+            replicas,
+            max_batch,
+            max_kv_tokens: 1 << 20,
+            dispatch: DispatchKind::Ranked,
+            ..Default::default()
+        }
+    }
+
+    fn engines(s: &SchedulerConfig, max_seq: usize) -> Vec<SimEngine> {
+        (0..s.replicas)
+            .map(|i| SimEngine::new(CostModel::default(), &s.for_replica(i), max_seq))
+            .collect()
+    }
+
+    fn lines(events: &[ServeEvent]) -> Vec<String> {
+        events.iter().map(|e| e.to_json().to_string()).collect()
+    }
+
+    #[test]
+    fn admission_off_is_the_plain_session_record_for_record() {
+        let s = sched(2, 2);
+        let policy = make_policy(PolicyKind::Pars);
+        let reqs: Vec<Request> =
+            (0..40).map(|i| mk_req(i, i as f64 * 5.0, 8 + (i % 7) as u32 * 4)).collect();
+
+        let mut plain_events: Vec<ServeEvent> = Vec::new();
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let plain = {
+            let mut session = coord.session_with(&mut plain_events);
+            for r in reqs.clone() {
+                session.submit(r);
+            }
+            session.finish().unwrap()
+        };
+
+        let cfg = IngressConfig::default(); // admission = off
+        let mut live_events: Vec<ServeEvent> = Vec::new();
+        let mut coord2 =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let feed: Vec<(usize, Request)> = reqs.into_iter().map(|r| (0, r)).collect();
+        let out = serve_feed(&mut coord2, &cfg, feed, &mut live_events).unwrap();
+
+        assert_eq!(
+            lines(&plain_events),
+            lines(&live_events),
+            "admission=off must be a bitwise pass-through"
+        );
+        assert_eq!(out.outcome.merged.report.n_requests, plain.merged.report.n_requests);
+        assert_eq!(
+            out.outcome.merged.report.avg_per_token_ms,
+            plain.merged.report.avg_per_token_ms
+        );
+        assert_eq!(out.outcome.merged.makespan_ms, plain.merged.makespan_ms);
+        assert_eq!(out.admitted, 40);
+        assert_eq!(out.rejected_by_reason, [0, 0, 0]);
+        assert_eq!(out.deferred, 0);
+        // the implicit default tenant carries the whole fleet report
+        assert_eq!(out.tenants.len(), 1);
+        assert_eq!(out.tenants[0].report.n_requests, 40);
+    }
+
+    #[test]
+    fn shed_bounds_the_backlog_at_twice_the_depth() {
+        let s = sched(1, 1);
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let cfg = IngressConfig { admission: AdmissionMode::Shed(8), ..Default::default() };
+        // a t=0 burst on a single slot: unbounded queue growth without
+        // admission (equal scores, so the soft tier sheds every one of
+        // them once the backlog passes the depth)
+        let feed: Vec<(usize, Request)> = (0..60).map(|i| (0, mk_req(i, 0.0, 20))).collect();
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let out = serve_feed(&mut coord, &cfg, feed, &mut events).unwrap();
+
+        assert!(out.rejected_by_reason[2] > 0, "shed pressure never fired");
+        assert_eq!(out.rejected_by_reason[0], 0);
+        assert_eq!(out.rejected_by_reason[1], 0);
+        assert!(
+            out.peak_backlog <= 16,
+            "shed(8) must bound the backlog at 2x depth, saw {}",
+            out.peak_backlog
+        );
+        assert_eq!(out.admitted + out.rejected(), 60, "every arrival judged exactly once");
+        assert_eq!(
+            out.outcome.merged.report.n_requests,
+            out.admitted,
+            "every admitted request must complete"
+        );
+        // shed rejections carry the tenant and never reach a replica
+        let shed = events
+            .iter()
+            .filter(|e| {
+                matches!(e, ServeEvent::Rejected { reason: RejectReason::Shed, tenant, .. }
+                    if tenant.as_deref() == Some("default"))
+            })
+            .count();
+        assert_eq!(shed, out.rejected_by_reason[2]);
+    }
+
+    #[test]
+    fn quota_defers_once_then_hardens_to_a_rejection() {
+        let s = sched(1, 1);
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let mut tenant = TenantClass::named("acme");
+        tenant.quota = 1;
+        let cfg = IngressConfig {
+            admission: AdmissionMode::Shed(1000), // quota active, no pressure
+            defer_ms: 50.0,
+            tenants: vec![tenant],
+            ..Default::default()
+        };
+        // three long jobs at t=0 under quota 1: the first occupies the
+        // quota past the retry horizon, so both others defer then harden
+        let feed: Vec<(usize, Request)> = (0..3).map(|i| (0, mk_req(i, 0.0, 400))).collect();
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let out = serve_feed(&mut coord, &cfg, feed, &mut events).unwrap();
+
+        assert_eq!(out.admitted, 1);
+        assert_eq!(out.deferred, 2);
+        assert_eq!(out.rejected_by_reason, [0, 2, 0]);
+        let deferred: Vec<&ServeEvent> =
+            events.iter().filter(|e| matches!(e, ServeEvent::Deferred { .. })).collect();
+        assert_eq!(deferred.len(), 2);
+        assert!(deferred.iter().all(|e| {
+            matches!(e, ServeEvent::Deferred { until_ms, tenant: Some(t), t_ms, .. }
+                if *until_ms == 50.0 && *t_ms == 0.0 && t == "acme")
+        }));
+        assert!(
+            events.iter().any(|e| {
+                matches!(e, ServeEvent::Rejected { reason: RejectReason::Quota,
+                    tenant: Some(t), t_ms, .. } if t == "acme" && *t_ms == 50.0)
+            }),
+            "the retry must be re-judged at the deferral horizon"
+        );
+        assert_eq!(out.tenants[0].offered, 3);
+        assert_eq!(out.tenants[0].report.n_requests, 1);
+    }
+
+    #[test]
+    fn slo_sheds_once_the_observed_ttft_blows_the_target() {
+        let s = sched(1, 1);
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let mut tenant = TenantClass::named("gold");
+        tenant.slo_ttft_ms = 30.0;
+        let cfg = IngressConfig {
+            admission: AdmissionMode::Slo,
+            tenants: vec![tenant],
+            ..Default::default()
+        };
+        // overload a single slot: service time far exceeds the 10 ms
+        // inter-arrival gap, so observed TTFT climbs past the target
+        let feed: Vec<(usize, Request)> =
+            (0..30).map(|i| (0, mk_req(i, i as f64 * 10.0, 30))).collect();
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let out = serve_feed(&mut coord, &cfg, feed, &mut events).unwrap();
+
+        assert!(out.rejected_by_reason[2] > 0, "slo mode never shed under a blown target");
+        assert!(out.admitted >= 1, "the first arrivals see a clean fleet");
+        assert_eq!(out.admitted + out.rejected(), 30);
+        assert_eq!(out.outcome.merged.report.n_requests, out.admitted);
+    }
+
+    #[test]
+    fn validation_is_refused_at_the_front_door() {
+        let s = sched(1, 2);
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 64), policy.as_ref(), s.dispatch, s.clone());
+        let cfg = IngressConfig { admission: AdmissionMode::Shed(1000), ..Default::default() };
+        // target 500 tokens against a 64-token sequence budget
+        let feed = vec![(0, mk_req(0, 0.0, 500)), (0, mk_req(1, 0.0, 10))];
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let out = serve_feed(&mut coord, &cfg, feed, &mut events).unwrap();
+        assert_eq!(out.rejected_by_reason, [1, 0, 0]);
+        assert_eq!(out.admitted, 1);
+        // refused at ingress: no Dispatched event for the impossible id
+        assert!(!events
+            .iter()
+            .any(|e| matches!(e, ServeEvent::Dispatched { id: 0, .. })));
+    }
+
+    #[test]
+    fn produce_merges_deterministically_and_restamps_ids() {
+        use crate::util::rng::Rng;
+        let mut gold = TenantClass::named("gold");
+        gold.priority = 0;
+        let free = TenantClass::named("free");
+        let cfg = IngressConfig { producers: 3, tenants: vec![gold, free], ..Default::default() };
+        let specs: Vec<ProducerSpec> = (0..3)
+            .map(|p| ProducerSpec {
+                producer: p,
+                tenant: p % 2,
+                rate_per_s: 40.0,
+                n: 25,
+                seed: 0xFEED + p as u64,
+            })
+            .collect();
+        let make = |spec: &ProducerSpec| -> Vec<Request> {
+            let mut rng = Rng::new(spec.seed);
+            let mut t = 0.0;
+            (0..spec.n)
+                .map(|i| {
+                    t += rng.exp(spec.rate_per_s) * 1e3;
+                    mk_req(i as u64, t, 10 + (i % 5) as u32)
+                })
+                .collect()
+        };
+        let a = produce(&cfg, specs.clone(), make).unwrap();
+        let b = produce(&cfg, specs, make).unwrap();
+        let key = |feed: &[(usize, Request)]| -> Vec<(usize, u64, u64)> {
+            feed.iter().map(|(t, r)| (*t, r.id, r.arrival_ms.to_bits())).collect()
+        };
+        assert_eq!(key(&a), key(&b), "same specs must merge to the same feed");
+        assert_eq!(a.len(), 75);
+        // ids are re-stamped to the merged order
+        assert!(a.iter().enumerate().all(|(i, (_, r))| r.id == i as u64));
+        // merged order: arrival-sorted, priority breaking exact ties
+        assert!(a.windows(2).all(|w| w[0].1.arrival_ms <= w[1].1.arrival_ms));
+    }
+
+    #[test]
+    fn produce_rejects_an_unknown_tenant_index() {
+        let cfg = IngressConfig::default(); // one implicit class
+        let specs = vec![ProducerSpec { producer: 0, tenant: 3, rate_per_s: 1.0, n: 1, seed: 1 }];
+        let err = produce(&cfg, specs, |_s| Vec::new()).unwrap_err();
+        assert!(format!("{err}").contains("tenant index 3"), "{err}");
+    }
+}

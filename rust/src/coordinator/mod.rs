@@ -24,9 +24,13 @@
 //!   at a time.
 //! * [`events`]    — lifecycle events ([`ServeEvent`]) + sinks
 //!   ([`EventLog`], [`JsonlSink`], [`NullSink`]).
+//! * [`ingress`]   — the real-time front door: multi-producer arrival
+//!   streams behind a shielding admission controller (per-tenant
+//!   quotas/SLOs, shed-under-pressure), feeding a [`ServeSession`].
 
 pub mod dispatch;
 pub mod events;
+pub mod ingress;
 pub mod policy;
 pub mod predictor;
 pub mod queue;
@@ -35,8 +39,12 @@ pub mod session;
 
 pub use dispatch::{ReplicaOutcome, ShardedCoordinator, ShardedOutcome};
 pub use events::{
-    EventLog, EventSink, JsonlSink, NullSink, PreemptKind, ReplayBook, ReplicaTimeline,
-    ServeEvent,
+    EventLog, EventSink, JsonlSink, NullSink, PreemptKind, RejectReason, ReplayBook,
+    ReplicaTimeline, ServeEvent, TenantBook,
+};
+pub use ingress::{
+    effective_tenants, produce, serve_feed, serve_live, IngressOutcome, IngressStats,
+    IngressTier, ProducerSpec, TeeSink, TenantSummary,
 };
 pub use policy::Policy;
 pub use predictor::{PjrtScorer, Predictor, Scorer, ShrinkagePredictor};

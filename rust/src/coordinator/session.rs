@@ -28,7 +28,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::coordinator::dispatch::{ShardedCoordinator, ShardedOutcome};
-use crate::coordinator::events::{EventLog, EventSink, SessionCtx};
+use crate::coordinator::events::{EventLog, EventSink, ServeEvent, SessionCtx};
 use crate::coordinator::Request;
 use crate::engine::Engine;
 use crate::Result;
@@ -182,6 +182,42 @@ impl<'c, 'p, E: Engine> ServeSession<'c, 'p, E> {
             SinkSlot::Owned(log) => Some(log),
             SinkSlot::Borrowed(_) => None,
         }
+    }
+
+    /// Whether any replica could ever hold `req` — the same validation
+    /// test dispatch applies before routing.  The ingress admission
+    /// controller asks this up front so impossible work is refused at
+    /// the front door (`Rejected { reason: validation }`) and never
+    /// reaches the coordinator.
+    pub fn fleet_admissible(&self, req: &Request) -> bool {
+        self.coord.fleet_admissible(req)
+    }
+
+    /// Score `req` exactly as dispatch will at admission: the predictor
+    /// scores once per id and is deterministic, so the ingress tier and
+    /// the dispatch path always agree on the same key.
+    pub fn score(&mut self, req: &Request) -> f64 {
+        self.coord.score_request(req)
+    }
+
+    /// Requests queued inside the fleet (replica inboxes + waiting
+    /// queues; running excluded) plus submissions not yet dispatched —
+    /// the backlog the shed admission mode bounds.
+    pub fn backlog(&self) -> usize {
+        self.coord.fleet_backlog() + self.pending.len()
+    }
+
+    /// Record an ingress-tier admission verdict: the event goes through
+    /// the session's sink and status map exactly like a dispatch-time
+    /// event, so JSONL captures and `poll` see front-door rejections
+    /// too.  A `Rejected` event also counts toward the outcome's
+    /// rejected total (the replay books break it down by reason).
+    pub fn emit_ingress(&mut self, ev: ServeEvent) {
+        if matches!(ev, ServeEvent::Rejected { .. }) {
+            self.rejected += 1;
+        }
+        let (_, mut ctx) = self.parts();
+        ctx.emit(ev);
     }
 
     /// Engine-clock time of the next decision: the earlier of the next

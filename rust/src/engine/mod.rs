@@ -233,6 +233,14 @@ pub trait Engine {
     /// fleets normalise cross-replica load signals by this).
     fn kv_blocks_total(&self) -> usize;
 
+    /// Host swap-pool blocks currently holding suspended pages
+    /// (saturation signal for pool-aware routing).  0 with `swap = off`.
+    fn host_blocks_used(&self) -> usize;
+
+    /// Host swap-pool capacity in blocks.  0 with `swap = off`, which is
+    /// what keeps pool-aware routing inert on swapless fleets.
+    fn host_blocks_total(&self) -> usize;
+
     /// Idle until `t_ms` (no runnable work; next arrival is in the future).
     fn advance_to(&mut self, t_ms: f64);
 }
@@ -325,6 +333,14 @@ impl<E: Engine + ?Sized> Engine for &mut E {
 
     fn kv_blocks_total(&self) -> usize {
         (**self).kv_blocks_total()
+    }
+
+    fn host_blocks_used(&self) -> usize {
+        (**self).host_blocks_used()
+    }
+
+    fn host_blocks_total(&self) -> usize {
+        (**self).host_blocks_total()
     }
 
     fn advance_to(&mut self, t_ms: f64) {

@@ -394,6 +394,14 @@ impl Engine for PjrtEngine {
         self.kv_mgr.blocks_total()
     }
 
+    fn host_blocks_used(&self) -> usize {
+        self.kv_mgr.host_blocks_used()
+    }
+
+    fn host_blocks_total(&self) -> usize {
+        self.kv_mgr.host_blocks_total()
+    }
+
     fn advance_to(&mut self, t_ms: f64) {
         let now = self.now_ms();
         if t_ms > now {

@@ -242,6 +242,14 @@ impl Engine for SimEngine {
         self.kv.blocks_total()
     }
 
+    fn host_blocks_used(&self) -> usize {
+        self.kv.host_blocks_used()
+    }
+
+    fn host_blocks_total(&self) -> usize {
+        self.kv.host_blocks_total()
+    }
+
     fn advance_to(&mut self, t_ms: f64) {
         if t_ms > self.now_ms {
             self.now_ms = t_ms;

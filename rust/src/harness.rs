@@ -245,6 +245,49 @@ pub fn run_sharded_with(
     }
 }
 
+/// Producer specs for an ingress run: one producer per tenant class,
+/// each offering that class's weighted share of the fleet open-loop
+/// target (`rate_per_s` req/s across `n` requests total).  Seeds are
+/// per-producer (`seed + producer`), so streams are independent and the
+/// whole spec set is deterministic.
+pub fn ingress_specs(
+    cfg: &crate::config::IngressConfig,
+    rate_per_s: f64,
+    n: usize,
+    seed: u64,
+) -> Vec<crate::coordinator::ProducerSpec> {
+    let tenants = crate::coordinator::effective_tenants(cfg);
+    let weights: Vec<f64> = tenants.iter().map(|t| t.weight).collect();
+    crate::workload::split_open_loop(rate_per_s, n, &weights)
+        .into_iter()
+        .enumerate()
+        .map(|(i, share)| crate::coordinator::ProducerSpec {
+            producer: i,
+            tenant: i,
+            rate_per_s: share.rate_per_s,
+            n: share.n,
+            seed: seed.wrapping_add(i as u64),
+        })
+        .collect()
+}
+
+/// The stream one ingress producer thread generates: Poisson arrivals
+/// at the spec's rate over the testset's prompts, lengths drawn fresh
+/// from the oracle under the spec's seed.  Ids are producer-local —
+/// [`crate::coordinator::produce`] re-stamps them after the merge.
+pub fn ingress_stream(
+    ts: &TestSet,
+    scores: Option<&[f32]>,
+    spec: &crate::coordinator::ProducerSpec,
+) -> Vec<Request> {
+    if spec.n == 0 {
+        return Vec::new();
+    }
+    let arrivals = poisson(ts, spec.rate_per_s.max(1e-6), spec.n, spec.seed);
+    let mut rng = Rng::new(spec.seed ^ 0xA11CE);
+    build_requests(ts, &arrivals, scores, LiveLengths::Fresh(&mut rng))
+}
+
 /// The policy suite used in the paper's figures for a given target model.
 pub fn policy_suite(target_model: &str) -> Vec<PolicyKind> {
     let mut v = vec![
@@ -492,6 +535,30 @@ mod tests {
         assert_eq!(on.merged.report.n_requests, 120);
         assert_eq!(off_rescored, 0, "rerank=off must never rescore");
         assert!(on_rescored > 0, "rerank=on_token must refine estimates as tokens land");
+    }
+
+    #[test]
+    fn ingress_specs_split_the_offered_load_deterministically() {
+        use crate::config::{IngressConfig, TenantClass};
+        let gold = TenantClass::named("gold");
+        let mut free = TenantClass::named("free");
+        free.weight = 3.0;
+        let cfg = IngressConfig { tenants: vec![gold, free], ..Default::default() };
+        let specs = ingress_specs(&cfg, 20.0, 100, 7);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs.iter().map(|s| s.n).sum::<usize>(), 100);
+        assert!((specs[0].rate_per_s - 5.0).abs() < 1e-9);
+        assert_eq!(specs[1].n, 75);
+        assert_ne!(specs[0].seed, specs[1].seed, "streams must be independent");
+
+        let ts = TestSet::synthetic("synthalpaca", "llama", 64, 5);
+        let a = ingress_stream(&ts, None, &specs[1]);
+        let b = ingress_stream(&ts, None, &specs[1]);
+        assert_eq!(a.len(), 75);
+        let key = |v: &[Request]| -> Vec<(u64, u64, u32)> {
+            v.iter().map(|r| (r.id, r.arrival_ms.to_bits(), r.target_len)).collect()
+        };
+        assert_eq!(key(&a), key(&b), "a producer stream must be seed-deterministic");
     }
 
     #[test]

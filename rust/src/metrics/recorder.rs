@@ -95,6 +95,30 @@ impl Recorder {
         Recorder::report_over(&refs, wall_ms)
     }
 
+    /// Per-group reports over borrowed records (the ingress tier's
+    /// per-tenant breakdown): each record lands in bucket `group(r)`,
+    /// records whose group is out of range are dropped, and every group
+    /// is reported over the SAME wall clock so per-group throughputs
+    /// sum to the fleet number.
+    pub fn report_groups<F>(
+        records: &[&RequestRecord],
+        n_groups: usize,
+        wall_ms: f64,
+        group: F,
+    ) -> Vec<LatencyReport>
+    where
+        F: Fn(&RequestRecord) -> usize,
+    {
+        let mut buckets: Vec<Vec<&RequestRecord>> = (0..n_groups).map(|_| Vec::new()).collect();
+        for &r in records {
+            let g = group(r);
+            if g < n_groups {
+                buckets[g].push(r);
+            }
+        }
+        buckets.iter().map(|b| Recorder::report_over(b, wall_ms)).collect()
+    }
+
     /// Report over borrowed records from any number of recorders (the
     /// sharded coordinator merges per-replica records without copying).
     pub fn report_over(records: &[&RequestRecord], wall_ms: f64) -> LatencyReport {
@@ -213,5 +237,31 @@ mod tests {
     fn zero_output_guard() {
         let r = rec(1, 0.0, 10.0, 0);
         assert!(r.per_token_ms().is_finite());
+    }
+
+    #[test]
+    fn report_groups_partitions_under_one_wall_clock() {
+        let records =
+            vec![rec(0, 0.0, 100.0, 10), rec(1, 0.0, 40.0, 20), rec(2, 0.0, 60.0, 30)];
+        let refs: Vec<&RequestRecord> = records.iter().collect();
+        // group by id parity; id 2 maps out of range and is dropped
+        let reports = Recorder::report_groups(&refs, 2, 1000.0, |r| {
+            if r.id == 2 {
+                9
+            } else {
+                r.id as usize % 2
+            }
+        });
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].n_requests, 1);
+        assert_eq!(reports[1].n_requests, 1);
+        assert_eq!(reports[0].total_tokens, 10);
+        assert_eq!(reports[1].total_tokens, 20);
+        // same wall for every group: throughputs sum coherently
+        assert!((reports[0].throughput_tok_s - 10.0).abs() < 1e-12);
+        assert!((reports[1].throughput_tok_s - 20.0).abs() < 1e-12);
+        // empty-group safety
+        let empty = Recorder::report_groups(&refs, 0, 1000.0, |_| 0);
+        assert!(empty.is_empty());
     }
 }

@@ -50,6 +50,39 @@ where
         .collect()
 }
 
+/// [`scope_map`] with panics surfaced as errors instead of unwinding
+/// through `thread::scope` (which would abort the whole run after every
+/// other worker is joined).  Each item runs under `catch_unwind`, so one
+/// panicking item neither kills its worker thread nor loses the items
+/// behind it — the pool drains everything, then the FIRST panicking
+/// index (input order) is reported with its payload.  The ingress tier
+/// runs producer threads through this: a bad producer turns into a
+/// clean `Err` at the front door, not a poisoned serving run.
+pub fn try_scope_map<T, R, F>(threads: usize, items: Vec<T>, f: F) -> crate::Result<Vec<R>>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let caught: Vec<Result<R, String>> = scope_map(threads, items, |x| {
+        catch_unwind(AssertUnwindSafe(|| f(x))).map_err(|p| {
+            p.downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string())
+        })
+    });
+    let mut out = Vec::with_capacity(caught.len());
+    for (i, r) in caught.into_iter().enumerate() {
+        match r {
+            Ok(v) => out.push(v),
+            Err(msg) => anyhow::bail!("worker panicked on item {i}: {msg}"),
+        }
+    }
+    Ok(out)
+}
+
 /// Hardware parallelism with a safe floor.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -101,5 +134,50 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn try_scope_map_surfaces_panics_as_errors() {
+        // the error names the panicking item and carries its payload —
+        // no unwind reaches the caller, no worker hangs
+        let err = try_scope_map(2, vec![1, 2, 3], |x: i32| {
+            if x == 2 {
+                panic!("bad producer {x}");
+            }
+            x
+        })
+        .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("item 1"), "error must name the item: {msg}");
+        assert!(msg.contains("bad producer 2"), "error must carry the payload: {msg}");
+    }
+
+    #[test]
+    fn try_scope_map_drains_after_a_panic() {
+        // regression: a panicking item must not take its worker thread
+        // down with it — every other item still runs to completion
+        // before the error is reported (drain-on-shutdown)
+        use std::sync::atomic::AtomicUsize;
+        static DONE: AtomicUsize = AtomicUsize::new(0);
+        let n = 64;
+        let r = try_scope_map(4, (0..n).collect(), |x: i32| {
+            if x == 3 {
+                panic!("boom");
+            }
+            DONE.fetch_add(1, Ordering::SeqCst);
+            x
+        });
+        assert!(r.is_err());
+        assert_eq!(
+            DONE.load(Ordering::SeqCst),
+            n as usize - 1,
+            "surviving items must all have been processed"
+        );
+    }
+
+    #[test]
+    fn try_scope_map_ok_path_matches_scope_map() {
+        let out = try_scope_map(4, (0..50).collect(), |x: i32| x * 3).unwrap();
+        assert_eq!(out, (0..50).map(|x| x * 3).collect::<Vec<_>>());
     }
 }

@@ -40,6 +40,51 @@ pub fn measured_rate_per_s(arrivals: &[Arrival]) -> f64 {
     arrivals.len() as f64 / span_s
 }
 
+/// One tenant's slice of a fleet-wide open-loop target: its own
+/// Poisson rate and request count.  Produced by [`split_open_loop`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpenLoopShare {
+    pub rate_per_s: f64,
+    pub n: usize,
+}
+
+/// Split a fleet-wide open-loop target (`rate_per_s` req/s over `n`
+/// requests — the ingress tier's offered-load knob) across tenant
+/// classes by weight.  Rates split proportionally; counts split by
+/// largest remainder so they sum to exactly `n` (no tenant silently
+/// gains or loses offered work to rounding).  Deterministic: ties in
+/// the remainder go to the lower index.
+pub fn split_open_loop(rate_per_s: f64, n: usize, weights: &[f64]) -> Vec<OpenLoopShare> {
+    assert!(!weights.is_empty(), "split_open_loop needs at least one weight");
+    assert!(
+        weights.iter().all(|w| w.is_finite() && *w > 0.0),
+        "weights must be positive and finite"
+    );
+    let total: f64 = weights.iter().sum();
+    let exact: Vec<f64> = weights.iter().map(|w| n as f64 * w / total).collect();
+    let mut counts: Vec<usize> = exact.iter().map(|x| x.floor() as usize).collect();
+    let mut short = n - counts.iter().sum::<usize>();
+    // largest remainder first; remainder ties break to the lower index
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = exact[a] - exact[a].floor();
+        let rb = exact[b] - exact[b].floor();
+        rb.total_cmp(&ra).then(a.cmp(&b))
+    });
+    for &i in &order {
+        if short == 0 {
+            break;
+        }
+        counts[i] += 1;
+        short -= 1;
+    }
+    weights
+        .iter()
+        .zip(counts)
+        .map(|(w, n)| OpenLoopShare { rate_per_s: rate_per_s * w / total, n })
+        .collect()
+}
+
 impl ArrivalProcess {
     /// Materialise the arrival sequence, assigning prompts round-robin with
     /// a shuffled order (so prompt difficulty is independent of time).
@@ -129,6 +174,25 @@ mod tests {
             counts[x.prompt_idx] += 1;
         }
         assert!(counts.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn split_open_loop_conserves_rate_and_count() {
+        let shares = split_open_loop(30.0, 100, &[1.0, 2.0, 3.0]);
+        assert_eq!(shares.len(), 3);
+        assert_eq!(shares.iter().map(|s| s.n).sum::<usize>(), 100, "counts must sum to n");
+        let rate: f64 = shares.iter().map(|s| s.rate_per_s).sum();
+        assert!((rate - 30.0).abs() < 1e-9, "rates must sum to the target: {rate}");
+        assert!((shares[1].rate_per_s - 10.0).abs() < 1e-9);
+        assert_eq!(shares[2].n, 50);
+        // degenerate but legal: more tenants than requests
+        let tiny = split_open_loop(1.0, 2, &[1.0, 1.0, 1.0]);
+        assert_eq!(tiny.iter().map(|s| s.n).sum::<usize>(), 2);
+        // deterministic
+        assert_eq!(
+            split_open_loop(30.0, 100, &[1.0, 2.0, 3.0]),
+            split_open_loop(30.0, 100, &[1.0, 2.0, 3.0])
+        );
     }
 
     #[test]

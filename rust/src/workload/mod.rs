@@ -7,7 +7,9 @@ pub mod corpus;
 pub mod oracle;
 pub mod trace;
 
-pub use arrivals::{measured_rate_per_s, Arrival, ArrivalProcess};
+pub use arrivals::{
+    measured_rate_per_s, split_open_loop, Arrival, ArrivalProcess, OpenLoopShare,
+};
 pub use corpus::{Corpus, TestSet};
 pub use oracle::LengthOracle;
 pub use trace::{Trace, TraceEntry};

@@ -67,18 +67,26 @@
 //!   loses no ids.  The `pallas replay` reconstruction round-trips an
 //!   event capture through its JSONL encoding without drifting from
 //!   the outcome books.
+//! * The ingress admission axis joins the grid: across `admission =
+//!   off | shed | slo` with multi-producer per-tenant feeds, every
+//!   offered id goes terminal exactly once (completed XOR rejected),
+//!   an id rejected at ingress never reaches a replica (no
+//!   `Dispatched`), the per-tenant books sum to the fleet totals, and
+//!   two identical multi-producer runs are bitwise deterministic given
+//!   the fixed merged arrival interleaving.
 //!
 //! Reproduce a CI failure locally with the printed seed:
 //! `PROP_SEED=<seed> cargo test --release --test properties`.
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, PreemptMode, ReplicaCaps, RerankMode, SchedulerConfig,
-    StealMode, SwapEvictMode, SwapMode, SwapPricingMode,
+    AdmissionMode, CostModel, DispatchKind, IngressConfig, PolicyKind, PreemptMode, ReplicaCaps,
+    RerankMode, SchedulerConfig, StealMode, SwapEvictMode, SwapMode, SwapPricingMode,
+    TenantClass,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
-    PreemptKind, QueuedRequest, ReplayBook, Request, RequestStatus, ServeEvent,
-    ShardedCoordinator, ShardedOutcome, Tick, WaitingQueue,
+    serve_live, IngressOutcome, PreemptKind, ProducerSpec, QueuedRequest, ReplayBook, Request,
+    RequestStatus, ServeEvent, ShardedCoordinator, ShardedOutcome, Tick, WaitingQueue,
 };
 use pars_serve::engine::SimEngine;
 use pars_serve::util::prop::check_with;
@@ -1360,6 +1368,218 @@ fn score_noise_grid_is_deterministic_and_sigma_zero_is_noiseless() {
             (&f0_sig, &f0_keys),
             (&f1_sig, &f1_keys),
             "seed {seed} case {case}: score noise leaked into FCFS arrival keys"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ingress admission axis (PR 9): multi-producer feeds behind the
+// shielding front-end.
+// ---------------------------------------------------------------------------
+
+/// One producer's stream: Poisson-ish arrivals at the spec rate, long-
+/// tailed lengths with an occasional oversized job (the ingress
+/// validation path), all a pure function of `spec.seed` — ids are
+/// producer-local and re-stamped by the deterministic merge.
+fn producer_stream(spec: &ProducerSpec) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed);
+    let mut t_ms = 0.0;
+    (0..spec.n as u64)
+        .map(|id| {
+            t_ms += rng.exp(spec.rate_per_s.max(1e-6)) * 1e3;
+            let prompt = 1 + rng.below(10);
+            let target =
+                if rng.below(20) == 0 { 10_000 } else { 1 + rng.below(100) as u32 };
+            Request {
+                id,
+                tokens: vec![1; prompt],
+                prompt_len: prompt as u32,
+                arrival_ms: t_ms,
+                target_len: target,
+                oracle_len: target,
+                score: target as f32,
+            }
+        })
+        .collect()
+}
+
+/// Serve multi-producer per-tenant streams through the ingress tier on
+/// a fresh fleet, capturing the full event stream.
+fn run_ingress_fleet(
+    admission: AdmissionMode,
+    tenants: Vec<TenantClass>,
+    producers: usize,
+    specs: &[ProducerSpec],
+) -> (IngressOutcome, Vec<ServeEvent>) {
+    let icfg = IngressConfig { admission, producers, defer_ms: 40.0, tenants };
+    let sched = SchedulerConfig {
+        max_batch: 2,
+        max_kv_tokens: 8192,
+        starvation_ms: 300.0,
+        replicas: 3,
+        dispatch: DispatchKind::LeastLoaded,
+        ..Default::default()
+    };
+    let engines: Vec<SimEngine> = (0..sched.replicas)
+        .map(|i| SimEngine::new(CostModel::default(), &sched.for_replica(i), TRACE_MAX_SEQ))
+        .collect();
+    let policy = make_policy(PolicyKind::Pars);
+    let mut coord =
+        ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched.clone());
+    let mut events: Vec<ServeEvent> = Vec::new();
+    let out = serve_live(&mut coord, &icfg, specs.to_vec(), producer_stream, &mut events).unwrap();
+    (out, events)
+}
+
+fn ingress_tenants() -> Vec<TenantClass> {
+    vec![
+        TenantClass {
+            name: "gold".to_string(),
+            priority: 0,
+            slo_ttft_ms: 400.0,
+            quota: 0,
+            weight: 1.0,
+        },
+        TenantClass {
+            name: "free".to_string(),
+            priority: 2,
+            slo_ttft_ms: 1200.0,
+            quota: 6,
+            weight: 2.0,
+        },
+    ]
+}
+
+fn ingress_specs_for(seed: u64) -> Vec<ProducerSpec> {
+    // four producers over two tenant classes: gold gets producers 0/2,
+    // free gets 1/3 — 120 offered arrivals at ~40 req/s each
+    (0..4)
+        .map(|p| ProducerSpec {
+            producer: p,
+            tenant: p % 2,
+            rate_per_s: 40.0,
+            n: 30,
+            seed: seed ^ (0x1A9E55 + p as u64),
+        })
+        .collect()
+}
+
+#[test]
+fn ingress_admission_grid_conserves_every_offered_id() {
+    use std::collections::HashSet;
+    let seed = prop_seed();
+    for admission in AdmissionMode::all() {
+        let specs = ingress_specs_for(seed);
+        let offered: usize = specs.iter().map(|s| s.n).sum();
+        let (out, events) = run_ingress_fleet(admission, ingress_tenants(), 3, &specs);
+
+        // fleet books: every offered arrival admitted XOR rejected
+        assert_eq!(
+            out.admitted + out.rejected(),
+            offered,
+            "seed {seed} {admission:?}: offered arrivals leaked from the admission books"
+        );
+        if admission == AdmissionMode::Off {
+            assert_eq!(out.rejected(), 0, "{admission:?} must never reject at ingress");
+            assert_eq!(out.deferred, 0, "{admission:?} must never defer at ingress");
+        }
+
+        // per-tenant books sum to the fleet totals
+        assert_eq!(out.tenants.len(), 2, "seed {seed} {admission:?}");
+        assert_eq!(out.tenants.iter().map(|t| t.offered).sum::<usize>(), offered);
+        assert_eq!(out.tenants.iter().map(|t| t.admitted).sum::<usize>(), out.admitted);
+        assert_eq!(out.tenants.iter().map(|t| t.deferred).sum::<usize>(), out.deferred);
+        for reason in 0..3 {
+            assert_eq!(
+                out.tenants.iter().map(|t| t.rejected_by_reason[reason]).sum::<usize>(),
+                out.rejected_by_reason[reason],
+                "seed {seed} {admission:?}: reason {reason} books"
+            );
+        }
+        assert_eq!(
+            out.tenants.iter().map(|t| t.report.n_requests).sum::<usize>(),
+            out.outcome.merged.report.n_requests,
+            "seed {seed} {admission:?}: per-tenant reports must partition the fleet report"
+        );
+        assert_eq!(
+            out.tenants.iter().map(|t| t.report.total_tokens).sum::<u64>(),
+            out.outcome.merged.report.total_tokens,
+            "seed {seed} {admission:?}: per-tenant token books"
+        );
+
+        // event-level conservation: terminal exactly once, and an id
+        // rejected (at ingress or by the coordinator) never dispatches
+        let mut dispatched: HashSet<u64> = HashSet::new();
+        let mut rejected: HashSet<u64> = HashSet::new();
+        let mut completed: HashSet<u64> = HashSet::new();
+        let mut deferred_events = 0usize;
+        for ev in &events {
+            match ev {
+                ServeEvent::Dispatched { id, .. } => {
+                    assert!(dispatched.insert(*id), "id {id} dispatched twice");
+                }
+                ServeEvent::Rejected { id, .. } => {
+                    assert!(rejected.insert(*id), "id {id} rejected twice");
+                }
+                ServeEvent::Completed { record, .. } => {
+                    assert!(completed.insert(record.id), "id {} completed twice", record.id);
+                }
+                ServeEvent::Deferred { .. } => deferred_events += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(deferred_events, out.deferred, "seed {seed} {admission:?}: defer books");
+        assert!(
+            rejected.is_disjoint(&dispatched),
+            "seed {seed} {admission:?}: a rejected id reached a replica"
+        );
+        assert!(
+            rejected.is_disjoint(&completed),
+            "seed {seed} {admission:?}: a rejected id completed"
+        );
+        assert_eq!(
+            completed.len() + rejected.len(),
+            offered,
+            "seed {seed} {admission:?}: ids lost between ingress and completion"
+        );
+        let mut all: Vec<u64> = completed.union(&rejected).copied().collect();
+        all.sort_unstable();
+        let want: Vec<u64> = (0..offered as u64).collect();
+        assert_eq!(all, want, "seed {seed} {admission:?}: merged re-stamping broke id space");
+        assert_eq!(
+            completed.len(),
+            out.outcome.merged.report.n_requests,
+            "seed {seed} {admission:?}: completion books"
+        );
+        // the shielded modes must actually shield under a quota-capped
+        // 4-producer overload (free is quota 6 at ~80 req/s offered)
+        if admission != AdmissionMode::Off {
+            assert!(
+                out.rejected() > 0,
+                "seed {seed} {admission:?}: overload never tripped the front door"
+            );
+        }
+    }
+}
+
+#[test]
+fn ingress_multi_producer_runs_are_bitwise_deterministic() {
+    let seed = prop_seed();
+    for admission in AdmissionMode::all() {
+        let run = || -> (Vec<String>, String) {
+            let specs = ingress_specs_for(seed ^ 0xDE7);
+            let (out, events) = run_ingress_fleet(admission, ingress_tenants(), 4, &specs);
+            let records: Vec<String> =
+                out.outcome.per_replica.iter().map(|r| format!("{:?}", r.records)).collect();
+            let stream: String = events.iter().map(|e| e.to_json().to_string() + "\n").collect();
+            (records, stream)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(
+            a, b,
+            "seed {seed} {admission:?}: identical multi-producer runs diverged — the \
+             producer merge, the admission controller and the serving loop must all be \
+             pure functions of the specs"
         );
     }
 }

@@ -863,6 +863,78 @@ fn manual_session_ticks_reproduce_the_batch_wrapper() {
     }
 }
 
+/// PR 9 pin: `admission = off` with a single producer is the plain
+/// session loop — driving the frozen workload through the ingress
+/// front-end (strict drain-before-arrival + incremental submit) must
+/// reproduce the frozen PR 1 sharded loop record-for-record, every
+/// dispatch kind.  The ingress books must stay empty: off never
+/// rejects or defers at the front door (the oversized request is still
+/// refused by the coordinator itself, exactly like the reference).
+#[test]
+fn ingress_admission_off_pins_to_reference_loop_every_dispatch() {
+    use pars_serve::config::IngressConfig;
+    use pars_serve::coordinator::{serve_feed, ServeEvent};
+    for dispatch in DispatchKind::all() {
+        for kind in [PolicyKind::Fcfs, PolicyKind::OracleSjf] {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                steal: StealMode::Off,
+                ..Default::default()
+            };
+            let mk_engines = || -> Vec<SimEngine> {
+                (0..sched.replicas)
+                    .map(|_| SimEngine::new(CostModel::default(), &sched, 4096))
+                    .collect()
+            };
+            let policy = make_policy(kind);
+            let (want_records, want_dispatched, want_rejected) = reference_sharded_serve(
+                mk_engines(),
+                policy.as_ref(),
+                dispatch,
+                &sched,
+                workload(),
+            );
+
+            let icfg = IngressConfig { producers: 1, ..Default::default() };
+            let mut coord =
+                ShardedCoordinator::new(mk_engines(), policy.as_ref(), dispatch, sched.clone());
+            let mut sink: Vec<ServeEvent> = Vec::new();
+            let feed: Vec<(usize, Request)> =
+                workload().into_iter().map(|r| (0, r)).collect();
+            let out = serve_feed(&mut coord, &icfg, feed, &mut sink).unwrap();
+
+            assert_eq!(out.rejected(), 0, "{kind:?}/{dispatch:?} off rejected at ingress");
+            assert_eq!(out.deferred, 0, "{kind:?}/{dispatch:?} off deferred at ingress");
+            assert_eq!(out.admitted, 121, "{kind:?}/{dispatch:?} off must admit everything");
+            assert_eq!(
+                out.outcome.merged.rejected, want_rejected,
+                "{kind:?}/{dispatch:?} rejected"
+            );
+            // single implicit tenant: its book is the fleet book
+            assert_eq!(out.tenants.len(), 1);
+            assert_eq!(
+                out.tenants[0].report.n_requests, out.outcome.merged.report.n_requests,
+                "{kind:?}/{dispatch:?} tenant report must cover the fleet"
+            );
+            for (i, rep) in out.outcome.per_replica.iter().enumerate() {
+                assert_eq!(
+                    rep.dispatched, want_dispatched[i],
+                    "{kind:?}/{dispatch:?} replica {i} dispatched"
+                );
+                assert_eq!(
+                    format!("{:?}", rep.records),
+                    format!("{:?}", want_records[i]),
+                    "{kind:?}/{dispatch:?} replica {i} record stream drifted through ingress"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn sharded_n4_serves_everything_the_single_replica_does() {
     let sched = SchedulerConfig {
