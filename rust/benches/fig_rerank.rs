@@ -54,6 +54,8 @@ fn trace(n_short: usize, oracle_scores: bool) -> Vec<Request> {
             target_len: target,
             oracle_len: target,
             score,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
     let long_score = if oracle_scores { 1000.0 } else { 0.2 };

@@ -44,6 +44,8 @@ fn trace(n: usize) -> Vec<Request> {
                 target_len: target,
                 oracle_len: target,
                 score: target as f32,
+                prefix_id: 0,
+                prefix_len: 0,
             }
         })
         .collect()

@@ -29,6 +29,8 @@ fn mk_req(id: u64, target: u32) -> Request {
         target_len: target,
         oracle_len: target,
         score: target as f32,
+        prefix_id: 0,
+        prefix_len: 0,
     }
 }
 

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use pars_serve::config::{CostModel, PolicyKind, SchedulerConfig};
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{PjrtScorer, QueuedRequest, Request, Scorer, WaitingQueue};
-use pars_serve::engine::SimEngine;
+use pars_serve::engine::{KvBlockManager, SimEngine};
 use pars_serve::eval::kendall_tau_b;
 use pars_serve::metrics::Histogram;
 use pars_serve::runtime::{ArtifactManifest, Runtime};
@@ -67,6 +67,8 @@ fn deep_queue(n: u64) -> WaitingQueue {
                 target_len: 5,
                 oracle_len: 5,
                 score: 0.0,
+                prefix_id: 0,
+                prefix_len: 0,
             },
         });
     }
@@ -93,6 +95,8 @@ fn main() {
             target_len: 10,
             oracle_len: 10,
             score: rng.f64() as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         })
         .collect();
     h.bench("waiting_queue/push_pop_1000", || {
@@ -129,6 +133,34 @@ fn main() {
     let allocs = ALLOCS.load(Ordering::Relaxed) - before;
     assert_eq!(allocs, 0, "guard no-op / rescore no-change must be allocation-free");
 
+    // shared-prefix registry on a deep pool: the resident-hit lookup is
+    // what every dispatch decision pays under prefix-affine routing
+    // (once per eligible replica), and the shared-admit feasibility
+    // check is its admission-time mirror — both must stay cheap and
+    // allocation-free however deep the registry grows
+    let mut kv = KvBlockManager::new(1 << 20);
+    for id in 1..=4096u64 {
+        assert_eq!(kv.insert_prefix(id, 32), 32, "deep registry build must not be refused");
+    }
+    h.bench("kv_prefix/resident_sweep_4096", || {
+        let mut toks = 0usize;
+        for id in 1..=4096u64 {
+            toks += kv.prefix_resident(id);
+        }
+        black_box(toks)
+    });
+    h.bench("kv_prefix/can_admit_shared_4096", || {
+        black_box(kv.can_admit_shared(2048, 48, 64))
+    });
+    // pinned, not just timed: the resident-hit path may not allocate
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let resident = kv.prefix_resident(2048);
+    let admissible = kv.can_admit_shared(2048, 48, 64);
+    let allocs = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(resident, 32, "prefix 2048 was registered with two full blocks");
+    assert!(admissible, "a near-empty pool must admit a sharer");
+    assert_eq!(allocs, 0, "prefix lookup / shared-admit check must be allocation-free");
+
     // histogram record (per-token-latency tracking)
     h.bench("histogram/record_10k", || {
         let mut hist = Histogram::new();
@@ -156,6 +188,8 @@ fn main() {
                 target_len: 20 + (i % 100) as u32 * 7,
                 oracle_len: 20 + (i % 100) as u32 * 7,
                 score: 0.0,
+                prefix_id: 0,
+                prefix_len: 0,
             })
             .collect();
         black_box(c.serve(reqs).unwrap().report.avg_per_token_ms)

@@ -6,8 +6,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::cli::Args;
 use crate::config::{
-    AdmissionMode, Config, CostModel, DispatchKind, PolicyKind, PoolPenaltyMode, PreemptMode,
-    ReplicaCaps, RerankMode, StealMode, SwapEvictMode, SwapMode, SwapPricingMode, TenantClass,
+    AdmissionMode, AffinityMode, Config, CostModel, DispatchKind, PolicyKind, PoolPenaltyMode,
+    PreemptMode, ReplicaCaps, RerankMode, StealMode, SwapEvictMode, SwapMode, SwapPricingMode,
+    TenantClass,
 };
 use crate::coordinator::policy::make_policy;
 use crate::coordinator::{
@@ -21,7 +22,7 @@ use crate::runtime::{ArtifactManifest, Runtime};
 use crate::util::bench::Table;
 use crate::util::rng::Rng;
 use crate::util::stats::linear_fit;
-use crate::workload::{Arrival, TestSet};
+use crate::workload::{Arrival, PrefixTemplates, TestSet};
 
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
@@ -75,6 +76,14 @@ COMMANDS:
                 --pool-penalty off|occupancy  charge host-pool occupancy on
                                     dispatch/steal load keys so routing leans
                                     away from replicas whose pool is full
+                --affinity off|prefix  prefix-affine routing: bias dispatch
+                                    and steal choices toward replicas whose
+                                    shared-prefix registry already holds the
+                                    request's template KV
+                --prefix-share <f>  templated workload generator: the
+                                    fraction of requests stamped from a
+                                    small shared-template pool, in [0, 1]
+                                    (0 = untemplated, the default)
                 --rerank off|interval(ms)|on_token  continuous re-ranking:
                                     refine predicted lengths from decode
                                     progress, re-key the waiting queue and
@@ -177,6 +186,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if let Some(s) = args.str_opt("pool-penalty")? {
         cfg.scheduler.pool_penalty = PoolPenaltyMode::parse(s)?;
+    }
+    if let Some(s) = args.str_opt("affinity")? {
+        cfg.scheduler.affinity = AffinityMode::parse(s)?;
     }
     if let Some(r) = args.str_opt("rerank")? {
         cfg.scheduler.rerank = RerankMode::parse(r)?;
@@ -286,6 +298,14 @@ fn serve(args: &Args) -> Result<()> {
     let engine_kind = args.str_or("engine", "sim")?;
     let n = args.usize_or("n", 500)?;
     let cost = harness::load_cost_model(&cfg.artifacts_dir);
+    // validate the share ratio before any work happens: a malformed
+    // `--prefix-share` must exit non-zero, not template silently
+    let prefix_share = args.f64_or("prefix-share", 0.0)?;
+    let templates = if prefix_share != 0.0 {
+        Some(PrefixTemplates::new(prefix_share, cfg.seed)?)
+    } else {
+        None
+    };
 
     match engine_kind.as_str() {
         "sim" => {
@@ -293,7 +313,7 @@ fn serve(args: &Args) -> Result<()> {
             let arrivals = make_arrivals(args, &cfg, &ts, &cost, n)?;
             println!(
                 "workload: {dataset}/{model}  n={}  policy={}  engine=sim  \
-                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}{}{}{}",
+                 replicas={}  dispatch={}  steal={}  preempt={}  swap={}  rerank={}{}{}{}{}{}{}{}",
                 arrivals.len(),
                 cfg.policy.name(),
                 cfg.scheduler.replicas,
@@ -317,6 +337,16 @@ fn serve(args: &Args) -> Result<()> {
                 } else {
                     String::new()
                 },
+                if cfg.scheduler.affinity != AffinityMode::Off {
+                    format!("  affinity={}", cfg.scheduler.affinity.name())
+                } else {
+                    String::new()
+                },
+                if let Some(t) = &templates {
+                    format!("  prefix_share={}", t.share())
+                } else {
+                    String::new()
+                },
                 if cfg.scheduler.score_noise > 0.0 {
                     format!("  score_noise={}", cfg.scheduler.score_noise)
                 } else {
@@ -331,6 +361,9 @@ fn serve(args: &Args) -> Result<()> {
             let mut opts = harness::ServeOptions::new();
             if let Some((_, sink)) = events.as_mut() {
                 opts = opts.sink(sink as &mut dyn EventSink);
+            }
+            if let Some(t) = templates.clone() {
+                opts = opts.templates(t);
             }
             let out = harness::run_sharded_with(
                 &ts,
@@ -353,6 +386,14 @@ fn serve(args: &Args) -> Result<()> {
                 out.merged.preemptions,
                 out.merged.wasted_decode_tokens
             );
+            if cfg.scheduler.affinity != AffinityMode::Off
+                || out.merged.cached_prefill_tokens > 0
+            {
+                println!(
+                    "prefix: hits={}  cached_prefill_tokens={}",
+                    out.merged.prefix_hits, out.merged.cached_prefill_tokens
+                );
+            }
             if cfg.scheduler.swap != SwapMode::Off {
                 let mean_restore = if out.merged.resumes > 0 {
                     out.merged.restore_delay_ms / out.merged.resumes as f64
@@ -400,12 +441,15 @@ fn serve(args: &Args) -> Result<()> {
             );
             let scores = book.scores.get(cfg.policy.name()).map(|v| v.as_slice());
             let mut rng = Rng::new(cfg.seed ^ 0x5EED);
-            let reqs = harness::build_requests(
+            let mut reqs = harness::build_requests(
                 &ts,
                 &arrivals,
                 scores,
                 harness::LiveLengths::Fresh(&mut rng),
             );
+            if let Some(t) = &templates {
+                t.apply(&mut reqs);
+            }
             let mut engine = PjrtEngine::load_with_swap(
                 &rt,
                 &manifest,
@@ -557,9 +601,9 @@ fn sweep(args: &Args) -> Result<()> {
 
     let mut csv = String::from(
         "dataset,model,policy,replicas,dispatch,steal,preempt,swap,swap_pricing,swap_evict,\
-         rerank,rate_req_s,rep,\
+         rerank,affinity,rate_req_s,rep,\
          avg_ms_tok,p90_ms_tok,p99_ms_tok,ttft_p50_ms,throughput_tok_s,boosts,preemptions,\
-         wasted_tokens,swapped_tokens,resumed_tokens,migrated_tokens\n",
+         wasted_tokens,swapped_tokens,resumed_tokens,migrated_tokens,cached_prefill_tokens\n",
     );
     for &kind in &suite {
         for &rate in &rates {
@@ -568,7 +612,7 @@ fn sweep(args: &Args) -> Result<()> {
                 let sc = &cfg.scheduler;
                 let out = harness::run_sharded(&ts, &arrivals, kind, &book, &cost, sc)?;
                 csv.push_str(&format!(
-                    "{dataset},{model},{},{},{},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{},{}\n",
+                    "{dataset},{model},{},{},{},{},{},{},{},{},{},{},{rate:.3},{rep},{:.2},{:.2},{:.2},{:.1},{:.1},{},{},{},{},{},{},{}\n",
                     kind.name().replace(' ', "_"),
                     cfg.scheduler.replicas,
                     cfg.scheduler.dispatch.name(),
@@ -578,6 +622,7 @@ fn sweep(args: &Args) -> Result<()> {
                     cfg.scheduler.swap_pricing.name(),
                     cfg.scheduler.swap_evict.name(),
                     cfg.scheduler.rerank.name(),
+                    cfg.scheduler.affinity.name(),
                     out.merged.report.avg_per_token_ms,
                     out.merged.report.p90_per_token_ms,
                     out.merged.report.per_token.p99,
@@ -588,7 +633,8 @@ fn sweep(args: &Args) -> Result<()> {
                     out.merged.wasted_decode_tokens,
                     out.merged.swapped_out_tokens,
                     out.merged.resumed_tokens,
-                    out.merged.migrated_tokens
+                    out.merged.migrated_tokens,
+                    out.merged.cached_prefill_tokens
                 ));
             }
         }
@@ -811,6 +857,32 @@ fn replay(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    // the prefix economy: how often dispatch landed templated work on a
+    // replica already holding its prefix, and how many prefill tokens
+    // admission served from the shared pools instead of computing —
+    // only rendered when the capture saw any prefix activity, so
+    // untemplated replays keep their old output exactly
+    if book.replicas.iter().any(|r| r.prefix_hits > 0 || r.cached_prefill_tokens > 0) {
+        let mut pt = Table::new(
+            "prefix economy (shared-prefix KV reuse)",
+            &["replica", "dispatched", "prefix hits", "hit rate", "cached prefill tok"],
+        );
+        for r in &book.replicas {
+            let rate = if r.dispatched > 0 {
+                r.prefix_hits as f64 / r.dispatched as f64
+            } else {
+                0.0
+            };
+            pt.row(&[
+                r.replica.to_string(),
+                r.dispatched.to_string(),
+                r.prefix_hits.to_string(),
+                format!("{rate:.2}"),
+                r.cached_prefill_tokens.to_string(),
+            ]);
+        }
+        pt.print();
+    }
     Ok(())
 }
 
@@ -1007,6 +1079,69 @@ mod tests {
         let book = crate::coordinator::ReplayBook::from_jsonl(&body).unwrap();
         assert_eq!(book.replicas.iter().map(|r| r.rescores).sum::<u64>(), rescored);
         std::fs::remove_file(&path).ok();
+    }
+
+    /// Flags shared by this test and the CI prefix smoke: a 60%
+    /// templated stream over a two-replica least-loaded fleet with
+    /// prefix-affine routing on.  The run is seed-deterministic, so if
+    /// this test sees `prefix_hit` dispatches and cached admissions the
+    /// CI smoke on the same flags cannot flake.
+    const PREFIX_SMOKE_FLAGS: [&str; 19] = [
+        "serve", "--policy", "pars", "--replicas", "2", "--dispatch", "least-loaded",
+        "--max-batch", "4", "--rate", "12", "--n", "300", "--affinity", "prefix",
+        "--prefix-share", "0.6", "--seed", "20260730",
+    ];
+
+    #[test]
+    fn serve_with_prefix_affinity_emits_hits_and_replay_tallies_the_economy() {
+        let dir = std::env::temp_dir().join("pars_prefix_events_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prefix_ev.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        let mut argv: Vec<&str> = PREFIX_SMOKE_FLAGS.to_vec();
+        argv.extend(["--events", &path_s]);
+        dispatch(&args(&argv)).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let (mut hits, mut cached) = (0u64, 0u64);
+        for line in body.lines() {
+            let v = crate::util::json::parse(line).expect("every line is valid JSON");
+            match v.get("event").unwrap().as_str().unwrap() {
+                // every dispatched line carries the prefix_hit verdict
+                "dispatched" => {
+                    if v.get("prefix_hit").unwrap().as_bool().unwrap() {
+                        hits += 1;
+                    }
+                }
+                // every admitted line books its cached prefill tokens
+                "admitted" => {
+                    cached += v.get("prefix_cached").unwrap().as_f64().unwrap() as u64;
+                }
+                _ => {}
+            }
+        }
+        assert!(hits > 0, "affinity=prefix over a templated stream never hit");
+        assert!(cached > 0, "templated admissions never reused cached prefill");
+        // the replay subcommand consumes the same capture, prefix
+        // economy table included, and its books match the event sums
+        dispatch(&args(&["replay", "--events", &path_s])).unwrap();
+        let book = crate::coordinator::ReplayBook::from_jsonl(&body).unwrap();
+        assert_eq!(book.replicas.iter().map(|r| r.prefix_hits).sum::<u64>(), hits);
+        assert_eq!(
+            book.replicas.iter().map(|r| r.cached_prefill_tokens).sum::<u64>(),
+            cached,
+            "replay books disagree with the admitted-event cached sums"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn serve_rejects_malformed_prefix_knobs_loudly() {
+        // ratio out of range / not a number: refused before any work
+        assert!(dispatch(&args(&["serve", "--n", "10", "--prefix-share", "1.5"])).is_err());
+        assert!(dispatch(&args(&["serve", "--n", "10", "--prefix-share", "-0.2"])).is_err());
+        assert!(dispatch(&args(&["serve", "--n", "10", "--prefix-share", "abc"])).is_err());
+        // unknown affinity mode: parse refuses
+        assert!(dispatch(&args(&["serve", "--n", "10", "--affinity", "bogus"])).is_err());
     }
 
     #[test]

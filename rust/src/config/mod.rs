@@ -501,6 +501,54 @@ impl PoolPenaltyMode {
     }
 }
 
+/// Prefix-affinity routing (`[scheduler] affinity`): whether dispatch
+/// and work stealing prefer replicas whose shared-prefix KV registry
+/// already holds a templated request's prefix.
+///
+/// With `Off`, routing is prefix-blind (the pre-affinity behaviour,
+/// bit-for-bit — including the O(1) indexed dispatch pick).  With
+/// `Prefix`, a templated request (`prefix_id != 0`) routes to a replica
+/// where its template is resident whenever an eligible one exists (ties
+/// broken by the dispatch kind's own load key), and a steal's thief
+/// pick is biased the same way — so siblings of one template pile onto
+/// the replica that already paid for its prefill.  Untemplated requests
+/// never reach the affinity scan, which keeps legacy traces identical
+/// under either setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AffinityMode {
+    /// Routing is prefix-blind (the pre-affinity behaviour).
+    Off,
+    /// Prefer replicas whose prefix registry holds the request's
+    /// template.
+    Prefix,
+}
+
+impl AffinityMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        parse_mode(
+            "affinity",
+            "off | prefix",
+            &[
+                ModeVariant::Bare(&["off", "none"], AffinityMode::Off),
+                ModeVariant::Bare(&["prefix"], AffinityMode::Prefix),
+            ],
+            s,
+        )
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AffinityMode::Off => "off".to_string(),
+            AffinityMode::Prefix => "prefix".to_string(),
+        }
+    }
+
+    /// Representative modes for sweeps/tests.
+    pub fn all() -> [AffinityMode; 2] {
+        [AffinityMode::Off, AffinityMode::Prefix]
+    }
+}
+
 /// Admission policy of the ingress tier — what the shielding front-end
 /// does with an arrival *before* the coordinator sees it.
 ///
@@ -748,6 +796,10 @@ pub struct SchedulerConfig {
     /// key is inflated by host swap-pool occupancy (`off` keeps routing
     /// pool-oblivious, bit-for-bit).
     pub pool_penalty: PoolPenaltyMode,
+    /// Prefix-affinity routing: whether dispatch and stealing prefer
+    /// replicas already holding a templated request's prefix (`off`
+    /// keeps routing prefix-blind, bit-for-bit).
+    pub affinity: AffinityMode,
     /// Continuous re-ranking: when length predictions are refreshed
     /// from decode progress and the waiting queue re-keyed under them.
     pub rerank: RerankMode,
@@ -786,6 +838,7 @@ impl Default for SchedulerConfig {
             swap_pricing: SwapPricingMode::Off,
             swap_evict: SwapEvictMode::Off,
             pool_penalty: PoolPenaltyMode::Off,
+            affinity: AffinityMode::Off,
             rerank: RerankMode::Off,
             score_noise: 0.0,
             event_log_capacity: 16_384,
@@ -946,6 +999,9 @@ impl Config {
         }
         if let Some(v) = doc.get_str("scheduler", "pool_penalty") {
             c.scheduler.pool_penalty = PoolPenaltyMode::parse(v)?;
+        }
+        if let Some(v) = doc.get_str("scheduler", "affinity") {
+            c.scheduler.affinity = AffinityMode::parse(v)?;
         }
         if let Some(v) = doc.get_str("scheduler", "rerank") {
             c.scheduler.rerank = RerankMode::parse(v)?;
@@ -1648,6 +1704,18 @@ mod tests {
             assert_eq!(PoolPenaltyMode::parse(&m.name()).unwrap(), m);
         }
         assert_eq!(PoolPenaltyMode::parse("NONE").unwrap(), PoolPenaltyMode::Off);
+    }
+
+    #[test]
+    fn parse_affinity_knob() {
+        let c = Config::from_toml("[scheduler]\naffinity = \"prefix\"").unwrap();
+        assert_eq!(c.scheduler.affinity, AffinityMode::Prefix);
+        assert_eq!(SchedulerConfig::default().affinity, AffinityMode::Off);
+        assert!(Config::from_toml("[scheduler]\naffinity = \"sometimes\"").is_err());
+        for m in AffinityMode::all() {
+            assert_eq!(AffinityMode::parse(&m.name()).unwrap(), m);
+        }
+        assert_eq!(AffinityMode::parse("NONE").unwrap(), AffinityMode::Off);
     }
 
     #[test]

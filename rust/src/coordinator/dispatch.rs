@@ -99,6 +99,23 @@
 //!   predictors, and `rerank = off` leaves the serve loop bitwise
 //!   untouched (pinned by `tests/sharded.rs`; FCFS keys are arrival
 //!   times, so re-ranking over FCFS is inert by construction).
+//! * **Prefix-affine routing** (`[scheduler] affinity = off|prefix`) —
+//!   templated requests (`Request::prefix_id != 0`) admit against a
+//!   replica-local shared-prefix KV pool, but load-driven dispatch is
+//!   prefix-blind: it happily scatters siblings of one template across
+//!   the fleet, and every replica then prefills the template from
+//!   scratch.  With `affinity = prefix`, dispatch prefers replicas
+//!   whose engine already holds the request's template
+//!   ([`Engine::prefix_resident`]) — a linear eligibility scan keyed
+//!   `(miss, load key)`, so residency wins first and the dispatch
+//!   kind's own load key breaks ties — and a steal's thief pick is
+//!   biased the same way.  Each routing decision reports whether it
+//!   landed on a resident replica (`Dispatched { prefix_hit }`), and
+//!   admission books the tokens the prefix cache actually saved
+//!   (`Admitted { prefix_cached }`).  `affinity = off` keeps the O(1)
+//!   indexed pick bit-for-bit (pinned by `tests/sharded.rs`), as does
+//!   any untemplated trace — `prefix_id == 0` short-circuits before
+//!   the scan.
 //!
 //! Since the session refactor the loop itself is **re-entrant**: the
 //! batch entry points (`serve` / `serve_stream`) are thin wrappers that
@@ -127,8 +144,8 @@ use std::collections::{BTreeMap, VecDeque};
 use anyhow::Context;
 
 use crate::config::{
-    DispatchKind, PoolPenaltyMode, PreemptMode, RerankMode, SchedulerConfig, StealMode,
-    SwapEvictMode, SwapPricingMode,
+    AffinityMode, DispatchKind, PoolPenaltyMode, PreemptMode, RerankMode, SchedulerConfig,
+    StealMode, SwapEvictMode, SwapPricingMode,
 };
 use crate::coordinator::events::{
     EventSink, NullSink, PreemptKind, RejectReason, ServeEvent, SessionCtx,
@@ -213,6 +230,16 @@ struct Replica<E: Engine> {
     resumes: usize,
     /// Total suspend→resume delay across those resumes (ms).
     restore_delay_ms: f64,
+    /// Dispatch decisions that landed a templated request on a replica
+    /// already holding its prefix (stamped at decision time — the
+    /// residency the router saw, which an eviction may invalidate
+    /// before admission).
+    prefix_hits: usize,
+    /// Prefill tokens admission served from the shared-prefix pool
+    /// instead of computing (summed over [`Engine::prefill_shared`]'s
+    /// per-admission `cached` answer — the ground truth, not the
+    /// routing-time estimate).
+    cached_prefill_tokens: u64,
     /// prompt+target tokens sitting in inbox + waiting queue.
     queued_tokens: u64,
     /// prompt+target tokens reserved by the running batch.
@@ -251,6 +278,8 @@ impl<E: Engine> Replica<E> {
             migrated_tokens: 0,
             resumes: 0,
             restore_delay_ms: 0.0,
+            prefix_hits: 0,
+            cached_prefill_tokens: 0,
             queued_tokens: 0,
             running_tokens: 0,
             kv_blocks,
@@ -435,16 +464,35 @@ impl<E: Engine> Replica<E> {
                         self.waiting.unpop(q);
                         break;
                     }
-                    let slot = self
-                        .engine
-                        .prefill(&q.req.tokens, q.req.target_len)
-                        .context("prefill during admission")?;
+                    // a templated request admits against the shared
+                    // prefix pool — the engine answers how many prompt
+                    // tokens the cache actually served; untemplated
+                    // requests (prefix_id 0) take the plain path,
+                    // keeping legacy traces bitwise
+                    let (slot, cached) = if q.req.prefix_id != 0 {
+                        self.engine
+                            .prefill_shared(
+                                &q.req.tokens,
+                                q.req.target_len,
+                                q.req.prefix_id,
+                                q.req.prefix_len,
+                            )
+                            .context("prefill during admission")?
+                    } else {
+                        let slot = self
+                            .engine
+                            .prefill(&q.req.tokens, q.req.target_len)
+                            .context("prefill during admission")?;
+                        (slot, 0)
+                    };
+                    self.cached_prefill_tokens += cached as u64;
                     self.queued_tokens = self.queued_tokens.saturating_sub(total as u64);
                     self.running_tokens += total as u64;
                     let admitted_ms = self.engine.now_ms();
                     ctx.emit(ServeEvent::Admitted {
                         id: q.req.id,
                         replica: idx,
+                        prefix_cached: cached,
                         t_ms: admitted_ms,
                     });
                     self.running.insert(
@@ -852,6 +900,12 @@ pub struct ReplicaOutcome {
     pub resumes: usize,
     /// Total suspend→resume delay across those resumes (ms).
     pub restore_delay_ms: f64,
+    /// Dispatch decisions that landed a templated request here while
+    /// its prefix was already resident (decision-time residency).
+    pub prefix_hits: usize,
+    /// Prefill tokens admission served from the shared-prefix pool
+    /// instead of computing.
+    pub cached_prefill_tokens: u64,
     pub boosts: usize,
     pub peak_waiting: usize,
     pub makespan_ms: f64,
@@ -1015,9 +1069,41 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
     /// whole KV budget is smaller than the request are skipped, so a
     /// heterogeneous fleet routes big jobs around its small replicas
     /// instead of wedging them.
-    fn pick_replica(&mut self, total_tokens: u32) -> usize {
+    ///
+    /// With `affinity = prefix` and a templated request, replicas whose
+    /// engine already holds the template win over the load order: the
+    /// pick is a linear eligibility scan keyed `(miss, load key)` — the
+    /// load index's heap key is request-independent, so per-request
+    /// affinity cannot ride the O(1) peek.  When no eligible replica
+    /// holds the template the normal load-driven pick seeds it.
+    /// `affinity = off` (and every untemplated request) never reaches
+    /// the scan, keeping the indexed pick bit-for-bit.
+    fn pick_replica(&mut self, total_tokens: u32, prefix_id: u64) -> usize {
         if self.replicas.len() == 1 {
             return 0;
+        }
+        if self.sched.affinity == AffinityMode::Prefix && prefix_id != 0 {
+            let hit = |r: &Replica<E>| {
+                r.engine.prefix_resident(prefix_id) > 0 && r.can_ever_hold(total_tokens)
+            };
+            if self.replicas.iter().any(|r| hit(r)) {
+                let (max_kv, max_slots) = (self.fleet_max_kv_blocks, self.fleet_max_slots);
+                let pp = self.sched.pool_penalty;
+                return match self.dispatch {
+                    DispatchKind::Ranked => self.argmin_eligible(total_tokens, |r| {
+                        (
+                            r.engine.prefix_resident(prefix_id) == 0,
+                            r.ranked_key(max_kv, max_slots, pp),
+                        )
+                    }),
+                    // round-robin has no load key; least-loaded supplies
+                    // the natural tie-break for both
+                    DispatchKind::RoundRobin | DispatchKind::LeastLoaded => self
+                        .argmin_eligible(total_tokens, |r| {
+                            (r.engine.prefix_resident(prefix_id) == 0, r.load_key(max_kv, pp))
+                        }),
+                };
+            }
         }
         match self.dispatch {
             DispatchKind::RoundRobin => {
@@ -1147,15 +1233,38 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         let eligible = |r: &Replica<E>| {
             !r.has_work() && r.engine.free_slots() > 0 && r.engine.kv_headroom_for(total)
         };
-        let thief = match self.sched.pool_penalty {
-            PoolPenaltyMode::Off => self.replicas.iter().position(eligible),
-            PoolPenaltyMode::Occupancy => self
-                .replicas
+        // with `affinity = prefix` and a templated stolen entry, an
+        // eligible thief already holding the entry's template outranks
+        // the rest (the rescue then prefills only the suffix); within
+        // each residency class the pool-penalty order applies
+        // unchanged.  Affinity off — or an untemplated entry — takes
+        // the frozen pick verbatim.
+        let affine = self.sched.affinity == AffinityMode::Prefix && q.req.prefix_id != 0;
+        let thief = if affine {
+            self.replicas
                 .iter()
                 .enumerate()
                 .filter(|(_, r)| eligible(r))
-                .min_by_key(|&(i, r)| (r.engine.host_blocks_used(), i))
-                .map(|(i, _)| i),
+                .min_by_key(|&(i, r)| {
+                    let miss = r.engine.prefix_resident(q.req.prefix_id) == 0;
+                    let pool = match self.sched.pool_penalty {
+                        PoolPenaltyMode::Off => 0,
+                        PoolPenaltyMode::Occupancy => r.engine.host_blocks_used(),
+                    };
+                    (miss, pool, i)
+                })
+                .map(|(i, _)| i)
+        } else {
+            match self.sched.pool_penalty {
+                PoolPenaltyMode::Off => self.replicas.iter().position(eligible),
+                PoolPenaltyMode::Occupancy => self
+                    .replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| eligible(r))
+                    .min_by_key(|&(i, r)| (r.engine.host_blocks_used(), i))
+                    .map(|(i, _)| i),
+            }
         };
         let Some(thief) = thief else {
             // no idle replica can hold even this one — put it back
@@ -1297,6 +1406,22 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         self.predictor.score(req)
     }
 
+    /// Drop the predictor's book entry for a refused request.  The
+    /// ingress tier scores shed probes through [`Self::score_request`]
+    /// (which books an estimate whenever re-ranking is on); an id the
+    /// tier then refuses never reaches the completion-side forget in
+    /// the serve loop, so every terminal refusal must come back through
+    /// here or its entry leaks for the life of the coordinator.
+    pub(crate) fn forget_request(&mut self, id: u64) {
+        self.predictor.forget(id);
+    }
+
+    /// Requests the predictor currently tracks (leak observability —
+    /// 0 after a fully drained run).
+    pub(crate) fn predictor_tracked(&self) -> usize {
+        self.predictor.tracked()
+    }
+
     /// Requests sitting in replica queues (inbox + waiting; running
     /// excluded) — the fleet backlog the shed admission mode bounds.
     pub(crate) fn fleet_backlog(&self) -> usize {
@@ -1362,11 +1487,26 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             return None;
         }
         let key = self.predictor.score(&req);
-        let idx = self.pick_replica(total);
+        let idx = self.pick_replica(total, req.prefix_id);
+        // decision-time residency: did routing land the template on a
+        // replica already holding its prefix?  Recorded regardless of
+        // the affinity knob, so `affinity = off` runs still expose
+        // their (accidental) hit-rate for the A/B comparison.
+        let prefix_hit =
+            req.prefix_id != 0 && self.replicas[idx].engine.prefix_resident(req.prefix_id) > 0;
         let r = &mut self.replicas[idx];
         r.dispatched += 1;
+        if prefix_hit {
+            r.prefix_hits += 1;
+        }
         r.queued_tokens += total as u64;
-        ctx.emit(ServeEvent::Dispatched { id: req.id, replica: idx, key, t_ms: decision_ms });
+        ctx.emit(ServeEvent::Dispatched {
+            id: req.id,
+            replica: idx,
+            key,
+            prefix_hit,
+            t_ms: decision_ms,
+        });
         r.inbox.push_back(QueuedRequest {
             req,
             key,
@@ -1401,6 +1541,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
         let mut migrated_tokens = 0u64;
         let mut resumes = 0usize;
         let mut restore_delay_ms = 0.0f64;
+        let mut prefix_hits = 0usize;
+        let mut cached_prefill_tokens = 0u64;
         let mut peak_waiting = 0usize;
         let mut makespan = f64::NEG_INFINITY;
         let mut wall = f64::NEG_INFINITY;
@@ -1421,6 +1563,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 migrated_tokens: r.migrated_tokens,
                 resumes: r.resumes,
                 restore_delay_ms: r.restore_delay_ms,
+                prefix_hits: r.prefix_hits,
+                cached_prefill_tokens: r.cached_prefill_tokens,
                 boosts: r.waiting.boosts,
                 peak_waiting: r.peak_waiting,
                 makespan_ms: r.makespan_ms,
@@ -1433,6 +1577,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
             migrated_tokens += r.migrated_tokens;
             resumes += r.resumes;
             restore_delay_ms += r.restore_delay_ms;
+            prefix_hits += r.prefix_hits;
+            cached_prefill_tokens += r.cached_prefill_tokens;
             peak_waiting = peak_waiting.max(r.peak_waiting);
             makespan = makespan.max(r.makespan_ms);
             wall = wall.max(r_wall);
@@ -1452,6 +1598,8 @@ impl<'p, E: Engine> ShardedCoordinator<'p, E> {
                 migrated_tokens,
                 resumes,
                 restore_delay_ms,
+                prefix_hits,
+                cached_prefill_tokens,
             },
             per_replica,
         }
@@ -1474,6 +1622,8 @@ mod tests {
             target_len: target,
             oracle_len: target,
             score: target as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
 
@@ -2368,6 +2518,83 @@ mod tests {
         assert_eq!(a.merged.preemptions, b.merged.preemptions);
         assert_eq!(a.merged.makespan_ms, b.merged.makespan_ms);
         assert_eq!(a.merged.report.e2e.mean, b.merged.report.e2e.mean);
+    }
+
+    /// A templated request long enough for whole-block sharing: 48
+    /// prompt tokens, 32 of them (two full KV blocks) covered by the
+    /// template `prefix_id`.
+    fn templated(id: u64, arrival: f64, prefix_id: u64) -> Request {
+        let mut tokens = vec![7i32; 48];
+        tokens[47] = 2;
+        Request {
+            id,
+            tokens,
+            prompt_len: 48,
+            arrival_ms: arrival,
+            target_len: 10,
+            oracle_len: 10,
+            score: 10.0,
+            prefix_id,
+            prefix_len: 32,
+        }
+    }
+
+    #[test]
+    fn prefix_affinity_chases_the_resident_replica() {
+        use crate::config::AffinityMode;
+        // one seed, then five siblings of the same template well after
+        // the seed admitted: affinity=prefix must pile every sibling
+        // onto the replica holding the template, and admission must
+        // serve the cached 32-token prefix for each; affinity=off
+        // load-balances the siblings and hits at most by accident
+        let mk = |affinity: AffinityMode| {
+            let mut s = sched(2, 4, DispatchKind::LeastLoaded);
+            s.affinity = affinity;
+            let mut reqs = vec![templated(0, 0.0, 7)];
+            reqs.extend((1..6).map(|i| templated(i, 60.0, 7)));
+            run(&s, PolicyKind::Fcfs, reqs, 4096)
+        };
+        let on = mk(AffinityMode::Prefix);
+        assert_eq!(on.merged.report.n_requests, 6);
+        let (a, b) = (on.per_replica[0].dispatched, on.per_replica[1].dispatched);
+        assert!(a == 6 || b == 6, "affinity must pile the template onto one replica: {a}/{b}");
+        assert_eq!(on.merged.prefix_hits, 5, "every sibling must dispatch onto residency");
+        assert_eq!(
+            on.merged.cached_prefill_tokens,
+            5 * 32,
+            "each sibling admits against the two cached blocks"
+        );
+        let off = mk(AffinityMode::Off);
+        assert_eq!(off.merged.report.n_requests, 6);
+        assert!(
+            off.merged.prefix_hits < on.merged.prefix_hits,
+            "prefix-blind routing must scatter the template: off={} on={}",
+            off.merged.prefix_hits,
+            on.merged.prefix_hits
+        );
+        assert!(off.merged.cached_prefill_tokens < on.merged.cached_prefill_tokens);
+    }
+
+    #[test]
+    fn untemplated_traces_ignore_the_affinity_knob() {
+        use crate::config::AffinityMode;
+        // prefix_id 0 short-circuits before the affinity scan: the
+        // whole run must reproduce affinity=off to the last record
+        let mk = |affinity: AffinityMode| {
+            let mut s = sched(2, 2, DispatchKind::LeastLoaded);
+            s.affinity = affinity;
+            let reqs: Vec<Request> = (0..20).map(|i| mk_req(i, i as f64 * 3.0, 12)).collect();
+            run(&s, PolicyKind::Fcfs, reqs, 4096)
+        };
+        let off = mk(AffinityMode::Off);
+        let on = mk(AffinityMode::Prefix);
+        assert_eq!(on.merged.prefix_hits, 0);
+        assert_eq!(on.merged.cached_prefill_tokens, 0);
+        assert_eq!(on.merged.makespan_ms, off.merged.makespan_ms);
+        assert_eq!(
+            format!("{:?}", on.per_replica.iter().map(|r| &r.records).collect::<Vec<_>>()),
+            format!("{:?}", off.per_replica.iter().map(|r| &r.records).collect::<Vec<_>>()),
+        );
     }
 
     #[test]

@@ -130,9 +130,17 @@ pub enum ServeEvent {
     /// Routed to `replica`'s inbox by the dispatch policy.  `key` is the
     /// admission-time priority (the predictor's score — a predicted
     /// length for SJF-family policies, the arrival time under FCFS).
-    Dispatched { id: u64, replica: usize, key: f64, t_ms: f64 },
+    /// `prefix_hit` says whether the request's template prefix was
+    /// resident on the chosen replica at routing time — always false for
+    /// untemplated requests; under `affinity = prefix` the router
+    /// actively biases toward making it true.
+    Dispatched { id: u64, replica: usize, key: f64, prefix_hit: bool, t_ms: f64 },
     /// Admitted into `replica`'s running batch (prefill done).
-    Admitted { id: u64, replica: usize, t_ms: f64 },
+    /// `prefix_cached` is the prompt tokens this admission served from
+    /// the replica's shared-prefix registry instead of recomputing (0
+    /// for a registry miss or an untemplated request) — the ground
+    /// truth the dispatch-time `prefix_hit` flag predicts.
+    Admitted { id: u64, replica: usize, prefix_cached: u32, t_ms: f64 },
     /// First decode token of the current admission round.
     FirstToken { id: u64, replica: usize, t_ms: f64 },
     /// Starvation guard promoted the queued request.
@@ -236,13 +244,16 @@ impl ServeEvent {
                     pairs.push(("tenant", Json::Str(t.clone())));
                 }
             }
-            ServeEvent::Dispatched { replica, key, .. } => {
+            ServeEvent::Dispatched { replica, key, prefix_hit, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
                 pairs.push(("key", Json::Num(*key)));
+                pairs.push(("prefix_hit", Json::Bool(*prefix_hit)));
             }
-            ServeEvent::Admitted { replica, .. }
-            | ServeEvent::FirstToken { replica, .. }
-            | ServeEvent::Boosted { replica, .. } => {
+            ServeEvent::Admitted { replica, prefix_cached, .. } => {
+                pairs.push(("replica", Json::Num(*replica as f64)));
+                pairs.push(("prefix_cached", Json::Num(*prefix_cached as f64)));
+            }
+            ServeEvent::FirstToken { replica, .. } | ServeEvent::Boosted { replica, .. } => {
                 pairs.push(("replica", Json::Num(*replica as f64)));
             }
             ServeEvent::Stolen { from, to, wasted, migrated, .. } => {
@@ -319,14 +330,21 @@ impl ServeEvent {
                 }
                 num(out, "until_ms", *until_ms);
             }
-            ServeEvent::Dispatched { id, replica, key, t_ms } => {
+            ServeEvent::Dispatched { id, replica, key, prefix_hit, t_ms } => {
                 num(out, "id", *id as f64);
                 num(out, "key", *key);
+                out.push_str(",\"prefix_hit\":");
+                out.push_str(if *prefix_hit { "true" } else { "false" });
                 num(out, "replica", *replica as f64);
                 num(out, "t_ms", *t_ms);
             }
-            ServeEvent::Admitted { id, replica, t_ms }
-            | ServeEvent::FirstToken { id, replica, t_ms }
+            ServeEvent::Admitted { id, replica, prefix_cached, t_ms } => {
+                num(out, "id", *id as f64);
+                num(out, "prefix_cached", *prefix_cached as f64);
+                num(out, "replica", *replica as f64);
+                num(out, "t_ms", *t_ms);
+            }
+            ServeEvent::FirstToken { id, replica, t_ms }
             | ServeEvent::Boosted { id, replica, t_ms } => {
                 num(out, "id", *id as f64);
                 num(out, "replica", *replica as f64);
@@ -563,6 +581,13 @@ impl<W: Write> EventSink for JsonlSink<W> {
 pub struct ReplicaTimeline {
     pub replica: usize,
     pub dispatched: u64,
+    /// Dispatches whose template prefix was resident here at routing
+    /// time (`Dispatched { prefix_hit: true }`).
+    pub prefix_hits: u64,
+    /// Prompt tokens admissions on this replica served from its
+    /// shared-prefix registry instead of recomputing (Σ `prefix_cached`
+    /// over `Admitted` events — reconciles against the outcome books).
+    pub cached_prefill_tokens: u64,
     pub admissions: u64,
     pub first_tokens: u64,
     pub boosts: u64,
@@ -742,18 +767,22 @@ impl ReplayBook {
                     self.tenants.entry(t.clone()).or_default().deferred += 1;
                 }
             }
-            ServeEvent::Dispatched { replica, t_ms, .. } => {
+            ServeEvent::Dispatched { replica, prefix_hit, t_ms, .. } => {
                 let r = self.replica(*replica);
                 r.dispatched += 1;
+                if *prefix_hit {
+                    r.prefix_hits += 1;
+                }
                 r.observe(*t_ms);
             }
-            ServeEvent::Admitted { id, replica, t_ms, .. } => {
+            ServeEvent::Admitted { id, replica, prefix_cached, t_ms, .. } => {
                 // a fresh (re-)admission opens a new record chain: any
                 // parked time belongs to the discarded earlier chain
                 self.park_started.remove(id);
                 self.parked_ms.remove(id);
                 let r = self.replica(*replica);
                 r.admissions += 1;
+                r.cached_prefill_tokens += *prefix_cached as u64;
                 r.observe(*t_ms);
             }
             ServeEvent::FirstToken { replica, t_ms, .. } => {
@@ -881,9 +910,19 @@ impl ReplayBook {
                 id,
                 replica: replica(v)?,
                 key: v.get("key")?.as_f64()?,
+                // absent in pre-prefix-cache captures — nothing was ever
+                // resident back then, so false is exact, not a guess
+                prefix_hit: v.get("prefix_hit").and_then(|b| b.as_bool()).unwrap_or(false),
                 t_ms,
             },
-            "admitted" => ServeEvent::Admitted { id, replica: replica(v)?, t_ms },
+            "admitted" => ServeEvent::Admitted {
+                id,
+                replica: replica(v)?,
+                // absent in pre-prefix-cache captures — every admission
+                // recomputed its full prompt, so 0 is exact, not a guess
+                prefix_cached: v.get("prefix_cached").and_then(|c| c.as_i64()).unwrap_or(0) as u32,
+                t_ms,
+            },
             "first_token" => ServeEvent::FirstToken { id, replica: replica(v)?, t_ms },
             "boosted" => ServeEvent::Boosted { id, replica: replica(v)?, t_ms },
             "stolen" => ServeEvent::Stolen {
@@ -1059,7 +1098,7 @@ mod tests {
     use crate::util::json;
 
     fn ev(id: u64) -> ServeEvent {
-        ServeEvent::Dispatched { id, replica: 1, key: 4.0, t_ms: 2.5 }
+        ServeEvent::Dispatched { id, replica: 1, key: 4.0, prefix_hit: false, t_ms: 2.5 }
     }
 
     #[test]
@@ -1196,9 +1235,16 @@ mod tests {
                 tenant: Some("gold".to_string()),
                 t_ms: 50.0,
             },
-            ServeEvent::Dispatched { id: 2, replica: 3, key: 41.75, t_ms: 10.0 },
-            ServeEvent::Dispatched { id: 2, replica: 0, key: f64::INFINITY, t_ms: -0.0 },
-            ServeEvent::Admitted { id: 3, replica: 1, t_ms: 11.0 },
+            ServeEvent::Dispatched { id: 2, replica: 3, key: 41.75, prefix_hit: false, t_ms: 10.0 },
+            ServeEvent::Dispatched {
+                id: 2,
+                replica: 0,
+                key: f64::INFINITY,
+                prefix_hit: true,
+                t_ms: -0.0,
+            },
+            ServeEvent::Admitted { id: 3, replica: 1, prefix_cached: 0, t_ms: 11.0 },
+            ServeEvent::Admitted { id: 3, replica: 1, prefix_cached: 48, t_ms: 11.5 },
             ServeEvent::FirstToken { id: 3, replica: 1, t_ms: 12.125 },
             ServeEvent::Boosted { id: 4, replica: 2, t_ms: 13.0 },
             ServeEvent::Stolen { id: 5, from: 1, to: 0, wasted: 3, migrated: 0, t_ms: 60.0 },
@@ -1298,8 +1344,14 @@ mod tests {
         // suspended span must still be excluded from busy_slot_ms when
         // the job later resumes on the thief and completes there
         let mut book = ReplayBook::default();
-        book.push(&ServeEvent::Dispatched { id: 1, replica: 0, key: 4.0, t_ms: 0.0 });
-        book.push(&ServeEvent::Admitted { id: 1, replica: 0, t_ms: 0.0 });
+        book.push(&ServeEvent::Dispatched {
+            id: 1,
+            replica: 0,
+            key: 4.0,
+            prefix_hit: false,
+            t_ms: 0.0,
+        });
+        book.push(&ServeEvent::Admitted { id: 1, replica: 0, prefix_cached: 0, t_ms: 0.0 });
         book.push(&ServeEvent::Preempted {
             id: 1,
             replica: 0,
@@ -1343,8 +1395,14 @@ mod tests {
         // victim was stamped with the thief's arrival-lifted clock, so
         // Stolen could precede the very suspension it carries
         let mut book = ReplayBook::default();
-        book.push(&ServeEvent::Dispatched { id: 1, replica: 0, key: 4.0, t_ms: 0.0 });
-        book.push(&ServeEvent::Admitted { id: 1, replica: 0, t_ms: 1.0 });
+        book.push(&ServeEvent::Dispatched {
+            id: 1,
+            replica: 0,
+            key: 4.0,
+            prefix_hit: false,
+            t_ms: 0.0,
+        });
+        book.push(&ServeEvent::Admitted { id: 1, replica: 0, prefix_cached: 0, t_ms: 1.0 });
         book.push(&ServeEvent::Preempted {
             id: 1,
             replica: 0,
@@ -1363,10 +1421,16 @@ mod tests {
         });
         assert_eq!(book.time_regressions, 1);
         // a different id at an earlier time is NOT a regression
-        book.push(&ServeEvent::Dispatched { id: 2, replica: 1, key: 1.0, t_ms: 10.0 });
+        book.push(&ServeEvent::Dispatched {
+            id: 2,
+            replica: 1,
+            key: 1.0,
+            prefix_hit: false,
+            t_ms: 10.0,
+        });
         assert_eq!(book.time_regressions, 1);
         // the high-water mark survives the regression: 99 < 100 still counts
-        book.push(&ServeEvent::Admitted { id: 1, replica: 1, t_ms: 99.0 });
+        book.push(&ServeEvent::Admitted { id: 1, replica: 1, prefix_cached: 0, t_ms: 99.0 });
         assert_eq!(book.time_regressions, 2);
     }
 
@@ -1439,10 +1503,43 @@ mod tests {
     }
 
     #[test]
+    fn prefix_fields_decode_with_backfill_and_book_the_economy() {
+        // pre-prefix captures carry no prefix_hit / prefix_cached keys:
+        // nothing was ever cached back then, so 0 replays exactly
+        let book = ReplayBook::from_jsonl(concat!(
+            "{\"event\":\"dispatched\",\"id\":5,\"key\":4,\"replica\":1,\"t_ms\":1}\n",
+            "{\"event\":\"admitted\",\"id\":5,\"replica\":1,\"t_ms\":2}\n",
+        ))
+        .unwrap();
+        assert_eq!(book.replicas[1].prefix_hits, 0);
+        assert_eq!(book.replicas[1].cached_prefill_tokens, 0);
+        // a templated capture books hits and cached tokens per replica,
+        // and the hot-path JSONL encoding round-trips both
+        let mut lines = String::new();
+        ServeEvent::Dispatched { id: 1, replica: 0, key: 4.0, prefix_hit: true, t_ms: 0.0 }
+            .write_json(&mut lines);
+        lines.push('\n');
+        ServeEvent::Admitted { id: 1, replica: 0, prefix_cached: 32, t_ms: 1.0 }
+            .write_json(&mut lines);
+        lines.push('\n');
+        ServeEvent::Dispatched { id: 2, replica: 0, key: 4.0, prefix_hit: false, t_ms: 2.0 }
+            .write_json(&mut lines);
+        lines.push('\n');
+        ServeEvent::Admitted { id: 2, replica: 0, prefix_cached: 0, t_ms: 3.0 }
+            .write_json(&mut lines);
+        lines.push('\n');
+        let book = ReplayBook::from_jsonl(&lines).unwrap();
+        assert_eq!(book.replicas[0].dispatched, 2);
+        assert_eq!(book.replicas[0].prefix_hits, 1);
+        assert_eq!(book.replicas[0].cached_prefill_tokens, 32);
+        assert_eq!(book.orphans, 0);
+    }
+
+    #[test]
     fn replay_book_counts_orphans_from_a_truncated_capture() {
         let mut book = ReplayBook::default();
         book.push(&ev(1)); // Dispatched: id 1 enters
-        book.push(&ServeEvent::Admitted { id: 1, replica: 1, t_ms: 3.0 });
+        book.push(&ServeEvent::Admitted { id: 1, replica: 1, prefix_cached: 0, t_ms: 3.0 });
         book.push(&ServeEvent::Rejected {
             id: 2,
             reason: RejectReason::Validation,
@@ -1451,7 +1548,7 @@ mod tests {
         });
         assert_eq!(book.orphans, 0, "a complete capture has no orphans");
         // id 9 was never dispatched — its prefix fell out of a bounded window
-        book.push(&ServeEvent::Admitted { id: 9, replica: 0, t_ms: 5.0 });
+        book.push(&ServeEvent::Admitted { id: 9, replica: 0, prefix_cached: 0, t_ms: 5.0 });
         book.push(&ServeEvent::FirstToken { id: 9, replica: 0, t_ms: 6.0 });
         assert_eq!(book.orphans, 2);
         assert_eq!(book.events, 5);

@@ -437,6 +437,10 @@ impl<'c, 'p, E: Engine> IngressTier<'c, 'p, E> {
                 self.deferred.insert(at, (until_ms, tenant, req));
             }
             Verdict::Reject(reason) => {
+                // the shed probe may have scored this id, booking a
+                // predictor estimate; a refusal is terminal, so drop it
+                // (no-op when the verdict never reached the probe)
+                self.session.forget(req.id);
                 self.rejected_by_reason[tenant][reason.index()] += 1;
                 self.session.emit_ingress(ServeEvent::Rejected {
                     id: req.id,
@@ -582,7 +586,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CostModel, DispatchKind, PolicyKind, SchedulerConfig};
+    use crate::config::{CostModel, DispatchKind, PolicyKind, RerankMode, SchedulerConfig};
     use crate::coordinator::policy::make_policy;
     use crate::engine::SimEngine;
 
@@ -595,6 +599,8 @@ mod tests {
             target_len: target,
             oracle_len: target,
             score: target as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
 
@@ -699,6 +705,34 @@ mod tests {
             })
             .count();
         assert_eq!(shed, out.rejected_by_reason[2]);
+    }
+
+    #[test]
+    fn refused_work_leaves_no_predictor_state_behind() {
+        // with re-ranking on, every score books a predictor estimate —
+        // including the shed probe's.  A refused id never reaches the
+        // completion-side forget, so the reject arm must drop its entry
+        // itself: drain a shed-heavy burst and assert the book is empty
+        // (every id forgotten — completed and refused alike).
+        let s = SchedulerConfig { rerank: RerankMode::OnToken, ..sched(1, 1) };
+        let policy = make_policy(PolicyKind::Pars);
+        let mut coord =
+            ShardedCoordinator::new(engines(&s, 4096), policy.as_ref(), s.dispatch, s.clone());
+        let cfg = IngressConfig { admission: AdmissionMode::Shed(8), ..Default::default() };
+        let feed: Vec<(usize, Request)> = (0..60).map(|i| (0, mk_req(i, 0.0, 20))).collect();
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let out = serve_feed(&mut coord, &cfg, feed, &mut events).unwrap();
+        assert!(out.rejected_by_reason[2] > 0, "the drain must actually shed");
+        assert_eq!(
+            out.outcome.merged.report.n_requests,
+            out.admitted,
+            "every admitted request must complete"
+        );
+        assert_eq!(
+            coord.predictor_tracked(),
+            0,
+            "a drained run must leak no predictor state for refused ids"
+        );
     }
 
     #[test]

@@ -68,4 +68,15 @@ pub struct Request {
     /// Predictor score, computed once at admission (PARS-family policies).
     /// Higher ⇒ longer expected response.
     pub score: f32,
+    /// Shared-template identity: requests produced from the same prompt
+    /// template carry the same non-zero id, and engines holding that
+    /// template's KV in their prefix registry admit them against the
+    /// cached blocks.  0 means "no template" — the request is
+    /// prefix-blind end to end (the default everywhere a trace does not
+    /// stamp one, which is what pins legacy runs bitwise).
+    pub prefix_id: u64,
+    /// Prompt tokens covered by the template (the candidate cached
+    /// span; the engine rounds it down to whole KV blocks).  0 when
+    /// `prefix_id` is 0.
+    pub prefix_len: u32,
 }

@@ -110,6 +110,8 @@ mod tests {
             target_len: 10,
             oracle_len: oracle,
             score,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
 

@@ -228,6 +228,13 @@ impl<'p> ShrinkagePredictor<'p> {
         self.track && self.policy.predicts_length()
     }
 
+    /// Requests the book currently tracks — leak observability.  After
+    /// a fully drained run this must be 0: every admitted id is
+    /// forgotten on completion and every refused id on rejection.
+    pub fn tracked(&self) -> usize {
+        self.book.len()
+    }
+
     /// Refreshed predicted-total work for an estimate (key units).
     fn refreshed_total(e: Estimate) -> f64 {
         let g = e.observed as f64;
@@ -311,6 +318,8 @@ mod tests {
             target_len: 10,
             oracle_len: 10,
             score,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
 

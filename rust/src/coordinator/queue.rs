@@ -344,6 +344,8 @@ mod tests {
             target_len: 5,
             oracle_len: 5,
             score,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
 

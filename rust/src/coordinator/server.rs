@@ -56,6 +56,14 @@ pub struct ServeOutcome {
     /// Total suspend→resume delay summed over `resumes` (ms) — how long
     /// preserved progress sat parked in the host pools.
     pub restore_delay_ms: f64,
+    /// Dispatch decisions that landed a templated request on a replica
+    /// already holding its prefix (fleet total, decision-time
+    /// residency).
+    pub prefix_hits: usize,
+    /// Prefill tokens admission served from the shared-prefix KV pools
+    /// instead of computing (fleet total) — the work shared-prefix
+    /// reuse exists to delete.
+    pub cached_prefill_tokens: u64,
 }
 
 /// Drives one workload through an engine under a policy.
@@ -131,6 +139,8 @@ mod tests {
             target_len: target,
             oracle_len: target,
             score: target as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
 

@@ -200,6 +200,16 @@ impl<'c, 'p, E: Engine> ServeSession<'c, 'p, E> {
         self.coord.score_request(req)
     }
 
+    /// Drop the predictor's bookkeeping for a request refused at the
+    /// front door.  Scoring a shed probe books an estimate (when
+    /// re-ranking is on), and a refused id never reaches the
+    /// completion-side forget — the ingress tier calls this on every
+    /// terminal rejection so the book cannot grow by one entry per
+    /// refusal.  A cheap no-op when nothing was booked.
+    pub fn forget(&mut self, id: RequestId) {
+        self.coord.forget_request(id);
+    }
+
     /// Requests queued inside the fleet (replica inboxes + waiting
     /// queues; running excluded) plus submissions not yet dispatched —
     /// the backlog the shed admission mode bounds.

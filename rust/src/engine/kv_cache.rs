@@ -14,10 +14,28 @@
 //! Suspending a sequence moves its *content* blocks (the tokens written
 //! so far) to the host pool and returns its whole device reservation to
 //! the free list; resuming re-claims the full reservation on the device
-//! and frees the host blocks.  Each pool keeps its own conservation
-//! invariant (`used + free == total`), pinned by the property suite
-//! below — a swap can move pages between pools but never mint or leak a
-//! block.
+//! and frees the host blocks.
+//!
+//! The shared-prefix refactor adds a THIRD pool: **ref-counted,
+//! copy-on-write shared prefix blocks** carved out of the same device
+//! free list.  A templated request's prompt starts with a fixed prefix;
+//! the first admission registers that prefix's fully-filled blocks in a
+//! per-manager registry ([`KvBlockManager::insert_prefix`]), and every
+//! later sharer admits against them ([`KvBlockManager::admit_shared`]) —
+//! reserving privately only the suffix (plus the prefix's partial tail
+//! block, which is CoW-copied at admission because the sharer's own
+//! tokens continue writing into it).  Registry entries are ref-counted;
+//! **rank-guarded eviction** reclaims only zero-ref entries (oldest
+//! last-use first), so a block with live sharers is never freed.
+//! Suspend *detaches*: the full content — prefix included — moves to the
+//! host pool and the ref is released, so resume, release and PR 8's
+//! host-page migration never see a shared block and stay refcount-sound
+//! by construction.
+//!
+//! Conservation now reads `used + free + shared == total` on the device
+//! pool (`host_used + host_free == host_total` unchanged), pinned by the
+//! property suite below — a swap or a share can move pages between
+//! pools but never mint or leak a block.
 
 use std::collections::BTreeMap;
 
@@ -33,15 +51,36 @@ struct SeqAlloc {
     /// Device block ids while resident, host block ids while suspended
     /// (content blocks only — the device headroom of the reservation is
     /// returned to the free list for the duration of the suspension).
+    /// For a prefix-sharing sequence these are the PRIVATE blocks only;
+    /// the shared prefix blocks live in the registry.
     blocks: Vec<usize>,
     tokens: usize,
     /// Device blocks the reservation spans (what resume must re-claim).
     reserved_blocks: usize,
     /// True while the sequence's pages sit in the host pool.
     on_host: bool,
+    /// Shared prefix this sequence holds a ref on (resident only —
+    /// suspend detaches, so a suspended sequence never shares).
+    prefix: Option<u64>,
+    /// Fully-filled shared blocks logically prepended to `blocks`.
+    shared_blocks: usize,
 }
 
-/// Fixed-pool block allocator (device pool + optional host swap pool).
+/// One registered shared prefix: its device blocks, live-sharer
+/// refcount and a deterministic LRU stamp for rank-guarded eviction.
+#[derive(Debug)]
+struct PrefixEntry {
+    blocks: Vec<usize>,
+    /// Cached tokens (always a whole number of blocks — only fully
+    /// filled blocks are shareable; a partial tail block would be
+    /// written by every sharer's suffix).
+    tokens: usize,
+    refs: usize,
+    last_use: u64,
+}
+
+/// Fixed-pool block allocator (device pool + optional host swap pool +
+/// the ref-counted shared-prefix registry).
 pub struct KvBlockManager {
     n_blocks: usize,
     free: Vec<usize>,
@@ -49,6 +88,13 @@ pub struct KvBlockManager {
     host_free: Vec<usize>,
     seqs: BTreeMap<SeqHandle, SeqAlloc>,
     next_handle: SeqHandle,
+    /// Shared-prefix registry: prefix id → ref-counted block run.
+    prefixes: BTreeMap<u64, PrefixEntry>,
+    /// Running total of registry-held blocks (keeps `blocks_used` O(1)).
+    shared_total: usize,
+    /// Deterministic LRU clock for prefix eviction (bumped on every
+    /// insert and hit — a pure function of the op sequence).
+    lru_tick: u64,
     /// High-water mark (for reports).
     pub peak_blocks_used: usize,
 }
@@ -72,6 +118,9 @@ impl KvBlockManager {
             host_free: (0..host_blocks).rev().collect(),
             seqs: BTreeMap::new(),
             next_handle: 1,
+            prefixes: BTreeMap::new(),
+            shared_total: 0,
+            lru_tick: 0,
             peak_blocks_used: 0,
         }
     }
@@ -84,8 +133,15 @@ impl KvBlockManager {
         self.free.len()
     }
 
+    /// Device blocks held by sequence reservations (shared prefix blocks
+    /// are counted separately — see [`KvBlockManager::blocks_shared`]).
     pub fn blocks_used(&self) -> usize {
-        self.n_blocks - self.free.len()
+        self.n_blocks - self.free.len() - self.blocks_shared()
+    }
+
+    /// Device blocks held by the shared-prefix registry.
+    pub fn blocks_shared(&self) -> usize {
+        self.shared_total
     }
 
     pub fn host_blocks_total(&self) -> usize {
@@ -104,9 +160,35 @@ impl KvBlockManager {
         tokens.div_ceil(BLOCK_TOKENS)
     }
 
-    /// Can a sequence totalling `tokens` be admitted right now?
+    /// Can a sequence totalling `tokens` be admitted right now?  Counts
+    /// zero-ref shared prefix blocks as available — admission may evict
+    /// them (rank-guarded: a prefix with live sharers is never touched).
     pub fn can_admit(&self, tokens: usize) -> bool {
-        Self::blocks_for(tokens.max(1)) <= self.free.len()
+        Self::blocks_for(tokens.max(1)) <= self.free.len() + self.reclaimable_blocks()
+    }
+
+    /// Shared blocks an eviction pass could reclaim right now (zero-ref
+    /// registry entries only).
+    fn reclaimable_blocks(&self) -> usize {
+        self.prefixes.values().filter(|p| p.refs == 0).map(|p| p.blocks.len()).sum()
+    }
+
+    /// Evict zero-ref prefixes (oldest `last_use` first — deterministic)
+    /// until `need` free blocks are available or nothing reclaimable is
+    /// left.  A prefix with live sharers is NEVER freed.
+    fn reclaim_for(&mut self, need: usize) {
+        while self.free.len() < need {
+            let victim = self
+                .prefixes
+                .iter()
+                .filter(|(_, p)| p.refs == 0)
+                .min_by_key(|(id, p)| (p.last_use, **id))
+                .map(|(id, _)| *id);
+            let Some(id) = victim else { return };
+            let entry = self.prefixes.remove(&id).unwrap();
+            self.shared_total -= entry.blocks.len();
+            self.free.extend(entry.blocks);
+        }
     }
 
     /// Reserve blocks for a new sequence's prompt (`tokens` > 0), claiming
@@ -131,6 +213,7 @@ impl KvBlockManager {
     pub fn admit_reserved(&mut self, used: usize, reserved: usize) -> Result<SeqHandle> {
         let reserved = reserved.max(used).max(1);
         let need = Self::blocks_for(reserved);
+        self.reclaim_for(need);
         if need > self.free.len() {
             bail!("KV cache exhausted: need {need} blocks, {} free", self.free.len());
         }
@@ -139,10 +222,137 @@ impl KvBlockManager {
         self.next_handle += 1;
         self.seqs.insert(
             h,
-            SeqAlloc { reserved_blocks: blocks.len(), blocks, tokens: used.max(1), on_host: false },
+            SeqAlloc {
+                reserved_blocks: blocks.len(),
+                blocks,
+                tokens: used.max(1),
+                on_host: false,
+                prefix: None,
+                shared_blocks: 0,
+            },
         );
         self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
         Ok(h)
+    }
+
+    /// Tokens of `prefix_id`'s template resident in the shared pool
+    /// right now (0 when absent).  Always a whole number of blocks.
+    pub fn prefix_resident(&self, prefix_id: u64) -> usize {
+        self.prefixes.get(&prefix_id).map_or(0, |p| p.tokens)
+    }
+
+    /// Number of registered prefixes (registry depth, for benches).
+    pub fn prefixes_resident(&self) -> usize {
+        self.prefixes.len()
+    }
+
+    /// Register `prefix_tokens` tokens of template `prefix_id` in the
+    /// shared pool, claiming this prefix's fully-filled blocks from the
+    /// device free list (evicting zero-ref entries if needed).  Returns
+    /// the tokens actually cached: a whole number of blocks, or 0 when
+    /// the prefix is shorter than one block or the pool has no room —
+    /// refusing to cache is always safe, the caller just keeps paying
+    /// full prefill.  Re-registering a resident prefix only bumps its
+    /// LRU stamp.
+    pub fn insert_prefix(&mut self, prefix_id: u64, prefix_tokens: usize) -> usize {
+        self.lru_tick += 1;
+        if let Some(p) = self.prefixes.get_mut(&prefix_id) {
+            p.last_use = self.lru_tick;
+            return p.tokens;
+        }
+        let full = prefix_tokens / BLOCK_TOKENS;
+        if full == 0 {
+            return 0;
+        }
+        self.reclaim_for(full);
+        if full > self.free.len() {
+            return 0;
+        }
+        let blocks: Vec<usize> = (0..full).map(|_| self.free.pop().unwrap()).collect();
+        self.shared_total += blocks.len();
+        self.prefixes.insert(
+            prefix_id,
+            PrefixEntry { blocks, tokens: full * BLOCK_TOKENS, refs: 0, last_use: self.lru_tick },
+        );
+        full * BLOCK_TOKENS
+    }
+
+    /// Drop a zero-ref prefix from the registry, returning its blocks to
+    /// the free list.  Refuses (returns false) while sharers are live —
+    /// the rank guard, callable but never bypassable.
+    pub fn release_prefix(&mut self, prefix_id: u64) -> bool {
+        match self.prefixes.get(&prefix_id) {
+            Some(p) if p.refs == 0 => {
+                let entry = self.prefixes.remove(&prefix_id).unwrap();
+                self.shared_total -= entry.blocks.len();
+                self.free.extend(entry.blocks);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Live-sharer count for a resident prefix (None when absent).
+    pub fn prefix_refs(&self, prefix_id: u64) -> Option<usize> {
+        self.prefixes.get(&prefix_id).map(|p| p.refs)
+    }
+
+    /// Can a sequence of `used` tokens (reserving `reserved`) sharing
+    /// `prefix_id` be admitted right now?  Only the private (suffix +
+    /// CoW tail) blocks need free-list room — the exact mirror of
+    /// [`KvBlockManager::admit_shared`]'s math.
+    pub fn can_admit_shared(&self, prefix_id: u64, used: usize, reserved: usize) -> bool {
+        let used = used.max(1);
+        let cached = self.prefix_resident(prefix_id).min(used / BLOCK_TOKENS * BLOCK_TOKENS);
+        let need = Self::blocks_for(reserved.max(used)) - cached / BLOCK_TOKENS;
+        need <= self.free.len() + self.reclaimable_blocks()
+    }
+
+    /// Admit a sequence of `used` tokens (reserving `reserved`) against
+    /// resident prefix `prefix_id`: the prefix's fully-filled blocks are
+    /// shared (refcount bumped), only the suffix — including the
+    /// prefix's partial tail block, CoW-copied because the sharer keeps
+    /// writing into it — is reserved privately.  Returns the handle and
+    /// the cached token count (0 ⇒ the prefix was not resident and this
+    /// degenerated to a plain [`KvBlockManager::admit_reserved`]).
+    pub fn admit_shared(
+        &mut self,
+        prefix_id: u64,
+        used: usize,
+        reserved: usize,
+    ) -> Result<(SeqHandle, usize)> {
+        let used = used.max(1);
+        let cached = self.prefix_resident(prefix_id).min(used / BLOCK_TOKENS * BLOCK_TOKENS);
+        if cached == 0 {
+            return Ok((self.admit_reserved(used, reserved)?, 0));
+        }
+        let shared_blocks = cached / BLOCK_TOKENS;
+        let reserved = reserved.max(used);
+        let need = Self::blocks_for(reserved) - shared_blocks;
+        self.reclaim_for(need);
+        if need > self.free.len() {
+            bail!("KV cache exhausted: need {need} blocks, {} free", self.free.len());
+        }
+        let blocks: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let h = self.next_handle;
+        self.next_handle += 1;
+        self.lru_tick += 1;
+        let entry = self.prefixes.get_mut(&prefix_id).unwrap();
+        entry.refs += 1;
+        entry.last_use = self.lru_tick;
+        self.seqs.insert(
+            h,
+            SeqAlloc {
+                reserved_blocks: blocks.len(),
+                blocks,
+                tokens: used,
+                on_host: false,
+                prefix: Some(prefix_id),
+                shared_blocks,
+            },
+        );
+        self.peak_blocks_used = self.peak_blocks_used.max(self.blocks_used());
+        Ok((h, cached))
     }
 
     /// Append one decoded token; may claim a new block.  Suspended
@@ -155,7 +365,10 @@ impl KvBlockManager {
             bail!("sequence {h} is suspended to the host pool; resume before decoding");
         }
         seq.tokens += 1;
-        let need = Self::blocks_for(seq.tokens);
+        // a sharer's first `shared_blocks` blocks live in the registry;
+        // only the private tail ever grows (CoW: appends never touch a
+        // shared block — the partial tail was copied at admission)
+        let need = Self::blocks_for(seq.tokens) - seq.shared_blocks;
         if need > seq.blocks.len() {
             let Some(b) = self.free.pop() else {
                 bail!("KV cache exhausted while decoding seq {h}");
@@ -182,6 +395,13 @@ impl KvBlockManager {
     /// far) into the host pool and return its whole device reservation —
     /// content plus headroom — to the device free list.  Returns the
     /// number of blocks swapped out (what a cost model should charge).
+    ///
+    /// A prefix-sharing sequence **detaches** here: its full content —
+    /// shared prefix included — is copied into host pages and its
+    /// registry ref is released, so the suspended state (and anything
+    /// downstream: resume, migration, release) is prefix-free.  The
+    /// shared blocks themselves stay in the registry for other sharers;
+    /// only the refcount drops.
     pub fn suspend(&mut self, h: SeqHandle) -> Result<usize> {
         let Some(seq) = self.seqs.get_mut(&h) else {
             bail!("unknown sequence handle {h}");
@@ -196,11 +416,20 @@ impl KvBlockManager {
                 self.host_free.len()
             );
         }
-        seq.reserved_blocks = seq.blocks.len();
+        // resume must re-claim the FULL reservation: private blocks plus
+        // the formerly shared span the detach made private
+        seq.reserved_blocks = seq.blocks.len() + seq.shared_blocks;
         let device: Vec<usize> = std::mem::take(&mut seq.blocks);
         self.free.extend(device);
         seq.blocks = (0..content).map(|_| self.host_free.pop().unwrap()).collect();
         seq.on_host = true;
+        let prefix = seq.prefix.take();
+        seq.shared_blocks = 0;
+        if let Some(id) = prefix {
+            let entry = self.prefixes.get_mut(&id).expect("sharer's prefix must be resident");
+            debug_assert!(entry.refs > 0, "refcount underflow on suspend detach");
+            entry.refs -= 1;
+        }
         Ok(content)
     }
 
@@ -208,7 +437,9 @@ impl KvBlockManager {
     /// re-claimed right now?
     pub fn can_resume(&self, h: SeqHandle) -> bool {
         match self.seqs.get(&h) {
-            Some(seq) if seq.on_host => seq.reserved_blocks <= self.free.len(),
+            Some(seq) if seq.on_host => {
+                seq.reserved_blocks <= self.free.len() + self.reclaimable_blocks()
+            }
             _ => false,
         }
     }
@@ -217,12 +448,13 @@ impl KvBlockManager {
     /// reservation and free its host blocks.  Returns the number of
     /// content blocks swapped back in (the cost-model charge).
     pub fn resume(&mut self, h: SeqHandle) -> Result<usize> {
-        let Some(seq) = self.seqs.get_mut(&h) else {
-            bail!("unknown sequence handle {h}");
+        let need = match self.seqs.get(&h) {
+            None => bail!("unknown sequence handle {h}"),
+            Some(seq) if !seq.on_host => bail!("sequence {h} is not suspended"),
+            Some(seq) => seq.reserved_blocks,
         };
-        if !seq.on_host {
-            bail!("sequence {h} is not suspended");
-        }
+        self.reclaim_for(need);
+        let seq = self.seqs.get_mut(&h).unwrap();
         if seq.reserved_blocks > self.free.len() {
             bail!(
                 "KV cache exhausted on resume: need {} blocks, {} free",
@@ -240,13 +472,20 @@ impl KvBlockManager {
     }
 
     /// Release a sequence's blocks (resident or suspended — each block
-    /// returns to the pool it currently sits in).
+    /// returns to the pool it currently sits in).  A sharer's registry
+    /// ref is dropped; the shared blocks themselves stay resident for
+    /// future sharers until rank-guarded eviction reclaims them.
     pub fn release(&mut self, h: SeqHandle) {
         if let Some(seq) = self.seqs.remove(&h) {
             if seq.on_host {
                 self.host_free.extend(seq.blocks);
             } else {
                 self.free.extend(seq.blocks);
+            }
+            if let Some(id) = seq.prefix {
+                let entry = self.prefixes.get_mut(&id).expect("sharer's prefix must be resident");
+                debug_assert!(entry.refs > 0, "refcount underflow on release");
+                entry.refs -= 1;
             }
         }
     }
@@ -294,7 +533,10 @@ impl KvBlockManager {
         let blocks: Vec<usize> = (0..content).map(|_| self.host_free.pop().unwrap()).collect();
         let h = self.next_handle;
         self.next_handle += 1;
-        self.seqs.insert(h, SeqAlloc { blocks, tokens, reserved_blocks, on_host: true });
+        self.seqs.insert(
+            h,
+            SeqAlloc { blocks, tokens, reserved_blocks, on_host: true, prefix: None, shared_blocks: 0 },
+        );
         Ok(h)
     }
 
@@ -606,6 +848,316 @@ mod tests {
                 for h in live {
                     m.release(h);
                 }
+                m.blocks_used() == 0 && m.host_blocks_used() == 0 && m.active_seqs() == 0
+            },
+        );
+    }
+
+    #[test]
+    fn shared_prefix_admit_reserves_only_the_suffix() {
+        let mut m = KvBlockManager::new(1024); // 64 blocks
+        assert_eq!(m.insert_prefix(7, 40), 32, "40 tokens cache 2 full blocks");
+        assert_eq!(m.blocks_shared(), 2);
+        assert_eq!(m.blocks_used(), 0, "registry blocks are not sequence blocks");
+        assert_eq!(m.prefix_resident(7), 32);
+        // a 40-token prompt reserving 100: 7 blocks total, 2 shared →
+        // 5 private (incl. the CoW copy of the prefix's partial tail)
+        let (h, cached) = m.admit_shared(7, 40, 100).unwrap();
+        assert_eq!(cached, 32);
+        assert_eq!(m.blocks_used(), 5);
+        assert_eq!(m.prefix_refs(7), Some(1));
+        // conservation: used + free + shared == total
+        assert_eq!(m.blocks_used() + m.blocks_free() + m.blocks_shared(), m.blocks_total());
+        // appends grow only the private tail
+        for _ in 0..60 {
+            m.append_token(h).unwrap(); // 40 → 100 tokens, still reserved
+        }
+        assert_eq!(m.blocks_used(), 5);
+        m.append_token(h).unwrap(); // 101 tokens → 7 blocks → 5 private
+        assert_eq!(m.blocks_used(), 5, "101 tokens still fit 7 blocks");
+        // release drops the ref but keeps the prefix resident
+        m.release(h);
+        assert_eq!(m.blocks_used(), 0);
+        assert_eq!(m.prefix_refs(7), Some(0));
+        assert_eq!(m.prefix_resident(7), 32);
+    }
+
+    #[test]
+    fn admit_shared_without_a_resident_prefix_degenerates_to_plain_admit() {
+        let mut a = KvBlockManager::new(512);
+        let mut b = KvBlockManager::new(512);
+        let (hs, cached) = a.admit_shared(99, 40, 100).unwrap();
+        let hp = b.admit_reserved(40, 100).unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(hs, hp);
+        assert_eq!(a.blocks_used(), b.blocks_used());
+        assert_eq!(a.blocks_free(), b.blocks_free());
+    }
+
+    #[test]
+    fn rank_guarded_eviction_never_frees_a_prefix_with_live_sharers() {
+        let mut m = KvBlockManager::new(128); // 8 blocks
+        assert_eq!(m.insert_prefix(1, 32), 32); // 2 blocks, will have a sharer
+        assert_eq!(m.insert_prefix(2, 32), 32); // 2 blocks, zero-ref
+        let (_h, cached) = m.admit_shared(1, 33, 33).unwrap(); // 1 private block
+        assert_eq!(cached, 32);
+        assert_eq!(m.blocks_free(), 3);
+        // admitting 6 blocks needs the zero-ref prefix evicted (3 free +
+        // 2 reclaimable + never prefix 1's 2 referenced blocks)
+        assert!(m.can_admit(5 * BLOCK_TOKENS));
+        assert!(!m.can_admit(6 * BLOCK_TOKENS), "live sharers shield prefix 1");
+        let big = m.admit(5 * BLOCK_TOKENS).unwrap();
+        assert_eq!(m.prefix_resident(2), 0, "zero-ref prefix reclaimed");
+        assert_eq!(m.prefix_resident(1), 32, "referenced prefix survives");
+        assert!(m.admit(6 * BLOCK_TOKENS).is_err());
+        m.release(big);
+        // release_prefix honours the same guard
+        assert!(!m.release_prefix(1), "refused while the sharer lives");
+        assert_eq!(m.prefix_refs(1), Some(1));
+    }
+
+    #[test]
+    fn suspend_detaches_the_sharer_and_resume_reclaims_the_full_reservation() {
+        let mut m = KvBlockManager::with_host_pool(1024, 8);
+        assert_eq!(m.insert_prefix(3, 32), 32);
+        let (h, _) = m.admit_shared(3, 40, 100).unwrap(); // 5 private + 2 shared
+        assert_eq!(m.blocks_used(), 5);
+        assert_eq!(m.suspend(h).unwrap(), 3, "full content — prefix included — parks");
+        assert_eq!(m.blocks_used(), 0);
+        assert_eq!(m.host_blocks_used(), 3);
+        assert_eq!(m.prefix_refs(3), Some(0), "suspend releases the ref");
+        assert_eq!(m.blocks_shared(), 2, "the registry entry itself stays");
+        // resume re-claims the FULL 7-block reservation (detached: the
+        // formerly shared span is private now)
+        assert_eq!(m.resume(h).unwrap(), 3);
+        assert_eq!(m.blocks_used(), 7);
+        assert_eq!(m.seq_tokens(h), Some(40));
+        m.append_token(h).unwrap();
+        m.release(h);
+        assert_eq!(m.prefix_refs(3), Some(0), "detached seq holds no ref to drop");
+        assert_eq!(m.blocks_used() + m.host_blocks_used(), 0);
+    }
+
+    #[test]
+    fn migration_of_a_detached_sharer_is_prefix_free() {
+        let mut v = KvBlockManager::with_host_pool(1024, 8);
+        let mut t = KvBlockManager::with_host_pool(1024, 4);
+        v.insert_prefix(9, 48); // 3 blocks
+        let (h, cached) = v.admit_shared(9, 50, 80).unwrap();
+        assert_eq!(cached, 48);
+        v.suspend(h).unwrap();
+        let (tokens, reserved) = v.export_suspended(h).unwrap();
+        assert_eq!((tokens, reserved), (50, 5), "full 5-block reservation rides along");
+        assert_eq!(v.prefix_refs(9), Some(0));
+        let h2 = t.import_suspended(tokens, reserved).unwrap();
+        assert!(t.can_resume(h2));
+        assert_eq!(t.resume(h2).unwrap(), 4);
+        assert_eq!(t.blocks_used(), 5);
+        assert_eq!(t.seq_tokens(h2), Some(50), "progress survives, no prefix needed");
+        assert_eq!(t.prefix_resident(9), 0, "the thief never learned the prefix");
+    }
+
+    #[test]
+    fn share_ratio_zero_tracks_the_two_pool_manager_bitwise() {
+        // a manager that never sees a prefix op must drive bitwise the
+        // same block economy — same handles, same free-list order — as
+        // the plain two-pool manager (the share-0 pin: the third pool is
+        // exact identity until a prefix is actually registered)
+        check_with(
+            4243,
+            200,
+            |r: &mut Rng| {
+                let host = [0usize, 4, 16][r.below(3)];
+                let ops: Vec<u64> = (0..80).map(|_| r.next_u64()).collect();
+                (host, ops)
+            },
+            |case| {
+                let (host, ops) = case;
+                let mut a = KvBlockManager::with_host_pool(512, *host);
+                let mut b = KvBlockManager::with_host_pool(512, *host);
+                let mut live: Vec<SeqHandle> = Vec::new();
+                for &op in ops {
+                    match op % 5 {
+                        0 => {
+                            let toks = (op % 80 + 1) as usize;
+                            if a.can_admit(toks) != b.can_admit(toks) {
+                                return false;
+                            }
+                            if a.can_admit(toks) {
+                                let ha = a.admit(toks).unwrap();
+                                // admit_shared with an unknown prefix must
+                                // be the SAME op as a plain admit
+                                let (hb, cached) = b.admit_shared(op, toks, toks).unwrap();
+                                if ha != hb || cached != 0 {
+                                    return false;
+                                }
+                                live.push(ha);
+                            }
+                        }
+                        1 => {
+                            if let Some(&h) = live.first() {
+                                let (ra, rb) = (a.append_token(h), b.append_token(h));
+                                if ra.is_ok() != rb.is_ok() {
+                                    return false;
+                                }
+                            }
+                        }
+                        2 => {
+                            if let Some(&h) = live.last() {
+                                if a.can_suspend(h) != b.can_suspend(h) {
+                                    return false;
+                                }
+                                if a.can_suspend(h) {
+                                    a.suspend(h).unwrap();
+                                    b.suspend(h).unwrap();
+                                }
+                            }
+                        }
+                        3 => {
+                            if let Some(&h) = live.iter().find(|&&h| a.is_suspended(h)) {
+                                if a.can_resume(h) != b.can_resume(h) {
+                                    return false;
+                                }
+                                if a.can_resume(h) {
+                                    a.resume(h).unwrap();
+                                    b.resume(h).unwrap();
+                                }
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let h = live.remove((op % live.len() as u64) as usize);
+                                a.release(h);
+                                b.release(h);
+                            }
+                        }
+                    }
+                    if a.blocks_used() != b.blocks_used()
+                        || a.blocks_free() != b.blocks_free()
+                        || a.host_blocks_used() != b.host_blocks_used()
+                        || b.blocks_shared() != 0
+                    {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    /// The three-pool satellite property: random admit / share /
+    /// CoW-append / suspend / resume / migrate / release interleavings
+    /// uphold `used + free + shared == total` (device) and `host_used +
+    /// host_free == host_total`, a prefix with live sharers is never
+    /// reclaimed, and no handle survives release.
+    #[test]
+    fn property_three_pool_economy_conserves_blocks() {
+        check_with(
+            4244,
+            200,
+            |r: &mut Rng| {
+                let host = [0usize, 4, 16][r.below(3)];
+                let ops: Vec<u64> = (0..100).map(|_| r.next_u64()).collect();
+                (host, ops)
+            },
+            |case| {
+                let (host, ops) = case;
+                let mut m = KvBlockManager::with_host_pool(512, *host); // 32 device blocks
+                let mut sib = KvBlockManager::with_host_pool(512, *host); // migration target
+                let mut live: Vec<SeqHandle> = Vec::new();
+                let mut released: Vec<SeqHandle> = Vec::new();
+                let conserved = |m: &KvBlockManager| {
+                    m.blocks_used() + m.blocks_free() + m.blocks_shared() == m.blocks_total()
+                        && m.host_blocks_used() + m.host_blocks_free() == m.host_blocks_total()
+                };
+                for &op in ops {
+                    match op % 8 {
+                        0 => {
+                            let toks = (op % 80 + 1) as usize;
+                            if m.can_admit(toks) {
+                                live.push(m.admit(toks).unwrap());
+                            }
+                        }
+                        1 => {
+                            // register one of 4 templates, then share it
+                            let id = op % 4;
+                            let toks = 17 + (op % 60) as usize;
+                            m.insert_prefix(id, toks.min(48));
+                            if m.can_admit_shared(id, toks, toks + 16) {
+                                let (h, _) = m.admit_shared(id, toks, toks + 16).unwrap();
+                                live.push(h);
+                            }
+                        }
+                        2 | 3 => {
+                            if let Some(&h) = live.first() {
+                                let _ = m.append_token(h); // CoW-append
+                            }
+                        }
+                        4 => {
+                            if let Some(&h) = live.last() {
+                                if m.can_suspend(h) {
+                                    m.suspend(h).unwrap();
+                                } else if m.suspend(h).is_ok() {
+                                    return false; // can_suspend lied
+                                }
+                            }
+                        }
+                        5 => {
+                            if let Some(&h) = live.iter().find(|&&h| m.is_suspended(h)) {
+                                if m.can_resume(h) {
+                                    m.resume(h).unwrap();
+                                } else if m.resume(h).is_ok() {
+                                    return false; // can_resume lied
+                                }
+                            }
+                        }
+                        6 => {
+                            // migrate a suspended sharer out to the sibling
+                            if let Some(pos) =
+                                live.iter().position(|&h| m.is_suspended(h))
+                            {
+                                let h = live[pos];
+                                let tokens = m.seq_tokens(h).unwrap();
+                                if sib.can_import_suspended(tokens) {
+                                    let (t, res) = m.export_suspended(h).unwrap();
+                                    let h2 = sib.import_suspended(t, res).unwrap();
+                                    sib.release(h2); // keep the sibling drained
+                                    live.remove(pos);
+                                    released.push(h);
+                                }
+                            }
+                        }
+                        _ => {
+                            if !live.is_empty() {
+                                let h = live.remove((op % live.len() as u64) as usize);
+                                m.release(h);
+                                released.push(h);
+                            }
+                        }
+                    }
+                    if !conserved(&m) || !conserved(&sib) {
+                        return false;
+                    }
+                    // the rank guard: every live sharer's prefix must
+                    // still be resident (refs > 0 shields the entry)
+                    if m.active_seqs() != live.len() {
+                        return false;
+                    }
+                }
+                for &h in &released {
+                    if m.seq_tokens(h).is_some()
+                        || m.can_suspend(h)
+                        || m.can_resume(h)
+                        || m.append_token(h).is_ok()
+                    {
+                        return false;
+                    }
+                }
+                for h in live {
+                    m.release(h);
+                }
+                // zero-ref registry entries survive the drain (that is
+                // the cache), but every sequence block is back
                 m.blocks_used() == 0 && m.host_blocks_used() == 0 && m.active_seqs() == 0
             },
         );

@@ -126,9 +126,44 @@ pub trait Engine {
     /// wall-clock for `PjrtEngine`.
     fn now_ms(&self) -> f64;
 
-    /// Admit a sequence: allocate a slot + KV, run prefill, charge its cost.
-    /// `target_len` is the forced output length from the workload trace.
+    /// Admit a sequence: allocate a slot and a KV reservation sized for
+    /// `prompt + target` tokens (device blocks, reclaiming zero-ref
+    /// prefix-cache entries if the free list alone falls short), run
+    /// prefill, charge its cost.  `target_len` is the forced output
+    /// length from the workload trace.  Prefix-blind: the whole prompt
+    /// is computed even when a shared prefix is resident — callers that
+    /// carry a template identity use [`Engine::prefill_shared`].
     fn prefill(&mut self, tokens: &[i32], target_len: u32) -> Result<SlotId>;
+
+    /// Prefix-aware admission: like [`Engine::prefill`], but when the
+    /// template `prefix_id` is resident in this engine's shared-prefix
+    /// registry the sequence attaches to those ref-counted blocks
+    /// (copy-on-write: only full blocks are shared; the partial tail
+    /// block, which the suffix writes into, is always private) and only
+    /// the uncached suffix is computed and charged.  On a miss the full
+    /// prompt is computed and the first `prefix_len` prompt tokens are
+    /// registered for future sharers.  Returns the slot plus the cached
+    /// token count (0 on a miss).  The default forwards to `prefill` —
+    /// engines without a prefix cache never report a hit.
+    fn prefill_shared(
+        &mut self,
+        tokens: &[i32],
+        target_len: u32,
+        prefix_id: u64,
+        prefix_len: u32,
+    ) -> Result<(SlotId, u32)> {
+        let _ = (prefix_id, prefix_len);
+        Ok((self.prefill(tokens, target_len)?, 0))
+    }
+
+    /// Cached tokens of `prefix_id` resident in this engine's
+    /// shared-prefix registry right now (0 when absent or for engines
+    /// without a prefix cache).  Prefix-affine routing reads this to
+    /// bias dispatch toward replicas already holding the template.
+    fn prefix_resident(&self, prefix_id: u64) -> u32 {
+        let _ = prefix_id;
+        0
+    }
 
     /// Run one decode iteration over all active slots.
     fn decode_step(&mut self) -> Result<Vec<SlotEvent>>;
@@ -261,6 +296,20 @@ impl<E: Engine + ?Sized> Engine for &mut E {
 
     fn prefill(&mut self, tokens: &[i32], target_len: u32) -> Result<SlotId> {
         (**self).prefill(tokens, target_len)
+    }
+
+    fn prefill_shared(
+        &mut self,
+        tokens: &[i32],
+        target_len: u32,
+        prefix_id: u64,
+        prefix_len: u32,
+    ) -> Result<(SlotId, u32)> {
+        (**self).prefill_shared(tokens, target_len, prefix_id, prefix_len)
+    }
+
+    fn prefix_resident(&self, prefix_id: u64) -> u32 {
+        (**self).prefix_resident(prefix_id)
     }
 
     fn decode_step(&mut self) -> Result<Vec<SlotEvent>> {

@@ -17,6 +17,7 @@
 //! * sampling (temperature/top-p) happens on the host, matching the
 //!   paper's decoding setup (0.7 / 0.9).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Context};
@@ -43,6 +44,17 @@ struct PjrtSlot {
     kv: SeqHandle,
 }
 
+/// Physical KV rows of a registered template prefix, staged in a host
+/// buffer shaped `[L, 2, tokens, H, Dh]` — the PJRT twin of the logical
+/// shared-prefix entry in [`KvBlockManager`].  By causal attention the
+/// KV of the first `tokens` positions depends only on the prefix token
+/// ids, so these rows are bitwise what a fresh prefill of the same
+/// template would recompute.
+struct PrefixRows {
+    tokens: usize,
+    rows: Vec<f32>,
+}
+
 /// Real PJRT-backed engine.
 pub struct PjrtEngine {
     rt: Runtime,
@@ -50,6 +62,11 @@ pub struct PjrtEngine {
     decode_exe: Executable,
     slots: Vec<Option<PjrtSlot>>,
     kv_mgr: KvBlockManager,
+    /// Staged physical rows per registered prefix id (see [`PrefixRows`]).
+    /// Residency authority stays with `kv_mgr`'s registry — a stale stash
+    /// entry is harmless (same template id ⇒ same token ids ⇒ same rows)
+    /// and is overwritten on the next registration.
+    prefix_rows: HashMap<u64, PrefixRows>,
     /// Host-resident KV cache [L, 2, B, Smax, H, Dh], row-major.
     kv: Vec<f32>,
     sampler: SamplerConfig,
@@ -104,6 +121,7 @@ impl PjrtEngine {
             decode_exe,
             slots: (0..b).map(|_| None).collect(),
             kv_mgr: KvBlockManager::with_host_pool(max_kv_tokens.min(b * max_seq), swap_blocks),
+            prefix_rows: HashMap::new(),
             kv: vec![0.0; kv_len],
             sampler: SamplerConfig::default(),
             rng: Rng::new(seed),
@@ -220,6 +238,106 @@ impl Engine for PjrtEngine {
         self.prefills += 1;
         self.prefill_ms_total += t0.elapsed().as_secs_f64() * 1e3;
         Ok(slot)
+    }
+
+    fn prefill_shared(
+        &mut self,
+        tokens: &[i32],
+        target_len: u32,
+        prefix_id: u64,
+        prefix_len: u32,
+    ) -> Result<(SlotId, u32)> {
+        if prefix_id == 0 {
+            return Ok((self.prefill(tokens, target_len)?, 0));
+        }
+        let t0 = Instant::now();
+        let Some(slot) = self.slots.iter().position(Option::is_none) else {
+            bail!("no free slot");
+        };
+        let mut padded = vec![0i32; self.seq_len];
+        let n = tokens.len().min(self.seq_len);
+        padded[..n].copy_from_slice(&tokens[..n]);
+        let prompt_len = padded.iter().take_while(|&&t| t != 0).count().max(1);
+        if prompt_len + target_len as usize > self.max_seq {
+            bail!("sequence too long: {prompt_len} + {target_len} > {}", self.max_seq);
+        }
+        // Same conservative full reservation as `prefill`; the logical
+        // block manager decides the hit and the shared-block attach.
+        let (kv, cached) = self
+            .kv_mgr
+            .admit_shared(prefix_id, prompt_len, prompt_len + target_len.max(1) as usize)?;
+
+        // The interpret-mode prefill artifact has a fixed
+        // (tokens, len) → (logits, kv) signature, so the forward pass
+        // always spans the full prompt on this backend; the reuse win
+        // here is splice traffic — on a hit only the *suffix* rows of
+        // the fresh slice touch the batch cache, the prefix region is
+        // copied from the registry's staged rows.
+        let outs = self.prefill_exe.run_hosted(
+            &self.rt,
+            &[
+                HostArg::I32(&padded, &[1, self.seq_len]),
+                HostArg::I32(&[prompt_len as i32], &[1]),
+            ],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "prefill returned {} outputs", outs.len());
+        let logits: Vec<f32> = outs[0].to_vec()?;
+        let slice: Vec<f32> = outs[1].to_vec()?;
+
+        let row = self.max_seq * PICO_HEADS * PICO_HEAD_DIM;
+        let hd = PICO_HEADS * PICO_HEAD_DIM;
+        debug_assert_eq!(slice.len(), PICO_LAYERS * 2 * row);
+        let stash_ok =
+            cached > 0 && self.prefix_rows.get(&prefix_id).is_some_and(|p| p.tokens >= cached);
+        for l in 0..PICO_LAYERS {
+            for k in 0..2 {
+                let lk = l * 2 + k;
+                let src = lk * row;
+                let dst = (lk * self.batch + slot) * row;
+                if stash_ok {
+                    let p = self.prefix_rows.get(&prefix_id).unwrap();
+                    self.kv[dst..dst + cached * hd]
+                        .copy_from_slice(&p.rows[lk * p.tokens * hd..][..cached * hd]);
+                    self.kv[dst + cached * hd..dst + row]
+                        .copy_from_slice(&slice[src + cached * hd..src + row]);
+                } else {
+                    self.kv[dst..dst + row].copy_from_slice(&slice[src..src + row]);
+                }
+            }
+        }
+        if cached == 0 {
+            // Miss: the rows were just computed anyway — register the
+            // template logically (may refuse for lack of free blocks)
+            // and stage its physical rows for future sharers.
+            let reg = self.kv_mgr.insert_prefix(prefix_id, (prefix_len as usize).min(prompt_len));
+            if reg > 0 {
+                let mut rows = vec![0.0f32; PICO_LAYERS * 2 * reg * hd];
+                for l in 0..PICO_LAYERS {
+                    for k in 0..2 {
+                        let lk = l * 2 + k;
+                        rows[lk * reg * hd..(lk + 1) * reg * hd]
+                            .copy_from_slice(&slice[lk * row..lk * row + reg * hd]);
+                    }
+                }
+                self.prefix_rows.insert(prefix_id, PrefixRows { tokens: reg, rows });
+            }
+        }
+
+        let first_token = sample(&logits[..self.vocab], self.sampler, &mut self.rng) as i32;
+        self.slots[slot] = Some(PjrtSlot {
+            target_len: target_len.max(1),
+            generated: 0,
+            cur_token: first_token,
+            pos: prompt_len as i32,
+            kv,
+        });
+        self.prefills += 1;
+        self.prefill_ms_total += t0.elapsed().as_secs_f64() * 1e3;
+        Ok((slot, cached as u32))
+    }
+
+    fn prefix_resident(&self, prefix_id: u64) -> u32 {
+        self.kv_mgr.prefix_resident(prefix_id) as u32
     }
 
     fn decode_step(&mut self) -> Result<Vec<SlotEvent>> {

@@ -101,6 +101,44 @@ impl Engine for SimEngine {
         Ok(slot)
     }
 
+    fn prefill_shared(
+        &mut self,
+        tokens: &[i32],
+        target_len: u32,
+        prefix_id: u64,
+        prefix_len: u32,
+    ) -> Result<(SlotId, u32)> {
+        if prefix_id == 0 {
+            return Ok((self.prefill(tokens, target_len)?, 0));
+        }
+        let prompt_len = tokens.iter().take_while(|&&t| t != 0).count();
+        let Some(slot) = self.slots.iter().position(Option::is_none) else {
+            bail!("no free slot");
+        };
+        // Same conservative full reservation as `prefill` — the prefix
+        // saving is compute time, not reservation headroom, which keeps
+        // admission soundness independent of cache residency.
+        let (kv, cached) = self
+            .kv
+            .admit_shared(prefix_id, prompt_len, prompt_len + target_len.max(1) as usize)?;
+        if cached == 0 {
+            // Miss: the full prompt was just computed, so registering the
+            // template's KV for future sharers costs no extra model time
+            // (it may still refuse when the free list lacks room — then
+            // the next sharer simply misses too).
+            self.kv.insert_prefix(prefix_id, (prefix_len as usize).min(prompt_len));
+        }
+        // Only the uncached suffix runs through the model.
+        self.now_ms += self.cost.prefill_base_ms
+            + self.cost.prefill_per_token_ms * (prompt_len - cached) as f64;
+        self.slots[slot] = Some(SimSlot { target_len: target_len.max(1), generated: 0, kv });
+        Ok((slot, cached as u32))
+    }
+
+    fn prefix_resident(&self, prefix_id: u64) -> u32 {
+        self.kv.prefix_resident(prefix_id) as u32
+    }
+
     fn decode_step(&mut self) -> Result<Vec<SlotEvent>> {
         let active: Vec<usize> =
             (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
@@ -274,6 +312,39 @@ mod tests {
         e.prefill(&toks, 5).unwrap();
         // 5 real tokens → 3.0 + 0.05*5 = 3.25 ms
         assert!((e.now_ms() - t0 - 3.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_prefill_charges_only_the_uncached_suffix() {
+        let mut e = engine();
+        // 48 real prompt tokens, template covers the first 32 (two full blocks)
+        let toks: Vec<i32> = (0..48).map(|i| (i % 7) + 1).collect();
+        let t0 = e.now_ms();
+        let (s0, cached) = e.prefill_shared(&toks, 5, 7, 32).unwrap();
+        assert_eq!(cached, 0, "first sight of the template is a miss");
+        let full = e.now_ms() - t0;
+        assert!((full - (3.0 + 0.05 * 48.0)).abs() < 1e-9, "miss charges the full prompt");
+        assert_eq!(e.prefix_resident(7), 32, "the miss registered the template");
+        let t1 = e.now_ms();
+        let (_s1, cached) = e.prefill_shared(&toks, 5, 7, 32).unwrap();
+        assert_eq!(cached, 32, "second sharer attaches to the resident blocks");
+        let hit = e.now_ms() - t1;
+        assert!((hit - (3.0 + 0.05 * 16.0)).abs() < 1e-9, "hit charges only the suffix");
+        e.release(s0);
+        assert_eq!(e.prefix_resident(7), 32, "release keeps the template resident");
+    }
+
+    #[test]
+    fn prefix_id_zero_is_prefix_blind() {
+        let mut a = engine();
+        let mut b = engine();
+        let toks = [1, 10, 20, 32, 2, 0, 0, 0];
+        let s_plain = a.prefill(&toks, 5).unwrap();
+        let (s_shared, cached) = b.prefill_shared(&toks, 5, 0, 4).unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(s_plain, s_shared);
+        assert_eq!(a.now_ms(), b.now_ms(), "no template ⇒ bitwise-identical charging");
+        assert_eq!(b.prefix_resident(0), 0, "id 0 never registers");
     }
 
     #[test]

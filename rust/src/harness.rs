@@ -138,6 +138,8 @@ pub fn build_requests(
                 target_len: live_len[i],
                 oracle_len: ts.oracle_len[i],
                 score: scores.map(|s| s[i]).unwrap_or(0.0),
+                prefix_id: 0,
+                prefix_len: 0,
             }
         })
         .collect()
@@ -187,6 +189,7 @@ pub fn run_sharded(
 #[derive(Default)]
 pub struct ServeOptions<'a> {
     sink: Option<&'a mut dyn EventSink>,
+    templates: Option<crate::workload::PrefixTemplates>,
 }
 
 impl<'a> ServeOptions<'a> {
@@ -201,6 +204,14 @@ impl<'a> ServeOptions<'a> {
     /// observer — the outcome is bitwise identical with or without it.
     pub fn sink(mut self, sink: &'a mut dyn EventSink) -> Self {
         self.sink = Some(sink);
+        self
+    }
+
+    /// Stamp shared-prefix template identities onto the built requests
+    /// (the CLI's `--prefix-share` knob).  A `share = 0` stamper — and
+    /// no stamper at all — leaves the workload bitwise untouched.
+    pub fn templates(mut self, t: crate::workload::PrefixTemplates) -> Self {
+        self.templates = Some(t);
         self
     }
 }
@@ -219,7 +230,10 @@ pub fn run_sharded_with(
 ) -> Result<ShardedOutcome> {
     let scores = book.scores.get(kind.name()).map(|v| v.as_slice());
     let mut rng = Rng::new(0xA11CE);
-    let reqs = build_requests(ts, arrivals, scores, LiveLengths::Fresh(&mut rng));
+    let mut reqs = build_requests(ts, arrivals, scores, LiveLengths::Fresh(&mut rng));
+    if let Some(t) = &opts.templates {
+        t.apply(&mut reqs);
+    }
     let max_seq = reqs
         .iter()
         .map(|r| (r.prompt_len + r.target_len) as usize)
@@ -372,6 +386,8 @@ pub fn long_job_then_burst(n_short: usize) -> Vec<Request> {
             target_len: target,
             oracle_len: target,
             score: target as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
     let mut v = vec![req(0, 0.0, 1000)];
@@ -402,6 +418,8 @@ pub fn park_then_steal(n_short: usize) -> Vec<Request> {
             target_len: target,
             oracle_len: target,
             score: target as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         }
     }
     let mut v = vec![req(0, 0.0, 600)];
@@ -535,6 +553,61 @@ mod tests {
         assert_eq!(on.merged.report.n_requests, 120);
         assert_eq!(off_rescored, 0, "rerank=off must never rescore");
         assert!(on_rescored > 0, "rerank=on_token must refine estimates as tokens land");
+    }
+
+    #[test]
+    fn templated_run_reconciles_prefix_books() {
+        use crate::config::{AffinityMode, DispatchKind};
+        use crate::coordinator::ServeEvent;
+        use crate::workload::PrefixTemplates;
+        let ts = TestSet::synthetic("synthalpaca", "llama", 64, 5);
+        let book = ScoreBook::synthetic(&ts, &[PolicyKind::Pars], 5);
+        let cost = CostModel::default();
+        let sched = SchedulerConfig {
+            max_batch: 4,
+            replicas: 2,
+            dispatch: DispatchKind::LeastLoaded,
+            affinity: AffinityMode::Prefix,
+            ..Default::default()
+        };
+        let arrivals = poisson(&ts, 12.0, 200, 9);
+        let mut events: Vec<ServeEvent> = Vec::new();
+        let out = run_sharded_with(
+            &ts,
+            &arrivals,
+            PolicyKind::Pars,
+            &book,
+            &cost,
+            &sched,
+            ServeOptions::new()
+                .sink(&mut events)
+                .templates(PrefixTemplates::new(0.6, 11).unwrap()),
+        )
+        .unwrap();
+        assert_eq!(out.merged.report.n_requests, 200);
+        // the outcome books and the event stream must tell one story:
+        // Σ Dispatched{prefix_hit} == merged.prefix_hits and
+        // Σ Admitted{prefix_cached} == merged.cached_prefill_tokens
+        let hits = events
+            .iter()
+            .filter(|e| matches!(e, ServeEvent::Dispatched { prefix_hit: true, .. }))
+            .count();
+        let cached: u64 = events
+            .iter()
+            .map(|e| match e {
+                ServeEvent::Admitted { prefix_cached, .. } => *prefix_cached as u64,
+                _ => 0,
+            })
+            .sum();
+        assert!(cached > 0, "a 60%-templated stream must reuse some prefill");
+        assert!(hits > 0, "affinity=prefix must land templated work on resident replicas");
+        assert_eq!(out.merged.prefix_hits, hits);
+        assert_eq!(out.merged.cached_prefill_tokens, cached);
+        assert_eq!(out.per_replica.iter().map(|r| r.prefix_hits).sum::<usize>(), hits);
+        assert_eq!(
+            out.per_replica.iter().map(|r| r.cached_prefill_tokens).sum::<u64>(),
+            cached
+        );
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Workloads: synthetic corpora (exported by `make artifacts`), the
-//! response-length oracle (mirrors `python/compile/data.py`), and arrival
-//! processes (Poisson sweeps, bursts, fixed traces).
+//! response-length oracle (mirrors `python/compile/data.py`), arrival
+//! processes (Poisson sweeps, bursts, fixed traces), and shared-prefix
+//! prompt templating (`--prefix-share`).
 
 pub mod arrivals;
 pub mod corpus;
 pub mod oracle;
+pub mod templates;
 pub mod trace;
 
 pub use arrivals::{
@@ -12,4 +14,5 @@ pub use arrivals::{
 };
 pub use corpus::{Corpus, TestSet};
 pub use oracle::LengthOracle;
+pub use templates::PrefixTemplates;
 pub use trace::{Trace, TraceEntry};

@@ -1,0 +1,218 @@
+//! Templated prompt workloads: stamp shared-prefix identities onto a
+//! request stream (`--prefix-share`).
+//!
+//! Real serving traffic is template-heavy — system prompts, few-shot
+//! scaffolds, RAG preambles — so a tunable share of requests drawn from
+//! a small pool of templates is the workload shape the shared-prefix KV
+//! pool (PR 10) exists for.  [`PrefixTemplates::apply`] rewrites the
+//! first `prefix_len` prompt tokens of each stamped request to its
+//! template's deterministic token sequence (same `prefix_id` ⇒ same
+//! prefix tokens, which is what lets a real engine splice cached rows)
+//! and stamps `Request::prefix_id` / `Request::prefix_len`.
+//!
+//! House rule: `share = 0` stamps nothing and leaves every request
+//! bitwise untouched, so untemplated runs pin to the frozen reference
+//! loops regardless of this module's existence.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::Request;
+use crate::util::rng::Rng;
+
+/// Distinct templates the stamped share is spread over by default.
+pub const DEFAULT_TEMPLATES: usize = 4;
+/// Prompt tokens each template covers by default — two full KV blocks,
+/// so sharing engages (`engine::kv_cache::BLOCK_TOKENS` granularity).
+pub const DEFAULT_PREFIX_LEN: u32 = 32;
+
+/// Shared-prefix templating for a request stream: each request is
+/// independently stamped with probability `share`, choosing uniformly
+/// among `templates` template identities.
+#[derive(Clone, Debug)]
+pub struct PrefixTemplates {
+    share: f64,
+    templates: usize,
+    prefix_len: u32,
+    seed: u64,
+}
+
+impl PrefixTemplates {
+    /// Build a template stamper.  `share` is the fraction of requests
+    /// stamped, validated into `[0, 1]` — a malformed ratio is refused
+    /// loudly here so `--prefix-share 1.5` exits non-zero instead of
+    /// silently templating everything.
+    pub fn new(share: f64, seed: u64) -> Result<PrefixTemplates> {
+        ensure!(
+            share.is_finite() && (0.0..=1.0).contains(&share),
+            "--prefix-share must be a ratio in [0, 1], got {share}"
+        );
+        Ok(PrefixTemplates {
+            share,
+            templates: DEFAULT_TEMPLATES,
+            prefix_len: DEFAULT_PREFIX_LEN,
+            seed,
+        })
+    }
+
+    /// Override the template-pool shape (benches sweep these).
+    pub fn with_shape(mut self, templates: usize, prefix_len: u32) -> PrefixTemplates {
+        self.templates = templates.max(1);
+        self.prefix_len = prefix_len;
+        self
+    }
+
+    /// The stamped fraction this stamper was built with.
+    pub fn share(&self) -> f64 {
+        self.share
+    }
+
+    /// The deterministic token stream of template `t` (position 0 is
+    /// BOS, matching the corpus convention).
+    fn template_token(t: u64, i: usize) -> i32 {
+        if i == 0 {
+            1
+        } else {
+            3 + ((t as i64 * 131 + i as i64 * 29) % 240) as i32
+        }
+    }
+
+    /// Stamp a request stream in place; returns how many requests were
+    /// templated.  A stamped request gets `prefix_id = template + 1`
+    /// (never 0 — 0 means untemplated everywhere downstream), its
+    /// covered prompt span rewritten to the template's tokens, and
+    /// `prefix_len` set to that span.  The trailing EOS token and the
+    /// prompt length are never touched, so engine cost models see the
+    /// same lengths templated or not.  Deterministic for a seed.
+    pub fn apply(&self, reqs: &mut [Request]) -> usize {
+        if self.share == 0.0 {
+            return 0;
+        }
+        let mut rng = Rng::new(self.seed ^ 0x7E3F_1A7E);
+        let mut stamped = 0usize;
+        for req in reqs.iter_mut() {
+            // per-request draws happen unconditionally so the stamped
+            // subset of request k does not depend on requests 0..k's
+            // prompt lengths
+            let hit = rng.f64() < self.share;
+            let t = rng.below(self.templates) as u64;
+            // keep the trailing EOS: a template never covers the whole
+            // prompt (the suffix is what makes the request distinct)
+            let span = self.prefix_len.min(req.prompt_len.saturating_sub(1));
+            if !hit || span == 0 {
+                continue;
+            }
+            for i in 0..span as usize {
+                req.tokens[i] = Self::template_token(t, i);
+            }
+            req.prefix_id = t + 1;
+            req.prefix_len = span;
+            stamped += 1;
+        }
+        stamped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_req(id: u64, prompt_len: u32) -> Request {
+        let mut tokens: Vec<i32> = (0..prompt_len as i32).map(|i| 100 + i).collect();
+        tokens[0] = 1;
+        if prompt_len > 1 {
+            tokens[prompt_len as usize - 1] = 2;
+        }
+        Request {
+            id,
+            tokens,
+            prompt_len,
+            arrival_ms: id as f64,
+            target_len: 10,
+            oracle_len: 10,
+            score: 1.0,
+            prefix_id: 0,
+            prefix_len: 0,
+        }
+    }
+
+    #[test]
+    fn share_zero_is_bitwise_inert() {
+        let mut reqs: Vec<Request> = (0..32).map(|i| mk_req(i, 24)).collect();
+        let before = format!("{reqs:?}");
+        let n = PrefixTemplates::new(0.0, 7).unwrap().apply(&mut reqs);
+        assert_eq!(n, 0);
+        assert_eq!(format!("{reqs:?}"), before, "share=0 must not touch a single bit");
+    }
+
+    #[test]
+    fn share_one_stamps_everything_consistently() {
+        let mut reqs: Vec<Request> = (0..64).map(|i| mk_req(i, 48)).collect();
+        let tpl = PrefixTemplates::new(1.0, 7).unwrap();
+        let n = tpl.apply(&mut reqs);
+        assert_eq!(n, 64, "share=1 stamps every stampable request");
+        let mut by_template: std::collections::BTreeMap<u64, Vec<i32>> =
+            std::collections::BTreeMap::new();
+        for r in &reqs {
+            assert!(r.prefix_id >= 1 && r.prefix_id <= DEFAULT_TEMPLATES as u64);
+            assert_eq!(r.prefix_len, DEFAULT_PREFIX_LEN, "48-token prompt takes the full span");
+            assert_eq!(r.tokens[0], 1, "BOS preserved");
+            assert_eq!(r.tokens[47], 2, "EOS never rewritten");
+            let prefix = r.tokens[..r.prefix_len as usize].to_vec();
+            match by_template.get(&r.prefix_id) {
+                None => {
+                    by_template.insert(r.prefix_id, prefix);
+                }
+                Some(seen) => assert_eq!(
+                    seen, &prefix,
+                    "same prefix_id must mean the same prefix tokens"
+                ),
+            }
+        }
+        assert!(by_template.len() > 1, "64 draws over 4 templates must use several");
+    }
+
+    #[test]
+    fn apply_is_seed_deterministic() {
+        let mut a: Vec<Request> = (0..40).map(|i| mk_req(i, 30)).collect();
+        let mut b: Vec<Request> = (0..40).map(|i| mk_req(i, 30)).collect();
+        PrefixTemplates::new(0.5, 42).unwrap().apply(&mut a);
+        PrefixTemplates::new(0.5, 42).unwrap().apply(&mut b);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let mut c: Vec<Request> = (0..40).map(|i| mk_req(i, 30)).collect();
+        PrefixTemplates::new(0.5, 43).unwrap().apply(&mut c);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"), "a different seed stamps differently");
+    }
+
+    #[test]
+    fn intermediate_share_stamps_a_plausible_fraction() {
+        let mut reqs: Vec<Request> = (0..400).map(|i| mk_req(i, 24)).collect();
+        let n = PrefixTemplates::new(0.5, 9).unwrap().apply(&mut reqs);
+        assert!((120..=280).contains(&n), "share=0.5 over 400 stamped {n}");
+        for r in &reqs {
+            if r.prefix_id == 0 {
+                assert_eq!(r.prefix_len, 0, "untemplated requests stay prefix-blind");
+            } else {
+                assert_eq!(r.prefix_len, 23, "24-token prompt caps the span before EOS");
+            }
+        }
+    }
+
+    #[test]
+    fn short_prompts_are_skipped_not_mangled() {
+        // a 1-token prompt has no coverable span: it must stay unstamped
+        let mut reqs = vec![mk_req(0, 1)];
+        let n = PrefixTemplates::new(1.0, 3).unwrap().apply(&mut reqs);
+        assert_eq!(n, 0);
+        assert_eq!(reqs[0].prefix_id, 0);
+    }
+
+    #[test]
+    fn malformed_share_is_refused() {
+        assert!(PrefixTemplates::new(-0.1, 0).is_err());
+        assert!(PrefixTemplates::new(1.5, 0).is_err());
+        assert!(PrefixTemplates::new(f64::NAN, 0).is_err());
+        assert!(PrefixTemplates::new(f64::INFINITY, 0).is_err());
+        assert!(PrefixTemplates::new(0.0, 0).is_ok());
+        assert!(PrefixTemplates::new(1.0, 0).is_ok());
+    }
+}

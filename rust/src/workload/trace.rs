@@ -77,6 +77,8 @@ impl Trace {
                     target_len: e.target_len,
                     oracle_len: e.oracle_len,
                     score: scores.map(|s| s[e.prompt_idx]).unwrap_or(0.0),
+                    prefix_id: 0,
+                    prefix_len: 0,
                 })
             })
             .collect()

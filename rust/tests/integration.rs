@@ -181,6 +181,8 @@ fn end_to_end_pjrt_serving_with_pars_policy() {
                 target_len: ts.live_len[p].clamp(1, cap.min(24)),
                 oracle_len: ts.oracle_len[p].min(cap),
                 score: scores[p],
+                prefix_id: 0,
+                prefix_len: 0,
             }
         })
         .collect();

@@ -74,14 +74,22 @@
 //!   `Dispatched`), the per-tenant books sum to the fleet totals, and
 //!   two identical multi-producer runs are bitwise deterministic given
 //!   the fixed merged arrival interleaving.
+//! * The prefix-affinity axis joins the grid: across `affinity = off |
+//!   prefix` × steal × preempt × swap on templated traces, the event
+//!   chains still conserve, the prefix books balance (`Dispatched {
+//!   prefix_hit }` events sum to `prefix_hits`, `Admitted {
+//!   prefix_cached }` sums to `cached_prefill_tokens`, and cached
+//!   tokens never exceed the dispatched prompt mass), every combination
+//!   is two-run bitwise deterministic, and a share-0 trace pins
+//!   `affinity = prefix` record-for-record to `off`.
 //!
 //! Reproduce a CI failure locally with the printed seed:
 //! `PROP_SEED=<seed> cargo test --release --test properties`.
 
 use pars_serve::config::{
-    AdmissionMode, CostModel, DispatchKind, IngressConfig, PolicyKind, PreemptMode, ReplicaCaps,
-    RerankMode, SchedulerConfig, StealMode, SwapEvictMode, SwapMode, SwapPricingMode,
-    TenantClass,
+    AdmissionMode, AffinityMode, CostModel, DispatchKind, IngressConfig, PolicyKind, PreemptMode,
+    ReplicaCaps, RerankMode, SchedulerConfig, StealMode, SwapEvictMode, SwapMode,
+    SwapPricingMode, TenantClass,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -91,6 +99,7 @@ use pars_serve::coordinator::{
 use pars_serve::engine::SimEngine;
 use pars_serve::util::prop::check_with;
 use pars_serve::util::rng::Rng;
+use pars_serve::workload::PrefixTemplates;
 
 /// Suite seed: `PROP_SEED` env override (CI pins it), default fixed.
 fn prop_seed() -> u64 {
@@ -107,6 +116,8 @@ fn mk_queued(key: f64, arrival: f64, id: u64) -> QueuedRequest {
             target_len: 3,
             oracle_len: 3,
             score: key as f32,
+            prefix_id: 0,
+            prefix_len: 0,
         },
         key,
         boosted: false,
@@ -354,6 +365,8 @@ fn gen_trace(rng: &mut Rng) -> Vec<Request> {
                 target_len: target,
                 oracle_len: target,
                 score: target as f32 + rng.normal() as f32,
+                prefix_id: 0,
+                prefix_len: 0,
             }
         })
         .collect()
@@ -1398,6 +1411,8 @@ fn producer_stream(spec: &ProducerSpec) -> Vec<Request> {
                 target_len: target,
                 oracle_len: target,
                 score: target as f32,
+                prefix_id: 0,
+                prefix_len: 0,
             }
         })
         .collect()
@@ -1559,6 +1574,197 @@ fn ingress_admission_grid_conserves_every_offered_id() {
                 "seed {seed} {admission:?}: overload never tripped the front door"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-prefix affinity axis (PR 10): templated traces through the
+// copy-on-write prefix pool and prefix-affine routing.
+// ---------------------------------------------------------------------------
+
+/// Random trace with prompts long enough for the block-granular prefix
+/// pool to engage (≥ several 16-token KV blocks), re-stamped by the
+/// workload templater at `share`.  Deterministic per (rng state, seed).
+fn gen_prefix_trace(rng: &mut Rng, share: f64, seed: u64) -> Vec<Request> {
+    let n = 20 + rng.below(40);
+    let mut trace: Vec<Request> = (0..n as u64)
+        .map(|id| {
+            let prompt = 8 + rng.below(56);
+            let target =
+                if rng.below(25) == 0 { 10_000 } else { 1 + rng.below(120) as u32 };
+            Request {
+                id,
+                tokens: vec![1; prompt],
+                prompt_len: prompt as u32,
+                arrival_ms: rng.f64() * 400.0,
+                target_len: target,
+                oracle_len: target,
+                score: target as f32 + rng.normal() as f32,
+                prefix_id: 0,
+                prefix_len: 0,
+            }
+        })
+        .collect();
+    PrefixTemplates::new(share, seed).unwrap().apply(&mut trace);
+    trace
+}
+
+/// Run a trace through a session-captured fleet with the affinity knob
+/// set (same shape as `run_fleet_session` otherwise).
+fn run_affinity_fleet(
+    trace: &[Request],
+    affinity: AffinityMode,
+    steal: StealMode,
+    preempt: PreemptMode,
+    swap: SwapMode,
+) -> (ShardedOutcome, Vec<ServeEvent>) {
+    let sched = SchedulerConfig {
+        max_batch: 2,
+        max_kv_tokens: 8192,
+        starvation_ms: 300.0,
+        replicas: 3,
+        dispatch: DispatchKind::LeastLoaded,
+        steal,
+        preempt,
+        swap,
+        affinity,
+        ..Default::default()
+    };
+    let engines: Vec<SimEngine> = (0..3)
+        .map(|i| SimEngine::new(CostModel::default(), &sched.for_replica(i), TRACE_MAX_SEQ))
+        .collect();
+    let policy = make_policy(PolicyKind::Pars);
+    let mut coord = ShardedCoordinator::new(engines, policy.as_ref(), sched.dispatch, sched);
+    let mut events: Vec<ServeEvent> = Vec::new();
+    let out = {
+        let mut session = coord.session_with(&mut events);
+        for r in trace.to_vec() {
+            session.submit(r);
+        }
+        session.finish().unwrap()
+    };
+    (out, events)
+}
+
+#[test]
+fn prefix_affinity_axis_joins_the_conservation_grid() {
+    let seed = prop_seed();
+    let mut rng = Rng::new(seed ^ 0xAF1);
+    for case in 0..2 {
+        let trace = gen_prefix_trace(&mut rng, 0.6, seed ^ (case as u64));
+        assert!(
+            trace.iter().any(|r| r.prefix_id != 0),
+            "seed {seed} case {case}: templater stamped nothing at share 0.6"
+        );
+        for affinity in AffinityMode::all() {
+            for steal in StealMode::all() {
+                for preempt in [PreemptMode::Off, PreemptMode::Arrival] {
+                    for swap in [SwapMode::Off, SwapMode::Host(128)] {
+                        let label = format!(
+                            "seed {seed} case {case} {affinity:?}/{steal:?}/{preempt:?}/{swap:?}"
+                        );
+                        let (out, events) =
+                            run_affinity_fleet(&trace, affinity, steal, preempt, swap);
+                        assert_events_conserved(&trace, &events, &out, &label);
+                        // prefix books: event sums match the outcome
+                        // counters, per replica and merged
+                        let hits = events
+                            .iter()
+                            .filter(|e| {
+                                matches!(e, ServeEvent::Dispatched { prefix_hit: true, .. })
+                            })
+                            .count();
+                        let cached: u64 = events
+                            .iter()
+                            .map(|e| match e {
+                                ServeEvent::Admitted { prefix_cached, .. } => {
+                                    *prefix_cached as u64
+                                }
+                                _ => 0,
+                            })
+                            .sum();
+                        assert_eq!(out.merged.prefix_hits, hits, "{label}: hit books");
+                        assert_eq!(
+                            out.merged.cached_prefill_tokens, cached,
+                            "{label}: cached-token books"
+                        );
+                        assert_eq!(
+                            out.per_replica.iter().map(|r| r.prefix_hits).sum::<usize>(),
+                            hits,
+                            "{label}: per-replica hit books"
+                        );
+                        // cached prefill can never exceed the dispatched
+                        // prompt mass (every cached token is a prompt
+                        // token somebody would otherwise recompute)
+                        let fits = |r: &Request| {
+                            ((r.prompt_len + r.target_len) as usize) <= TRACE_MAX_SEQ
+                        };
+                        let prompt_mass: u64 =
+                            trace.iter().filter(|r| fits(r)).map(|r| r.prompt_len as u64).sum();
+                        assert!(
+                            cached <= prompt_mass,
+                            "{label}: cached {cached} exceeds prompt mass {prompt_mass}"
+                        );
+                        if affinity == AffinityMode::Off && swap == SwapMode::Off {
+                            // hits can still happen by accident of
+                            // routing, but cached tokens only flow when
+                            // a prefix is resident at admission — sanity:
+                            // the counter is consistent, not negative
+                            assert!(out.merged.cached_prefill_tokens <= prompt_mass);
+                        }
+                        // two-run bitwise determinism: the affinity scan
+                        // and the registry LRU are pure functions of the
+                        // trace
+                        let (out2, events2) =
+                            run_affinity_fleet(&trace, affinity, steal, preempt, swap);
+                        let sig = |o: &ShardedOutcome, ev: &[ServeEvent]| {
+                            let recs: Vec<String> = o
+                                .per_replica
+                                .iter()
+                                .map(|r| {
+                                    format!(
+                                        "{:?} h={} c={}",
+                                        r.records, r.prefix_hits, r.cached_prefill_tokens
+                                    )
+                                })
+                                .collect();
+                            format!("{recs:?} events={ev:?}")
+                        };
+                        assert_eq!(
+                            sig(&out, &events),
+                            sig(&out2, &events2),
+                            "{label}: identical runs diverged"
+                        );
+                    }
+                }
+            }
+        }
+        // share 0 is the frozen baseline: an untemplated trace must make
+        // `affinity = prefix` record-for-record identical to `off`, with
+        // empty prefix books on both sides
+        let plain = gen_prefix_trace(&mut rng, 0.0, seed);
+        let (off_out, off_ev) = run_affinity_fleet(
+            &plain,
+            AffinityMode::Off,
+            StealMode::Idle,
+            PreemptMode::Arrival,
+            SwapMode::Host(128),
+        );
+        let (on_out, on_ev) = run_affinity_fleet(
+            &plain,
+            AffinityMode::Prefix,
+            StealMode::Idle,
+            PreemptMode::Arrival,
+            SwapMode::Host(128),
+        );
+        assert_eq!(
+            format!("{off_ev:?}"),
+            format!("{on_ev:?}"),
+            "seed {seed} case {case}: affinity=prefix acted on an untemplated trace"
+        );
+        assert_eq!(off_out.merged.prefix_hits, 0, "seed {seed} case {case}");
+        assert_eq!(on_out.merged.prefix_hits, 0, "seed {seed} case {case}");
+        assert_eq!(on_out.merged.cached_prefill_tokens, 0, "seed {seed} case {case}");
     }
 }
 

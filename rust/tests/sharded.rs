@@ -10,8 +10,8 @@
 use std::collections::{HashMap, VecDeque};
 
 use pars_serve::config::{
-    CostModel, DispatchKind, PolicyKind, PreemptMode, RerankMode, SchedulerConfig, StealMode,
-    SwapEvictMode, SwapMode, SwapPricingMode,
+    AffinityMode, CostModel, DispatchKind, PolicyKind, PreemptMode, RerankMode, SchedulerConfig,
+    StealMode, SwapEvictMode, SwapMode, SwapPricingMode,
 };
 use pars_serve::coordinator::policy::make_policy;
 use pars_serve::coordinator::{
@@ -352,6 +352,8 @@ fn mk_req(id: u64, at: f64, target: u32) -> Request {
         target_len: target,
         oracle_len: target,
         score: target as f32,
+        prefix_id: 0,
+        prefix_len: 0,
     }
 }
 
@@ -462,6 +464,13 @@ fn assert_sharded_pinned_sched(sched: &SchedulerConfig, kind: PolicyKind) {
     assert_eq!(out.merged.preemptions, 0, "{kind:?}/{dispatch:?} preempt=off evicted work");
     assert_eq!(out.merged.wasted_decode_tokens, 0, "{kind:?}/{dispatch:?} wasted tokens");
     assert_eq!(out.merged.migrated_tokens, 0, "{kind:?}/{dispatch:?} steal=off migrated pages");
+    // the reference workload is untemplated (`prefix_id = 0`), so the
+    // shared-prefix books must stay empty in every pinned configuration
+    assert_eq!(out.merged.prefix_hits, 0, "{kind:?}/{dispatch:?} untemplated run hit a prefix");
+    assert_eq!(
+        out.merged.cached_prefill_tokens, 0,
+        "{kind:?}/{dispatch:?} untemplated run cached prefill"
+    );
     for (i, rep) in out.per_replica.iter().enumerate() {
         assert_eq!(
             rep.dispatched, want_dispatched[i],
@@ -751,6 +760,31 @@ fn rerank_off_n1_equals_legacy_every_dispatch() {
                 ..Default::default()
             };
             assert_identical(&sched, kind);
+        }
+    }
+}
+
+/// PR 10 pin, N=4: the untemplated reference workload (`prefix_id = 0`
+/// everywhere) must keep the whole shared-prefix surface — the affinity
+/// scan, the shared-admission path, the block registry — completely
+/// dark, BOTH ways: `affinity = off` (the default) and `affinity =
+/// prefix` each pin record-for-record to the frozen PR 1 loop.
+#[test]
+fn affinity_is_inert_on_the_untemplated_reference_workload() {
+    for dispatch in DispatchKind::all() {
+        for affinity in AffinityMode::all() {
+            let sched = SchedulerConfig {
+                max_batch: 4,
+                max_kv_tokens: 512,
+                starvation_ms: 500.0,
+                replicas: 4,
+                dispatch,
+                steal: StealMode::Off,
+                preempt: PreemptMode::Off,
+                affinity,
+                ..Default::default()
+            };
+            assert_sharded_pinned_sched(&sched, PolicyKind::OracleSjf);
         }
     }
 }
